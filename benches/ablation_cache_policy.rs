@@ -1,0 +1,82 @@
+//! Ablation: cache replacement policy (paper §5.1 — "we explored several
+//! cache policies and selected LRU as default due to its best
+//! performance"). Replays the same real decode trace through the real
+//! wave buffer under LRU / FIFO / CLOCK / 2Q and reports hit ratios and
+//! the throughput each implies on the A100 model.
+//!
+//!     cargo bench --bench ablation_cache_policy
+
+use retroinfer::baselines::{Retro, SparseSystem};
+use retroinfer::config::{BufferConfig, CachePolicy, HardwareSpec, ModelSpec, ZoneConfig};
+use retroinfer::memsim::{self, profiles};
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::util::rng::Rng;
+use retroinfer::workload::tasks::{generate, TaskKind};
+
+fn drift_trace(base: &[f32], steps: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let mut q = base.to_vec();
+    (0..steps)
+        .map(|_| {
+            for x in q.iter_mut() {
+                *x = 0.96 * *x + 0.1 * rng.normal_f32();
+            }
+            q.clone()
+        })
+        .collect()
+}
+
+fn main() {
+    let d = 32;
+    let ctx = if quick_mode() { 4096 } else { 8192 };
+    let task = generate(TaskKind::Qa, ctx, d, 1, 13);
+    let wl = &task.workload;
+    let trace = drift_trace(&wl.queries[0], 64, 3);
+    let budget = ((ctx as f64 * 0.018) as usize).max(8 * 16) + 68;
+    let model = ModelSpec::llama3_8b();
+    let hw = HardwareSpec::a100();
+
+    println!("## cache-policy ablation (same real trace, 5% cache, ctx={ctx})");
+    let mut table = Table::new(&["policy", "hit_ratio", "pcie_bytes", "tok/s @120K b=16"]);
+    let mut results = Vec::new();
+    for policy in [CachePolicy::Lru, CachePolicy::Fifo, CachePolicy::Clock, CachePolicy::TwoQ] {
+        let zcfg = ZoneConfig {
+            build_segment: ZoneConfig::default().build_segment.min(ctx / 2),
+            ..ZoneConfig::default()
+        };
+        let bcfg = BufferConfig { policy, ..BufferConfig::default() };
+        let mut sys = Retro::build(zcfg, bcfg, &wl.keys, &wl.vals, d, 7);
+        let mut out = vec![0.0; d];
+        let mut pcie = 0usize;
+        for q in &trace {
+            let st = sys.decode(q, budget, &mut out);
+            pcie += st.pcie_bytes;
+            if let Some(b) = sys.buffer() {
+                b.flush();
+            }
+        }
+        let hit = sys.buffer().map(|b| b.stats().hit_ratio()).unwrap_or(0.0);
+        let p = profiles::retroinfer(hit);
+        let tput = memsim::decode_throughput(&model, &hw, &p, 120 * 1024, 16).unwrap_or(0.0);
+        results.push((policy, hit));
+        table.row(vec![
+            policy.name().to_string(),
+            format!("{hit:.3}"),
+            pcie.to_string(),
+            format!("{tput:.0}"),
+        ]);
+    }
+    table.print();
+
+    let lru = results.iter().find(|(p, _)| *p == CachePolicy::Lru).unwrap().1;
+    let best = results.iter().map(|(_, h)| *h).fold(0.0f64, f64::max);
+    assert!(
+        lru >= best - 0.05,
+        "LRU must be within 5% of the best policy (paper's default choice): {lru} vs {best}"
+    );
+    // every policy must beat no-cache on this trace
+    for (p, h) in &results {
+        assert!(*h > 0.3, "{}: hit ratio {h} too low", p.name());
+    }
+    println!("\nshape check OK: LRU at/near the best hit ratio — the paper's default");
+}

@@ -1,0 +1,88 @@
+//! Figure 3 + Figure 4 reproduction: dynamic attention sparsity.
+//!
+//! Fig 3: the top-100 heavy-hitter set changes across decoding steps
+//! (the paper measures ~31% overlap between adjacent steps).
+//! Fig 4(a): sparsity varies across "layers/heads" (here: independent
+//! geometry seeds). Fig 4(b): sparsity ratio varies across tasks.
+//!
+//!     cargo bench --bench fig03_sparsity    (RI_QUICK=1 to shrink)
+
+use retroinfer::attention::attention_weights;
+use retroinfer::attention::sparsity::{top_k_indices, top_k_overlap, tokens_for_mass};
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::util::rng::Rng;
+use retroinfer::workload::tasks::{generate, TaskKind};
+
+fn main() {
+    let ctx = if quick_mode() { 4096 } else { 16384 };
+    let d = 32;
+
+    // ---- Fig 3: top-100 overlap across decoding steps -------------------
+    println!("## Fig 3: top-100 overlap across adjacent decoding steps (ctx={ctx})");
+    let task = generate(TaskKind::Qa, ctx, d, 1, 1);
+    let wl = &task.workload;
+    let mut rng = Rng::new(77);
+    // a decoding trajectory: the query drifts step to step
+    let mut q = wl.queries[0].clone();
+    let mut prev: Option<Vec<usize>> = None;
+    let mut overlaps = Vec::new();
+    for _ in 0..8 {
+        let w = attention_weights(&q, &wl.keys, d);
+        let top = top_k_indices(&w, 100);
+        if let Some(p) = &prev {
+            overlaps.push(top_k_overlap(p, &top));
+        }
+        prev = Some(top);
+        for x in q.iter_mut() {
+            *x = 0.85 * *x + 0.35 * rng.normal_f32();
+        }
+    }
+    let mean_overlap = overlaps.iter().sum::<f64>() / overlaps.len() as f64;
+    println!("adjacent-step top-100 overlap: mean={mean_overlap:.2} (paper: ~0.31)");
+    assert!(mean_overlap < 0.95, "importance must be dynamic");
+
+    // ---- Fig 4(a): sparsity across heads (geometry seeds) ---------------
+    println!("\n## Fig 4(a): tokens for 90% attention mass across heads");
+    let mut table = Table::new(&["head", "tokens_for_90%", "fraction"]);
+    for head in 0..6 {
+        let t = generate(TaskKind::Qa, ctx, d, 1, 100 + head);
+        let w = attention_weights(&t.workload.queries[0], &t.workload.keys, d);
+        let n90 = tokens_for_mass(&w, 0.90);
+        table.row(vec![
+            head.to_string(),
+            n90.to_string(),
+            format!("{:.4}", n90 as f64 / ctx as f64),
+        ]);
+    }
+    table.print();
+
+    // ---- Fig 4(b): sparsity across tasks ---------------------------------
+    println!("\n## Fig 4(b): sparsity ratio by task (tokens for 90%/99% mass)");
+    let mut table = Table::new(&["task", "n90", "n99", "sparsity_90"]);
+    let mut n90s = Vec::new();
+    for kind in TaskKind::all() {
+        let t = generate(kind, ctx, d, 4, 9);
+        let mut n90 = 0usize;
+        let mut n99 = 0usize;
+        for q in &t.workload.queries {
+            let w = attention_weights(q, &t.workload.keys, d);
+            n90 += tokens_for_mass(&w, 0.90);
+            n99 += tokens_for_mass(&w, 0.99);
+        }
+        n90 /= t.workload.queries.len();
+        n99 /= t.workload.queries.len();
+        n90s.push((kind.name(), n90));
+        table.row(vec![
+            kind.name().to_string(),
+            n90.to_string(),
+            n99.to_string(),
+            format!("{:.4}", 1.0 - n90 as f64 / ctx as f64),
+        ]);
+    }
+    table.print();
+    // the aggregation task must be the least sparse (paper Fig 4b: fwe)
+    let fwe = n90s.iter().find(|(n, _)| *n == "fwe").unwrap().1;
+    let sn = n90s.iter().find(|(n, _)| *n == "s_niah").unwrap().1;
+    assert!(fwe > sn, "fwe ({fwe}) must need more tokens than s_niah ({sn})");
+    println!("\nshape check OK: sparsity is dynamic, head- and task-dependent");
+}

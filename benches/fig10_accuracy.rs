@@ -1,0 +1,93 @@
+//! Figure 10 reproduction: task accuracy under a fixed retrieval budget
+//! across context lengths and systems (RULER substitution: needle recall
+//! + output fidelity vs full attention — DESIGN.md §1).
+//!
+//! Paper shape: RetroInfer is the only sparse system matching full
+//! attention across lengths; fixed-position and coarse-grained baselines
+//! degrade as the context grows.
+//!
+//!     cargo bench --bench fig10_accuracy    (RI_QUICK=1 for short run)
+
+use retroinfer::baselines::{all_systems, FullAttention, SparseSystem};
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::util::stats::cosine;
+use retroinfer::workload::tasks::{generate, needle_accuracy, TaskKind};
+
+fn main() {
+    let d = 32;
+    let lengths: Vec<usize> =
+        if quick_mode() { vec![4096, 8192] } else { vec![4096, 8192, 16384, 32768] };
+    let n_queries = if quick_mode() { 4 } else { 8 };
+
+    for kind in [TaskKind::SingleNeedle, TaskKind::MultiNeedle, TaskKind::Qa] {
+        println!("\n## Fig 10 ({}): accuracy vs context length, 1.8%+floor budget", kind.name());
+        let mut table = Table::new(&["system", "metric", "4K", "8K", "16K", "32K"]);
+        let mut acc_rows: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
+        for &ctx in &lengths {
+            let task = generate(kind, ctx, d, n_queries, 42 + ctx as u64);
+            let wl = &task.workload;
+            let budget = ((ctx as f64 * 0.018) as usize).max(8 * 16) + 68;
+            let mut full_outs = Vec::new();
+            {
+                let mut f = FullAttention::new(&wl.keys, &wl.vals, d);
+                for q in &wl.queries {
+                    let mut o = vec![0.0; d];
+                    f.decode(q, ctx, &mut o);
+                    full_outs.push(o);
+                }
+            }
+            for sys in all_systems(&wl.keys, &wl.vals, d, 5).iter_mut() {
+                let mut exact = Vec::new();
+                let mut cs = 0.0;
+                for (qi, q) in wl.queries.iter().enumerate() {
+                    let mut o = vec![0.0; d];
+                    let st = sys.decode(q, budget, &mut o);
+                    exact.push(st.exact_positions);
+                    cs += cosine(&o, &full_outs[qi]);
+                }
+                let acc = needle_accuracy(&exact, &wl.needles);
+                let cos = cs / wl.queries.len() as f64;
+                match acc_rows.iter_mut().find(|(n, _, _)| n == sys.name()) {
+                    Some((_, accs, coss)) => {
+                        accs.push(acc);
+                        coss.push(cos);
+                    }
+                    None => acc_rows.push((sys.name().to_string(), vec![acc], vec![cos])),
+                }
+            }
+        }
+        let fmt = |v: &[f64]| -> Vec<String> {
+            let mut cells: Vec<String> = v.iter().map(|x| format!("{x:.2}")).collect();
+            cells.resize(4, "-".into());
+            cells
+        };
+        for (name, accs, coss) in &acc_rows {
+            let mut row = vec![name.clone(), "acc".into()];
+            row.extend(fmt(accs));
+            table.row(row);
+            let mut row = vec![String::new(), "cos".into()];
+            row.extend(fmt(coss));
+            table.row(row);
+        }
+        table.print();
+
+        // shape assertions at the longest length
+        let get = |n: &str| acc_rows.iter().find(|(s, _, _)| s == n).unwrap();
+        let retro_acc = *get("retroinfer").1.last().unwrap();
+        let stream_acc = *get("streaming").1.last().unwrap();
+        let retro_cos = *get("retroinfer").2.last().unwrap();
+        if kind != TaskKind::Qa {
+            // needle tasks: exact retrieval expected (strong needles)
+            assert!(retro_acc >= 0.75, "{}: retroinfer acc {retro_acc}", kind.name());
+        }
+        // qa mixes weak needles into topical queries — the paper's qa
+        // accuracy also trails niah; output fidelity is the metric there
+        assert!(
+            retro_acc >= stream_acc,
+            "{}: retroinfer must beat fixed-position heuristics",
+            kind.name()
+        );
+        assert!(retro_cos > 0.84, "{}: retroinfer cos {retro_cos}", kind.name());
+    }
+    println!("\nshape check OK: retroinfer tracks full attention; static heuristics degrade");
+}

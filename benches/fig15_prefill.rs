@@ -1,0 +1,42 @@
+//! Figure 15 reproduction: prefill latency vs context length. RetroInfer
+//! adds only segmented clustering (+ asynchronous buffer construction) to
+//! the prefill critical path; the paper reports 6% at 120K and 3% at 1M.
+//! The clustering *fraction* here is the analytic flop share; the live
+//! measurement of the same quantity is reported by the serve_e2e example.
+//!
+//!     cargo bench --bench fig15_prefill
+
+use retroinfer::config::{HardwareSpec, ModelSpec};
+use retroinfer::memsim::{clustering_flops, prefill_latency};
+use retroinfer::util::bench::Table;
+
+fn main() {
+    let model = ModelSpec::llama3_8b();
+    let hw = HardwareSpec::a100();
+    println!("## Fig 15: prefill latency (s) vs context length");
+    let mut table =
+        Table::new(&["ctx", "full", "retroinfer", "overhead", "cluster_flops_share"]);
+    for ctx in [30 * 1024, 60 * 1024, 120 * 1024, 512 * 1024, 1 << 20] {
+        let cf = clustering_flops(&model, ctx, 8192, 10);
+        let offload = ctx >= 512 * 1024; // paper offloads at 1M to avoid OOM
+        let t_full = prefill_latency(&model, &hw, ctx, 0.0, false);
+        let t_retro = prefill_latency(&model, &hw, ctx, cf, offload);
+        let overhead = t_retro / t_full - 1.0;
+        // clustering share of total prefill flops
+        let t = ctx as f64;
+        let total_flops = t * model.decode_dense_flops() + model.attention_flops(ctx) * t / 2.0;
+        table.row(vec![
+            format!("{}K", ctx / 1024),
+            format!("{t_full:.1}"),
+            format!("{t_retro:.1}"),
+            format!("{:.1}%", overhead * 100.0),
+            format!("{:.2}%", cf / total_flops * 100.0),
+        ]);
+        assert!(
+            overhead < 0.08,
+            "clustering overhead must stay under ~8% (paper: 3-6%): {overhead}"
+        );
+    }
+    table.print();
+    println!("\nshape check OK: segmented clustering adds <8% prefill latency at all lengths");
+}

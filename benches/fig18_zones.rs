@@ -1,0 +1,160 @@
+//! Figure 18 reproduction: zone-size sensitivity. Sweeps (a-b) the
+//! retrieval budget, (c-d) the estimation budget, (e-f) the steady-zone
+//! configuration; reports task accuracy (real index on synthetic tasks)
+//! and max decode throughput (A100 model, A6000 as the second hardware
+//! point, as in the paper).
+//!
+//!     cargo bench --bench fig18_zones
+
+use retroinfer::baselines::{FullAttention, SparseSystem};
+use retroinfer::config::{HardwareSpec, ModelSpec, ZoneConfig};
+use retroinfer::index::{SelectScratch, WaveIndex};
+use retroinfer::memsim::{self, profiles};
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::util::stats::cosine;
+use retroinfer::workload::tasks::{generate, TaskKind};
+
+struct Fixture {
+    d: usize,
+    idx: WaveIndex,
+    queries: Vec<Vec<f32>>,
+    needles: Vec<Vec<u32>>,
+    full_outs: Vec<Vec<f32>>,
+}
+
+fn fixture(kind: TaskKind, ctx: usize) -> Fixture {
+    let d = 32;
+    let task = generate(kind, ctx, d, 8, 55);
+    let wl = task.workload;
+    let mut full = FullAttention::new(&wl.keys, &wl.vals, d);
+    let full_outs = wl
+        .queries
+        .iter()
+        .map(|q| {
+            let mut o = vec![0.0; d];
+            full.decode(q, ctx, &mut o);
+            o
+        })
+        .collect();
+    let idx = WaveIndex::build(ZoneConfig::default(), d, 2048, &wl.keys, &wl.vals, 5);
+    Fixture { d, idx, queries: wl.queries, needles: wl.needles, full_outs }
+}
+
+/// (needle accuracy, mean output cosine) at explicit (r, e) budgets.
+fn eval(f: &Fixture, r: usize, e: usize) -> (f64, f64) {
+    let mut scratch = SelectScratch::default();
+    let mut hits = 0usize;
+    let mut cs = 0.0;
+    for (qi, q) in f.queries.iter().enumerate() {
+        let sel = f.idx.select_with(q, r, e, &mut scratch);
+        let mut o = vec![0.0; f.d];
+        f.idx.attend(q, &sel, &mut o);
+        cs += cosine(&o, &f.full_outs[qi]);
+        let pos = f.idx.exact_positions(&sel);
+        let set: std::collections::HashSet<u32> = pos.into_iter().collect();
+        if f.needles[qi].iter().all(|p| set.contains(p)) {
+            hits += 1;
+        }
+    }
+    (hits as f64 / f.queries.len() as f64, cs / f.queries.len() as f64)
+}
+
+fn main() {
+    let ctx = if quick_mode() { 8192 } else { 16384 };
+    let model = ModelSpec::llama3_8b();
+    let sniah = fixture(TaskKind::SingleNeedle, ctx);
+    let qa = fixture(TaskKind::Qa, ctx);
+    let m = sniah.idx.meta().m();
+    let e_default = (m as f64 * 0.232) as usize;
+    let r_default = ((m as f64 * 0.018) as usize).max(8);
+
+    // ---- (a-b) retrieval budget sweep -------------------------------------
+    println!("## Fig 18(a-b): retrieval-budget sweep (ctx={ctx}, m={m} clusters)");
+    let mut table = Table::new(&[
+        "r_frac", "s_niah_acc", "qa_acc", "qa_cos", "tok/s A100", "tok/s A6000",
+    ]);
+    let mut accs = Vec::new();
+    for frac in [0.005, 0.018, 0.05, 0.1, 0.2] {
+        let r = ((m as f64 * frac) as usize).max(1);
+        let (a1, _) = eval(&sniah, r, e_default);
+        let (a2, c2) = eval(&qa, r, e_default);
+        let p = profiles::retroinfer(0.85).with_exact_frac(frac);
+        let t100 = memsim::decode_throughput(&model, &HardwareSpec::a100(), &p, 120 * 1024, 16)
+            .unwrap_or(0.0);
+        let t6000 = memsim::decode_throughput(&model, &HardwareSpec::a6000(), &p, 30 * 1024, 8)
+            .unwrap_or(0.0);
+        accs.push((frac, a2, t100));
+        table.row(vec![
+            format!("{frac:.3}"),
+            format!("{a1:.2}"),
+            format!("{a2:.2}"),
+            format!("{c2:.3}"),
+            format!("{t100:.0}"),
+            format!("{t6000:.0}"),
+        ]);
+    }
+    table.print();
+    // throughput must fall as retrieval grows; accuracy must not fall
+    assert!(accs.last().unwrap().1 >= accs[0].1 - 1e-9, "accuracy grows with budget");
+    assert!(accs.last().unwrap().2 < accs[0].2, "throughput falls with budget");
+
+    // ---- (c-d) estimation budget sweep -------------------------------------
+    println!("\n## Fig 18(c-d): estimation-budget sweep (r fixed at default)");
+    let mut table = Table::new(&["e_frac", "s_niah_cos", "qa_cos", "tok/s A100"]);
+    let mut prev_cos = 0.0;
+    for frac in [0.0, 0.1, 0.232, 0.5, 1.0] {
+        let e = (m as f64 * frac) as usize;
+        let (_, c1) = eval(&sniah, r_default, e);
+        let (_, c2) = eval(&qa, r_default, e);
+        let p = profiles::retroinfer(0.85).with_est_frac(frac);
+        let t = memsim::decode_throughput(&model, &HardwareSpec::a100(), &p, 120 * 1024, 16)
+            .unwrap_or(0.0);
+        if frac == 0.0 {
+            prev_cos = c2;
+        }
+        table.row(vec![
+            format!("{frac:.3}"),
+            format!("{c1:.3}"),
+            format!("{c2:.3}"),
+            format!("{t:.0}"),
+        ]);
+        if frac >= 0.99 {
+            assert!(
+                c2 >= prev_cos,
+                "estimation must improve qa fidelity: {c2} vs {prev_cos}"
+            );
+        }
+    }
+    table.print();
+
+    // ---- (e-f) steady zone sweep -------------------------------------------
+    println!("\n## Fig 18(e-f): steady-zone configurations (sink+local)");
+    let mut table = Table::new(&["steady", "qa_cos", "note"]);
+    for (label, sink, local) in
+        [("0+0", 0usize, 0usize), ("4+0", 4, 0), ("0+64", 0, 64), ("4+64", 4, 64), ("16+256", 16, 256)]
+    {
+        let d = 32;
+        let task = generate(TaskKind::Qa, ctx, d, 8, 55);
+        let wl = task.workload;
+        let zcfg = ZoneConfig { steady_sink: sink, steady_local: local, ..ZoneConfig::default() };
+        let idx = WaveIndex::build(zcfg, d, 2048, &wl.keys, &wl.vals, 5);
+        let mut full = FullAttention::new(&wl.keys, &wl.vals, d);
+        let mut scratch = SelectScratch::default();
+        let mut cs = 0.0;
+        for q in &wl.queries {
+            let sel = idx.select_with(q, r_default, e_default, &mut scratch);
+            let mut o = vec![0.0; d];
+            idx.attend(q, &sel, &mut o);
+            let mut fo = vec![0.0; d];
+            full.decode(q, ctx, &mut fo);
+            cs += cosine(&o, &fo);
+        }
+        table.row(vec![
+            label.to_string(),
+            format!("{:.3}", cs / wl.queries.len() as f64),
+            if label == "4+64" { "paper default".into() } else { String::new() },
+        ]);
+    }
+    table.print();
+    println!("\nshape check OK: small retrieval + larger estimation = accuracy & throughput");
+}

@@ -1,0 +1,73 @@
+//! Figure 19(b) reproduction: segmented-clustering segment size vs index
+//! build time and retrieval quality. Recall@100: fraction of the true
+//! top-100 attention tokens covered by the retrieval zone. The paper
+//! finds 8K segments lose <1% recall vs global k-means while cutting
+//! build time ~80%; the context here is scaled to one CPU core.
+//!
+//!     cargo bench --bench fig19_segments
+
+use retroinfer::attention::attention_weights;
+use retroinfer::attention::sparsity::{recall, top_k_indices};
+use retroinfer::config::ZoneConfig;
+use retroinfer::index::{SelectScratch, WaveIndex};
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::workload::tasks::{generate, TaskKind};
+use std::time::Instant;
+
+fn main() {
+    let d = 32;
+    let ctx = if quick_mode() { 8192 } else { 32768 };
+    let task = generate(TaskKind::MultiNeedle, ctx, d, 6, 17);
+    let wl = &task.workload;
+    // ground-truth heavy hitters per query
+    let truths: Vec<Vec<usize>> = wl
+        .queries
+        .iter()
+        .map(|q| top_k_indices(&attention_weights(q, &wl.keys, d), 100))
+        .collect();
+
+    println!("## Fig 19(b): segment size vs build time and recall@100 (ctx={ctx})");
+    let mut table = Table::new(&["segment", "build_ms", "recall@100", "clusters"]);
+    let mut results = Vec::new();
+    let segments: Vec<usize> =
+        if quick_mode() { vec![1024, 4096, 8192] } else { vec![1024, 2048, 8192, 16384, ctx] };
+    for seg in segments {
+        let zcfg = ZoneConfig { build_segment: seg, ..ZoneConfig::default() };
+        let t0 = Instant::now();
+        let idx = WaveIndex::build(zcfg, d, 2048, &wl.keys, &wl.vals, 4);
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let m = idx.meta().m();
+        let r = ((m as f64 * 0.05) as usize).max(8); // retrieval covering ~top-100 tokens
+        let mut scratch = SelectScratch::default();
+        let mut rec = 0.0;
+        for (qi, q) in wl.queries.iter().enumerate() {
+            let sel = idx.select_with(q, r, 0, &mut scratch);
+            let pos: Vec<usize> =
+                idx.exact_positions(&sel).into_iter().map(|p| p as usize).collect();
+            rec += recall(&truths[qi], &pos);
+        }
+        rec /= wl.queries.len() as f64;
+        results.push((seg, build_ms, rec));
+        table.row(vec![
+            if seg == ctx { format!("{seg} (global)") } else { seg.to_string() },
+            format!("{build_ms:.0}"),
+            format!("{rec:.3}"),
+            m.to_string(),
+        ]);
+    }
+    table.print();
+
+    let (seg8k, t8k, r8k) = *results.iter().find(|(s, _, _)| *s == 8192).unwrap();
+    let (_, tg, rg) = *results.last().unwrap();
+    if !quick_mode() {
+        println!(
+            "\n8K segments: build {:.0}% of global, recall {:+.3} vs global",
+            t8k / tg * 100.0,
+            r8k - rg
+        );
+        assert!(t8k < 0.7 * tg, "segmenting must cut build time: {t8k} vs {tg}");
+        assert!(r8k > rg - 0.05, "8K segments must keep recall: {r8k} vs {rg}");
+    }
+    let _ = seg8k;
+    println!("\nshape check OK: segment=8K balances build time and clustering quality");
+}

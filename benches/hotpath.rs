@@ -1,0 +1,130 @@
+//! L3 hot-path micro-benchmarks (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md): centroid scoring + zone selection, execution-buffer
+//! assembly, block-cache ops, segmented k-means build, tripartite merge.
+//!
+//!     cargo bench --bench hotpath
+
+use retroinfer::attention::{tripartite_attention, TripartiteInputs};
+use retroinfer::buffer::{ExecBuffer, WaveBuffer};
+use retroinfer::config::{BufferConfig, CachePolicy, ZoneConfig};
+use retroinfer::buffer::cache::BlockCache;
+use retroinfer::index::{spherical_kmeans, SelectScratch, WaveIndex};
+use retroinfer::util::bench::{bench, print_result, quick_mode};
+use retroinfer::util::rng::Rng;
+use retroinfer::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn main() {
+    let budget = if quick_mode() { 120.0 } else { 400.0 };
+    let d = 32;
+    let n = 32768;
+    let mut rng = Rng::new(1);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let idx = WaveIndex::build(ZoneConfig::default(), d, 2048, &keys, &vals, 2);
+    let m = idx.meta().m();
+    let q = rng.normal_vec(d);
+    let qg = rng.normal_vec(4 * d);
+
+    // --- centroid scoring + top-r selection (per head per step) ----------
+    let mut scratch = SelectScratch::default();
+    let r = (m / 55).max(8);
+    let e = (m as f64 * 0.232) as usize;
+    print_result(&bench("select (m=2048, r+e)", 20, budget, || {
+        std::hint::black_box(idx.select_with(&q, r, e, &mut scratch));
+    }));
+    print_result(&bench("select_group (G=4)", 20, budget, || {
+        std::hint::black_box(idx.select_group_with(&qg, 4, r, e, &mut scratch));
+    }));
+
+    // --- execution-buffer assembly ----------------------------------------
+    let pool = Arc::new(ThreadPool::new(2));
+    let bcfg = BufferConfig::default();
+    let cap = WaveBuffer::capacity_for(&bcfg, n, idx.store().tokens_per_block());
+    let wb = WaveBuffer::new(bcfg, d, idx.store().tokens_per_block(), cap, pool);
+    wb.register_index(&idx);
+    let sel = idx.select_with(&q, r, e, &mut scratch);
+    let mut eb = ExecBuffer::new(d);
+    wb.assemble(&idx, &sel, &mut eb); // warm the cache
+    wb.flush();
+    print_result(&bench("exec-buffer assemble (warm)", 20, budget, || {
+        std::hint::black_box(wb.assemble(&idx, &sel, &mut eb));
+    }));
+    wb.flush();
+
+    // --- block cache ops ---------------------------------------------------
+    let mut cache = BlockCache::new(CachePolicy::Lru, 4096, 2 * 8 * d);
+    for k in 0..4096u64 {
+        cache.admit(k);
+    }
+    let mut i = 0u64;
+    print_result(&bench("cache admit+evict", 100, budget, || {
+        let (_, ev) = cache.admit(4096 + i % 8192);
+        std::hint::black_box(ev);
+        i += 1;
+    }));
+    print_result(&bench("cache touch (LRU)", 100, budget, || {
+        cache.touch(i % 4096);
+        i += 1;
+    }));
+
+    // --- tripartite merge ----------------------------------------------------
+    let exact: Vec<usize> = (0..512).collect();
+    let estimated: Vec<usize> = (0..e.min(m)).collect();
+    let inp = TripartiteInputs {
+        d,
+        keys: &keys,
+        vals: &vals,
+        exact: &exact,
+        centroids: idx.meta().centroids_flat(),
+        vsum: idx.meta().vsum_flat(),
+        sizes: idx.meta().counts(),
+        estimated: &estimated,
+    };
+    let mut out = vec![0.0f32; d];
+    print_result(&bench("tripartite merge (512ex+est)", 20, budget, || {
+        tripartite_attention(&q, &inp, &mut out);
+    }));
+
+    // --- live PJRT step components -------------------------------------------
+    {
+        use retroinfer::runtime::tinylm::{TinyLm, WaveInputs};
+        use retroinfer::runtime::default_artifacts_dir;
+        use retroinfer::tensor::Tensor;
+        if let Ok(mut lm) = TinyLm::load(&default_artifacts_dir()) {
+            let (kvh, dh, g) = (lm.cfg.kv_heads, lm.cfg.d_head, lm.cfg.group());
+            let (ne, mc) = (lm.buckets.wave_ne, lm.buckets.wave_m);
+            let mut wi = WaveInputs::zeros(1, kvh, ne, mc, dh);
+            for h in 0..kvh {
+                for t in 0..400 {
+                    wi.kmask[h * ne + t] = 1.0;
+                }
+                for c in 0..120 {
+                    wi.csize[h * mc + c] = 16.0;
+                    wi.emask[h * mc + c] = 1.0;
+                }
+            }
+            let qt = Tensor::zeros(&[1, kvh, g, dh]);
+            lm.attn_wave(&qt, &wi).unwrap(); // compile
+            print_result(&bench("pjrt attn_wave b=1", 3, budget, || {
+                std::hint::black_box(lm.attn_wave(&qt, &wi).unwrap());
+            }));
+            let hid = Tensor::zeros(&[1, 256]);
+            lm.qkv(0, &hid, &[0]).unwrap();
+            print_result(&bench("pjrt qkv b=1", 3, budget, || {
+                std::hint::black_box(lm.qkv(0, &hid, &[0]).unwrap());
+            }));
+            let ctx = Tensor::zeros(&[1, 256]);
+            lm.mlp(0, &hid, &ctx).unwrap();
+            print_result(&bench("pjrt mlp b=1", 3, budget, || {
+                std::hint::black_box(lm.mlp(0, &hid, &ctx).unwrap());
+            }));
+        }
+    }
+
+    // --- segmented k-means build --------------------------------------------
+    let seg_keys = &keys[..8192 * d];
+    print_result(&bench("kmeans 8K segment (10 iters)", 1, budget * 2.0, || {
+        std::hint::black_box(spherical_kmeans(seg_keys, d, 512, 10, true, 3));
+    }));
+}

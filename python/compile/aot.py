@@ -1,0 +1,264 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards. The interchange format is HLO text, NOT `.serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs in artifacts/:
+  <name>.hlo.txt      one per (entry point, shape bucket)
+  weights.bin         TinyLM weights, flat f32 in `weight_specs` order
+  manifest.json       machine-readable description consumed by the Rust
+                      runtime: model config, zone defaults, weight layout,
+                      executable signatures (param/output names + shapes)
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.kmeans import segmented_kmeans
+
+CFG = M.CFG
+
+# Live-path shape buckets (DESIGN.md §5). Batches handled by the dynamic
+# batcher; contexts by prefill/attention buckets.
+BATCH_BUCKETS = (1, 2, 4, 8)
+PREFILL_T = (2048, 4096, 8192)
+ATTN_FULL_T = 8192          # full-attention cache capacity (masked by length)
+WAVE_NE = 1152              # steady zone + execution buffer, padded to 128
+WAVE_M = 512                # meta-index capacity (8K ctx / 16 tokens per cluster)
+STEADY_SINK = 4
+STEADY_LOCAL = 64
+KMEANS_SEGMENTS = ((8192, 512), (1024, 64))  # (segment, clusters): build, update
+PREFILL_CHUNK = 512
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _w(name):
+    """ShapeDtypeStruct for a named weight."""
+    shapes = dict(M.weight_specs())
+    return _spec(shapes[name])
+
+
+def entry_points():
+    """Yield (name, fn, arg_specs, param_names, output_names)."""
+    L, D, V = CFG.n_layers, CFG.d_model, CFG.vocab
+    KVH, G, dh = CFG.kv_heads, CFG.group, CFG.d_head
+    i32 = jnp.int32
+
+    eps = []
+
+    for b in BATCH_BUCKETS:
+        eps.append((
+            f"embed_b{b}",
+            lambda tok_emb, tokens: (M.embed_step(tok_emb, tokens),),
+            [_w("tok_emb"), _spec((b,), i32)],
+            ["tok_emb", "tokens"], ["hidden"],
+        ))
+        # per-LAYER weight params: 4x smaller host->device copies per call
+        eps.append((
+            f"qkv_b{b}",
+            lambda ln1_l, wq_l, wk_l, wv_l, hidden, pos: M.qkv_step_l(
+                ln1_l, wq_l, wk_l, wv_l, hidden, pos
+            ),
+            [_spec((D,)), _spec((D, CFG.q_dim)), _spec((D, CFG.kv_dim)),
+             _spec((D, CFG.kv_dim)), _spec((b, D)), _spec((b,), i32)],
+            ["ln1_l", "wq_l", "wk_l", "wv_l", "hidden", "pos"],
+            ["q", "k", "v"],
+        ))
+        eps.append((
+            f"mlp_b{b}",
+            lambda wo_l, ln2_l, w1_l, w2_l, hidden, ctx: (
+                M.mlp_step_l(wo_l, ln2_l, w1_l, w2_l, hidden, ctx),
+            ),
+            [_spec((CFG.q_dim, D)), _spec((D,)), _spec((D, CFG.ffn)),
+             _spec((CFG.ffn, D)), _spec((b, D)), _spec((b, CFG.q_dim))],
+            ["wo_l", "ln2_l", "w1_l", "w2_l", "hidden", "ctx"],
+            ["hidden_out"],
+        ))
+        eps.append((
+            f"logits_b{b}",
+            lambda lnf, unemb, hidden: (M.logits_step(lnf, unemb, hidden),),
+            [_w("lnf"), _w("unemb"), _spec((b, D))],
+            ["lnf", "unemb", "hidden"], ["logits"],
+        ))
+        eps.append((
+            f"attn_full_b{b}_t{ATTN_FULL_T}",
+            lambda q, kc, vc, length: (M.attn_full_step(q, kc, vc, length),),
+            [_spec((b, KVH, G, dh)), _spec((b, KVH, ATTN_FULL_T, dh)),
+             _spec((b, KVH, ATTN_FULL_T, dh)), _spec((b,), i32)],
+            ["q", "k_cache", "v_cache", "length"], ["ctx"],
+        ))
+        eps.append((
+            f"attn_wave_b{b}",
+            lambda q, kx, vx, kmask, cent, vsum, csize, emask: (
+                M.attn_wave_step(q, kx, vx, kmask, cent, vsum, csize, emask),
+            ),
+            [_spec((b, KVH, G, dh)),
+             _spec((b, KVH, WAVE_NE, dh)), _spec((b, KVH, WAVE_NE, dh)),
+             _spec((b, KVH, WAVE_NE)),
+             _spec((b, KVH, WAVE_M, dh)), _spec((b, KVH, WAVE_M, dh)),
+             _spec((b, KVH, WAVE_M)), _spec((b, KVH, WAVE_M))],
+            ["q", "kx", "vx", "kmask", "cent", "vsum", "csize", "emask"],
+            ["ctx"],
+        ))
+
+    for t in PREFILL_T:
+        eps.append((
+            f"prefill_b1_t{t}",
+            lambda weights_list, tokens: M.prefill(
+                dict(zip(M.WEIGHT_NAMES, weights_list)), tokens, chunk=PREFILL_CHUNK
+            ),
+            [[_spec(s) for _, s in M.weight_specs()], _spec((1, t), i32)],
+            M.WEIGHT_NAMES + ["tokens"],
+            ["k_cache", "v_cache", "logits_last"],
+        ))
+
+    for seg, clusters in KMEANS_SEGMENTS:
+        eps.append((
+            f"kmeans_s{seg}_c{clusters}",
+            (lambda c: lambda keys, values: segmented_kmeans(
+                keys, values, n_clusters=c, n_iters=10
+            ))(clusters),
+            [_spec((KVH, seg, dh)), _spec((KVH, seg, dh))],
+            ["keys", "values"],
+            ["centroids", "vsum", "counts", "assign"],
+        ))
+
+    eps.append((
+        "smoke",
+        lambda x, y: (jnp.matmul(x, y) + 2.0,),
+        [_spec((2, 2)), _spec((2, 2))],
+        ["x", "y"], ["out"],
+    ))
+    return eps
+
+
+def _flat_specs(arg_specs):
+    flat = []
+    for s in arg_specs:
+        if isinstance(s, list):
+            flat.extend(s)
+        else:
+            flat.append(s)
+    return flat
+
+
+def _dtype_name(dt):
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def lower_all(out_dir: str, only=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    exe_manifest = []
+    for name, fn, arg_specs, param_names, output_names in entry_points():
+        flat = _flat_specs(arg_specs)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if only is None or name in only:
+            lowered = jax.jit(fn).lower(*arg_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  {name}: {len(text)} chars -> {path}", file=sys.stderr)
+        exe_manifest.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "params": [
+                {"name": pn, "dtype": _dtype_name(s.dtype), "shape": list(s.shape)}
+                for pn, s in zip(param_names, flat)
+            ],
+            "outputs": output_names,
+        })
+    return exe_manifest
+
+
+def write_weights(out_dir: str, seed: int = 7):
+    w = M.init_weights(seed)
+    manifest = []
+    offset = 0
+    blobs = []
+    for name, shape in M.weight_specs():
+        arr = np.asarray(w[name], dtype=np.float32)
+        assert tuple(arr.shape) == tuple(shape)
+        manifest.append({
+            "name": name, "shape": list(shape),
+            "offset": offset, "elements": int(arr.size),
+        })
+        blobs.append(arr.tobytes())
+        offset += arr.size * 4
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="lower only the named entry points (manifest still lists all)")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    exes = lower_all(args.out_dir, only=args.only)
+    weights = write_weights(args.out_dir, args.seed)
+
+    manifest = {
+        "model": {
+            "name": "tinylm",
+            "vocab": CFG.vocab, "d_model": CFG.d_model,
+            "n_layers": CFG.n_layers, "q_heads": CFG.q_heads,
+            "kv_heads": CFG.kv_heads, "d_head": CFG.d_head,
+            "ffn": CFG.ffn, "rope_theta": CFG.rope_theta,
+            "weights_file": "weights.bin", "weights_seed": args.seed,
+        },
+        "buckets": {
+            "batch": list(BATCH_BUCKETS),
+            "prefill_t": list(PREFILL_T),
+            "attn_full_t": ATTN_FULL_T,
+            "wave_ne": WAVE_NE,
+            "wave_m": WAVE_M,
+            "prefill_chunk": PREFILL_CHUNK,
+        },
+        "zones": {
+            "steady_sink": STEADY_SINK,
+            "steady_local": STEADY_LOCAL,
+            "tokens_per_cluster": 16,
+            "retrieval_frac": 0.018,
+            "estimation_frac": 0.232,
+            "build_segment": KMEANS_SEGMENTS[0][0],
+            "update_segment": KMEANS_SEGMENTS[1][0],
+            "kmeans_iters": 10,
+        },
+        "weights": weights,
+        "executables": exes,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(exes)} executables + weights + manifest to {args.out_dir}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel is validated against
+these dense reference implementations by pytest (+hypothesis sweeps over
+shapes) at build time.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_wave_attention(q, kx, vx, kmask, cent, vsum, csize, emask):
+    """Dense tripartite attention (paper Eq. 2-4), no blocking.
+
+    Same shapes as `wave_attention.wave_attention`. Computes
+
+        D   = sum_valid exp(q.k) + sum_est s_j * exp(q.C_j)
+        out = ( sum_valid exp(q.k) v  +  sum_est exp(q.C_j) VS_j ) / D
+    """
+    d = q.shape[-1]
+    qs = q * (1.0 / jnp.sqrt(jnp.float32(d)))
+
+    # exact part: [B, KVH, G, Ne]
+    se = jnp.einsum("bhgd,bhnd->bhgn", qs, kx)
+    se = jnp.where(kmask[:, :, None, :] > 0.5, se, NEG_INF)
+    # estimation part: [B, KVH, G, M]
+    sc = jnp.einsum("bhgd,bhmd->bhgm", qs, cent)
+    sc = jnp.where(emask[:, :, None, :] > 0.5, sc, NEG_INF)
+
+    m = jnp.maximum(jnp.max(se, axis=-1), jnp.max(sc, axis=-1))  # [B,KVH,G]
+    pe = jnp.exp(se - m[..., None]) * (kmask[:, :, None, :] > 0.5)
+    pc = jnp.exp(sc - m[..., None]) * (emask[:, :, None, :] > 0.5)
+
+    denom = jnp.sum(pe, axis=-1) + jnp.sum(pc * csize[:, :, None, :], axis=-1)
+    denom = jnp.maximum(denom, 1e-30)
+    num = jnp.einsum("bhgn,bhnd->bhgd", pe, vx) + jnp.einsum(
+        "bhgm,bhmd->bhgd", pc, vsum
+    )
+    return num / denom[..., None]
+
+
+def ref_full_attention(q, k, v, mask):
+    """Standard masked softmax attention.
+
+    q [B, KVH, G, d]; k/v [B, KVH, T, d]; mask [B, KVH, T]
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bhgd,bhtd->bhgt", q, k) / jnp.sqrt(jnp.float32(d))
+    s = jnp.where(mask[:, :, None, :] > 0.5, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * (mask[:, :, None, :] > 0.5)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhgt,bhtd->bhgd", p / denom, v)
+
+
+def ref_kmeans_assign(keys, cent):
+    """Nearest-centroid assignment by inner product.
+
+    keys [KVH, S, d]; cent [KVH, C, d] -> assign [KVH, S] int32
+    """
+    sims = jnp.einsum("hsd,hcd->hsc", keys, cent)
+    return jnp.argmax(sims, axis=-1).astype(jnp.int32)
+
+
+def ref_attention_weights(q, k):
+    """Full softmax attention weights (for sparsity analysis figures).
+
+    q [G, d], k [T, d] -> [G, T]
+    """
+    d = q.shape[-1]
+    s = q @ k.T / jnp.sqrt(jnp.float32(d))
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    return p / jnp.sum(p, axis=-1, keepdims=True)

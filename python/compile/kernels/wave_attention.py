@@ -1,0 +1,172 @@
+"""L1: tripartite weighted flash-attention Pallas kernel.
+
+This is the compute hot-spot of RetroInfer (paper §4.2 + §4.6): a single
+online-softmax pass that merges
+
+  * exact attention over the *steady zone* and *retrieval zone* tokens
+    (the execution buffer assembled by the wave buffer), and
+  * accuracy-bounded *estimation zone* attention, where each non-retrieved
+    cluster contributes through its centroid `C_j`, cluster size `s_j` and
+    summed value vector `VS_j` (Eq. 2-4 of the paper):
+
+        denominator += s_j * exp(q . C_j / sqrt(d))
+        numerator   +=       exp(q . C_j / sqrt(d)) * VS_j
+
+  which is exactly the "weighted attention" the paper implements by
+  modifying FlashAttention.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA threadblock
+tiling of the paper becomes a sequential key-block loop whose tiles are
+pulled into VMEM-sized blocks (`block_k` keys x d). GQA is expressed by
+giving each grid step one KV head and the whole group of query heads
+(`G = q_heads // kv_heads`), so the MXU sees (G x d) @ (d x block_k)
+matmuls. The kernel MUST be run with ``interpret=True`` on this image:
+real-TPU lowering emits a Mosaic custom-call that the CPU PJRT plugin
+cannot execute.
+
+Shapes (all float32):
+  q      [B, KVH, G, d]   queries, grouped per KV head, PRE-SCALED by 1/sqrt(d)
+  kx     [B, KVH, Ne, d]  exact keys   (steady zone + execution buffer)
+  vx     [B, KVH, Ne, d]  exact values
+  kmask  [B, KVH, Ne]     1.0 = valid exact token, 0.0 = padding
+  cent   [B, KVH, M, d]   cluster centroids (raw mean of member keys)
+  vsum   [B, KVH, M, d]   per-cluster summed value vectors
+  csize  [B, KVH, M]      per-cluster token counts (float)
+  emask  [B, KVH, M]      1.0 = cluster is in the estimation zone
+  -> out [B, KVH, G, d]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _wave_attention_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    kmask_ref,
+    c_ref,
+    vs_ref,
+    s_ref,
+    emask_ref,
+    o_ref,
+    *,
+    block_k: int,
+    n_exact: int,
+    n_clusters: int,
+):
+    """One grid step = one (batch, kv_head) pair; loops over key blocks."""
+    g, d = q_ref.shape[2], q_ref.shape[3]
+    q = q_ref[0, 0]  # (G, d), already scaled by 1/sqrt(d)
+
+    m0 = jnp.full((g,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((g,), dtype=jnp.float32)
+    a0 = jnp.zeros((g, d), dtype=jnp.float32)
+
+    def exact_step(i, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        msk = pl.load(kmask_ref, (0, 0, pl.ds(i * block_k, block_k)))
+        s = jnp.dot(q, k.T)  # (G, block_k)
+        s = jnp.where(msk[None, :] > 0.5, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        # exp of masked entries is forced to zero via the mask product so a
+        # fully-masked block cannot poison the running sum (exp(-inf - -inf)
+        # would otherwise be 1).
+        p = jnp.exp(s - m_new[:, None]) * msk[None, :]
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return m_new, l, acc
+
+    def estimate_step(i, carry):
+        m, l, acc = carry
+        c = pl.load(c_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        vs = pl.load(vs_ref, (0, 0, pl.ds(i * block_k, block_k), slice(None)))
+        sz = pl.load(s_ref, (0, 0, pl.ds(i * block_k, block_k)))
+        msk = pl.load(emask_ref, (0, 0, pl.ds(i * block_k, block_k)))
+        s = jnp.dot(q, c.T)  # (G, block_k) centroid scores
+        s = jnp.where(msk[None, :] > 0.5, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None]) * msk[None, :]
+        alpha = jnp.exp(m - m_new)
+        # Weighted attention: cluster size scales the softmax denominator,
+        # the summed value vector enters the numerator unscaled (Eq. 4).
+        l = l * alpha + jnp.sum(p * sz[None, :], axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(p, vs)
+        return m_new, l, acc
+
+    n_kb = n_exact // block_k
+    n_cb = n_clusters // block_k
+    carry = jax.lax.fori_loop(0, n_kb, exact_step, (m0, l0, a0))
+    m, l, acc = jax.lax.fori_loop(0, n_cb, estimate_step, carry)
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = acc / l[:, None]
+
+
+def _pad_axis(x, axis, to_multiple):
+    n = x.shape[axis]
+    pad = (-n) % to_multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def wave_attention(
+    q, kx, vx, kmask, cent, vsum, csize, emask, *, block_k: int = 128, interpret: bool = True
+):
+    """Tripartite attention: exact (steady+retrieval) merged with estimation.
+
+    `q` is the raw query [B, KVH, G, d]; scaling by 1/sqrt(d) happens here so
+    callers pass model-space tensors. Inputs are padded to `block_k`
+    multiples; padding is masked out.
+    """
+    b, kvh, g, d = q.shape
+    qs = q * (1.0 / jnp.sqrt(jnp.float32(d)))
+
+    kx = _pad_axis(kx, 2, block_k)
+    vx = _pad_axis(vx, 2, block_k)
+    kmask = _pad_axis(kmask, 2, block_k)
+    cent = _pad_axis(cent, 2, block_k)
+    vsum = _pad_axis(vsum, 2, block_k)
+    csize = _pad_axis(csize, 2, block_k)
+    emask = _pad_axis(emask, 2, block_k)
+    n_exact = kx.shape[2]
+    n_clusters = cent.shape[2]
+
+    kernel = functools.partial(
+        _wave_attention_kernel,
+        block_k=block_k,
+        n_exact=n_exact,
+        n_clusters=n_clusters,
+    )
+
+    def spec(*trailing):
+        return pl.BlockSpec((1, 1) + trailing, lambda i, j: (i, j) + (0,) * len(trailing))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kvh),
+        in_specs=[
+            spec(g, d),
+            spec(n_exact, d),
+            spec(n_exact, d),
+            spec(n_exact),
+            spec(n_clusters, d),
+            spec(n_clusters, d),
+            spec(n_clusters),
+            spec(n_clusters),
+        ],
+        out_specs=spec(g, d),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), jnp.float32),
+        interpret=interpret,
+    )(qs, kx, vx, kmask, cent, vsum, csize, emask)

@@ -1,0 +1,84 @@
+"""AOT manifest + artifact sanity (does not require artifacts to be built:
+only validates the declared signatures and, when present, the files)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_points_unique_names():
+    eps = aot.entry_points()
+    names = [e[0] for e in eps]
+    assert len(names) == len(set(names))
+    # every batch bucket has the full per-layer decode set
+    for b in aot.BATCH_BUCKETS:
+        for stem in ("embed", "qkv", "mlp", "logits", "attn_wave"):
+            assert f"{stem}_b{b}" in names
+    for t in aot.PREFILL_T:
+        assert f"prefill_b1_t{t}" in names
+
+
+def test_param_names_match_spec_counts():
+    for name, fn, arg_specs, param_names, outputs in aot.entry_points():
+        flat = aot._flat_specs(arg_specs)
+        assert len(flat) == len(param_names), name
+        assert len(outputs) >= 1, name
+
+
+def test_wave_shapes_block_aligned():
+    assert aot.WAVE_NE % 128 == 0
+    assert aot.WAVE_M % 128 == 0
+    assert aot.WAVE_NE > aot.STEADY_SINK + aot.STEADY_LOCAL
+
+
+def test_weights_bin_layout(tmp_path):
+    manifest = aot.write_weights(str(tmp_path), seed=7)
+    size = os.path.getsize(tmp_path / "weights.bin")
+    total = sum(m["elements"] for m in manifest)
+    assert size == total * 4
+    # offsets are contiguous and ordered per weight_specs
+    off = 0
+    for m, (name, shape) in zip(manifest, M.weight_specs()):
+        assert m["name"] == name
+        assert m["offset"] == off
+        assert m["elements"] == int(np.prod(shape))
+        off += m["elements"] * 4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_artifacts_complete():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["model"]["name"] == "tinylm"
+    for exe in manifest["executables"]:
+        path = os.path.join(ART, exe["file"])
+        assert os.path.exists(path), exe["name"]
+        head = open(path).read(200)
+        assert "HloModule" in head, exe["name"]
+    wpath = os.path.join(ART, manifest["model"]["weights_file"])
+    total = sum(w["elements"] for w in manifest["weights"])
+    assert os.path.getsize(wpath) == total * 4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_zone_defaults_match_paper():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        z = json.load(f)["zones"]
+    assert z["steady_sink"] == 4 and z["steady_local"] == 64
+    assert z["tokens_per_cluster"] == 16
+    assert abs(z["retrieval_frac"] - 0.018) < 1e-9
+    assert abs(z["estimation_frac"] - 0.232) < 1e-9
+    assert z["build_segment"] == 8192 and z["update_segment"] == 1024

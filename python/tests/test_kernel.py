@@ -1,0 +1,147 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes/masks through the Pallas tripartite-attention
+kernel (interpret=True) and asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.wave_attention import wave_attention
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-5, 2e-6
+
+
+def _inputs(rng, b, kvh, g, d, ne, m, kmask_p=0.8, emask_p=0.7, scale=1.0):
+    q = rng.standard_normal((b, kvh, g, d)).astype(np.float32) * scale
+    kx = rng.standard_normal((b, kvh, ne, d)).astype(np.float32)
+    vx = rng.standard_normal((b, kvh, ne, d)).astype(np.float32)
+    kmask = (rng.random((b, kvh, ne)) < kmask_p).astype(np.float32)
+    # guarantee at least one valid exact token per head (steady zone invariant)
+    kmask[:, :, 0] = 1.0
+    cent = rng.standard_normal((b, kvh, m, d)).astype(np.float32)
+    vsum = rng.standard_normal((b, kvh, m, d)).astype(np.float32) * 4.0
+    csize = rng.integers(1, 32, (b, kvh, m)).astype(np.float32)
+    emask = (rng.random((b, kvh, m)) < emask_p).astype(np.float32)
+    return q, kx, vx, kmask, cent, vsum, csize, emask
+
+
+def _check(args, block_k=128):
+    got = np.asarray(wave_attention(*args, block_k=block_k))
+    want = np.asarray(ref.ref_wave_attention(*args))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_basic_shapes():
+    rng = np.random.default_rng(0)
+    _check(_inputs(rng, 2, 2, 4, 32, 256, 64))
+
+
+def test_single_batch_single_head():
+    rng = np.random.default_rng(1)
+    _check(_inputs(rng, 1, 1, 1, 16, 64, 32), block_k=32)
+
+
+def test_non_multiple_block_padding():
+    """Ne/M not multiples of block_k exercise the padding path."""
+    rng = np.random.default_rng(2)
+    _check(_inputs(rng, 1, 2, 4, 32, 100, 37), block_k=32)
+
+
+def test_no_estimation_zone_matches_masked_full():
+    """emask all-zero => pure exact attention over valid tokens."""
+    rng = np.random.default_rng(3)
+    q, kx, vx, kmask, cent, vsum, csize, emask = _inputs(rng, 1, 2, 4, 32, 128, 32)
+    emask = np.zeros_like(emask)
+    got = np.asarray(wave_attention(q, kx, vx, kmask, cent, vsum, csize, emask))
+    want = np.asarray(ref.ref_full_attention(q, kx, vx, kmask))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_all_exact_masked_pure_estimation():
+    """kmask all-zero => output comes only from the estimation zone."""
+    rng = np.random.default_rng(4)
+    q, kx, vx, kmask, cent, vsum, csize, emask = _inputs(rng, 1, 1, 2, 32, 64, 32)
+    kmask = np.zeros_like(kmask)
+    emask = np.ones_like(emask)
+    got = np.asarray(wave_attention(q, kx, vx, kmask, cent, vsum, csize, emask))
+    want = np.asarray(ref.ref_wave_attention(q, kx, vx, kmask, cent, vsum, csize, emask))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    assert np.all(np.isfinite(got))
+
+
+def test_numerical_stability_large_scores():
+    """Large logits must not overflow thanks to the online max."""
+    rng = np.random.default_rng(5)
+    args = _inputs(rng, 1, 1, 2, 32, 64, 32, scale=40.0)
+    got = np.asarray(wave_attention(*args, block_k=32))
+    assert np.all(np.isfinite(got))
+    _check(args, block_k=32)
+
+
+def test_singleton_clusters_equal_exact():
+    """If every cluster has size 1, centroid==key and vsum==value, the
+    estimation zone must reproduce exact attention over those tokens."""
+    rng = np.random.default_rng(6)
+    b, kvh, g, d, ne = 1, 2, 4, 32, 64
+    q = rng.standard_normal((b, kvh, g, d)).astype(np.float32)
+    keys = rng.standard_normal((b, kvh, ne, d)).astype(np.float32)
+    vals = rng.standard_normal((b, kvh, ne, d)).astype(np.float32)
+    ones = np.ones((b, kvh, ne), np.float32)
+    # exact path
+    exact = np.asarray(ref.ref_full_attention(q, keys, vals, ones))
+    # estimation-only path with singleton clusters
+    zeros_mask = np.zeros((b, kvh, ne), np.float32)
+    got = np.asarray(
+        wave_attention(q, keys, vals, zeros_mask, keys, vals, ones, ones, block_k=32)
+    )
+    np.testing.assert_allclose(got, exact, rtol=RTOL, atol=ATOL)
+
+
+def test_jensen_bound_denominator():
+    """Estimated softmax denominator lower-bounds the true one (Eq. 3):
+    s_i * exp(q.C_i) <= sum_j exp(q.K_j) when C_i is the member mean."""
+    rng = np.random.default_rng(7)
+    d, n = 32, 128
+    keys = rng.standard_normal((n, d)).astype(np.float32)
+    q = rng.standard_normal((d,)).astype(np.float32)
+    assign = rng.integers(0, 8, n)
+    scale = 1.0 / np.sqrt(d)
+    for c in range(8):
+        members = keys[assign == c]
+        if len(members) == 0:
+            continue
+        cent = members.mean(axis=0)
+        lhs = len(members) * np.exp(np.float64(q @ cent) * scale)
+        rhs = np.exp((members @ q).astype(np.float64) * scale).sum()
+        assert lhs <= rhs * (1 + 1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    kvh=st.integers(1, 3),
+    g=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    ne=st.integers(8, 200),
+    m=st.integers(4, 80),
+    block_k=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(b, kvh, g, d, ne, m, block_k, seed):
+    rng = np.random.default_rng(seed)
+    _check(_inputs(rng, b, kvh, g, d, ne, m), block_k=block_k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    kmask_p=st.floats(0.05, 1.0),
+    emask_p=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_mask_densities(kmask_p, emask_p, seed):
+    rng = np.random.default_rng(seed)
+    _check(_inputs(rng, 1, 2, 4, 32, 96, 40, kmask_p, emask_p), block_k=32)

@@ -1,0 +1,301 @@
+//! Pure-Rust attention: the oracle for the simulation path and tests.
+//!
+//! The PJRT-executed L1 kernel computes the same tripartite merge on the
+//! live path; this module is its host-side twin used by (a) the hardware
+//! simulator (which needs outputs, not timing, from real math), (b) the
+//! baselines, and (c) accuracy experiments at contexts too long for live
+//! execution on one CPU core.
+
+pub mod sparsity;
+
+use crate::tensor::{axpy, dot};
+
+/// Numerically-stable softmax over `scores` in place; returns the
+/// normalizing denominator in max-shifted space.
+pub fn softmax_inplace(scores: &mut [f32]) -> f32 {
+    let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0.0;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom.max(1e-30);
+    for s in scores.iter_mut() {
+        *s *= inv;
+    }
+    denom
+}
+
+/// Full attention for one query against a [T, d] key/value set.
+/// `q` is unscaled (scaling by 1/sqrt(d) applied here).
+pub fn full_attention(q: &[f32], keys: &[f32], vals: &[f32], d: usize, out: &mut [f32]) {
+    let t = keys.len() / d;
+    debug_assert_eq!(keys.len(), vals.len());
+    debug_assert_eq!(out.len(), d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = vec![0.0f32; t];
+    for i in 0..t {
+        scores[i] = dot(q, &keys[i * d..(i + 1) * d]) * scale;
+    }
+    softmax_inplace(&mut scores);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for i in 0..t {
+        axpy(scores[i], &vals[i * d..(i + 1) * d], out);
+    }
+}
+
+/// Full attention weights (softmax over q·K/sqrt(d)) for analysis.
+pub fn attention_weights(q: &[f32], keys: &[f32], d: usize) -> Vec<f32> {
+    let t = keys.len() / d;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores: Vec<f32> = (0..t)
+        .map(|i| dot(q, &keys[i * d..(i + 1) * d]) * scale)
+        .collect();
+    softmax_inplace(&mut scores);
+    scores
+}
+
+/// Sparse attention over an explicit token subset (baselines): softmax is
+/// computed over the selected tokens ONLY (no estimation), as in
+/// Quest/InfiniGen/PQCache.
+pub fn subset_attention(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    d: usize,
+    selected: &[usize],
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores: Vec<f32> = selected
+        .iter()
+        .map(|&i| dot(q, &keys[i * d..(i + 1) * d]) * scale)
+        .collect();
+    softmax_inplace(&mut scores);
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for (w, &i) in scores.iter().zip(selected) {
+        axpy(*w, &vals[i * d..(i + 1) * d], out);
+    }
+}
+
+/// Inputs to the tripartite merge for one (query, head) pair.
+/// Exact tokens are referenced by index into `keys`/`vals`; estimated
+/// clusters by index into the meta arrays.
+pub struct TripartiteInputs<'a> {
+    pub d: usize,
+    /// [T, d] flat key/value storage
+    pub keys: &'a [f32],
+    pub vals: &'a [f32],
+    /// exact-zone token indices (steady + retrieval zones)
+    pub exact: &'a [usize],
+    /// meta index: [M, d] centroids, [M, d] value sums, [M] sizes
+    pub centroids: &'a [f32],
+    pub vsum: &'a [f32],
+    pub sizes: &'a [f32],
+    /// cluster ids participating in the estimation zone
+    pub estimated: &'a [usize],
+}
+
+/// Tripartite attention (paper Eq. 2-4): one softmax over
+///   exact tokens:      exp(q.k)                -> value v
+///   estimated cluster: s_j * exp(q.C_j) (denom), exp(q.C_j) * VS_j (num)
+pub fn tripartite_attention(q: &[f32], inp: &TripartiteInputs, out: &mut [f32]) {
+    let d = inp.d;
+    debug_assert_eq!(out.len(), d);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // pass 1: max for stability across both parts
+    let mut m = f32::NEG_INFINITY;
+    let mut ex_scores = Vec::with_capacity(inp.exact.len());
+    for &i in inp.exact {
+        let s = dot(q, &inp.keys[i * d..(i + 1) * d]) * scale;
+        ex_scores.push(s);
+        m = m.max(s);
+    }
+    let mut est_scores = Vec::with_capacity(inp.estimated.len());
+    for &c in inp.estimated {
+        let s = dot(q, &inp.centroids[c * d..(c + 1) * d]) * scale;
+        est_scores.push(s);
+        m = m.max(s);
+    }
+    if !m.is_finite() {
+        out.iter_mut().for_each(|o| *o = 0.0);
+        return;
+    }
+
+    // pass 2: accumulate
+    let mut denom = 0.0f64;
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for (s, &i) in ex_scores.iter().zip(inp.exact) {
+        let p = (s - m).exp();
+        denom += p as f64;
+        axpy(p, &inp.vals[i * d..(i + 1) * d], out);
+    }
+    for (s, &c) in est_scores.iter().zip(inp.estimated) {
+        let p = (s - m).exp();
+        denom += (p * inp.sizes[c]) as f64;
+        axpy(p, &inp.vsum[c * d..(c + 1) * d], out);
+    }
+    let inv = (1.0 / denom.max(1e-30)) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{cosine, rel_err};
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n)
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0, -100.0];
+        softmax_inplace(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn softmax_large_values_stable() {
+        let mut s = vec![1e4, 1e4 + 1.0];
+        softmax_inplace(&mut s);
+        assert!(s.iter().all(|x| x.is_finite()));
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn full_attention_uniform_keys_averages_values() {
+        let d = 4;
+        let t = 8;
+        let keys = vec![0.0; t * d]; // all scores equal -> uniform weights
+        let mut vals = vec![0.0; t * d];
+        for i in 0..t {
+            vals[i * d] = i as f32;
+        }
+        let q = vec![1.0; d];
+        let mut out = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut out);
+        assert!((out[0] - 3.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn subset_attention_full_subset_matches_full() {
+        let mut rng = Rng::new(3);
+        let (d, t) = (16, 50);
+        let keys = randvec(&mut rng, t * d);
+        let vals = randvec(&mut rng, t * d);
+        let q = randvec(&mut rng, d);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut a);
+        let all: Vec<usize> = (0..t).collect();
+        subset_attention(&q, &keys, &vals, d, &all, &mut b);
+        assert!(rel_err(&b, &a) < 1e-5);
+    }
+
+    #[test]
+    fn tripartite_all_exact_matches_full() {
+        let mut rng = Rng::new(5);
+        let (d, t) = (16, 64);
+        let keys = randvec(&mut rng, t * d);
+        let vals = randvec(&mut rng, t * d);
+        let q = randvec(&mut rng, d);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut full);
+        let exact: Vec<usize> = (0..t).collect();
+        let inp = TripartiteInputs {
+            d,
+            keys: &keys,
+            vals: &vals,
+            exact: &exact,
+            centroids: &[],
+            vsum: &[],
+            sizes: &[],
+            estimated: &[],
+        };
+        let mut out = vec![0.0; d];
+        tripartite_attention(&q, &inp, &mut out);
+        assert!(rel_err(&out, &full) < 1e-5);
+    }
+
+    #[test]
+    fn tripartite_singleton_clusters_match_full() {
+        // every token as its own estimated cluster == full attention
+        let mut rng = Rng::new(7);
+        let (d, t) = (8, 40);
+        let keys = randvec(&mut rng, t * d);
+        let vals = randvec(&mut rng, t * d);
+        let q = randvec(&mut rng, d);
+        let sizes = vec![1.0; t];
+        let estimated: Vec<usize> = (0..t).collect();
+        let inp = TripartiteInputs {
+            d,
+            keys: &keys,
+            vals: &vals,
+            exact: &[],
+            centroids: &keys,
+            vsum: &vals,
+            sizes: &sizes,
+            estimated: &estimated,
+        };
+        let mut out = vec![0.0; d];
+        tripartite_attention(&q, &inp, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut full);
+        assert!(rel_err(&out, &full) < 1e-5, "rel={}", rel_err(&out, &full));
+    }
+
+    #[test]
+    fn tripartite_estimation_improves_over_dropping_tail() {
+        // heavy head exact, clustered tail: including the estimation zone
+        // must be closer to full attention than ignoring the tail.
+        let mut rng = Rng::new(11);
+        let (d, t) = (16, 256);
+        let keys = randvec(&mut rng, t * d);
+        let vals = randvec(&mut rng, t * d);
+        let q = randvec(&mut rng, d);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut full);
+
+        // exact = top 32 by score; tail in 16-token clusters
+        let w = attention_weights(&q, &keys, d);
+        let mut order: Vec<usize> = (0..t).collect();
+        order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+        let exact: Vec<usize> = order[..32].to_vec();
+        let tail: Vec<usize> = order[32..].to_vec();
+        let m = tail.len() / 16;
+        let mut centroids = vec![0.0f32; m * d];
+        let mut vsum = vec![0.0f32; m * d];
+        let mut sizes = vec![0.0f32; m];
+        for (ci, chunk) in tail.chunks(16).take(m).enumerate() {
+            for &ti in chunk {
+                axpy(1.0, &keys[ti * d..(ti + 1) * d], &mut centroids[ci * d..(ci + 1) * d]);
+                axpy(1.0, &vals[ti * d..(ti + 1) * d], &mut vsum[ci * d..(ci + 1) * d]);
+            }
+            sizes[ci] = chunk.len() as f32;
+            let inv = 1.0 / chunk.len() as f32;
+            centroids[ci * d..(ci + 1) * d].iter_mut().for_each(|x| *x *= inv);
+        }
+        let estimated: Vec<usize> = (0..m).collect();
+        let inp = TripartiteInputs {
+            d, keys: &keys, vals: &vals, exact: &exact,
+            centroids: &centroids, vsum: &vsum, sizes: &sizes, estimated: &estimated,
+        };
+        let mut with_est = vec![0.0; d];
+        tripartite_attention(&q, &inp, &mut with_est);
+        let mut no_est = vec![0.0; d];
+        subset_attention(&q, &keys, &vals, d, &exact, &mut no_est);
+
+        let c_est = cosine(&with_est, &full);
+        let c_drop = cosine(&no_est, &full);
+        assert!(
+            c_est >= c_drop - 1e-6,
+            "estimation should not hurt: {c_est} vs {c_drop}"
+        );
+    }
+}

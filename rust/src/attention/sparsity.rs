@@ -1,0 +1,107 @@
+//! Attention-sparsity analysis utilities (paper Figures 3, 4 and 8):
+//! top-k mass, heavy-hitter sets, step-to-step overlap.
+
+use super::attention_weights;
+
+/// Indices of the `k` largest attention weights.
+pub fn top_k_indices(weights: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..weights.len()).collect();
+    let k = k.min(weights.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        weights[b].partial_cmp(&weights[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+    idx
+}
+
+/// Total attention mass captured by the top-k weights.
+pub fn top_k_mass(weights: &[f32], k: usize) -> f64 {
+    top_k_indices(weights, k).iter().map(|&i| weights[i] as f64).sum()
+}
+
+/// Smallest number of tokens covering `mass` of the attention
+/// distribution — the per-query sparsity ratio measure of Figure 4(b).
+pub fn tokens_for_mass(weights: &[f32], mass: f64) -> usize {
+    let mut sorted: Vec<f32> = weights.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut acc = 0.0f64;
+    for (i, w) in sorted.iter().enumerate() {
+        acc += *w as f64;
+        if acc >= mass {
+            return i + 1;
+        }
+    }
+    weights.len()
+}
+
+/// Jaccard-style overlap |A ∩ B| / k of two top-k sets (Figure 3's
+/// "31% overlap across decoding steps" measurement).
+pub fn top_k_overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let set: std::collections::HashSet<usize> = a.iter().copied().collect();
+    let inter = b.iter().filter(|x| set.contains(x)).count();
+    inter as f64 / a.len() as f64
+}
+
+/// Recall of ground-truth heavy hitters within a selected token set.
+pub fn recall(truth: &[usize], selected: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let set: std::collections::HashSet<usize> = selected.iter().copied().collect();
+    truth.iter().filter(|t| set.contains(t)).count() as f64 / truth.len() as f64
+}
+
+/// Per-query sparsity summary for one head.
+pub struct SparsityProfile {
+    pub top100_mass: f64,
+    pub tokens_for_90: usize,
+    pub tokens_for_99: usize,
+}
+
+pub fn profile(q: &[f32], keys: &[f32], d: usize) -> SparsityProfile {
+    let w = attention_weights(q, keys, d);
+    SparsityProfile {
+        top100_mass: top_k_mass(&w, 100),
+        tokens_for_90: tokens_for_mass(&w, 0.90),
+        tokens_for_99: tokens_for_mass(&w, 0.99),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_by_weight() {
+        let w = vec![0.1, 0.5, 0.05, 0.3, 0.05];
+        assert_eq!(top_k_indices(&w, 3), vec![1, 3, 0]);
+        assert!((top_k_mass(&w, 2) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_handles_k_larger_than_len() {
+        let w = vec![0.6, 0.4];
+        assert_eq!(top_k_indices(&w, 10).len(), 2);
+    }
+
+    #[test]
+    fn tokens_for_mass_concentrated() {
+        let w = vec![0.9, 0.05, 0.03, 0.02];
+        assert_eq!(tokens_for_mass(&w, 0.5), 1);
+        assert_eq!(tokens_for_mass(&w, 0.949), 2);
+        assert_eq!(tokens_for_mass(&w, 1.0), 4);
+    }
+
+    #[test]
+    fn overlap_and_recall() {
+        let a = vec![1, 2, 3, 4];
+        let b = vec![3, 4, 5, 6];
+        assert!((top_k_overlap(&a, &b) - 0.5).abs() < 1e-12);
+        assert!((recall(&a, &b) - 0.5).abs() < 1e-12);
+        assert_eq!(recall(&[], &b), 1.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Full attention: the accuracy gold standard and the FlashInfer-style
+//! efficiency baseline. All KV resides in GPU memory; every step reads
+//! the entire cache.
+
+use super::{DecodeStats, SparseSystem};
+use crate::attention::full_attention;
+
+pub struct FullAttention {
+    d: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+}
+
+impl FullAttention {
+    pub fn new(keys: &[f32], vals: &[f32], d: usize) -> Self {
+        FullAttention { d, keys: keys.to_vec(), vals: vals.to_vec() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.keys.len() / self.d
+    }
+}
+
+impl SparseSystem for FullAttention {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn decode(&mut self, q: &[f32], _budget: usize, out: &mut [f32]) -> DecodeStats {
+        full_attention(q, &self.keys, &self.vals, self.d, out);
+        let n = self.n();
+        DecodeStats {
+            exact_positions: (0..n as u32).collect(),
+            hbm_bytes: 2 * n * self.d * 4,
+            ..DecodeStats::default()
+        }
+    }
+
+    fn append(&mut self, key: &[f32], val: &[f32]) {
+        self.keys.extend_from_slice(key);
+        self.vals.extend_from_slice(val);
+    }
+
+    fn kv_on_gpu(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reads_whole_cache_every_step() {
+        let d = 8;
+        let mut rng = Rng::new(1);
+        let keys = rng.normal_vec(100 * d);
+        let vals = rng.normal_vec(100 * d);
+        let mut sys = FullAttention::new(&keys, &vals, d);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 1, &mut out); // budget ignored
+        assert_eq!(st.exact_positions.len(), 100);
+        assert_eq!(st.hbm_bytes, 2 * 100 * d * 4);
+        assert_eq!(st.pcie_bytes, 0);
+    }
+
+    #[test]
+    fn append_grows_cache() {
+        let d = 4;
+        let mut sys = FullAttention::new(&[0.0; 8], &[0.0; 8], d);
+        sys.append(&[1.0; 4], &[1.0; 4]);
+        assert_eq!(sys.n(), 3);
+    }
+}

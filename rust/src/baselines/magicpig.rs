@@ -1,0 +1,233 @@
+//! MagicPIG (Chen et al., ICLR'25): LSH importance sampling. SimHash
+//! signatures (K hyperplanes per table, L tables) are built over centered
+//! keys; a token is *sampled* when its signature collides with the query
+//! in at least one table. Sampled tokens get unbiased softmax weights via
+//! 1/p_i correction, where p_i = 1-(1-p^K)^L and p is the per-plane
+//! collision probability (1 - theta/pi). Attention runs on the CPU —
+//! MagicPIG's defining system trait (and its throughput ceiling).
+
+use super::{DecodeStats, SparseSystem};
+use crate::tensor::{dot, norm};
+use crate::util::rng::Rng;
+
+pub struct MagicPig {
+    d: usize,
+    k_bits: usize,
+    l_tables: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// Centering vector (all-but-the-top, as in the paper).
+    mu: Vec<f32>,
+    /// `[l_tables * k_bits, d]` random hyperplanes.
+    planes: Vec<f32>,
+    /// Per-token signatures: `[n, l_tables]` packed bit patterns.
+    sigs: Vec<u32>,
+}
+
+impl MagicPig {
+    pub fn new(keys: &[f32], vals: &[f32], d: usize, k_bits: usize, l_tables: usize, seed: u64) -> Self {
+        assert!(k_bits <= 32);
+        let n = keys.len() / d;
+        let mut rng = Rng::new(seed ^ xp1g_u64());
+        let planes = rng.normal_vec(l_tables * k_bits * d);
+        let mut mu = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                mu[j] += keys[i * d + j];
+            }
+        }
+        mu.iter_mut().for_each(|x| *x /= n.max(1) as f32);
+        let mut mp = MagicPig {
+            d,
+            k_bits,
+            l_tables,
+            keys: keys.to_vec(),
+            vals: vals.to_vec(),
+            mu,
+            planes,
+            sigs: Vec::new(),
+        };
+        mp.sigs = (0..n).flat_map(|i| mp.signatures_of(&mp.centered(i))).collect();
+        mp
+    }
+
+    fn n(&self) -> usize {
+        self.keys.len() / self.d
+    }
+
+    fn centered(&self, i: usize) -> Vec<f32> {
+        let d = self.d;
+        (0..d).map(|j| self.keys[i * d + j] - self.mu[j]).collect()
+    }
+
+    /// One packed K-bit signature per table.
+    fn signatures_of(&self, x: &[f32]) -> Vec<u32> {
+        let d = self.d;
+        (0..self.l_tables)
+            .map(|t| {
+                let mut sig = 0u32;
+                for b in 0..self.k_bits {
+                    let p = &self.planes[(t * self.k_bits + b) * d..(t * self.k_bits + b + 1) * d];
+                    if dot(x, p) >= 0.0 {
+                        sig |= 1 << b;
+                    }
+                }
+                sig
+            })
+            .collect()
+    }
+
+    /// Sampling probability for angle `theta` between q and k.
+    fn sample_prob(&self, cos_sim: f32) -> f64 {
+        let theta = cos_sim.clamp(-1.0, 1.0).acos() as f64;
+        let p = 1.0 - theta / std::f64::consts::PI;
+        1.0 - (1.0 - p.powi(self.k_bits as i32)).powi(self.l_tables as i32)
+    }
+}
+
+fn xp1g_u64() -> u64 {
+    0x7069675f6c736800 // deterministic salt
+}
+
+impl SparseSystem for MagicPig {
+    fn name(&self) -> &'static str {
+        "magicpig"
+    }
+
+    fn decode(&mut self, q: &[f32], _budget: usize, out: &mut [f32]) -> DecodeStats {
+        let d = self.d;
+        let n = self.n();
+        let qc: Vec<f32> = (0..d).map(|j| q[j] - self.mu[j]).collect();
+        let qsigs = self.signatures_of(&qc);
+        // Collision in >= 1 table => sampled.
+        let mut sampled = Vec::new();
+        for i in 0..n {
+            let s = &self.sigs[i * self.l_tables..(i + 1) * self.l_tables];
+            if s.iter().zip(&qsigs).any(|(a, b)| a == b) {
+                sampled.push(i);
+            }
+        }
+        // Unbiased softmax with 1/p_i corrections (importance sampling).
+        let scale = 1.0 / (d as f32).sqrt();
+        let qn = norm(&qc).max(1e-12);
+        let mut m = f32::NEG_INFINITY;
+        let mut scores = Vec::with_capacity(sampled.len());
+        for &i in &sampled {
+            let s = dot(q, &self.keys[i * d..(i + 1) * d]) * scale;
+            scores.push(s);
+            m = m.max(s);
+        }
+        out.iter_mut().for_each(|o| *o = 0.0);
+        if !m.is_finite() {
+            return DecodeStats::default();
+        }
+        let mut denom = 0.0f64;
+        let mut acc = vec![0.0f64; d];
+        for (idx, &i) in sampled.iter().enumerate() {
+            let kc = self.centered(i);
+            let cos = dot(&qc, &kc) / (qn * norm(&kc).max(1e-12));
+            let p = self.sample_prob(cos).max(1e-6);
+            let w = ((scores[idx] - m).exp() as f64) / p;
+            denom += w;
+            for j in 0..d {
+                acc[j] += w * self.vals[i * d + j] as f64;
+            }
+        }
+        let inv = 1.0 / denom.max(1e-30);
+        for j in 0..d {
+            out[j] = (acc[j] * inv) as f32;
+        }
+        DecodeStats {
+            exact_positions: sampled.iter().map(|&i| i as u32).collect(),
+            // CPU reads the sampled KV vectors; signatures scanned too.
+            cpu_bytes: 2 * sampled.len() * d * 4,
+            scan_bytes: n * self.l_tables * 4,
+            ..DecodeStats::default()
+        }
+    }
+
+    fn append(&mut self, _key: &[f32], _val: &[f32]) {
+        // MagicPIG's published implementation has no index update path;
+        // appended tokens are simply not indexed (paper excludes it from
+        // long-generation experiments).
+    }
+
+    fn supports_updates(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::cosine;
+
+    #[test]
+    fn needle_is_sampled_with_high_probability() {
+        let d = 16;
+        let mut rng = Rng::new(8);
+        let mut keys = rng.normal_vec(512 * d);
+        let vals = rng.normal_vec(512 * d);
+        let dir = rng.normal_vec(d);
+        for j in 0..d {
+            keys[300 * d + j] = 4.0 * dir[j];
+        }
+        let q: Vec<f32> = dir.iter().map(|x| 4.0 * x).collect();
+        let mut sys = MagicPig::new(&keys, &vals, d, 8, 48, 1);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 0, &mut out);
+        assert!(
+            st.exact_positions.contains(&300),
+            "aligned needle must collide in some table (sampled {} tokens)",
+            st.exact_positions.len()
+        );
+    }
+
+    #[test]
+    fn sampling_is_sparse() {
+        let d = 16;
+        let mut rng = Rng::new(9);
+        let keys = rng.normal_vec(1024 * d);
+        let vals = rng.normal_vec(1024 * d);
+        let q = rng.normal_vec(d);
+        let mut sys = MagicPig::new(&keys, &vals, d, 10, 20, 2);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 0, &mut out);
+        assert!(
+            st.exact_positions.len() < 512,
+            "random queries should sample a minority: {}",
+            st.exact_positions.len()
+        );
+        assert!(st.cpu_bytes > 0);
+    }
+
+    #[test]
+    fn estimate_tracks_full_attention_on_peaked_dist() {
+        let d = 16;
+        let mut rng = Rng::new(10);
+        let mut keys = rng.normal_vec(512 * d);
+        let vals = rng.normal_vec(512 * d);
+        let dir = rng.normal_vec(d);
+        for j in 0..d {
+            keys[100 * d + j] = 4.0 * dir[j];
+        }
+        let q: Vec<f32> = dir.iter().map(|x| 4.0 * x).collect();
+        let mut full = vec![0.0; d];
+        crate::attention::full_attention(&q, &keys, &vals, d, &mut full);
+        let mut sys = MagicPig::new(&keys, &vals, d, 8, 64, 3);
+        let mut out = vec![0.0; d];
+        sys.decode(&q, 0, &mut out);
+        assert!(cosine(&out, &full) > 0.9, "cos = {}", cosine(&out, &full));
+    }
+
+    #[test]
+    fn no_update_support() {
+        let d = 4;
+        let keys = vec![0.1; 16];
+        let vals = vec![0.1; 16];
+        let mut sys = MagicPig::new(&keys, &vals, d, 4, 4, 4);
+        assert!(!sys.supports_updates());
+        sys.append(&[1.0; 4], &[1.0; 4]); // must not panic, not indexed
+        assert_eq!(sys.n(), 4);
+    }
+}

@@ -1,0 +1,204 @@
+//! Quest (Tang et al., ICML'24): query-aware page selection. The context
+//! is split into fixed chunks; each chunk keeps elementwise min/max key
+//! vectors as representatives. A chunk's upper-bound score for query q is
+//! sum_j max(q_j*min_j, q_j*max_j); the top-scoring chunks within budget
+//! are attended exactly. GPU-only: the whole KV cache (plus
+//! representatives) stays in GPU memory.
+
+use super::{DecodeStats, SparseSystem};
+use crate::attention::subset_attention;
+
+pub struct Quest {
+    d: usize,
+    chunk: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// Per-chunk elementwise min/max of keys: `[n_chunks, d]` each.
+    cmin: Vec<f32>,
+    cmax: Vec<f32>,
+}
+
+impl Quest {
+    pub fn new(keys: &[f32], vals: &[f32], d: usize, chunk: usize) -> Self {
+        let mut q = Quest {
+            d,
+            chunk,
+            keys: Vec::new(),
+            vals: Vec::new(),
+            cmin: Vec::new(),
+            cmax: Vec::new(),
+        };
+        q.keys = keys.to_vec();
+        q.vals = vals.to_vec();
+        q.rebuild_representatives();
+        q
+    }
+
+    fn n(&self) -> usize {
+        self.keys.len() / self.d
+    }
+
+    fn n_chunks(&self) -> usize {
+        self.n().div_ceil(self.chunk)
+    }
+
+    fn rebuild_representatives(&mut self) {
+        let (n, d) = (self.n(), self.d);
+        let nc = n.div_ceil(self.chunk);
+        self.cmin = vec![f32::INFINITY; nc * d];
+        self.cmax = vec![f32::NEG_INFINITY; nc * d];
+        for i in 0..n {
+            let c = i / self.chunk;
+            for j in 0..d {
+                let k = self.keys[i * d + j];
+                let mn = &mut self.cmin[c * d + j];
+                if k < *mn {
+                    *mn = k;
+                }
+                let mx = &mut self.cmax[c * d + j];
+                if k > *mx {
+                    *mx = k;
+                }
+            }
+        }
+    }
+
+    /// Upper-bound score of chunk `c` (Quest Eq. 1).
+    fn chunk_score(&self, q: &[f32], c: usize) -> f32 {
+        let d = self.d;
+        let mut s = 0.0;
+        for j in 0..d {
+            s += (q[j] * self.cmin[c * d + j]).max(q[j] * self.cmax[c * d + j]);
+        }
+        s
+    }
+}
+
+impl SparseSystem for Quest {
+    fn name(&self) -> &'static str {
+        "quest"
+    }
+
+    fn decode(&mut self, q: &[f32], budget: usize, out: &mut [f32]) -> DecodeStats {
+        let nc = self.n_chunks();
+        let n = self.n();
+        let want_chunks = budget.div_ceil(self.chunk).min(nc).max(1);
+        let mut order: Vec<usize> = (0..nc).collect();
+        let scores: Vec<f32> = (0..nc).map(|c| self.chunk_score(q, c)).collect();
+        if want_chunks < nc {
+            order.select_nth_unstable_by(want_chunks - 1, |&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap()
+            });
+        }
+        let mut sel = Vec::with_capacity(want_chunks * self.chunk);
+        for &c in &order[..want_chunks] {
+            let start = c * self.chunk;
+            let end = ((c + 1) * self.chunk).min(n);
+            sel.extend(start..end);
+        }
+        subset_attention(q, &self.keys, &self.vals, self.d, &sel, out);
+        DecodeStats {
+            exact_positions: sel.iter().map(|&i| i as u32).collect(),
+            hbm_bytes: 2 * sel.len() * self.d * 4,
+            scan_bytes: 2 * nc * self.d * 4, // min+max representative scan
+            ..DecodeStats::default()
+        }
+    }
+
+    fn append(&mut self, key: &[f32], val: &[f32]) {
+        let d = self.d;
+        let i = self.n();
+        self.keys.extend_from_slice(key);
+        self.vals.extend_from_slice(val);
+        let c = i / self.chunk;
+        if c * d >= self.cmin.len() {
+            self.cmin.extend(std::iter::repeat(f32::INFINITY).take(d));
+            self.cmax.extend(std::iter::repeat(f32::NEG_INFINITY).take(d));
+        }
+        for j in 0..d {
+            let k = key[j];
+            if k < self.cmin[c * d + j] {
+                self.cmin[c * d + j] = k;
+            }
+            if k > self.cmax[c * d + j] {
+                self.cmax[c * d + j] = k;
+            }
+        }
+    }
+
+    fn kv_on_gpu(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_weights;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn upper_bound_property() {
+        // chunk score must upper-bound every member's exact score
+        let d = 8;
+        let mut rng = Rng::new(4);
+        let keys = rng.normal_vec(64 * d);
+        let vals = rng.normal_vec(64 * d);
+        let sys = Quest::new(&keys, &vals, d, 16);
+        let q = rng.normal_vec(d);
+        for c in 0..4 {
+            let ub = sys.chunk_score(&q, c);
+            for i in c * 16..(c + 1) * 16 {
+                let s: f32 = (0..d).map(|j| q[j] * keys[i * d + j]).sum();
+                assert!(s <= ub + 1e-4, "chunk {c} token {i}: {s} > {ub}");
+            }
+        }
+    }
+
+    #[test]
+    fn finds_needle_chunk() {
+        let d = 8;
+        let mut rng = Rng::new(5);
+        let mut keys = rng.normal_vec(256 * d);
+        let vals = rng.normal_vec(256 * d);
+        // plant needle at 100
+        let dir = rng.normal_vec(d);
+        for j in 0..d {
+            keys[100 * d + j] = 5.0 * dir[j];
+        }
+        let q: Vec<f32> = dir.iter().map(|x| 5.0 * x).collect();
+        let mut sys = Quest::new(&keys, &vals, d, 16);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 32, &mut out);
+        assert!(st.exact_positions.contains(&100));
+        let w = attention_weights(&q, &keys, d);
+        assert!(w[100] > 0.5);
+    }
+
+    #[test]
+    fn append_updates_representatives() {
+        let d = 4;
+        let mut rng = Rng::new(6);
+        let keys = rng.normal_vec(16 * d);
+        let vals = rng.normal_vec(16 * d);
+        let mut sys = Quest::new(&keys, &vals, d, 16);
+        // appending starts a new chunk
+        sys.append(&[9.0; 4], &[1.0; 4]);
+        assert_eq!(sys.n(), 17);
+        assert_eq!(sys.n_chunks(), 2);
+        assert_eq!(sys.cmax[1 * d], 9.0);
+    }
+
+    #[test]
+    fn budget_controls_selection_size() {
+        let d = 8;
+        let mut rng = Rng::new(7);
+        let keys = rng.normal_vec(128 * d);
+        let vals = rng.normal_vec(128 * d);
+        let mut sys = Quest::new(&keys, &vals, d, 16);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 32, &mut out);
+        assert_eq!(st.exact_positions.len(), 32); // 2 chunks
+    }
+}

@@ -1,0 +1,174 @@
+//! RetroInfer behind the common [`SparseSystem`] interface: wave index
+//! selection + tripartite attention, with an optional wave buffer for
+//! cache-aware data-movement accounting.
+
+use super::{DecodeStats, SparseSystem};
+use crate::buffer::{ExecBuffer, WaveBuffer};
+use crate::config::{BufferConfig, ZoneConfig};
+use crate::index::{SelectScratch, WaveIndex};
+use crate::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+pub struct Retro {
+    index: WaveIndex,
+    buffer: Option<WaveBuffer>,
+    exec: ExecBuffer,
+    scratch: SelectScratch,
+}
+
+impl Retro {
+    /// Build with paper-default zones scaled to the context length, plus
+    /// a wave buffer at 5% GPU cache.
+    pub fn build_default(keys: &[f32], vals: &[f32], d: usize, seed: u64) -> Self {
+        let n = keys.len() / d;
+        let cfg = ZoneConfig {
+            // scale segment sizes down for short synthetic contexts
+            build_segment: ZoneConfig::default().build_segment.min((n / 2).max(64)),
+            update_segment: ZoneConfig::default().update_segment.min((n / 8).max(32)),
+            ..ZoneConfig::default()
+        };
+        Self::build(cfg, BufferConfig::default(), keys, vals, d, seed)
+    }
+
+    pub fn build(
+        zcfg: ZoneConfig,
+        bcfg: BufferConfig,
+        keys: &[f32],
+        vals: &[f32],
+        d: usize,
+        seed: u64,
+    ) -> Self {
+        let n = keys.len() / d;
+        let index = WaveIndex::build(zcfg, d, bcfg.block_bytes, keys, vals, seed);
+        let cap = WaveBuffer::capacity_for(&bcfg, n, index.store().tokens_per_block());
+        let pool = Arc::new(ThreadPool::new(bcfg.cpu_threads.max(1)));
+        let buffer = WaveBuffer::new(bcfg, d, index.store().tokens_per_block(), cap, pool);
+        buffer.register_index(&index);
+        Retro { index, buffer: Some(buffer), exec: ExecBuffer::new(d), scratch: SelectScratch::default() }
+    }
+
+    /// Index-only variant (no buffer accounting), for accuracy sweeps.
+    pub fn index_only(zcfg: ZoneConfig, keys: &[f32], vals: &[f32], d: usize, seed: u64) -> Self {
+        let index = WaveIndex::build(zcfg, d, 2048, keys, vals, seed);
+        Retro { index, buffer: None, exec: ExecBuffer::new(d), scratch: SelectScratch::default() }
+    }
+
+    pub fn index(&self) -> &WaveIndex {
+        &self.index
+    }
+
+    pub fn buffer(&self) -> Option<&WaveBuffer> {
+        self.buffer.as_ref()
+    }
+}
+
+impl SparseSystem for Retro {
+    fn name(&self) -> &'static str {
+        "retroinfer"
+    }
+
+    fn decode(&mut self, q: &[f32], budget: usize, out: &mut [f32]) -> DecodeStats {
+        let m = self.index.meta().m();
+        let tpc = self.index.cfg().tokens_per_cluster;
+        let r = (budget / tpc.max(1)).min(m).max(if m > 0 { 1 } else { 0 });
+        let e = self.index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
+        let sel = self.index.select_with(q, r, e, &mut self.scratch);
+        let d = self.index.d();
+
+        let (pcie, hbm) = if let Some(buf) = &self.buffer {
+            let st = buf.assemble(&self.index, &sel, &mut self.exec);
+            (st.pcie_bytes, st.g2g_bytes)
+        } else {
+            // no cache: every retrieved block crosses PCIe
+            let bytes: usize = sel
+                .retrieval
+                .iter()
+                .map(|&c| 2 * self.index.meta().cluster_tokens(c as usize).len() * d * 4)
+                .sum();
+            (bytes, 2 * self.index.steady_tokens() * d * 4)
+        };
+        self.index.attend(q, &sel, out);
+        DecodeStats {
+            exact_positions: self.index.exact_positions(&sel),
+            pcie_bytes: pcie,
+            hbm_bytes: hbm,
+            // centroid scoring scans the meta index
+            scan_bytes: self.index.meta().gpu_bytes(),
+            ..DecodeStats::default()
+        }
+    }
+
+    fn append(&mut self, key: &[f32], val: &[f32]) {
+        self.index.append(key, val);
+        if let Some(buf) = &self.buffer {
+            buf.sync_new_clusters(&self.index);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full_attention;
+    use crate::util::rng::Rng;
+    use crate::util::stats::cosine;
+
+    #[test]
+    fn sparse_decode_tracks_full_attention() {
+        let d = 16;
+        let n = 1024;
+        let mut rng = Rng::new(20);
+        // clustered keys so the index has structure to exploit
+        let dirs: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(d)).collect();
+        let mut keys = Vec::new();
+        for i in 0..n {
+            let t = &dirs[(i / 64) % 16];
+            for j in 0..d {
+                keys.push(2.0 * t[j] + 0.4 * rng.normal_f32());
+            }
+        }
+        let vals = rng.normal_vec(n * d);
+        let mut sys = Retro::build_default(&keys, &vals, d, 1);
+        let q: Vec<f32> = dirs[5].iter().map(|x| 1.5 * x).collect();
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 128, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut full);
+        assert!(cosine(&out, &full) > 0.95, "cos = {}", cosine(&out, &full));
+        assert!(st.exact_positions.len() < n / 2, "must be sparse");
+    }
+
+    #[test]
+    fn buffer_reduces_pcie_on_repeat() {
+        let d = 16;
+        let mut rng = Rng::new(21);
+        let keys = rng.normal_vec(1024 * d);
+        let vals = rng.normal_vec(1024 * d);
+        let mut sys = Retro::build_default(&keys, &vals, d, 2);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let s1 = sys.decode(&q, 64, &mut out);
+        if let Some(b) = sys.buffer() {
+            b.flush();
+        }
+        let s2 = sys.decode(&q, 64, &mut out);
+        assert!(s2.pcie_bytes < s1.pcie_bytes, "{} !< {}", s2.pcie_bytes, s1.pcie_bytes);
+    }
+
+    #[test]
+    fn append_then_decode_includes_new_tokens() {
+        let d = 8;
+        let mut rng = Rng::new(22);
+        let keys = rng.normal_vec(256 * d);
+        let vals = rng.normal_vec(256 * d);
+        let mut sys = Retro::build_default(&keys, &vals, d, 3);
+        for _ in 0..100 {
+            sys.append(&rng.normal_vec(d), &rng.normal_vec(d));
+        }
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 64, &mut out);
+        assert!(st.exact_positions.iter().any(|&p| p >= 256), "recent tokens covered");
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

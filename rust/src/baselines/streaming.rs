@@ -1,0 +1,89 @@
+//! StreamingLLM-style fixed-position heuristic: attention sinks + a
+//! sliding local window. The static-sparsity baseline whose accuracy
+//! collapses on retrieval tasks (paper §2.3 "fixed-position heuristics").
+
+use super::{DecodeStats, SparseSystem};
+use crate::attention::subset_attention;
+
+pub struct StreamingLlm {
+    d: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    sink: usize,
+}
+
+impl StreamingLlm {
+    pub fn new(keys: &[f32], vals: &[f32], d: usize, sink: usize) -> Self {
+        StreamingLlm { d, keys: keys.to_vec(), vals: vals.to_vec(), sink }
+    }
+
+    fn n(&self) -> usize {
+        self.keys.len() / self.d
+    }
+}
+
+impl SparseSystem for StreamingLlm {
+    fn name(&self) -> &'static str {
+        "streaming"
+    }
+
+    fn decode(&mut self, q: &[f32], budget: usize, out: &mut [f32]) -> DecodeStats {
+        let n = self.n();
+        let sink = self.sink.min(n);
+        let window = budget.saturating_sub(sink).min(n - sink);
+        let mut sel: Vec<usize> = (0..sink).collect();
+        sel.extend(n - window..n);
+        subset_attention(q, &self.keys, &self.vals, self.d, &sel, out);
+        DecodeStats {
+            exact_positions: sel.iter().map(|&i| i as u32).collect(),
+            hbm_bytes: 2 * sel.len() * self.d * 4,
+            ..DecodeStats::default()
+        }
+    }
+
+    fn append(&mut self, key: &[f32], val: &[f32]) {
+        self.keys.extend_from_slice(key);
+        self.vals.extend_from_slice(val);
+    }
+
+    fn kv_on_gpu(&self) -> bool {
+        true // only sink+window ever used; effectively tiny GPU footprint
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_sink_and_tail() {
+        let d = 4;
+        let mut rng = Rng::new(2);
+        let keys = rng.normal_vec(64 * d);
+        let vals = rng.normal_vec(64 * d);
+        let mut sys = StreamingLlm::new(&keys, &vals, d, 4);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 12, &mut out);
+        assert_eq!(st.exact_positions.len(), 12);
+        assert_eq!(&st.exact_positions[..4], &[0, 1, 2, 3]);
+        assert_eq!(st.exact_positions[4], 56); // window start
+        assert_eq!(*st.exact_positions.last().unwrap(), 63);
+    }
+
+    #[test]
+    fn misses_mid_context_needle() {
+        // The defining failure mode: a needle in the middle is never
+        // selected regardless of its attention weight.
+        let d = 4;
+        let mut rng = Rng::new(3);
+        let keys = rng.normal_vec(128 * d);
+        let vals = rng.normal_vec(128 * d);
+        let mut sys = StreamingLlm::new(&keys, &vals, d, 4);
+        let q = rng.normal_vec(d);
+        let mut out = vec![0.0; d];
+        let st = sys.decode(&q, 16, &mut out);
+        assert!(!st.exact_positions.contains(&64));
+    }
+}

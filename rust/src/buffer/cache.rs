@@ -1,0 +1,342 @@
+//! GPU block cache with pluggable replacement policies (paper §4.3).
+//!
+//! The cache holds *copies* of KV blocks in "GPU memory" (a flat slot
+//! arena), keyed by the per-head physical block id. Policies: LRU
+//! (paper default), FIFO, CLOCK, and 2Q — all O(1) via an intrusive
+//! vec-based doubly-linked list.
+
+use crate::config::CachePolicy;
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+/// Intrusive doubly-linked list over slot indices.
+struct DList {
+    head: u32,
+    tail: u32,
+    prev: Vec<u32>,
+    next: Vec<u32>,
+}
+
+impl DList {
+    fn new(capacity: usize) -> Self {
+        DList { head: NIL, tail: NIL, prev: vec![NIL; capacity], next: vec![NIL; capacity] }
+    }
+
+    fn push_front(&mut self, s: u32) {
+        self.prev[s as usize] = NIL;
+        self.next[s as usize] = self.head;
+        if self.head != NIL {
+            self.prev[self.head as usize] = s;
+        }
+        self.head = s;
+        if self.tail == NIL {
+            self.tail = s;
+        }
+    }
+
+    fn remove(&mut self, s: u32) {
+        let (p, n) = (self.prev[s as usize], self.next[s as usize]);
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+        self.prev[s as usize] = NIL;
+        self.next[s as usize] = NIL;
+    }
+
+    fn pop_back(&mut self) -> Option<u32> {
+        let t = self.tail;
+        if t == NIL {
+            None
+        } else {
+            self.remove(t);
+            Some(t)
+        }
+    }
+}
+
+/// Fixed-capacity block cache.
+pub struct BlockCache {
+    policy: CachePolicy,
+    capacity: usize,
+    /// Slot data arena: slot s owns `data[s*slot_elems..(s+1)*slot_elems]`
+    /// (key half then value half of one block).
+    data: Vec<f32>,
+    slot_elems: usize,
+    /// block key -> slot
+    map: HashMap<u64, u32>,
+    /// slot -> block key
+    keys: Vec<u64>,
+    free: Vec<u32>,
+    // policy state
+    main: DList,        // LRU/FIFO/CLOCK order; 2Q's Am
+    a1in: DList,        // 2Q probationary queue
+    in_a1: Vec<bool>,   // 2Q: slot is in A1in
+    refbit: Vec<bool>,  // CLOCK reference bits
+}
+
+impl BlockCache {
+    /// `capacity` in blocks; `slot_elems` = f32 elements per block
+    /// (2 * tokens_per_block * d).
+    pub fn new(policy: CachePolicy, capacity: usize, slot_elems: usize) -> Self {
+        BlockCache {
+            policy,
+            capacity,
+            data: vec![0.0; capacity * slot_elems],
+            slot_elems,
+            map: HashMap::with_capacity(capacity * 2),
+            keys: vec![u64::MAX; capacity],
+            free: (0..capacity as u32).rev().collect(),
+            main: DList::new(capacity),
+            a1in: DList::new(capacity),
+            in_a1: vec![false; capacity],
+            refbit: vec![false; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    /// Read-only lookup: does NOT touch policy state (the synchronous
+    /// access path of §4.3 — policy updates happen asynchronously).
+    pub fn peek(&self, key: u64) -> Option<u32> {
+        self.map.get(&key).copied()
+    }
+
+    /// Policy touch for a hit (run during the asynchronous update).
+    pub fn touch(&mut self, key: u64) {
+        let Some(&s) = self.map.get(&key) else { return };
+        match self.policy {
+            CachePolicy::Lru => {
+                self.main.remove(s);
+                self.main.push_front(s);
+            }
+            CachePolicy::Fifo => {}
+            CachePolicy::Clock => {
+                self.refbit[s as usize] = true;
+            }
+            CachePolicy::TwoQ => {
+                if self.in_a1[s as usize] {
+                    // promote probationary block to the main queue
+                    self.a1in.remove(s);
+                    self.in_a1[s as usize] = false;
+                    self.main.push_front(s);
+                } else {
+                    self.main.remove(s);
+                    self.main.push_front(s);
+                }
+            }
+        }
+    }
+
+    /// Admit `key`; returns (slot, evicted key if any). No-op if present.
+    pub fn admit(&mut self, key: u64) -> (u32, Option<u64>) {
+        if let Some(&s) = self.map.get(&key) {
+            return (s, None);
+        }
+        if self.capacity == 0 {
+            return (NIL, None);
+        }
+        let mut evicted = None;
+        let slot = if let Some(s) = self.free.pop() {
+            s
+        } else {
+            let s = self.evict_slot();
+            let old = self.keys[s as usize];
+            self.map.remove(&old);
+            evicted = Some(old);
+            s
+        };
+        self.keys[slot as usize] = key;
+        self.map.insert(key, slot);
+        match self.policy {
+            CachePolicy::Lru | CachePolicy::Fifo => self.main.push_front(slot),
+            CachePolicy::Clock => {
+                self.main.push_front(slot);
+                self.refbit[slot as usize] = false;
+            }
+            CachePolicy::TwoQ => {
+                self.a1in.push_front(slot);
+                self.in_a1[slot as usize] = true;
+            }
+        }
+        (slot, evicted)
+    }
+
+    fn evict_slot(&mut self) -> u32 {
+        match self.policy {
+            CachePolicy::Lru | CachePolicy::Fifo => {
+                self.main.pop_back().expect("cache full but main empty")
+            }
+            CachePolicy::Clock => {
+                // Second-chance sweep from the tail.
+                loop {
+                    let s = self.main.pop_back().expect("clock empty");
+                    if self.refbit[s as usize] {
+                        self.refbit[s as usize] = false;
+                        self.main.push_front(s);
+                    } else {
+                        return s;
+                    }
+                }
+            }
+            CachePolicy::TwoQ => {
+                // Evict from A1in first (scan resistance), then Am.
+                if let Some(s) = self.a1in.pop_back() {
+                    self.in_a1[s as usize] = false;
+                    s
+                } else {
+                    self.main.pop_back().expect("2q empty")
+                }
+            }
+        }
+    }
+
+    /// Block data of a resident slot.
+    pub fn slot_data(&self, slot: u32) -> &[f32] {
+        let s = slot as usize;
+        &self.data[s * self.slot_elems..(s + 1) * self.slot_elems]
+    }
+
+    pub fn slot_data_mut(&mut self, slot: u32) -> &mut [f32] {
+        let s = slot as usize;
+        &mut self.data[s * self.slot_elems..(s + 1) * self.slot_elems]
+    }
+
+    pub fn slot_elems(&self) -> usize {
+        self.slot_elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys_of(c: &BlockCache) -> Vec<u64> {
+        let mut ks: Vec<u64> = c.map.keys().copied().collect();
+        ks.sort();
+        ks
+    }
+
+    #[test]
+    fn admit_until_full_then_evict_lru() {
+        let mut c = BlockCache::new(CachePolicy::Lru, 3, 4);
+        for k in 0..3u64 {
+            let (_, ev) = c.admit(k);
+            assert!(ev.is_none());
+        }
+        // touch 0 so it is MRU; admitting 3 must evict 1
+        c.touch(0);
+        let (_, ev) = c.admit(3);
+        assert_eq!(ev, Some(1));
+        assert_eq!(keys_of(&c), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn fifo_ignores_touches() {
+        let mut c = BlockCache::new(CachePolicy::Fifo, 2, 4);
+        c.admit(10);
+        c.admit(11);
+        c.touch(10); // FIFO: no effect
+        let (_, ev) = c.admit(12);
+        assert_eq!(ev, Some(10));
+    }
+
+    #[test]
+    fn clock_second_chance() {
+        let mut c = BlockCache::new(CachePolicy::Clock, 2, 4);
+        c.admit(1);
+        c.admit(2);
+        c.touch(1); // ref bit set
+        let (_, ev) = c.admit(3);
+        // 1 gets a second chance, 2 is evicted
+        assert_eq!(ev, Some(2));
+        assert!(c.peek(1).is_some());
+    }
+
+    #[test]
+    fn twoq_scan_resistance() {
+        let mut c = BlockCache::new(CachePolicy::TwoQ, 4, 4);
+        c.admit(1);
+        c.touch(1); // promote 1 to Am
+        c.admit(2);
+        c.admit(3);
+        c.admit(4);
+        // a scan of one-shot blocks must evict from A1in, preserving 1
+        let (_, ev) = c.admit(5);
+        assert_ne!(ev, Some(1));
+        assert!(c.peek(1).is_some());
+    }
+
+    #[test]
+    fn peek_does_not_change_order() {
+        let mut c = BlockCache::new(CachePolicy::Lru, 2, 4);
+        c.admit(1);
+        c.admit(2);
+        c.peek(1); // read-only
+        let (_, ev) = c.admit(3);
+        assert_eq!(ev, Some(1), "peek must not refresh LRU position");
+    }
+
+    #[test]
+    fn readmit_is_noop() {
+        let mut c = BlockCache::new(CachePolicy::Lru, 2, 4);
+        let (s1, _) = c.admit(7);
+        let (s2, ev) = c.admit(7);
+        assert_eq!(s1, s2);
+        assert!(ev.is_none());
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn slot_data_roundtrip() {
+        let mut c = BlockCache::new(CachePolicy::Lru, 2, 4);
+        let (s, _) = c.admit(9);
+        c.slot_data_mut(s).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.slot_data(s), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_capacity_never_caches() {
+        let mut c = BlockCache::new(CachePolicy::Lru, 0, 4);
+        let (s, ev) = c.admit(1);
+        assert_eq!(s, NIL);
+        assert!(ev.is_none());
+        assert!(c.peek(1).is_none());
+    }
+
+    #[test]
+    fn stress_all_policies_bounded() {
+        for p in [CachePolicy::Lru, CachePolicy::Fifo, CachePolicy::Clock, CachePolicy::TwoQ] {
+            let mut c = BlockCache::new(p, 8, 2);
+            for i in 0..1000u64 {
+                c.admit(i % 37);
+                if i % 3 == 0 {
+                    c.touch(i % 37);
+                }
+                assert!(c.len() <= 8, "{p:?} exceeded capacity");
+            }
+            assert_eq!(c.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Execution buffer: the contiguous staging area in GPU memory that the
+//! attention kernel consumes (paper §4.3 "Assemble the Execution Buffer").
+//! Its content is gathered from three sources: the steady zone (GPU→GPU),
+//! the block cache (GPU→GPU), and CPU KV blocks on a miss (CPU→GPU).
+
+/// Reusable execution buffer for one (head, query) attention call.
+/// Token-major flat `[n, d]` keys and values.
+#[derive(Default)]
+pub struct ExecBuffer {
+    pub keys: Vec<f32>,
+    pub vals: Vec<f32>,
+    d: usize,
+}
+
+impl ExecBuffer {
+    pub fn new(d: usize) -> Self {
+        ExecBuffer { keys: Vec::new(), vals: Vec::new(), d }
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.clear();
+        self.vals.clear();
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.keys.len() / self.d
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn push(&mut self, keys: &[f32], vals: &[f32]) {
+        debug_assert_eq!(keys.len(), vals.len());
+        self.keys.extend_from_slice(keys);
+        self.vals.extend_from_slice(vals);
+    }
+}
+
+/// Data-movement accounting for one assembly (consumed by `memsim` and
+/// the Figure 16 ablation).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AccessStats {
+    /// Tokens copied from the steady zone (GPU→GPU).
+    pub steady_tokens: usize,
+    /// Blocks found in the GPU cache (GPU→GPU copy).
+    pub hit_blocks: usize,
+    /// Blocks fetched from CPU memory (PCIe transfer).
+    pub miss_blocks: usize,
+    /// Bytes copied GPU→GPU (steady + cache hits).
+    pub g2g_bytes: usize,
+    /// Bytes moved over PCIe (cache misses).
+    pub pcie_bytes: usize,
+}
+
+impl AccessStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hit_blocks + self.miss_blocks;
+        if total == 0 {
+            1.0
+        } else {
+            self.hit_blocks as f64 / total as f64
+        }
+    }
+
+    pub fn add(&mut self, o: &AccessStats) {
+        self.steady_tokens += o.steady_tokens;
+        self.hit_blocks += o.hit_blocks;
+        self.miss_blocks += o.miss_blocks;
+        self.g2g_bytes += o.g2g_bytes;
+        self.pcie_bytes += o.pcie_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_buffer_accumulates_tokens() {
+        let mut eb = ExecBuffer::new(4);
+        eb.push(&[1.0; 8], &[2.0; 8]);
+        assert_eq!(eb.n_tokens(), 2);
+        eb.clear();
+        assert_eq!(eb.n_tokens(), 0);
+    }
+
+    #[test]
+    fn hit_ratio_edges() {
+        let mut s = AccessStats::default();
+        assert_eq!(s.hit_ratio(), 1.0);
+        s.hit_blocks = 3;
+        s.miss_blocks = 1;
+        assert!((s.hit_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_add() {
+        let mut a = AccessStats { steady_tokens: 1, hit_blocks: 2, miss_blocks: 3, g2g_bytes: 4, pcie_bytes: 5 };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.miss_blocks, 6);
+        assert_eq!(a.pcie_bytes, 10);
+    }
+}

@@ -1,0 +1,143 @@
+//! Cluster mapping table (paper §4.3): the layer of indirection between
+//! the wave index's *logical* unit (clusters) and the wave buffer's
+//! *physical* unit (blocks). Implemented as an array indexed by cluster id
+//! for O(1) lookup, with a reverse block→cluster map so evictions can
+//! invalidate descriptors.
+
+use crate::kvcache::BlockRef;
+
+/// Where one of a cluster's blocks currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockHome {
+    /// Only in CPU memory.
+    Cpu,
+    /// Cached in the given GPU cache slot.
+    Gpu(u32),
+}
+
+/// Descriptor of one cluster: its CPU blocks and their GPU residency.
+#[derive(Clone, Debug)]
+pub struct ClusterDesc {
+    pub blocks: Vec<BlockRef>,
+    pub home: Vec<BlockHome>,
+}
+
+impl ClusterDesc {
+    pub fn n_tokens(&self) -> usize {
+        self.blocks.iter().map(|b| b.len as usize).sum()
+    }
+}
+
+/// Array-indexed mapping table for one head.
+pub struct MappingTable {
+    clusters: Vec<ClusterDesc>,
+    /// block id -> (cluster id, index within cluster)
+    owner: Vec<(u32, u16)>,
+}
+
+impl MappingTable {
+    pub fn new() -> Self {
+        MappingTable { clusters: Vec::new(), owner: Vec::new() }
+    }
+
+    /// Register a cluster's blocks; cluster ids must be appended in order
+    /// (mirrors the meta index).
+    pub fn add_cluster(&mut self, blocks: Vec<BlockRef>) -> u32 {
+        let cid = self.clusters.len() as u32;
+        for (i, b) in blocks.iter().enumerate() {
+            let bid = b.block as usize;
+            if self.owner.len() <= bid {
+                self.owner.resize(bid + 1, (u32::MAX, 0));
+            }
+            self.owner[bid] = (cid, i as u16);
+        }
+        let home = vec![BlockHome::Cpu; blocks.len()];
+        self.clusters.push(ClusterDesc { blocks, home });
+        cid
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Read-only descriptor lookup (the synchronous access path).
+    pub fn lookup(&self, cluster: u32) -> &ClusterDesc {
+        &self.clusters[cluster as usize]
+    }
+
+    /// Mark a block as admitted to GPU slot `slot`.
+    pub fn set_cached(&mut self, block: u32, slot: u32) {
+        let (c, i) = self.owner[block as usize];
+        debug_assert_ne!(c, u32::MAX, "block {block} unowned");
+        self.clusters[c as usize].home[i as usize] = BlockHome::Gpu(slot);
+    }
+
+    /// Invalidate a block's GPU residency (after eviction).
+    pub fn set_evicted(&mut self, block: u32) {
+        let (c, i) = self.owner[block as usize];
+        if c != u32::MAX {
+            self.clusters[c as usize].home[i as usize] = BlockHome::Cpu;
+        }
+    }
+
+    /// Owning (cluster, index) of a block id.
+    pub fn owner(&self, block: u32) -> (u32, u16) {
+        self.owner[block as usize]
+    }
+
+    /// Blocks currently GPU-resident (for invariants/tests).
+    pub fn gpu_resident_blocks(&self) -> usize {
+        self.clusters
+            .iter()
+            .flat_map(|c| &c.home)
+            .filter(|h| matches!(h, BlockHome::Gpu(_)))
+            .count()
+    }
+}
+
+impl Default for MappingTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bref(block: u32, len: u16) -> BlockRef {
+        BlockRef { block, len }
+    }
+
+    #[test]
+    fn add_and_lookup() {
+        let mut mt = MappingTable::new();
+        let c0 = mt.add_cluster(vec![bref(0, 8), bref(1, 3)]);
+        let c1 = mt.add_cluster(vec![bref(2, 8)]);
+        assert_eq!((c0, c1), (0, 1));
+        assert_eq!(mt.lookup(0).n_tokens(), 11);
+        assert_eq!(mt.lookup(1).blocks[0].block, 2);
+        assert!(mt.lookup(0).home.iter().all(|h| *h == BlockHome::Cpu));
+    }
+
+    #[test]
+    fn cached_evicted_cycle() {
+        let mut mt = MappingTable::new();
+        mt.add_cluster(vec![bref(0, 8), bref(1, 8)]);
+        mt.set_cached(1, 42);
+        assert_eq!(mt.lookup(0).home[1], BlockHome::Gpu(42));
+        assert_eq!(mt.gpu_resident_blocks(), 1);
+        mt.set_evicted(1);
+        assert_eq!(mt.lookup(0).home[1], BlockHome::Cpu);
+        assert_eq!(mt.gpu_resident_blocks(), 0);
+    }
+
+    #[test]
+    fn owner_reverse_map() {
+        let mut mt = MappingTable::new();
+        mt.add_cluster(vec![bref(5, 8)]);
+        mt.add_cluster(vec![bref(3, 8), bref(4, 2)]);
+        assert_eq!(mt.owner(5), (0, 0));
+        assert_eq!(mt.owner(4), (1, 1));
+    }
+}

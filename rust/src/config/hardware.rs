@@ -1,0 +1,124 @@
+//! Hardware specs used by the analytic simulator: device compute/bandwidth
+//! parameters calibrated to the paper's testbed numbers (§2.2, §5.1).
+
+/// A device-level hardware description (GPU + host + interconnect).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareSpec {
+    pub name: &'static str,
+    /// GPU HBM capacity in bytes.
+    pub gpu_mem_bytes: usize,
+    /// GPU HBM bandwidth, bytes/s.
+    pub gpu_bw: f64,
+    /// GPU dense compute throughput, flops/s (fp16/bf16 tensor).
+    pub gpu_flops: f64,
+    /// PCIe unidirectional bandwidth, bytes/s.
+    pub pcie_bw: f64,
+    /// Host DRAM capacity in bytes.
+    pub cpu_mem_bytes: usize,
+    /// Host memory bandwidth available to the serving process, bytes/s.
+    pub cpu_bw: f64,
+    /// Host fp32 compute throughput, flops/s (one NUMA node).
+    pub cpu_flops: f64,
+    /// Fixed kernel-launch / driver overhead per GPU kernel, seconds.
+    pub kernel_launch_s: f64,
+    /// Fixed cost to initiate one PCIe DMA transfer, seconds.
+    pub pcie_latency_s: f64,
+}
+
+impl HardwareSpec {
+    /// NVIDIA A100 80GB + AMD EPYC 7V12 host over PCIe 4.0 x16
+    /// (the paper's testbed; HBM/PCIe ratio ~ 60x, §2.3).
+    pub fn a100() -> Self {
+        HardwareSpec {
+            name: "a100",
+            gpu_mem_bytes: 80 * (1 << 30),
+            gpu_bw: 2.039e12,   // 2039 GB/s HBM2e
+            gpu_flops: 312e12,  // bf16 tensor core
+            pcie_bw: 32e9,      // PCIe 4.0 x16 unidirectional
+            cpu_mem_bytes: 1700 * (1 << 30),
+            cpu_bw: 80e9,       // one NUMA node of EPYC 7V12
+            cpu_flops: 1.2e12,  // 12 cores * AVX2 fp32
+            kernel_launch_s: 5e-6,
+            pcie_latency_s: 10e-6,
+        }
+    }
+
+    /// NVIDIA RTX A6000 48GB (Figure 18 cross-hardware point).
+    pub fn a6000() -> Self {
+        HardwareSpec {
+            name: "a6000",
+            gpu_mem_bytes: 48 * (1 << 30),
+            gpu_bw: 768e9,
+            gpu_flops: 155e12,
+            pcie_bw: 32e9,
+            cpu_mem_bytes: 1700 * (1 << 30),
+            cpu_bw: 80e9,
+            cpu_flops: 1.2e12,
+            kernel_launch_s: 5e-6,
+            pcie_latency_s: 10e-6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HardwareSpec> {
+        match name {
+            "a100" => Some(Self::a100()),
+            "a6000" => Some(Self::a6000()),
+            _ => None,
+        }
+    }
+
+    /// Time to stream `bytes` through GPU HBM.
+    pub fn gpu_stream_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.gpu_bw
+    }
+
+    /// Time to move `bytes` over PCIe in one DMA.
+    pub fn pcie_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.pcie_latency_s + bytes as f64 / self.pcie_bw
+        }
+    }
+
+    /// GPU time for `flops` of dense work at `eff` MFU.
+    pub fn gpu_compute_s(&self, flops: f64, eff: f64) -> f64 {
+        flops / (self.gpu_flops * eff)
+    }
+
+    /// HBM : PCIe bandwidth ratio (the paper's ~60x, §2.3).
+    pub fn hbm_pcie_ratio(&self) -> f64 {
+        self.gpu_bw / self.pcie_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_ratio_matches_paper() {
+        let hw = HardwareSpec::a100();
+        let r = hw.hbm_pcie_ratio();
+        assert!((55.0..70.0).contains(&r), "HBM/PCIe ratio = {r}");
+    }
+
+    #[test]
+    fn pcie_includes_fixed_latency() {
+        let hw = HardwareSpec::a100();
+        assert_eq!(hw.pcie_s(0), 0.0);
+        assert!(hw.pcie_s(1) >= hw.pcie_latency_s);
+        // 32 MB at 32 GB/s ~ 1 ms.
+        let t = hw.pcie_s(32 << 20);
+        assert!((0.9e-3..1.3e-3).contains(&t), "32MB transfer = {t}s");
+    }
+
+    #[test]
+    fn sparsity_break_even_requires_98pct() {
+        // Paper §2.3: hiding PCIe latency needs >98% sparsity — the
+        // fraction of bytes NOT moved must exceed 1 - pcie/hbm.
+        let hw = HardwareSpec::a100();
+        let needed = 1.0 - hw.pcie_bw / hw.gpu_bw;
+        assert!(needed > 0.98, "required sparsity = {needed}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Configuration: zone parameters (paper §5.1 defaults), model cost specs
+//! (Llama3-8B-1048K, Qwen2.5-7B/72B, TinyLM), and hardware specs
+//! (A100, A6000, PCIe 4.0, EPYC host) used by the live engine and `memsim`.
+
+pub mod hardware;
+pub mod model;
+
+pub use hardware::HardwareSpec;
+pub use model::ModelSpec;
+
+/// Zone / index configuration for the wave index (paper §5.1 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ZoneConfig {
+    /// Sink tokens at the start of the context (steady zone).
+    pub steady_sink: usize,
+    /// Local-window tokens at the end of the context (steady zone).
+    pub steady_local: usize,
+    /// Average tokens per cluster (1 centroid / 16 tokens).
+    pub tokens_per_cluster: usize,
+    /// Fraction of clusters placed in the retrieval zone (1.8%).
+    pub retrieval_frac: f64,
+    /// Fraction of clusters placed in the estimation zone (23.2%).
+    pub estimation_frac: f64,
+    /// Segment length for build-time segmented clustering (8K).
+    pub build_segment: usize,
+    /// Segment length for incremental decode-time updates (1K).
+    pub update_segment: usize,
+    /// Spherical k-means iterations.
+    pub kmeans_iters: usize,
+    /// Apply the all-but-the-top centering technique before clustering.
+    pub centering: bool,
+}
+
+impl Default for ZoneConfig {
+    fn default() -> Self {
+        ZoneConfig {
+            steady_sink: 4,
+            steady_local: 64,
+            tokens_per_cluster: 16,
+            retrieval_frac: 0.018,
+            estimation_frac: 0.232,
+            build_segment: 8192,
+            update_segment: 1024,
+            kmeans_iters: 10,
+            centering: true,
+        }
+    }
+}
+
+impl ZoneConfig {
+    /// Number of clusters for a segment of `seg_len` tokens.
+    pub fn clusters_for_segment(&self, seg_len: usize) -> usize {
+        (seg_len / self.tokens_per_cluster).max(1)
+    }
+
+    /// Retrieval-zone cluster count given a total cluster count.
+    pub fn retrieval_clusters(&self, total_clusters: usize) -> usize {
+        ((total_clusters as f64 * self.retrieval_frac).round() as usize).max(1)
+    }
+
+    /// Estimation-zone cluster count given a total cluster count.
+    pub fn estimation_clusters(&self, total_clusters: usize) -> usize {
+        (total_clusters as f64 * self.estimation_frac).round() as usize
+    }
+
+    /// Total steady-zone tokens.
+    pub fn steady_tokens(&self) -> usize {
+        self.steady_sink + self.steady_local
+    }
+}
+
+/// Wave-buffer configuration (paper §5.1 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferConfig {
+    /// KV block size in bytes (2 KB default).
+    pub block_bytes: usize,
+    /// GPU block-cache capacity as a fraction of all KV vectors (5%).
+    pub cache_frac: f64,
+    /// Cache replacement policy.
+    pub policy: CachePolicy,
+    /// CPU threads for the buffer manager (one NUMA node = 24 logical).
+    pub cpu_threads: usize,
+    /// Perform cache updates asynchronously off the critical path.
+    pub async_update: bool,
+    /// Disable the GPU block cache entirely ("Base" in Figure 16).
+    pub gpu_cache_enabled: bool,
+}
+
+impl Default for BufferConfig {
+    fn default() -> Self {
+        BufferConfig {
+            block_bytes: 2048,
+            cache_frac: 0.05,
+            policy: CachePolicy::Lru,
+            cpu_threads: 4,
+            async_update: true,
+            gpu_cache_enabled: true,
+        }
+    }
+}
+
+/// Cache replacement policies supported by the wave buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePolicy {
+    Lru,
+    Fifo,
+    Clock,
+    TwoQ,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(CachePolicy::Lru),
+            "fifo" => Some(CachePolicy::Fifo),
+            "clock" => Some(CachePolicy::Clock),
+            "2q" | "twoq" => Some(CachePolicy::TwoQ),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Fifo => "fifo",
+            CachePolicy::Clock => "clock",
+            CachePolicy::TwoQ => "2q",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_defaults_match_paper() {
+        let z = ZoneConfig::default();
+        assert_eq!(z.steady_tokens(), 68);
+        // 128K context -> 8192 clusters -> ~147 retrieval clusters (~1.8%).
+        let clusters = 128 * 1024 / z.tokens_per_cluster;
+        assert_eq!(clusters, 8192);
+        let r = z.retrieval_clusters(clusters);
+        assert!((140..=155).contains(&r), "retrieval clusters {r}");
+        let e = z.estimation_clusters(clusters);
+        assert!((1850..=1950).contains(&e), "estimation clusters {e}");
+    }
+
+    #[test]
+    fn cluster_count_rounds_up_to_one() {
+        let z = ZoneConfig::default();
+        assert_eq!(z.clusters_for_segment(8), 1);
+        assert_eq!(z.clusters_for_segment(8192), 512);
+    }
+
+    #[test]
+    fn cache_policy_parse_roundtrip() {
+        for p in [CachePolicy::Lru, CachePolicy::Fifo, CachePolicy::Clock, CachePolicy::TwoQ] {
+            assert_eq!(CachePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(CachePolicy::parse("arc"), None);
+    }
+}

@@ -1,0 +1,206 @@
+//! Model cost specs. The live path runs TinyLM through PJRT; paper-scale
+//! models are represented by their *dimensions* only — enough for `memsim`
+//! to account bytes and flops exactly (KV cache size, attention reads,
+//! GEMM flops), which is what the paper's throughput figures depend on.
+
+/// Dimensional description of a transformer used for cost accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub d_head: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Bytes per KV element (2 = fp16/bf16 as served in the paper).
+    pub kv_bytes: usize,
+    /// Bytes per weight element.
+    pub w_bytes: usize,
+    /// Number of GPUs the model is partitioned across (layer partitioning).
+    pub n_gpus: usize,
+}
+
+impl ModelSpec {
+    /// Llama3-8B-1048K (the paper's default model, single A100).
+    pub fn llama3_8b() -> Self {
+        ModelSpec {
+            name: "llama3-8b-1048k",
+            n_layers: 32,
+            d_model: 4096,
+            q_heads: 32,
+            kv_heads: 8,
+            d_head: 128,
+            ffn: 14336,
+            vocab: 128256,
+            kv_bytes: 2,
+            w_bytes: 2,
+            n_gpus: 1,
+        }
+    }
+
+    /// Llama3.1-8B — same dimensions as Llama3-8B (128K window).
+    pub fn llama31_8b() -> Self {
+        ModelSpec { name: "llama3.1-8b", ..Self::llama3_8b() }
+    }
+
+    /// Qwen2.5-7B.
+    pub fn qwen25_7b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-7b",
+            n_layers: 28,
+            d_model: 3584,
+            q_heads: 28,
+            kv_heads: 4,
+            d_head: 128,
+            ffn: 18944,
+            vocab: 152064,
+            kv_bytes: 2,
+            w_bytes: 2,
+            n_gpus: 1,
+        }
+    }
+
+    /// Qwen2.5-72B partitioned across 8 GPUs (paper setup).
+    pub fn qwen25_72b() -> Self {
+        ModelSpec {
+            name: "qwen2.5-72b",
+            n_layers: 80,
+            d_model: 8192,
+            q_heads: 64,
+            kv_heads: 8,
+            d_head: 128,
+            ffn: 29568,
+            vocab: 152064,
+            kv_bytes: 2,
+            w_bytes: 2,
+            n_gpus: 8,
+        }
+    }
+
+    /// TinyLM — the live-path model (dimensions must match the manifest).
+    pub fn tinylm() -> Self {
+        ModelSpec {
+            name: "tinylm",
+            n_layers: 4,
+            d_model: 256,
+            q_heads: 8,
+            kv_heads: 2,
+            d_head: 32,
+            ffn: 512,
+            vocab: 256,
+            kv_bytes: 4, // live path stores f32
+            w_bytes: 4,
+            n_gpus: 1,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "llama3-8b" | "llama3-8b-1048k" => Some(Self::llama3_8b()),
+            "llama3.1-8b" => Some(Self::llama31_8b()),
+            "qwen2.5-7b" => Some(Self::qwen25_7b()),
+            "qwen2.5-72b" => Some(Self::qwen25_72b()),
+            "tinylm" => Some(Self::tinylm()),
+            _ => None,
+        }
+    }
+
+    /// GQA group size (query heads per KV head).
+    pub fn group(&self) -> usize {
+        self.q_heads / self.kv_heads
+    }
+
+    /// KV-cache bytes for one token, all layers (K and V).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.kv_heads * self.d_head * self.kv_bytes
+    }
+
+    /// Total KV-cache bytes for a batch of sequences of length `ctx`.
+    pub fn kv_cache_bytes(&self, ctx: usize, batch: usize) -> usize {
+        self.kv_bytes_per_token() * ctx * batch
+    }
+
+    /// Model weight bytes (approximate: attention + MLP + embeddings).
+    pub fn weight_bytes(&self) -> usize {
+        let attn = self.d_model * (self.q_heads + 2 * self.kv_heads) * self.d_head
+            + self.q_heads * self.d_head * self.d_model;
+        let mlp = 3 * self.d_model * self.ffn; // gate/up/down
+        let per_layer = attn + mlp;
+        let emb = 2 * self.vocab * self.d_model;
+        (per_layer * self.n_layers + emb) * self.w_bytes
+    }
+
+    /// FLOPs of the non-attention part of one decode step for one sequence
+    /// (projections + MLP + logits), 2 flops per MAC.
+    pub fn decode_dense_flops(&self) -> f64 {
+        let attn_proj = self.d_model as f64
+            * ((self.q_heads + 2 * self.kv_heads) * self.d_head) as f64
+            + (self.q_heads * self.d_head * self.d_model) as f64;
+        let mlp = 3.0 * self.d_model as f64 * self.ffn as f64;
+        let logits = self.d_model as f64 * self.vocab as f64;
+        2.0 * ((attn_proj + mlp) * self.n_layers as f64 + logits)
+    }
+
+    /// FLOPs of exact attention over `n_tokens` KVs for one decode step,
+    /// all layers (q·K plus a·V, per query head).
+    pub fn attention_flops(&self, n_tokens: usize) -> f64 {
+        2.0 * 2.0
+            * (self.n_layers * self.q_heads * self.d_head) as f64
+            * n_tokens as f64
+    }
+
+    /// Bytes read from memory for exact attention over `n_tokens` KVs
+    /// (K and V, per KV head, all layers).
+    pub fn attention_read_bytes(&self, n_tokens: usize) -> usize {
+        2 * self.n_layers * self.kv_heads * self.d_head * self.kv_bytes * n_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_kv_cache_matches_paper() {
+        // Paper §1: a 1M-token request with Llama3-8B needs ~125 GB.
+        let m = ModelSpec::llama3_8b();
+        let gb = m.kv_cache_bytes(1 << 20, 1) as f64 / 1e9;
+        assert!((120.0..140.0).contains(&gb), "1M-token KV cache = {gb} GB");
+    }
+
+    #[test]
+    fn a100_batch4_at_128k_fills_memory() {
+        // Paper §2.2: A100 80GB supports max batch 4 at 128K for Llama3-8B.
+        let m = ModelSpec::llama3_8b();
+        let weights = m.weight_bytes() as f64 / 1e9;
+        let kv4 = m.kv_cache_bytes(128 * 1024, 4) as f64 / 1e9;
+        let kv5 = m.kv_cache_bytes(128 * 1024, 5) as f64 / 1e9;
+        // batch 4 is right at the memory edge (the paper's max batch)...
+        assert!((70.0..90.0).contains(&(weights + kv4)), "batch 4 edge: {}", weights + kv4);
+        // ...and batch 5 is clearly out of memory.
+        assert!(weights + kv5 > 85.0, "batch 5 OOMs: {}", weights + kv5);
+    }
+
+    #[test]
+    fn group_sizes() {
+        assert_eq!(ModelSpec::llama3_8b().group(), 4);
+        assert_eq!(ModelSpec::qwen25_7b().group(), 7);
+        assert_eq!(ModelSpec::qwen25_72b().group(), 8);
+        assert_eq!(ModelSpec::tinylm().group(), 4);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(ModelSpec::by_name("llama3-8b").is_some());
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn weight_bytes_order_of_magnitude() {
+        // Llama3-8B has ~8B params at 2 bytes => ~16 GB.
+        let gb = ModelSpec::llama3_8b().weight_bytes() as f64 / 1e9;
+        assert!((12.0..20.0).contains(&gb), "weights = {gb} GB");
+    }
+}

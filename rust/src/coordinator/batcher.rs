@@ -1,0 +1,71 @@
+//! Continuous batcher: each engine step assembles a decode batch from all
+//! sessions in the Decode phase, padded up to the nearest executable
+//! batch bucket (vLLM-style iteration-level scheduling).
+
+/// Decode-batch assembly policy.
+pub struct Batcher {
+    /// Executable batch buckets, ascending (e.g. [1, 2, 4, 8]).
+    buckets: Vec<usize>,
+    /// Hard cap on concurrent decodes (GPU memory admission).
+    max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(buckets: &[usize], max_batch: usize) -> Self {
+        let mut b = buckets.to_vec();
+        b.sort_unstable();
+        Batcher { buckets: b, max_batch }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Pick the sessions to decode this step (oldest first) and the
+    /// bucket size to pad to. Returns (chosen ids, bucket).
+    pub fn select(&self, decodable: &[u64]) -> Option<(Vec<u64>, usize)> {
+        if decodable.is_empty() {
+            return None;
+        }
+        let n = decodable.len().min(self.max_batch).min(*self.buckets.last().unwrap());
+        let take: Vec<u64> = decodable[..n].to_vec();
+        let bucket = self.buckets.iter().copied().find(|&b| b >= n)?;
+        Some((take, bucket))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_to_bucket() {
+        let b = Batcher::new(&[1, 2, 4, 8], 8);
+        let (ids, bucket) = b.select(&[10, 11, 12]).unwrap();
+        assert_eq!(ids, vec![10, 11, 12]);
+        assert_eq!(bucket, 4);
+    }
+
+    #[test]
+    fn caps_at_largest_bucket() {
+        let b = Batcher::new(&[1, 2, 4, 8], 64);
+        let ids: Vec<u64> = (0..20).collect();
+        let (take, bucket) = b.select(&ids).unwrap();
+        assert_eq!(take.len(), 8);
+        assert_eq!(bucket, 8);
+    }
+
+    #[test]
+    fn respects_admission_cap() {
+        let b = Batcher::new(&[1, 2, 4, 8], 2);
+        let (take, bucket) = b.select(&[1, 2, 3]).unwrap();
+        assert_eq!(take.len(), 2);
+        assert_eq!(bucket, 2);
+    }
+
+    #[test]
+    fn empty_queue_is_none() {
+        let b = Batcher::new(&[1, 2], 2);
+        assert!(b.select(&[]).is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: request lifecycle, routing, continuous batching and
+//! prefill/decode scheduling (the serving-side contribution that wraps
+//! the wave index / wave buffer, per the paper's system integration).
+
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use batcher::Batcher;
+pub use request::{Phase, Request, Session};
+pub use router::Router;
+pub use scheduler::{Action, Scheduler};

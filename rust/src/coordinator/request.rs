@@ -1,0 +1,84 @@
+//! Request and session state tracked by the coordinator.
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// Arrival time (seconds from trace start).
+    pub arrive_s: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        Request { id, prompt, max_new, arrive_s: 0.0 }
+    }
+}
+
+/// Lifecycle phase of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefill,
+    Decode,
+    Done,
+}
+
+/// Per-request serving state.
+#[derive(Debug)]
+pub struct Session {
+    pub req: Request,
+    pub phase: Phase,
+    pub generated: Vec<i32>,
+    /// Time the request was admitted / finished prefill / completed.
+    pub admit_s: f64,
+    pub first_token_s: f64,
+    pub done_s: f64,
+}
+
+impl Session {
+    pub fn new(req: Request) -> Self {
+        Session {
+            req,
+            phase: Phase::Queued,
+            generated: Vec::new(),
+            admit_s: f64::NAN,
+            first_token_s: f64::NAN,
+            done_s: f64::NAN,
+        }
+    }
+
+    /// Tokens decoded so far.
+    pub fn n_generated(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// Whether generation is complete.
+    pub fn finished(&self) -> bool {
+        self.generated.len() >= self.req.max_new
+    }
+
+    /// Request latency (arrival -> completion).
+    pub fn latency_s(&self) -> f64 {
+        self.done_s - self.req.arrive_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_fields() {
+        let mut s = Session::new(Request::new(1, vec![1, 2, 3], 2));
+        assert_eq!(s.phase, Phase::Queued);
+        assert!(!s.finished());
+        s.generated.push(7);
+        s.generated.push(8);
+        assert!(s.finished());
+        s.req.arrive_s = 1.0;
+        s.done_s = 3.5;
+        assert!((s.latency_s() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Request router: assigns incoming requests to workers (GPUs or
+//! model-parallel groups). Least-loaded with round-robin tie-break —
+//! the multi-GPU story of §4.5 (wave index/buffer are per-head modular,
+//! so routing is the only cross-GPU coordination needed).
+
+pub struct Router {
+    loads: Vec<usize>,
+    rr: usize,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Router { loads: vec![0; workers], rr: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Route one request; returns the worker index.
+    pub fn route(&mut self) -> usize {
+        let min = *self.loads.iter().min().unwrap();
+        // round-robin among the least-loaded
+        let n = self.loads.len();
+        for off in 0..n {
+            let w = (self.rr + off) % n;
+            if self.loads[w] == min {
+                self.rr = (w + 1) % n;
+                self.loads[w] += 1;
+                return w;
+            }
+        }
+        unreachable!()
+    }
+
+    /// Mark a request on `worker` complete.
+    pub fn complete(&mut self, worker: usize) {
+        self.loads[worker] = self.loads[worker].saturating_sub(1);
+    }
+
+    pub fn load(&self, worker: usize) -> usize {
+        self.loads[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balances_evenly() {
+        let mut r = Router::new(4);
+        for _ in 0..8 {
+            r.route();
+        }
+        for w in 0..4 {
+            assert_eq!(r.load(w), 2);
+        }
+    }
+
+    #[test]
+    fn prefers_least_loaded_after_completion() {
+        let mut r = Router::new(2);
+        let a = r.route();
+        let _b = r.route();
+        r.complete(a);
+        assert_eq!(r.route(), a, "freed worker gets the next request");
+    }
+
+    #[test]
+    fn single_worker() {
+        let mut r = Router::new(1);
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.load(0), 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! Prefill/decode scheduler: owns the session table and decides, each
+//! engine iteration, whether to run a prefill (one prompt at a time —
+//! prefill saturates the device) or a decode batch (continuous batching).
+//! Decode-first keeps time-to-next-token low once requests are admitted;
+//! queued prefills run when the decode pool is below the admission cap.
+
+use super::batcher::Batcher;
+use super::request::{Phase, Request, Session};
+use std::collections::HashMap;
+
+/// What the engine should run next.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    Prefill(u64),
+    DecodeBatch(Vec<u64>, usize),
+    Idle,
+}
+
+pub struct Scheduler {
+    sessions: HashMap<u64, Session>,
+    queue: Vec<u64>,
+    batcher: Batcher,
+}
+
+impl Scheduler {
+    pub fn new(batcher: Batcher) -> Self {
+        Scheduler { sessions: HashMap::new(), queue: Vec::new(), batcher }
+    }
+
+    pub fn submit(&mut self, req: Request, now_s: f64) {
+        let id = req.id;
+        let mut s = Session::new(req);
+        s.admit_s = now_s;
+        self.sessions.insert(id, s);
+        self.queue.push(id);
+    }
+
+    pub fn session(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn session_mut(&mut self, id: u64) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    /// Sessions currently decoding, oldest admission first.
+    fn decodable(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .sessions
+            .values()
+            .filter(|s| s.phase == Phase::Decode)
+            .map(|s| s.req.id)
+            .collect();
+        v.sort_by(|a, b| {
+            let (sa, sb) = (&self.sessions[a], &self.sessions[b]);
+            sa.admit_s.partial_cmp(&sb.admit_s).unwrap().then(a.cmp(b))
+        });
+        v
+    }
+
+    /// Next action. Decode runs whenever a full-enough batch exists or no
+    /// prefill is queued; prefill admits new work when the decode pool
+    /// has headroom.
+    pub fn next_action(&mut self) -> Action {
+        let decoding = self.decodable();
+        let queued = self.queue.first().copied();
+        match queued {
+            Some(id) if decoding.len() < self.batcher.max_batch() => {
+                self.queue.remove(0);
+                self.sessions.get_mut(&id).unwrap().phase = Phase::Prefill;
+                Action::Prefill(id)
+            }
+            _ => match self.batcher.select(&decoding) {
+                Some((ids, bucket)) => Action::DecodeBatch(ids, bucket),
+                None => Action::Idle,
+            },
+        }
+    }
+
+    /// Mark prefill complete (first token produced).
+    pub fn prefill_done(&mut self, id: u64, first_token: i32, now_s: f64) {
+        let s = self.sessions.get_mut(&id).unwrap();
+        s.phase = Phase::Decode;
+        s.generated.push(first_token);
+        s.first_token_s = now_s;
+        if s.finished() {
+            s.phase = Phase::Done;
+            s.done_s = now_s;
+        }
+    }
+
+    /// Record one decoded token; completes the session at max_new.
+    pub fn token_decoded(&mut self, id: u64, token: i32, now_s: f64) {
+        let s = self.sessions.get_mut(&id).unwrap();
+        s.generated.push(token);
+        if s.finished() {
+            s.phase = Phase::Done;
+            s.done_s = now_s;
+        }
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.queue.is_empty() && self.sessions.values().all(|s| s.phase == Phase::Done)
+    }
+
+    pub fn sessions(&self) -> impl Iterator<Item = &Session> {
+        self.sessions.values()
+    }
+
+    pub fn n_decoding(&self) -> usize {
+        self.sessions.values().filter(|s| s.phase == Phase::Decode).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(max_batch: usize) -> Scheduler {
+        Scheduler::new(Batcher::new(&[1, 2, 4, 8], max_batch))
+    }
+
+    #[test]
+    fn prefill_then_decode_then_done() {
+        let mut s = sched(4);
+        s.submit(Request::new(1, vec![1, 2], 2), 0.0);
+        assert_eq!(s.next_action(), Action::Prefill(1));
+        s.prefill_done(1, 42, 0.1);
+        assert_eq!(s.next_action(), Action::DecodeBatch(vec![1], 1));
+        s.token_decoded(1, 43, 0.2);
+        assert!(s.all_done());
+        assert_eq!(s.session(1).unwrap().generated, vec![42, 43]);
+        assert_eq!(s.next_action(), Action::Idle);
+    }
+
+    #[test]
+    fn admission_cap_defers_prefill() {
+        let mut s = sched(2);
+        for id in 1..=3 {
+            s.submit(Request::new(id, vec![1], 10), 0.0);
+        }
+        // two prefills admitted
+        assert_eq!(s.next_action(), Action::Prefill(1));
+        s.prefill_done(1, 0, 0.0);
+        assert_eq!(s.next_action(), Action::Prefill(2));
+        s.prefill_done(2, 0, 0.0);
+        // pool full: third prefill deferred, decode batch runs
+        match s.next_action() {
+            Action::DecodeBatch(ids, bucket) => {
+                assert_eq!(ids, vec![1, 2]);
+                assert_eq!(bucket, 2);
+            }
+            a => panic!("expected decode, got {a:?}"),
+        }
+    }
+
+    #[test]
+    fn continuous_batching_admits_mid_flight() {
+        let mut s = sched(8);
+        s.submit(Request::new(1, vec![1], 5), 0.0);
+        assert_eq!(s.next_action(), Action::Prefill(1));
+        s.prefill_done(1, 0, 0.0);
+        // a new request arrives while 1 decodes
+        s.submit(Request::new(2, vec![1], 5), 0.1);
+        assert_eq!(s.next_action(), Action::Prefill(2));
+        s.prefill_done(2, 0, 0.2);
+        match s.next_action() {
+            Action::DecodeBatch(ids, _) => assert_eq!(ids, vec![1, 2]),
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn finishing_at_prefill_token() {
+        let mut s = sched(2);
+        s.submit(Request::new(7, vec![1], 1), 0.0);
+        assert_eq!(s.next_action(), Action::Prefill(7));
+        s.prefill_done(7, 9, 0.5);
+        assert!(s.all_done());
+        assert_eq!(s.session(7).unwrap().phase, Phase::Done);
+    }
+}

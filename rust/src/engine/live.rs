@@ -1,0 +1,556 @@
+//! Live engine: TinyLM decode with the wave index + wave buffer between
+//! qkv and attention (paper Figure 5), executed through PJRT. Also
+//! provides a full-attention mode over the same sessions for accuracy
+//! and latency comparison.
+
+use crate::buffer::{ExecBuffer, WaveBuffer};
+use crate::config::{BufferConfig, ZoneConfig};
+use crate::index::{SelectScratch, WaveIndex, ZoneSelection};
+use crate::metrics::Metrics;
+use crate::runtime::tinylm::{TinyLm, WaveInputs};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Attention mode for decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnMode {
+    /// Wave index + tripartite kernel (RetroInfer).
+    Wave,
+    /// Dense attention over the padded cache (baseline).
+    Full,
+}
+
+/// Per-request live state.
+struct SessionState {
+    /// Wave indexes, `[layer * kv_heads]` (Wave mode).
+    indexes: Vec<WaveIndex>,
+    buffers: Vec<WaveBuffer>,
+    /// Full-attention caches per layer: `[KVH, T, d]` flat (Full mode).
+    k_full: Vec<Vec<f32>>,
+    v_full: Vec<Vec<f32>>,
+    len: usize,
+    last_token: i32,
+}
+
+/// The live serving engine.
+pub struct LiveEngine {
+    lm: TinyLm,
+    zcfg: ZoneConfig,
+    bcfg: BufferConfig,
+    mode: AttnMode,
+    pool: Arc<ThreadPool>,
+    states: HashMap<u64, SessionState>,
+    pub metrics: Arc<Metrics>,
+    scratch: SelectScratch,
+}
+
+impl LiveEngine {
+    pub fn new(artifacts_dir: &str, mode: AttnMode) -> Result<LiveEngine> {
+        // Live-path zone config, calibrated for TinyLM at 2-8K contexts:
+        // the paper's 1.8%/23.2% budgets are calibrated for trained LLMs
+        // at 128K, whose key space is far more cluster-coherent than a
+        // synthetic-weight 4-layer model at 2K. DESIGN.md §1 documents the
+        // substitution; the paper-scale fractions stay the default for
+        // memsim/benches. The smaller update segment keeps the steady
+        // zone inside the execution buffer (Ne) with retrieval room.
+        let zcfg = ZoneConfig {
+            retrieval_frac: 0.5,
+            estimation_frac: 1.0, // estimate every non-retrieved cluster
+            build_segment: 2048,
+            update_segment: 256,
+            ..ZoneConfig::default()
+        };
+        // Live cache sizing: with TinyLM's 50% retrieval budget the
+        // working set is ~10x the paper's (1.8%); scale the GPU cache
+        // the same way (25% of KV) so the locality story is preserved.
+        let bcfg = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+        Self::with_config(artifacts_dir, mode, zcfg, bcfg)
+    }
+
+    pub fn with_config(
+        artifacts_dir: &str,
+        mode: AttnMode,
+        zcfg: ZoneConfig,
+        bcfg: BufferConfig,
+    ) -> Result<LiveEngine> {
+        let lm = TinyLm::load(artifacts_dir)?;
+        let pool = Arc::new(ThreadPool::new(bcfg.cpu_threads.max(1)));
+        Ok(LiveEngine {
+            lm,
+            zcfg,
+            bcfg,
+            mode,
+            pool,
+            states: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            scratch: SelectScratch::default(),
+        })
+    }
+
+    pub fn mode(&self) -> AttnMode {
+        self.mode
+    }
+
+    pub fn lm(&mut self) -> &mut TinyLm {
+        &mut self.lm
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Aggregate wave-buffer hit ratio across all sessions/heads.
+    pub fn buffer_hit_ratio(&self) -> f64 {
+        let mut h = 0u64;
+        let mut m = 0u64;
+        for s in self.states.values() {
+            for b in &s.buffers {
+                h += b.stats().hit_blocks.load(std::sync::atomic::Ordering::Relaxed);
+                m += b.stats().miss_blocks.load(std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+        if h + m == 0 {
+            1.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
+    /// Prefill one prompt (length must be a prefill bucket); builds the
+    /// session's wave indexes via segmented clustering and returns the
+    /// first generated token.
+    pub fn prefill(&mut self, id: u64, prompt: &[i32]) -> Result<i32> {
+        let t0 = Instant::now();
+        let (kc, vc, logits) = self.lm.prefill(prompt)?;
+        // kc/vc: [L, 1, KVH, T, d]
+        let (l_n, kvh, t, d) =
+            (kc.shape()[0], kc.shape()[2], kc.shape()[3], kc.shape()[4]);
+        let mut indexes = Vec::with_capacity(l_n * kvh);
+        let mut buffers = Vec::with_capacity(l_n * kvh);
+        let mut k_full = Vec::new();
+        let mut v_full = Vec::new();
+        let t_cap = self.lm.buckets.attn_full_t;
+        for layer in 0..l_n {
+            if self.mode == AttnMode::Full {
+                let mut kf = vec![0.0f32; kvh * t_cap * d];
+                let mut vf = vec![0.0f32; kvh * t_cap * d];
+                for h in 0..kvh {
+                    let ks = kc.row(&[layer, 0, h]);
+                    let vs = vc.row(&[layer, 0, h]);
+                    kf[h * t_cap * d..h * t_cap * d + t * d].copy_from_slice(ks);
+                    vf[h * t_cap * d..h * t_cap * d + t * d].copy_from_slice(vs);
+                }
+                k_full.push(kf);
+                v_full.push(vf);
+            }
+            for h in 0..kvh {
+                let keys = kc.row(&[layer, 0, h]);
+                let vals = vc.row(&[layer, 0, h]);
+                let idx = WaveIndex::build(
+                    self.zcfg.clone(),
+                    d,
+                    self.bcfg.block_bytes,
+                    keys,
+                    vals,
+                    id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1),
+                );
+                let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
+                let buf = WaveBuffer::new(
+                    self.bcfg.clone(),
+                    d,
+                    idx.store().tokens_per_block(),
+                    cap,
+                    Arc::clone(&self.pool),
+                );
+                buf.register_index(&idx);
+                indexes.push(idx);
+                buffers.push(buf);
+            }
+        }
+        let first = TinyLm::greedy(&logits)[0];
+        self.states.insert(
+            id,
+            SessionState { indexes, buffers, k_full, v_full, len: t, last_token: first },
+        );
+        self.metrics.observe("prefill_s", t0.elapsed().as_secs_f64());
+        self.metrics.inc("prefills", 1);
+        Ok(first)
+    }
+
+    /// One decode step for the sessions in `ids`, padded to `bucket`.
+    /// Returns the newly decoded token per session (in `ids` order).
+    pub fn decode_step(&mut self, ids: &[u64], bucket: usize) -> Result<Vec<i32>> {
+        let t0 = Instant::now();
+        let b = bucket;
+        if ids.is_empty() || ids.len() > b {
+            return Err(anyhow!("bad batch: {} ids, bucket {b}", ids.len()));
+        }
+        for id in ids {
+            if !self.states.contains_key(id) {
+                return Err(anyhow!("unknown session {id}"));
+            }
+        }
+        // Pad rows replicate the first live session (outputs discarded).
+        let row_id = |i: usize| ids[i.min(ids.len() - 1)];
+
+        let tokens: Vec<i32> =
+            (0..b).map(|i| self.states[&row_id(i)].last_token).collect();
+        let pos: Vec<i32> = (0..b).map(|i| self.states[&row_id(i)].len as i32).collect();
+
+        let mut hidden = self.lm.embed(&tokens)?;
+        let (kvh, d) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head);
+        let (ne, m_cap) = (self.lm.buckets.wave_ne, self.lm.buckets.wave_m);
+        let n_layers = self.lm.cfg.n_layers;
+
+        for layer in 0..n_layers {
+            let (q, k, v) = self.lm.qkv(layer, &hidden, &pos)?;
+            // Append the new token's KV (live rows only, once per session).
+            for (i, id) in ids.iter().enumerate() {
+                let st = self.states.get_mut(id).unwrap();
+                for h in 0..kvh {
+                    let key = k.row(&[i, h]);
+                    let val = v.row(&[i, h]);
+                    match self.mode {
+                        AttnMode::Wave => {
+                            let slot = layer * kvh + h;
+                            st.indexes[slot].append(key, val);
+                            st.buffers[slot].sync_new_clusters(&st.indexes[slot]);
+                        }
+                        AttnMode::Full => {
+                            let t_cap = self.lm.buckets.attn_full_t;
+                            let off = h * t_cap * d + st.len * d;
+                            st.k_full[layer][off..off + d].copy_from_slice(key);
+                            st.v_full[layer][off..off + d].copy_from_slice(val);
+                        }
+                    }
+                }
+            }
+
+            let ctx = match self.mode {
+                AttnMode::Wave => {
+                    let mut wi = WaveInputs::zeros(b, kvh, ne, m_cap, d);
+                    for i in 0..b {
+                        let id = row_id(i);
+                        for h in 0..kvh {
+                            self.assemble_head(id, layer, h, i, &q, &mut wi)?;
+                        }
+                    }
+                    self.lm.attn_wave(&q, &wi)?
+                }
+                AttnMode::Full => {
+                    let t_cap = self.lm.buckets.attn_full_t;
+                    let mut kb = vec![0.0f32; b * kvh * t_cap * d];
+                    let mut vb = vec![0.0f32; b * kvh * t_cap * d];
+                    let mut lens = vec![0i32; b];
+                    for i in 0..b {
+                        let st = &self.states[&row_id(i)];
+                        let row = kvh * t_cap * d;
+                        kb[i * row..(i + 1) * row].copy_from_slice(&st.k_full[layer]);
+                        vb[i * row..(i + 1) * row].copy_from_slice(&st.v_full[layer]);
+                        lens[i] = (st.len + 1) as i32;
+                    }
+                    self.lm.attn_full(&q, &kb, &vb, &lens)?
+                }
+            };
+            hidden = self.lm.mlp(layer, &hidden, &ctx)?;
+        }
+
+        let logits = self.lm.logits(&hidden)?;
+        let all = TinyLm::greedy(&logits);
+        let mut out = Vec::with_capacity(ids.len());
+        for (i, id) in ids.iter().enumerate() {
+            let st = self.states.get_mut(id).unwrap();
+            st.last_token = all[i];
+            st.len += 1;
+            out.push(all[i]);
+        }
+        self.metrics.observe("decode_step_s", t0.elapsed().as_secs_f64());
+        self.metrics.inc("decode_steps", 1);
+        self.metrics.inc("decoded_tokens", ids.len() as u64);
+        Ok(out)
+    }
+
+    /// Assemble one (sequence, head) slice of the wave-attention inputs:
+    /// zone selection, execution-buffer gather through the wave buffer,
+    /// and estimation-zone meta arrays.
+    fn assemble_head(
+        &mut self,
+        id: u64,
+        layer: usize,
+        h: usize,
+        row: usize,
+        q: &Tensor,
+        wi: &mut WaveInputs,
+    ) -> Result<()> {
+        let (kvh, d, group) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head, self.lm.cfg.group());
+        let (ne, m_cap) = (self.lm.buckets.wave_ne, self.lm.buckets.wave_m);
+        let slot = layer * kvh + h;
+
+        // Group queries, flat [G, d]: zone selection scores each cluster
+        // by the MAX over the group's queries (GQA — each query head's
+        // heavy hitters stay retrievable).
+        let mut qg = vec![0.0f32; group * d];
+        for g in 0..group {
+            qg[g * d..(g + 1) * d].copy_from_slice(q.row(&[row, h, g]));
+        }
+
+        let st = self.states.get_mut(&id).unwrap();
+        let index = &st.indexes[slot];
+        let m = index.meta().m();
+        // Budgets from the zone config, floored at 2 clusters per group
+        // query head (short contexts under-provision fractional budgets).
+        let r = index.cfg().retrieval_clusters(m).max(2 * group).min(m);
+        let e = index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
+        let mut sel = index.select_group_with(&qg, group, r, e, &mut self.scratch);
+        // Trim retrieval so steady + retrieved tokens fit the Ne buffer.
+        let mut budget = ne.saturating_sub(index.steady_tokens());
+        let mut kept = Vec::with_capacity(sel.retrieval.len());
+        for &c in &sel.retrieval {
+            let sz = index.meta().cluster_tokens(c as usize).len();
+            if sz <= budget {
+                budget -= sz;
+                kept.push(c);
+            }
+        }
+        sel.retrieval = kept;
+        sel.estimation.truncate(m_cap);
+        let sel = ZoneSelection { retrieval: sel.retrieval, estimation: sel.estimation };
+
+        // Execution buffer via the wave buffer (steady + hits + misses).
+        let mut eb = ExecBuffer::new(d);
+        let stats = st.buffers[slot].assemble(index, &sel, &mut eb);
+        self.metrics.inc("pcie_bytes", stats.pcie_bytes as u64);
+        self.metrics.inc("hit_blocks", stats.hit_blocks as u64);
+        self.metrics.inc("miss_blocks", stats.miss_blocks as u64);
+
+        let n_tok = eb.n_tokens().min(ne);
+        let base = (row * kvh + h) * ne;
+        wi.kx[base * d..(base + n_tok) * d].copy_from_slice(&eb.keys[..n_tok * d]);
+        wi.vx[base * d..(base + n_tok) * d].copy_from_slice(&eb.vals[..n_tok * d]);
+        for s in 0..n_tok {
+            wi.kmask[base + s] = 1.0;
+        }
+
+        // Estimation zone: pack selected clusters densely into the M slots.
+        let mbase = (row * kvh + h) * m_cap;
+        for (s, &c) in sel.estimation.iter().enumerate() {
+            let c = c as usize;
+            wi.cent[(mbase + s) * d..(mbase + s + 1) * d]
+                .copy_from_slice(index.meta().centroid(c));
+            wi.vsum[(mbase + s) * d..(mbase + s + 1) * d].copy_from_slice(
+                &index.meta().vsum_flat()[c * d..(c + 1) * d],
+            );
+            wi.csize[mbase + s] = index.meta().counts()[c];
+            wi.emask[mbase + s] = 1.0;
+        }
+        Ok(())
+    }
+
+    /// Session context length (prompt + generated).
+    pub fn session_len(&self, id: u64) -> Option<usize> {
+        self.states.get(&id).map(|s| s.len)
+    }
+
+    /// Drop a finished session, releasing its memory.
+    pub fn evict_session(&mut self, id: u64) {
+        self.states.remove(&id);
+    }
+
+    /// Overwrite the token the next decode step will consume (teacher
+    /// forcing — used to measure per-step prediction agreement between
+    /// attention modes without autoregressive divergence).
+    pub fn force_token(&mut self, id: u64, token: i32) {
+        if let Some(st) = self.states.get_mut(&id) {
+            st.last_token = token;
+        }
+    }
+}
+
+/// Region-structured synthetic prompt: each 256-token region draws from
+/// its own 16-symbol alphabet, giving the topical locality of real text
+/// (used by tests, examples and benches).
+pub fn structured_prompt(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 256 == 0 {
+            // new region: pick a fresh alphabet offset
+            let base = rng.below(240);
+            out.push(base as i32); // region marker token
+            continue;
+        }
+        let region_base = (out[i - (i % 256)] as usize).min(239);
+        out.push((region_base + rng.below(16)) as i32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    /// Region-structured prompt: each 256-token region draws from its own
+    /// 16-symbol alphabet — the synthetic analog of topical text (uniform
+    /// random tokens have no structure for ANY retrieval index to exploit).
+    fn prompt(n: usize, seed: u64) -> Vec<i32> {
+        structured_prompt(n, seed)
+    }
+
+    #[test]
+    fn wave_and_full_agree_on_greedy_tokens() {
+        // The headline live-path test: RetroInfer's sparse decode must
+        // reproduce full attention's greedy decode on a real prompt.
+        let dir = default_artifacts_dir();
+        let p = prompt(2048, 1);
+        let mut full = LiveEngine::new(&dir, AttnMode::Full).unwrap();
+        let mut wave = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let f0 = full.prefill(1, &p).unwrap();
+        let w0 = wave.prefill(1, &p).unwrap();
+        assert_eq!(f0, w0, "first token must match");
+        // Teacher-forced comparison: free-running sequences diverge
+        // permanently after any single greedy flip, so force both engines
+        // through the SAME token history and compare each step's
+        // prediction (the stable fidelity metric).
+        let mut same = 0;
+        let steps = 8;
+        let mut history = f0;
+        for _ in 0..steps {
+            full.force_token(1, history);
+            wave.force_token(1, history);
+            let ft = full.decode_step(&[1], 1).unwrap()[0];
+            let wt = wave.decode_step(&[1], 1).unwrap()[0];
+            if ft == wt {
+                same += 1;
+            }
+            history = ft;
+        }
+        assert!(
+            same * 2 >= steps,
+            "wave decode diverged: {same}/{steps} predictions matched"
+        );
+    }
+
+    #[test]
+    fn batched_decode_consistent_with_single() {
+        let dir = default_artifacts_dir();
+        let p1 = prompt(2048, 2);
+        let p2 = prompt(2048, 3);
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let mut solo = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        eng.prefill(1, &p1).unwrap();
+        eng.prefill(2, &p2).unwrap();
+        solo.prefill(1, &p1).unwrap();
+        let batch = eng.decode_step(&[1, 2], 2).unwrap();
+        let single = solo.decode_step(&[1], 1).unwrap();
+        assert_eq!(batch[0], single[0], "batching must not change results");
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn padded_bucket_rows_are_discarded() {
+        let dir = default_artifacts_dir();
+        let p = prompt(2048, 4);
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        eng.prefill(9, &p).unwrap();
+        // 1 live session decoded at bucket 2
+        let out = eng.decode_step(&[9], 2).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(eng.session_len(9), Some(2049));
+    }
+
+    #[test]
+    fn rejects_unknown_session() {
+        let dir = default_artifacts_dir();
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        assert!(eng.decode_step(&[42], 1).is_err());
+    }
+}
+
+#[cfg(test)]
+mod fidelity_tests {
+    use super::*;
+    use crate::attention::full_attention;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::stats::cosine;
+
+    /// Reconstruct full attention from the wave index's own storage and
+    /// compare against the engine's tripartite kernel output, per head.
+    #[test]
+    fn wave_ctx_tracks_exact_ctx() {
+        let dir = default_artifacts_dir();
+        let p = crate::engine::live::structured_prompt(2048, 5);
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        eng.prefill(1, &p).unwrap();
+
+        // one decode step, but instrumented: recompute qkv and compare
+        let st = &eng.states[&1];
+        let tokens = vec![st.last_token];
+        let pos = vec![st.len as i32];
+        let hidden = eng.lm.embed(&tokens).unwrap();
+        let (kvh, d) = (eng.lm.cfg.kv_heads, eng.lm.cfg.d_head);
+        let group = eng.lm.cfg.group();
+        let (ne, m_cap) = (eng.lm.buckets.wave_ne, eng.lm.buckets.wave_m);
+
+        let layer = 0;
+        let (q, k, v) = eng.lm.qkv(layer, &hidden, &pos).unwrap();
+        for (i, id) in [1u64].iter().enumerate() {
+            let stm = eng.states.get_mut(id).unwrap();
+            for h in 0..kvh {
+                stm.indexes[layer * kvh + h].append(k.row(&[i, h]), v.row(&[i, h]));
+            }
+        }
+        let mut wi = WaveInputs::zeros(1, kvh, ne, m_cap, d);
+        for h in 0..kvh {
+            eng.assemble_head(1, layer, h, 0, &q, &mut wi).unwrap();
+        }
+        let ctx = eng.lm.attn_wave(&q, &wi).unwrap(); // [1, q_dim]
+
+        // exact reference from the index's full KV
+        for h in 0..kvh {
+            let st = &eng.states[&1];
+            let idx = &st.indexes[layer * kvh + h];
+            // gather every token (clusters + steady)
+            let mut keys = Vec::new();
+            let mut vals = Vec::new();
+            for c in 0..idx.meta().m() {
+                for r in idx.cluster_blocks(c as u32) {
+                    keys.extend_from_slice(idx.store().block_keys(*r));
+                    vals.extend_from_slice(idx.store().block_vals(*r));
+                }
+            }
+            let (sk, sv) = idx.steady_kv();
+            keys.extend_from_slice(&sk);
+            vals.extend_from_slice(&sv);
+            for g in 0..group {
+                let qr = q.row(&[0, h, g]);
+                let mut exact = vec![0.0f32; d];
+                full_attention(qr, &keys, &vals, d, &mut exact);
+                let got = &ctx.data()[(h * group + g) * d..(h * group + g + 1) * d];
+                let c = cosine(got, &exact);
+                // rust-side tripartite with the same selection, for triage
+                let mut sc = SelectScratch::default();
+                let mut qg = vec![0.0f32; group * d];
+                for gg in 0..group {
+                    qg[gg * d..(gg + 1) * d].copy_from_slice(q.row(&[0, h, gg]));
+                }
+                let m = idx.meta().m();
+                let r = idx.cfg().retrieval_clusters(m).max(2 * group).min(m);
+                let e = idx.cfg().estimation_clusters(m).min(m.saturating_sub(r));
+                let sel = idx.select_group_with(&qg, group, r, e, &mut sc);
+                let mut rust_out = vec![0.0f32; d];
+                idx.attend(qr, &sel, &mut rust_out);
+                let c_rust = cosine(&rust_out, &exact);
+                // kernel path and pure-Rust path agree bit-for-bit on the
+                // same selection; the NE-capacity trim makes the kernel's
+                // effective budget slightly smaller, so assert both.
+                assert!(c_rust > 0.9, "head {h} group {g}: rust/exact = {c_rust:.4}");
+                assert!(c > 0.85, "head {h} group {g}: kernel/exact = {c:.4}");
+            }
+        }
+    }
+}

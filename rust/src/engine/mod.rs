@@ -1,0 +1,9 @@
+//! Serving engine: drives TinyLM through PJRT with the wave index/buffer
+//! on the decode path (live engine), and an analytic load simulator for
+//! paper-scale end-to-end experiments (Figure 17).
+
+pub mod live;
+pub mod sim;
+
+pub use live::{AttnMode, LiveEngine};
+pub use sim::{simulate_cluster, simulate_load, LoadReport};

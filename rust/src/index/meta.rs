@@ -1,0 +1,101 @@
+//! Meta index: the GPU-resident representatives of all clusters
+//! (paper Figure 5) — centroids, summed value vectors, cluster sizes —
+//! stored flat SoA for the scoring hot path.
+
+/// Per-head meta index. Cluster ids are stable: appended by segmented
+/// build/update, never reordered.
+pub struct MetaIndex {
+    d: usize,
+    /// `[m, d]` centroid means (original space).
+    centroids: Vec<f32>,
+    /// `[m, d]` summed value vectors (Eq. 4's VS).
+    vsum: Vec<f32>,
+    /// `[m]` cluster sizes.
+    counts: Vec<f32>,
+    /// Token context positions per cluster (analysis + exact attention).
+    tokens: Vec<Vec<u32>>,
+}
+
+impl MetaIndex {
+    pub fn new(d: usize) -> Self {
+        MetaIndex { d, centroids: Vec::new(), vsum: Vec::new(), counts: Vec::new(), tokens: Vec::new() }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of clusters.
+    pub fn m(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total indexed tokens.
+    pub fn n_tokens(&self) -> usize {
+        self.counts.iter().map(|&c| c as usize).sum()
+    }
+
+    /// Append one cluster; returns its id.
+    pub fn push(&mut self, centroid: &[f32], vsum: &[f32], tokens: Vec<u32>) -> usize {
+        debug_assert_eq!(centroid.len(), self.d);
+        debug_assert_eq!(vsum.len(), self.d);
+        debug_assert!(!tokens.is_empty());
+        self.centroids.extend_from_slice(centroid);
+        self.vsum.extend_from_slice(vsum);
+        self.counts.push(tokens.len() as f32);
+        self.tokens.push(tokens);
+        self.counts.len() - 1
+    }
+
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.d..(c + 1) * self.d]
+    }
+
+    pub fn centroids_flat(&self) -> &[f32] {
+        &self.centroids
+    }
+
+    pub fn vsum_flat(&self) -> &[f32] {
+        &self.vsum
+    }
+
+    pub fn counts(&self) -> &[f32] {
+        &self.counts
+    }
+
+    pub fn cluster_tokens(&self, c: usize) -> &[u32] {
+        &self.tokens[c]
+    }
+
+    /// GPU bytes consumed by the meta index (centroids + vsum + counts),
+    /// f32 elements — the paper's "small memory footprint" claim.
+    pub fn gpu_bytes(&self) -> usize {
+        (self.centroids.len() + self.vsum.len() + self.counts.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_lookup() {
+        let mut mi = MetaIndex::new(4);
+        let id0 = mi.push(&[1.0, 0.0, 0.0, 0.0], &[2.0; 4], vec![0, 5, 9]);
+        let id1 = mi.push(&[0.0, 1.0, 0.0, 0.0], &[3.0; 4], vec![2]);
+        assert_eq!((id0, id1), (0, 1));
+        assert_eq!(mi.m(), 2);
+        assert_eq!(mi.n_tokens(), 4);
+        assert_eq!(mi.centroid(1), &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(mi.counts(), &[3.0, 1.0]);
+        assert_eq!(mi.cluster_tokens(0), &[0, 5, 9]);
+    }
+
+    #[test]
+    fn gpu_bytes_scales_with_m() {
+        let mut mi = MetaIndex::new(8);
+        mi.push(&[0.0; 8], &[0.0; 8], vec![1]);
+        // (8 + 8 + 1) f32 = 68 bytes
+        assert_eq!(mi.gpu_bytes(), 68);
+    }
+}

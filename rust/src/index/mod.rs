@@ -1,0 +1,587 @@
+//! Wave index — the paper's Attention-aWare VEctor index (§4.2).
+//!
+//! Per (layer, kv-head): KV vectors are partitioned into clusters by
+//! segmented spherical k-means; cluster centroids + summed values + sizes
+//! form the GPU-resident [`MetaIndex`]; the KV vectors themselves are
+//! packed into CPU blocks ([`HeadStore`]). A query selects the tripartite
+//! zones: steady (sink + local window, position-based), retrieval (top-r
+//! clusters by centroid score, exact attention), estimation (next-e
+//! clusters, accuracy-bound estimation via Eq. 2–4).
+
+pub mod kmeans;
+pub mod meta;
+
+pub use kmeans::{spherical_kmeans, Clustering};
+pub use meta::MetaIndex;
+
+use crate::attention::{tripartite_attention, TripartiteInputs};
+use crate::config::ZoneConfig;
+use crate::kvcache::{BlockRef, HeadStore};
+use crate::tensor::dot;
+
+/// The zone decision for one query: which clusters are retrieved exactly
+/// and which are estimated.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ZoneSelection {
+    /// Cluster ids for exact attention (retrieval zone), best-first.
+    pub retrieval: Vec<u32>,
+    /// Cluster ids for accuracy-bound estimation (estimation zone).
+    pub estimation: Vec<u32>,
+}
+
+impl ZoneSelection {
+    pub fn is_empty(&self) -> bool {
+        self.retrieval.is_empty() && self.estimation.is_empty()
+    }
+}
+
+/// Reusable scratch for the selection hot path (zero alloc per step).
+#[derive(Default)]
+pub struct SelectScratch {
+    scores: Vec<f32>,
+    order: Vec<u32>,
+}
+
+/// Per-head wave index.
+pub struct WaveIndex {
+    cfg: ZoneConfig,
+    d: usize,
+    /// CPU home of clustered KV vectors.
+    store: HeadStore,
+    /// GPU-resident representatives.
+    meta: MetaIndex,
+    /// Physical blocks per cluster (aligned with meta cluster ids).
+    cluster_blocks: Vec<Vec<BlockRef>>,
+    /// Steady zone, sink part: first `steady_sink` tokens.
+    sink_keys: Vec<f32>,
+    sink_vals: Vec<f32>,
+    sink_pos: Vec<u32>,
+    /// Steady zone, local part + pending update buffer (recent tokens not
+    /// yet clustered). Oldest `update_segment` tokens are clustered once
+    /// this exceeds `steady_local + update_segment`.
+    pend_keys: Vec<f32>,
+    pend_vals: Vec<f32>,
+    pend_pos: Vec<u32>,
+    /// Total tokens ever seen (context length).
+    n_seen: usize,
+    /// Number of incremental re-clusterings performed.
+    n_updates: usize,
+    seed: u64,
+}
+
+impl WaveIndex {
+    /// Build from a full prefill context `[n, d]` via segmented clustering.
+    pub fn build(
+        cfg: ZoneConfig,
+        d: usize,
+        block_bytes: usize,
+        keys: &[f32],
+        vals: &[f32],
+        seed: u64,
+    ) -> Self {
+        let n = keys.len() / d;
+        assert_eq!(keys.len(), vals.len());
+        let mut idx = WaveIndex {
+            cfg,
+            d,
+            store: HeadStore::new(d, block_bytes),
+            meta: MetaIndex::new(d),
+            cluster_blocks: Vec::new(),
+            sink_keys: Vec::new(),
+            sink_vals: Vec::new(),
+            sink_pos: Vec::new(),
+            pend_keys: Vec::new(),
+            pend_vals: Vec::new(),
+            pend_pos: Vec::new(),
+            n_seen: 0,
+            n_updates: 0,
+            seed,
+        };
+        // Sink tokens stay out of the index (position-based steady zone).
+        let sink = idx.cfg.steady_sink.min(n);
+        idx.sink_keys.extend_from_slice(&keys[..sink * d]);
+        idx.sink_vals.extend_from_slice(&vals[..sink * d]);
+        idx.sink_pos.extend(0..sink as u32);
+
+        // Local window (and any residue shorter than a segment) pends.
+        let local = idx.cfg.steady_local.min(n - sink);
+        let mid_end = n - local;
+
+        // Middle: segmented clustering.
+        let mut start = sink;
+        while start < mid_end {
+            let seg = (mid_end - start).min(idx.cfg.build_segment);
+            // Avoid a tiny trailing segment: fold < half-segment remainders
+            // into the pending buffer rather than clustering noise.
+            if seg < idx.cfg.tokens_per_cluster {
+                break;
+            }
+            idx.cluster_segment(
+                &keys[start * d..(start + seg) * d],
+                &vals[start * d..(start + seg) * d],
+                start as u32,
+            );
+            start += seg;
+        }
+        // Remainder + local window pend as the steady-local zone.
+        idx.pend_keys.extend_from_slice(&keys[start * d..]);
+        idx.pend_vals.extend_from_slice(&vals[start * d..]);
+        idx.pend_pos.extend(start as u32..n as u32);
+        idx.n_seen = n;
+        idx
+    }
+
+    /// Cluster one segment and append its clusters to meta + store.
+    fn cluster_segment(&mut self, keys: &[f32], vals: &[f32], base_pos: u32) {
+        let d = self.d;
+        let n = keys.len() / d;
+        let k = self.cfg.clusters_for_segment(n);
+        let cl = spherical_kmeans(
+            keys,
+            d,
+            k,
+            self.cfg.kmeans_iters,
+            self.cfg.centering,
+            self.seed ^ (base_pos as u64).wrapping_mul(0x9e3779b1),
+        );
+        // Gather members per cluster, preserving context order.
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); cl.k];
+        for (i, &a) in cl.assign.iter().enumerate() {
+            members[a as usize].push(i as u32);
+        }
+        let mut ck = Vec::new();
+        let mut cv = Vec::new();
+        let mut cp = Vec::new();
+        for (ci, m) in members.iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            ck.clear();
+            cv.clear();
+            cp.clear();
+            let mut vsum = vec![0.0f32; d];
+            for &i in m {
+                let i = i as usize;
+                ck.extend_from_slice(&keys[i * d..(i + 1) * d]);
+                cv.extend_from_slice(&vals[i * d..(i + 1) * d]);
+                cp.push(base_pos + i as u32);
+                for j in 0..d {
+                    vsum[j] += vals[i * d + j];
+                }
+            }
+            let refs = self.store.alloc_cluster(&ck, &cv, &cp);
+            let id = self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], &vsum, cp.clone());
+            debug_assert_eq!(id, self.cluster_blocks.len());
+            self.cluster_blocks.push(refs);
+        }
+    }
+
+    /// Append one decoded token (paper §4.2 "Lightweight Index Updates").
+    /// Re-clusters the oldest `update_segment` pending tokens once the
+    /// pending buffer exceeds `steady_local + update_segment`.
+    pub fn append(&mut self, key: &[f32], val: &[f32]) {
+        debug_assert_eq!(key.len(), self.d);
+        if self.n_seen < self.cfg.steady_sink {
+            self.sink_keys.extend_from_slice(key);
+            self.sink_vals.extend_from_slice(val);
+            self.sink_pos.push(self.n_seen as u32);
+            self.n_seen += 1;
+            return;
+        }
+        self.pend_keys.extend_from_slice(key);
+        self.pend_vals.extend_from_slice(val);
+        self.pend_pos.push(self.n_seen as u32);
+        self.n_seen += 1;
+
+        let seg = self.cfg.update_segment;
+        if self.pend_pos.len() >= self.cfg.steady_local + seg {
+            let d = self.d;
+            let base = self.pend_pos[0];
+            // Split off the oldest segment.
+            let keys: Vec<f32> = self.pend_keys.drain(..seg * d).collect();
+            let vals: Vec<f32> = self.pend_vals.drain(..seg * d).collect();
+            self.pend_pos.drain(..seg);
+            self.cluster_segment(&keys, &vals, base);
+            self.n_updates += 1;
+        }
+    }
+
+    /// Zone selection with explicit budgets (r retrieval, e estimation).
+    pub fn select_with(
+        &self,
+        q: &[f32],
+        r: usize,
+        e: usize,
+        scratch: &mut SelectScratch,
+    ) -> ZoneSelection {
+        let m = self.meta.m();
+        if m == 0 || r + e == 0 {
+            return ZoneSelection::default();
+        }
+        // Score all centroids (the GPU's step-1 in Figure 5); partial
+        // select: top r+e, then top r within them (quickselect via
+        // select_nth_unstable — O(m), not O(m log m)).
+        let cents = self.meta.centroids_flat();
+        let d = self.d;
+        scratch.scores.clear();
+        scratch.scores.extend((0..m).map(|c| dot(q, &cents[c * d..(c + 1) * d])));
+        self.select_from_scores(r, e, scratch)
+    }
+
+    /// Group-aware zone selection for GQA: `qs` is `[g, d]` flat (the
+    /// query heads sharing this KV head); a cluster's score is the MAX
+    /// over the group's inner products, so each query head's heavy
+    /// hitters are eligible for retrieval (a group-mean query would
+    /// systematically miss per-head needles).
+    pub fn select_group_with(
+        &self,
+        qs: &[f32],
+        g: usize,
+        r: usize,
+        e: usize,
+        scratch: &mut SelectScratch,
+    ) -> ZoneSelection {
+        let m = self.meta.m();
+        let d = self.d;
+        debug_assert_eq!(qs.len(), g * d);
+        if m == 0 {
+            return ZoneSelection::default();
+        }
+        let cents = self.meta.centroids_flat();
+        scratch.scores.clear();
+        scratch.scores.extend((0..m).map(|c| {
+            let cv = &cents[c * d..(c + 1) * d];
+            (0..g)
+                .map(|gi| dot(&qs[gi * d..(gi + 1) * d], cv))
+                .fold(f32::NEG_INFINITY, f32::max)
+        }));
+        self.select_from_scores(r, e, scratch)
+    }
+
+    /// Shared top-(r, e) partial selection over `scratch.scores`.
+    fn select_from_scores(&self, r: usize, e: usize, scratch: &mut SelectScratch) -> ZoneSelection {
+        let m = self.meta.m();
+        let r = r.min(m);
+        let e = e.min(m - r);
+        if r + e == 0 {
+            return ZoneSelection::default();
+        }
+        scratch.order.clear();
+        scratch.order.extend(0..m as u32);
+        let scores = &scratch.scores;
+        let order = &mut scratch.order;
+        let cut = (r + e).min(m);
+        if cut < m {
+            order.select_nth_unstable_by(cut - 1, |&a, &b| {
+                scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+            });
+        }
+        if r > 0 && r < cut {
+            order[..cut].select_nth_unstable_by(r - 1, |&a, &b| {
+                scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+            });
+        }
+        let mut retrieval: Vec<u32> = order[..r].to_vec();
+        retrieval.sort_by(|&a, &b| {
+            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+        });
+        let estimation: Vec<u32> = order[r..cut].to_vec();
+        ZoneSelection { retrieval, estimation }
+    }
+
+    /// Zone selection at the paper's default budgets (1.8% / 23.2%).
+    pub fn select(&self, q: &[f32], scratch: &mut SelectScratch) -> ZoneSelection {
+        let m = self.meta.m();
+        let r = self.cfg.retrieval_clusters(m);
+        let e = self.cfg.estimation_clusters(m);
+        self.select_with(q, r, e, scratch)
+    }
+
+    /// Tripartite attention output for one query, gathering exact tokens
+    /// directly from the CPU store (accuracy path; the serving path goes
+    /// through the wave buffer instead).
+    pub fn attend(&self, q: &[f32], sel: &ZoneSelection, out: &mut [f32]) {
+        let d = self.d;
+        let mut ex_keys =
+            Vec::with_capacity((self.sink_pos.len() + self.pend_pos.len()) * d);
+        let mut ex_vals = Vec::with_capacity(ex_keys.capacity());
+        ex_keys.extend_from_slice(&self.sink_keys);
+        ex_vals.extend_from_slice(&self.sink_vals);
+        ex_keys.extend_from_slice(&self.pend_keys);
+        ex_vals.extend_from_slice(&self.pend_vals);
+        for &c in &sel.retrieval {
+            for r in &self.cluster_blocks[c as usize] {
+                ex_keys.extend_from_slice(self.store.block_keys(*r));
+                ex_vals.extend_from_slice(self.store.block_vals(*r));
+            }
+        }
+        let n_exact = ex_keys.len() / d;
+        let exact: Vec<usize> = (0..n_exact).collect();
+        let estimated: Vec<usize> = sel.estimation.iter().map(|&c| c as usize).collect();
+        let inp = TripartiteInputs {
+            d,
+            keys: &ex_keys,
+            vals: &ex_vals,
+            exact: &exact,
+            centroids: self.meta.centroids_flat(),
+            vsum: self.meta.vsum_flat(),
+            sizes: self.meta.counts(),
+            estimated: &estimated,
+        };
+        tripartite_attention(q, &inp, out);
+    }
+
+    /// Context positions covered exactly (steady + given retrieval zone).
+    pub fn exact_positions(&self, sel: &ZoneSelection) -> Vec<u32> {
+        let mut pos = Vec::new();
+        pos.extend_from_slice(&self.sink_pos);
+        pos.extend_from_slice(&self.pend_pos);
+        for &c in &sel.retrieval {
+            pos.extend_from_slice(self.meta.cluster_tokens(c as usize));
+        }
+        pos
+    }
+
+    pub fn meta(&self) -> &MetaIndex {
+        &self.meta
+    }
+
+    pub fn store(&self) -> &HeadStore {
+        &self.store
+    }
+
+    pub fn cfg(&self) -> &ZoneConfig {
+        &self.cfg
+    }
+
+    pub fn cluster_blocks(&self, c: u32) -> &[BlockRef] {
+        &self.cluster_blocks[c as usize]
+    }
+
+    /// Tokens currently held in the steady zone (sink + local/pending).
+    pub fn steady_tokens(&self) -> usize {
+        self.sink_pos.len() + self.pend_pos.len()
+    }
+
+    /// Steady-zone KV as flat slices (sink then pending), for the
+    /// execution-buffer assembly.
+    pub fn steady_kv(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut k = Vec::with_capacity(self.sink_keys.len() + self.pend_keys.len());
+        let mut v = Vec::with_capacity(k.capacity());
+        k.extend_from_slice(&self.sink_keys);
+        k.extend_from_slice(&self.pend_keys);
+        v.extend_from_slice(&self.sink_vals);
+        v.extend_from_slice(&self.pend_vals);
+        (k, v)
+    }
+
+    /// Context length seen so far.
+    pub fn n_seen(&self) -> usize {
+        self.n_seen
+    }
+
+    /// Incremental re-clusterings performed (decode-time updates).
+    pub fn n_updates(&self) -> usize {
+        self.n_updates
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::full_attention;
+    use crate::util::rng::Rng;
+    use crate::util::stats::cosine;
+
+    fn small_cfg() -> ZoneConfig {
+        ZoneConfig {
+            steady_sink: 4,
+            steady_local: 16,
+            tokens_per_cluster: 8,
+            retrieval_frac: 0.1,
+            estimation_frac: 0.3,
+            build_segment: 128,
+            update_segment: 32,
+            kmeans_iters: 8,
+            centering: true,
+        }
+    }
+
+    fn mk_ctx(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(n * d), rng.normal_vec(n * d))
+    }
+
+    #[test]
+    fn build_partitions_all_tokens() {
+        let d = 16;
+        let (k, v) = mk_ctx(512, d, 1);
+        let idx = WaveIndex::build(small_cfg(), d, 1024, &k, &v, 7);
+        // every token is either sink, pending, or in exactly one cluster
+        let indexed = idx.meta().n_tokens();
+        assert_eq!(indexed + idx.steady_tokens(), 512);
+        assert_eq!(idx.n_seen(), 512);
+        // positions must form a partition of 0..512
+        let mut seen = vec![false; 512];
+        for c in 0..idx.meta().m() {
+            for &p in idx.meta().cluster_tokens(c) {
+                assert!(!seen[p as usize], "token {p} double-indexed");
+                seen[p as usize] = true;
+            }
+        }
+        for &p in idx.sink_pos.iter().chain(&idx.pend_pos) {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn full_budget_matches_full_attention() {
+        let d = 16;
+        let (k, v) = mk_ctx(256, d, 2);
+        let idx = WaveIndex::build(small_cfg(), d, 1024, &k, &v, 3);
+        let mut rng = Rng::new(9);
+        let q = rng.normal_vec(d);
+        let m = idx.meta().m();
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select_with(&q, m, 0, &mut scratch); // retrieve ALL clusters
+        let mut out = vec![0.0; d];
+        idx.attend(&q, &sel, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &k, &v, d, &mut full);
+        assert!(
+            cosine(&out, &full) > 0.999,
+            "full retrieval must equal full attention: {}",
+            cosine(&out, &full)
+        );
+    }
+
+    #[test]
+    fn sparse_budget_close_to_full_attention() {
+        // Clustered geometry: sparse retrieval + estimation tracks full.
+        let d = 16;
+        let n = 512;
+        let mut rng = Rng::new(4);
+        // keys in 8 bundles
+        let dirs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(d)).collect();
+        let mut k = Vec::new();
+        for i in 0..n {
+            let dir = &dirs[(i / 16) % 8];
+            for j in 0..d {
+                k.push(dir[j] * 2.0 + 0.3 * rng.normal_f32());
+            }
+        }
+        let v = rng.normal_vec(n * d);
+        let idx = WaveIndex::build(small_cfg(), d, 1024, &k, &v, 5);
+        let q: Vec<f32> = dirs[3].iter().map(|x| x * 1.5).collect();
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select(&q, &mut scratch);
+        assert!(!sel.retrieval.is_empty());
+        let mut out = vec![0.0; d];
+        idx.attend(&q, &sel, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &k, &v, d, &mut full);
+        assert!(
+            cosine(&out, &full) > 0.95,
+            "sparse wave attention cos = {}",
+            cosine(&out, &full)
+        );
+    }
+
+    #[test]
+    fn selection_budgets_respected() {
+        let d = 8;
+        let (k, v) = mk_ctx(400, d, 6);
+        let idx = WaveIndex::build(small_cfg(), d, 512, &k, &v, 8);
+        let q = vec![0.5; d];
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select_with(&q, 3, 5, &mut scratch);
+        assert_eq!(sel.retrieval.len(), 3);
+        assert_eq!(sel.estimation.len(), 5);
+        // disjoint
+        for c in &sel.retrieval {
+            assert!(!sel.estimation.contains(c));
+        }
+        // retrieval scores >= estimation scores
+        let score = |c: u32| dot(&q, idx.meta().centroid(c as usize));
+        let min_r = sel.retrieval.iter().map(|&c| score(c)).fold(f32::INFINITY, f32::min);
+        let max_e = sel.estimation.iter().map(|&c| score(c)).fold(f32::NEG_INFINITY, f32::max);
+        assert!(min_r >= max_e - 1e-5, "zones out of order: {min_r} < {max_e}");
+    }
+
+    #[test]
+    fn retrieval_ordered_best_first() {
+        let d = 8;
+        let (k, v) = mk_ctx(400, d, 10);
+        let idx = WaveIndex::build(small_cfg(), d, 512, &k, &v, 11);
+        let q = vec![0.3; d];
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select_with(&q, 6, 0, &mut scratch);
+        let scores: Vec<f32> =
+            sel.retrieval.iter().map(|&c| dot(&q, idx.meta().centroid(c as usize))).collect();
+        for w in scores.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+    }
+
+    #[test]
+    fn append_triggers_incremental_update() {
+        let d = 8;
+        let cfg = small_cfg();
+        let (k, v) = mk_ctx(64, d, 12);
+        let mut idx = WaveIndex::build(cfg.clone(), d, 512, &k, &v, 13);
+        let m0 = idx.meta().m();
+        let mut rng = Rng::new(14);
+        // push enough tokens to trip a re-clustering
+        for _ in 0..(cfg.steady_local + cfg.update_segment + 4) {
+            let key = rng.normal_vec(d);
+            let val = rng.normal_vec(d);
+            idx.append(&key, &val);
+        }
+        assert!(idx.n_updates() >= 1);
+        assert!(idx.meta().m() > m0);
+        // steady zone stays bounded
+        assert!(idx.steady_tokens() <= cfg.steady_sink + cfg.steady_local + cfg.update_segment);
+        // no token lost
+        assert_eq!(idx.meta().n_tokens() + idx.steady_tokens(), idx.n_seen());
+    }
+
+    #[test]
+    fn short_context_all_steady() {
+        let d = 8;
+        let (k, v) = mk_ctx(10, d, 15);
+        let idx = WaveIndex::build(small_cfg(), d, 512, &k, &v, 16);
+        assert_eq!(idx.meta().m(), 0);
+        assert_eq!(idx.steady_tokens(), 10);
+        // select on an empty index is a no-op
+        let q = vec![1.0; d];
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select(&q, &mut scratch);
+        assert!(sel.is_empty());
+        // attend still works (pure steady attention)
+        let mut out = vec![0.0; d];
+        idx.attend(&q, &sel, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &k, &v, d, &mut full);
+        assert!(cosine(&out, &full) > 0.999);
+    }
+
+    #[test]
+    fn exact_positions_cover_selection() {
+        let d = 8;
+        let (k, v) = mk_ctx(300, d, 17);
+        let idx = WaveIndex::build(small_cfg(), d, 512, &k, &v, 18);
+        let q = vec![0.2; d];
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select_with(&q, 2, 2, &mut scratch);
+        let pos = idx.exact_positions(&sel);
+        let n_cluster_tokens: usize =
+            sel.retrieval.iter().map(|&c| idx.meta().cluster_tokens(c as usize).len()).sum();
+        assert_eq!(pos.len(), idx.steady_tokens() + n_cluster_tokens);
+    }
+}

@@ -1,0 +1,36 @@
+//! KV substrate: CPU-resident block store for key/value vectors.
+//!
+//! The wave index operates on *clusters*; the wave buffer moves *blocks*
+//! (fixed-size physical units, paper §4.3). This module owns the physical
+//! layer: per-(layer, kv-head) block pools into which cluster tokens are
+//! packed contiguously. A cluster spans one or more blocks; blocks are not
+//! shared across clusters (the tail block of a cluster may be partially
+//! filled — the fragmentation the paper's copy kernels skip over).
+
+pub mod store;
+
+pub use store::{BlockRef, HeadStore, KvStore};
+
+/// Tokens that fit in one physical block of `block_bytes`, given the head
+/// dimension and element width (a block holds both K and V halves).
+pub fn tokens_per_block(block_bytes: usize, d_head: usize, elem_bytes: usize) -> usize {
+    (block_bytes / (2 * d_head * elem_bytes)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_per_block_paper_config() {
+        // Paper: 2 KB blocks, d_head 128, fp16 -> 4 tokens/block.
+        assert_eq!(tokens_per_block(2048, 128, 2), 4);
+        // Live path: d_head 32, f32 -> 8 tokens/block.
+        assert_eq!(tokens_per_block(2048, 32, 4), 8);
+    }
+
+    #[test]
+    fn tokens_per_block_never_zero() {
+        assert_eq!(tokens_per_block(16, 128, 4), 1);
+    }
+}

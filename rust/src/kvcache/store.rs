@@ -1,0 +1,219 @@
+//! Block store: the CPU-memory home of all KV vectors.
+
+use super::tokens_per_block;
+
+/// A reference to a span of tokens inside one physical block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockRef {
+    /// Physical block id within the owning [`HeadStore`].
+    pub block: u32,
+    /// Number of valid tokens in this block (≤ tokens_per_block).
+    pub len: u16,
+}
+
+/// Per-(layer, kv-head) pool of KV blocks.
+///
+/// Keys and values are stored block-granular: block `b` owns
+/// `keys[b*tpb*d .. (b+1)*tpb*d]` (same for `vals`). Token positions are
+/// tracked alongside for recall metrics and needle evaluation.
+pub struct HeadStore {
+    d: usize,
+    tpb: usize,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    /// Original context position of each token slot.
+    pos: Vec<u32>,
+    /// Valid token count per block.
+    lens: Vec<u16>,
+}
+
+impl HeadStore {
+    pub fn new(d: usize, block_bytes: usize) -> Self {
+        let tpb = tokens_per_block(block_bytes, d, 4);
+        HeadStore { d, tpb, keys: Vec::new(), vals: Vec::new(), pos: Vec::new(), lens: Vec::new() }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Tokens per block for this store.
+    pub fn tokens_per_block(&self) -> usize {
+        self.tpb
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.lens.iter().map(|&l| l as usize).sum()
+    }
+
+    /// Bytes of one full block (K + V halves), f32 elements.
+    pub fn block_bytes(&self) -> usize {
+        2 * self.tpb * self.d * 4
+    }
+
+    /// Append a cluster's tokens, packing them into fresh blocks.
+    /// `keys`/`vals` are `[n, d]` flat; `pos[i]` is token i's context
+    /// position. Returns the block refs the cluster occupies, in order.
+    pub fn alloc_cluster(&mut self, keys: &[f32], vals: &[f32], pos: &[u32]) -> Vec<BlockRef> {
+        let n = pos.len();
+        debug_assert_eq!(keys.len(), n * self.d);
+        debug_assert_eq!(vals.len(), n * self.d);
+        let mut refs = Vec::with_capacity(n.div_ceil(self.tpb));
+        let mut off = 0;
+        while off < n {
+            let take = (n - off).min(self.tpb);
+            let block = self.lens.len() as u32;
+            // Blocks are always allocated full-size; the tail stays zeroed
+            // (fragmentation skipped by the copy path via `len`).
+            self.keys.resize(self.keys.len() + self.tpb * self.d, 0.0);
+            self.vals.resize(self.vals.len() + self.tpb * self.d, 0.0);
+            self.pos.resize(self.pos.len() + self.tpb, u32::MAX);
+            let base = block as usize * self.tpb * self.d;
+            self.keys[base..base + take * self.d]
+                .copy_from_slice(&keys[off * self.d..(off + take) * self.d]);
+            self.vals[base..base + take * self.d]
+                .copy_from_slice(&vals[off * self.d..(off + take) * self.d]);
+            let pbase = block as usize * self.tpb;
+            self.pos[pbase..pbase + take].copy_from_slice(&pos[off..off + take]);
+            self.lens.push(take as u16);
+            refs.push(BlockRef { block, len: take as u16 });
+            off += take;
+        }
+        refs
+    }
+
+    /// Key vectors of a block: `[len, d]` flat.
+    pub fn block_keys(&self, r: BlockRef) -> &[f32] {
+        let base = r.block as usize * self.tpb * self.d;
+        &self.keys[base..base + r.len as usize * self.d]
+    }
+
+    /// Value vectors of a block: `[len, d]` flat.
+    pub fn block_vals(&self, r: BlockRef) -> &[f32] {
+        let base = r.block as usize * self.tpb * self.d;
+        &self.vals[base..base + r.len as usize * self.d]
+    }
+
+    /// Context positions of a block's tokens.
+    pub fn block_pos(&self, r: BlockRef) -> &[u32] {
+        let base = r.block as usize * self.tpb;
+        &self.pos[base..base + r.len as usize]
+    }
+
+    /// Valid length of block `b`.
+    pub fn block_len(&self, b: u32) -> u16 {
+        self.lens[b as usize]
+    }
+}
+
+/// All KV data of one sequence: `layers x kv_heads` head stores.
+pub struct KvStore {
+    n_layers: usize,
+    kv_heads: usize,
+    stores: Vec<HeadStore>,
+}
+
+impl KvStore {
+    pub fn new(n_layers: usize, kv_heads: usize, d: usize, block_bytes: usize) -> Self {
+        let stores = (0..n_layers * kv_heads).map(|_| HeadStore::new(d, block_bytes)).collect();
+        KvStore { n_layers, kv_heads, stores }
+    }
+
+    pub fn head(&self, layer: usize, kv_head: usize) -> &HeadStore {
+        &self.stores[layer * self.kv_heads + kv_head]
+    }
+
+    pub fn head_mut(&mut self, layer: usize, kv_head: usize) -> &mut HeadStore {
+        &mut self.stores[layer * self.kv_heads + kv_head]
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    /// Total CPU-resident bytes across all heads.
+    pub fn total_bytes(&self) -> usize {
+        self.stores.iter().map(|s| s.n_blocks() * s.block_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(n * d), rng.normal_vec(n * d), (0..n as u32).collect())
+    }
+
+    #[test]
+    fn alloc_roundtrip_single_block() {
+        let d = 32;
+        let mut hs = HeadStore::new(d, 2048); // 8 tokens/block
+        let (k, v, p) = mk(5, d, 1);
+        let refs = hs.alloc_cluster(&k, &v, &p);
+        assert_eq!(refs.len(), 1);
+        assert_eq!(refs[0].len, 5);
+        assert_eq!(hs.block_keys(refs[0]), &k[..]);
+        assert_eq!(hs.block_vals(refs[0]), &v[..]);
+        assert_eq!(hs.block_pos(refs[0]), &p[..]);
+    }
+
+    #[test]
+    fn alloc_spans_multiple_blocks() {
+        let d = 32;
+        let mut hs = HeadStore::new(d, 2048);
+        let (k, v, p) = mk(20, d, 2); // 8 + 8 + 4
+        let refs = hs.alloc_cluster(&k, &v, &p);
+        assert_eq!(refs.len(), 3);
+        assert_eq!(refs.iter().map(|r| r.len as usize).sum::<usize>(), 20);
+        assert_eq!(refs[2].len, 4);
+        // tokens preserved in order across blocks
+        let mut got = Vec::new();
+        for r in &refs {
+            got.extend_from_slice(hs.block_pos(*r));
+        }
+        assert_eq!(got, p);
+        assert_eq!(hs.n_tokens(), 20);
+        assert_eq!(hs.n_blocks(), 3);
+    }
+
+    #[test]
+    fn clusters_do_not_share_blocks() {
+        let d = 32;
+        let mut hs = HeadStore::new(d, 2048);
+        let (k, v, p) = mk(3, d, 3);
+        let r1 = hs.alloc_cluster(&k, &v, &p);
+        let r2 = hs.alloc_cluster(&k, &v, &p);
+        assert_ne!(r1[0].block, r2[0].block);
+        // partial tail block still advances the block counter
+        assert_eq!(hs.n_blocks(), 2);
+    }
+
+    #[test]
+    fn kvstore_shapes() {
+        let st = KvStore::new(4, 2, 32, 2048);
+        assert_eq!(st.n_layers(), 4);
+        assert_eq!(st.kv_heads(), 2);
+        assert_eq!(st.total_bytes(), 0);
+    }
+
+    #[test]
+    fn kvstore_head_indexing_independent() {
+        let mut st = KvStore::new(2, 2, 8, 512);
+        let (k, v, p) = mk(4, 8, 5);
+        st.head_mut(1, 0).alloc_cluster(&k, &v, &p);
+        assert_eq!(st.head(1, 0).n_tokens(), 4);
+        assert_eq!(st.head(0, 0).n_tokens(), 0);
+        assert_eq!(st.head(1, 1).n_tokens(), 0);
+    }
+}

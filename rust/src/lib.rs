@@ -1,0 +1,40 @@
+//! # RetroInfer
+//!
+//! A from-scratch reproduction of *"RetroInfer: A Vector Storage Engine for
+//! Scalable Long-Context LLM Inference"* (PVLDB'26) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **wave index** ([`index`]) — attention-aware clustered vector index:
+//!   tripartite attention approximation, accuracy-bound estimation,
+//!   segmented clustering, incremental updates.
+//! * **wave buffer** ([`buffer`], [`kvcache`]) — accuracy-agnostic GPU/CPU
+//!   buffer manager: cluster mapping table, block cache, execution-buffer
+//!   assembly, asynchronous cache update.
+//! * **coordinator** ([`coordinator`], [`engine`]) — request router,
+//!   continuous batcher, prefill/decode scheduler.
+//! * **runtime** ([`runtime`]) — loads the AOT-compiled HLO artifacts
+//!   produced by `python/compile/aot.py` and executes them on the PJRT CPU
+//!   client (the `xla` crate). Python never runs on the request path.
+//! * **memsim** ([`memsim`]) — analytic A100/PCIe hardware model replaying
+//!   real block traces for paper-scale throughput figures.
+//! * **baselines** ([`baselines`]) — Quest, MagicPIG, InfiniGen, PQCache,
+//!   StreamingLLM and full attention, re-implemented over the same
+//!   KV substrate.
+//!
+//! See DESIGN.md for the experiment index and substitutions, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod attention;
+pub mod baselines;
+pub mod buffer;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod index;
+pub mod kvcache;
+pub mod memsim;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,237 @@
+//! RetroInfer CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info                     show artifacts / model / zone configuration
+//!   serve                    live TinyLM serving through PJRT (wave or full)
+//!   sim                      paper-scale decode-throughput simulation
+//!   accuracy                 attention-fidelity comparison across systems
+//!
+//! Examples:
+//!   retroinfer serve --prompt-len 2048 --requests 4 --max-new 16
+//!   retroinfer sim --system retroinfer --ctx 131072 --batch 16
+//!   retroinfer accuracy --task s_niah --ctx 8192 --budget 0.018
+
+use retroinfer::baselines::{all_systems, SparseSystem};
+use retroinfer::config::{HardwareSpec, ModelSpec};
+use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
+use retroinfer::engine::{AttnMode, LiveEngine};
+use retroinfer::memsim::{self, profiles};
+use retroinfer::runtime::default_artifacts_dir;
+use retroinfer::util::bench::Table;
+use retroinfer::util::cli::Args;
+use retroinfer::util::rng::Rng;
+use retroinfer::util::stats::cosine;
+use retroinfer::workload::tasks::{self, TaskKind};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        _ => {
+            eprintln!("usage: retroinfer <info|serve|sim|accuracy> [--flags]");
+            eprintln!("see `cargo run -- info` or the module docs for details");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_info(_args: &Args) -> i32 {
+    let dir = default_artifacts_dir();
+    match retroinfer::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {dir}");
+            println!(
+                "model: {} (layers={} d_model={} q_heads={} kv_heads={} d_head={})",
+                m.model.name, m.model.n_layers, m.model.d_model, m.model.q_heads,
+                m.model.kv_heads, m.model.d_head
+            );
+            println!(
+                "buckets: batch={:?} prefill_t={:?} wave_ne={} wave_m={}",
+                m.buckets.batch, m.buckets.prefill_t, m.buckets.wave_ne, m.buckets.wave_m
+            );
+            println!("executables: {}", m.executables.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#} (run `make artifacts` first)");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = default_artifacts_dir();
+    let prompt_len = args.usize_or("prompt-len", 2048);
+    let n_requests = args.usize_or("requests", 2);
+    let max_new = args.usize_or("max-new", 16);
+    let mode = if args.str_or("mode", "wave") == "full" { AttnMode::Full } else { AttnMode::Wave };
+    let seed = args.u64_or("seed", 7);
+
+    println!("# live serve: mode={mode:?} prompt_len={prompt_len} requests={n_requests} max_new={max_new}");
+    let mut eng = match LiveEngine::new(&dir, mode) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed: {e:#}");
+            return 1;
+        }
+    };
+    let mut sched = Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8));
+    let mut rng = Rng::new(seed);
+    for id in 0..n_requests as u64 {
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(256) as i32).collect();
+        sched.submit(Request::new(id, prompt, max_new), 0.0);
+    }
+
+    let t0 = Instant::now();
+    while !sched.all_done() {
+        match sched.next_action() {
+            Action::Prefill(id) => {
+                let prompt = sched.session(id).unwrap().req.prompt.clone();
+                match eng.prefill(id, &prompt) {
+                    Ok(tok) => sched.prefill_done(id, tok, t0.elapsed().as_secs_f64()),
+                    Err(e) => {
+                        eprintln!("prefill {id} failed: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            Action::DecodeBatch(ids, bucket) => match eng.decode_step(&ids, bucket) {
+                Ok(toks) => {
+                    let now = t0.elapsed().as_secs_f64();
+                    for (id, t) in ids.iter().zip(toks) {
+                        sched.token_decoded(*id, t, now);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("decode failed: {e:#}");
+                    return 1;
+                }
+            },
+            Action::Idle => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let toks = eng.metrics.counter("decoded_tokens");
+    println!("completed {n_requests} requests in {wall:.2}s");
+    println!("decode throughput: {:.1} tok/s", toks as f64 / wall.max(1e-9));
+    println!("{}", eng.metrics.summary("decode_step_s"));
+    println!("{}", eng.metrics.summary("prefill_s"));
+    if mode == AttnMode::Wave {
+        println!("wave-buffer hit ratio: {:.3}", eng.buffer_hit_ratio());
+        println!("pcie bytes: {}", eng.metrics.counter("pcie_bytes"));
+    }
+    for s in sched.sessions() {
+        println!(
+            "  req {}: {} tokens, first {:?}...",
+            s.req.id,
+            s.generated.len(),
+            &s.generated[..s.generated.len().min(8)]
+        );
+    }
+    0
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    let model = ModelSpec::by_name(args.str_or("model", "llama3-8b")).expect("unknown model");
+    let hw = HardwareSpec::by_name(args.str_or("hw", "a100")).expect("unknown hw");
+    let ctx = args.usize_or("ctx", 128 * 1024);
+    let batch = args.usize_or("batch", 0);
+    let hit = args.f64_or("hit-ratio", 0.85);
+    let system = args.str_or("system", "all").to_string();
+
+    let profs: Vec<_> = match system.as_str() {
+        "all" => profiles::headline(),
+        "retroinfer" => vec![profiles::retroinfer(hit)],
+        "full" => vec![profiles::full()],
+        "quest" => vec![profiles::quest()],
+        "magicpig" => vec![profiles::magicpig()],
+        "infinigen" => vec![profiles::infinigen()],
+        "pqcache" => vec![profiles::pqcache()],
+        other => {
+            eprintln!("unknown system {other}");
+            return 2;
+        }
+    };
+
+    println!("# sim: model={} hw={} ctx={ctx}", model.name, hw.name);
+    let mut table = Table::new(&["system", "max_batch", "batch", "tok/s", "note"]);
+    for p in profs {
+        let mb = memsim::max_batch(&model, &hw, &p, ctx);
+        let b = if batch == 0 { mb.min(64) } else { batch.min(mb) };
+        let (tput, note) = if mb == 0 {
+            (0.0, "OOM".to_string())
+        } else {
+            match memsim::decode_throughput(&model, &hw, &p, ctx, b) {
+                Ok(t) => (t, String::new()),
+                Err(e) => (0.0, format!("{e:?}")),
+            }
+        };
+        table.row(vec![
+            p.name.to_string(),
+            mb.to_string(),
+            b.to_string(),
+            format!("{tput:.1}"),
+            note,
+        ]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_accuracy(args: &Args) -> i32 {
+    let ctx = args.usize_or("ctx", 8192);
+    let d = args.usize_or("d", 32);
+    let budget_frac = args.f64_or("budget", 0.018);
+    let n_queries = args.usize_or("queries", 8);
+    let seed = args.u64_or("seed", 3);
+    let kind = match args.str_or("task", "s_niah") {
+        "s_niah" => TaskKind::SingleNeedle,
+        "mv_niah" => TaskKind::MultiNeedle,
+        "qa_1" => TaskKind::Qa,
+        "fwe" => TaskKind::Aggregate,
+        other => {
+            eprintln!("unknown task {other}");
+            return 2;
+        }
+    };
+
+    let task = tasks::generate(kind, ctx, d, n_queries, seed);
+    let wl = &task.workload;
+    let budget = ((ctx as f64) * budget_frac) as usize + 68;
+    println!("# accuracy: task={} ctx={ctx} budget={budget} tokens", kind.name());
+
+    let mut full_outs: Vec<Vec<f32>> = Vec::new();
+    {
+        let mut full = retroinfer::baselines::FullAttention::new(&wl.keys, &wl.vals, d);
+        for q in &wl.queries {
+            let mut out = vec![0.0; d];
+            full.decode(q, ctx, &mut out);
+            full_outs.push(out);
+        }
+    }
+
+    let mut table = Table::new(&["system", "needle_acc", "output_cos"]);
+    for sys in all_systems(&wl.keys, &wl.vals, d, seed).iter_mut() {
+        let mut exact = Vec::new();
+        let mut cos_sum = 0.0;
+        for (qi, q) in wl.queries.iter().enumerate() {
+            let mut out = vec![0.0; d];
+            let st = sys.decode(q, budget, &mut out);
+            exact.push(st.exact_positions);
+            cos_sum += cosine(&out, &full_outs[qi]);
+        }
+        let acc = tasks::needle_accuracy(&exact, &wl.needles);
+        table.row(vec![
+            sys.name().to_string(),
+            format!("{:.3}", acc),
+            format!("{:.4}", cos_sum / wl.queries.len() as f64),
+        ]);
+    }
+    table.print();
+    0
+}

@@ -1,0 +1,113 @@
+//! Serving metrics: named counters and latency histograms with percentile
+//! summaries, shared across coordinator / engine / benches.
+
+use crate::util::stats::Sample;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, u64>>,
+    samples: Mutex<HashMap<String, Sample>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Record one observation (e.g. a latency in seconds).
+    pub fn observe(&self, name: &str, v: f64) {
+        self.samples.lock().unwrap().entry(name.to_string()).or_default().add(v);
+    }
+
+    pub fn percentile(&self, name: &str, p: f64) -> f64 {
+        self.samples
+            .lock()
+            .unwrap()
+            .get_mut(name)
+            .map(|s| s.percentile(p))
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.samples.lock().unwrap().get(name).map(|s| s.mean()).unwrap_or(f64::NAN)
+    }
+
+    pub fn count(&self, name: &str) -> usize {
+        self.samples.lock().unwrap().get(name).map(|s| s.len()).unwrap_or(0)
+    }
+
+    /// One-line human summary of a latency series.
+    pub fn summary(&self, name: &str) -> String {
+        let mut g = self.samples.lock().unwrap();
+        match g.get_mut(name) {
+            Some(s) if !s.is_empty() => format!(
+                "{name}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms",
+                s.len(),
+                s.mean() * 1e3,
+                s.percentile(50.0) * 1e3,
+                s.percentile(99.0) * 1e3,
+            ),
+            _ => format!("{name}: (no samples)"),
+        }
+    }
+
+    /// Snapshot of all counters, sorted by name.
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.counters.lock().unwrap().iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.inc("req", 1);
+        m.inc("req", 2);
+        assert_eq!(m.counter("req"), 3);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn percentiles_from_observations() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("lat", i as f64);
+        }
+        assert_eq!(m.count("lat"), 100);
+        assert!((m.percentile("lat", 50.0) - 50.0).abs() <= 1.0);
+        assert!(m.percentile("lat", 99.0) >= 98.0);
+        assert!((m.mean("lat") - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_handles_missing_series() {
+        let m = Metrics::new();
+        assert!(m.summary("nope").contains("no samples"));
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let m = Metrics::new();
+        m.inc("b", 1);
+        m.inc("a", 1);
+        let snap = m.counters_snapshot();
+        assert_eq!(snap[0].0, "a");
+    }
+}

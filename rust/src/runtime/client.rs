@@ -1,0 +1,176 @@
+//! PJRT runtime: loads HLO-text artifacts and executes them on the CPU
+//! PJRT client (the `xla` crate). Executables compile lazily on first use
+//! and are cached for the life of the runtime — Python is never involved.
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// The PJRT execution context for one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: String,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir: dir.to_string(), manifest, exes: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an executable by manifest name.
+    pub fn ensure(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let sig = self.manifest.exe(name)?.clone();
+        let path = format!("{}/{}", self.dir, sig.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with ordered input literals; returns the output
+    /// tuple's elements (aot.py lowers with return_tuple=True). Accepts
+    /// owned or borrowed literals — the hot path passes cached weight
+    /// literals by reference (zero copies per step).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure(name)?;
+        let sig = self.manifest.exe(name)?;
+        if sig.params.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} params, got {}",
+                sig.params.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.exes.get(name).unwrap();
+        let bufs = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{name}: untupling: {e:?}"))
+    }
+
+    /// Execute `name` with device-resident buffers.
+    ///
+    /// CAUTION: `BufferFromHostLiteral` is asynchronous and this crate
+    /// does not expose the transfer's ready-future — the source literal
+    /// of every input buffer must outlive the execution. Prefer `run`
+    /// unless you manage literal lifetimes explicitly.
+    pub fn run_b(&mut self, name: &str, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        self.ensure(name)?;
+        let sig = self.manifest.exe(name)?;
+        if sig.params.len() != inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} params, got {}",
+                sig.params.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.exes.get(name).unwrap();
+        let bufs = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetching result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{name}: untupling: {e:?}"))
+    }
+
+    /// Upload a host literal to a device-resident buffer. See the caveat
+    /// on [`Runtime::run_b`]: `lit` must stay alive until the transfer
+    /// completes (in practice: until an execution consuming the buffer
+    /// has synchronized).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("host->device: {e:?}"))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled(&self) -> usize {
+        self.exes.len()
+    }
+}
+
+/// Host tensor -> f32 literal with the given logical shape.
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape()))
+}
+
+/// Flat f32 slice -> literal with explicit shape.
+pub fn lit_f32_shaped(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// i32 slice -> 1-D literal.
+pub fn lit_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> (shape, f32 data).
+pub fn lit_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn smoke_executable_runs() {
+        let mut rt = Runtime::load(&artifacts_dir()).unwrap();
+        let x = lit_f32_shaped(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let y = lit_f32_shaped(&[1.0; 4], &[2, 2]).unwrap();
+        let out = rt.run("smoke", &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        let t = lit_to_tensor(&out[0]).unwrap();
+        assert_eq!(t.data(), &[5.0, 5.0, 9.0, 9.0]);
+        assert_eq!(rt.compiled(), 1);
+        // cached second run
+        let x = lit_f32_shaped(&[0.0; 4], &[2, 2]).unwrap();
+        let y = lit_f32_shaped(&[0.0; 4], &[2, 2]).unwrap();
+        rt.run("smoke", &[x, y]).unwrap();
+        assert_eq!(rt.compiled(), 1);
+    }
+
+    #[test]
+    fn param_count_checked() {
+        let mut rt = Runtime::load(&artifacts_dir()).unwrap();
+        let x = lit_f32_shaped(&[0.0; 4], &[2, 2]).unwrap();
+        assert!(rt.run("smoke", &[x]).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Manifest parsing: `artifacts/manifest.json` describes the model config,
+//! shape buckets, zone defaults, weight layout and executable signatures
+//! produced by `python/compile/aot.py`.
+
+use crate::util::json::parse;
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub d_head: usize,
+    pub ffn: usize,
+    pub weights_file: String,
+}
+
+impl ModelCfg {
+    pub fn group(&self) -> usize {
+        self.q_heads / self.kv_heads
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Buckets {
+    pub batch: Vec<usize>,
+    pub prefill_t: Vec<usize>,
+    pub attn_full_t: usize,
+    pub wave_ne: usize,
+    pub wave_m: usize,
+    pub prefill_chunk: usize,
+}
+
+impl Buckets {
+    /// Smallest batch bucket >= `b`.
+    pub fn batch_bucket(&self, b: usize) -> Option<usize> {
+        self.batch.iter().copied().find(|&x| x >= b)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSig {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExeSig {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<ParamSig>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub elements: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelCfg,
+    pub buckets: Buckets,
+    pub weights: Vec<WeightSpec>,
+    pub executables: Vec<ExeSig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+        let j = parse(&text).map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+
+        let m = j.field("model");
+        let model = ModelCfg {
+            name: m.str_field("name").to_string(),
+            vocab: m.usize_field("vocab"),
+            d_model: m.usize_field("d_model"),
+            n_layers: m.usize_field("n_layers"),
+            q_heads: m.usize_field("q_heads"),
+            kv_heads: m.usize_field("kv_heads"),
+            d_head: m.usize_field("d_head"),
+            ffn: m.usize_field("ffn"),
+            weights_file: m.str_field("weights_file").to_string(),
+        };
+
+        let b = j.field("buckets");
+        let buckets = Buckets {
+            batch: b.field("batch").usize_vec(),
+            prefill_t: b.field("prefill_t").usize_vec(),
+            attn_full_t: b.usize_field("attn_full_t"),
+            wave_ne: b.usize_field("wave_ne"),
+            wave_m: b.usize_field("wave_m"),
+            prefill_chunk: b.usize_field("prefill_chunk"),
+        };
+
+        let weights = j
+            .arr_field("weights")
+            .iter()
+            .map(|w| WeightSpec {
+                name: w.str_field("name").to_string(),
+                shape: w.field("shape").usize_vec(),
+                offset: w.usize_field("offset"),
+                elements: w.usize_field("elements"),
+            })
+            .collect();
+
+        let executables = j
+            .arr_field("executables")
+            .iter()
+            .map(|e| ExeSig {
+                name: e.str_field("name").to_string(),
+                file: e.str_field("file").to_string(),
+                params: e
+                    .arr_field("params")
+                    .iter()
+                    .map(|p| ParamSig {
+                        name: p.str_field("name").to_string(),
+                        dtype: p.str_field("dtype").to_string(),
+                        shape: p.field("shape").usize_vec(),
+                    })
+                    .collect(),
+                outputs: e
+                    .arr_field("outputs")
+                    .iter()
+                    .map(|o| o.as_str().unwrap_or_default().to_string())
+                    .collect(),
+            })
+            .collect();
+
+        Ok(Manifest { model, buckets, weights, executables })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSig> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("executable {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.model.name, "tinylm");
+        assert_eq!(m.model.n_layers, 4);
+        assert_eq!(m.model.group(), 4);
+        assert!(m.buckets.batch.contains(&8));
+        assert!(!m.weights.is_empty());
+        assert!(m.exe("smoke").is_ok());
+        assert!(m.exe("nope").is_err());
+    }
+
+    #[test]
+    fn weight_layout_is_contiguous() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let mut off = 0;
+        for w in &m.weights {
+            assert_eq!(w.offset, off, "{} offset", w.name);
+            assert_eq!(w.elements, w.shape.iter().product::<usize>());
+            off += w.elements * 4;
+        }
+    }
+
+    #[test]
+    fn batch_bucketing() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.buckets.batch_bucket(1), Some(1));
+        assert_eq!(m.buckets.batch_bucket(3), Some(4));
+        assert_eq!(m.buckets.batch_bucket(99), None);
+    }
+}

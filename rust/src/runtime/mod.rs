@@ -1,0 +1,21 @@
+//! Runtime layer: PJRT client wrapper, manifest/weights loading, and the
+//! TinyLM live engine that executes the AOT-compiled HLO artifacts from
+//! the L3 hot path. Python never runs here — `make artifacts` is the only
+//! Python step, at build time.
+
+pub mod client;
+pub mod manifest;
+pub mod tinylm;
+pub mod weights;
+
+pub use client::{lit_f32, lit_f32_shaped, lit_i32, lit_i32_scalar, lit_to_tensor, Runtime};
+pub use manifest::{Buckets, ExeSig, Manifest, ModelCfg};
+pub use tinylm::TinyLm;
+pub use weights::Weights;
+
+/// Default artifacts directory (relative to the workspace root).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("RI_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}

@@ -1,0 +1,280 @@
+//! TinyLM live engine: executes the factored per-layer entry points
+//! (embed -> qkv -> attention -> mlp -> logits) plus bucketed prefill,
+//! all through PJRT. The wave index runs in Rust *between* qkv and
+//! attention — exactly the paper's Figure 5 interplay.
+
+use super::client::{lit_f32, lit_f32_shaped, lit_i32, lit_to_tensor, Runtime};
+use super::manifest::{Buckets, ModelCfg};
+use super::weights::Weights;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Inputs to one wave-attention call (already assembled, padded to the
+/// manifest's Ne/M capacities).
+pub struct WaveInputs {
+    /// [B, KVH, Ne, d] exact keys / values (steady + execution buffer).
+    pub kx: Vec<f32>,
+    pub vx: Vec<f32>,
+    /// [B, KVH, Ne] validity mask.
+    pub kmask: Vec<f32>,
+    /// [B, KVH, M, d] centroids / value sums.
+    pub cent: Vec<f32>,
+    pub vsum: Vec<f32>,
+    /// [B, KVH, M] cluster sizes / estimation-zone mask.
+    pub csize: Vec<f32>,
+    pub emask: Vec<f32>,
+}
+
+impl WaveInputs {
+    pub fn zeros(b: usize, kvh: usize, ne: usize, m: usize, d: usize) -> Self {
+        WaveInputs {
+            kx: vec![0.0; b * kvh * ne * d],
+            vx: vec![0.0; b * kvh * ne * d],
+            kmask: vec![0.0; b * kvh * ne],
+            cent: vec![0.0; b * kvh * m * d],
+            vsum: vec![0.0; b * kvh * m * d],
+            csize: vec![0.0; b * kvh * m],
+            emask: vec![0.0; b * kvh * m],
+        }
+    }
+}
+
+/// The live TinyLM model: cached weight literals (whole-stack for prefill
+/// + PER-LAYER slices for the decode hot path — the executables take
+/// single-layer weights so the per-call host->device parameter copy is 4x
+/// smaller, see EXPERIMENTS.md §Perf) + PJRT executables.
+pub struct TinyLm {
+    rt: Runtime,
+    wlit: HashMap<String, xla::Literal>,
+    pub cfg: ModelCfg,
+    pub buckets: Buckets,
+}
+
+impl TinyLm {
+    pub fn load(dir: &str) -> Result<TinyLm> {
+        let rt = Runtime::load(dir)?;
+        let cfg = rt.manifest.model.clone();
+        let buckets = rt.manifest.buckets.clone();
+        let weights = Weights::load(dir, &rt.manifest)?;
+        let mut wlit = HashMap::new();
+        for spec in &rt.manifest.weights {
+            let t = weights.get(&spec.name)?;
+            wlit.insert(spec.name.clone(), lit_f32(t)?);
+            // per-layer slices of the stacked layer weights
+            if spec.shape.len() >= 2 && spec.shape[0] == cfg.n_layers {
+                let trailing = &spec.shape[1..];
+                for layer in 0..cfg.n_layers {
+                    let row = t.row(&[layer]);
+                    wlit.insert(
+                        format!("{}.{layer}", spec.name),
+                        crate::runtime::client::lit_f32_shaped(row, trailing)?,
+                    );
+                }
+            }
+        }
+        Ok(TinyLm { rt, wlit, cfg, buckets })
+    }
+
+    /// Cached weight literal by name. Free function over the map so
+    /// `self.rt` can be borrowed mutably in the same expression.
+    fn wl<'a>(
+        wlit: &'a HashMap<String, xla::Literal>,
+        name: &str,
+    ) -> Result<&'a xla::Literal> {
+        wlit.get(name).ok_or_else(|| anyhow!("weight literal {name}"))
+    }
+
+    /// Whole-prompt prefill (batch 1). `tokens.len()` must be one of the
+    /// prefill buckets. Returns (k_cache, v_cache) as `[L, 1, KVH, T, d]`
+    /// tensors plus last-token logits `[1, V]`.
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        let t = tokens.len();
+        if !self.buckets.prefill_t.contains(&t) {
+            return Err(anyhow!("prefill length {t} not in buckets {:?}", self.buckets.prefill_t));
+        }
+        let name = format!("prefill_b1_t{t}");
+        let sig = self.rt.manifest.exe(&name)?.clone();
+        let toks = lit_i32(tokens).reshape(&[1, t as i64]).map_err(|e| anyhow!("{e:?}"))?;
+        let (rt, wlit) = (&mut self.rt, &self.wlit);
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(sig.params.len());
+        for p in &sig.params[..sig.params.len() - 1] {
+            inputs.push(Self::wl(wlit, &p.name)?);
+        }
+        inputs.push(&toks);
+        let out = rt.run(&name, &inputs)?;
+        Ok((lit_to_tensor(&out[0])?, lit_to_tensor(&out[1])?, lit_to_tensor(&out[2])?))
+    }
+
+    /// tokens [b] -> hidden [b, D]. `b` must be a batch bucket.
+    pub fn embed(&mut self, tokens: &[i32]) -> Result<Tensor> {
+        let b = tokens.len();
+        let toks = lit_i32(tokens);
+        let (rt, wlit) = (&mut self.rt, &self.wlit);
+        let out = rt.run(&format!("embed_b{b}"), &[Self::wl(wlit, "tok_emb")?, &toks])?;
+        lit_to_tensor(&out[0])
+    }
+
+    /// hidden [b,D], pos [b] -> (q [b,KVH,G,d], k [b,KVH,d], v [b,KVH,d]).
+    pub fn qkv(&mut self, layer: usize, hidden: &Tensor, pos: &[i32]) -> Result<(Tensor, Tensor, Tensor)> {
+        let b = hidden.shape()[0];
+        let h = lit_f32(hidden)?;
+        let p = lit_i32(pos);
+        let (rt, wlit) = (&mut self.rt, &self.wlit);
+        let out = rt.run(
+            &format!("qkv_b{b}"),
+            &[
+                Self::wl(wlit, &format!("ln1.{layer}"))?,
+                Self::wl(wlit, &format!("wq.{layer}"))?,
+                Self::wl(wlit, &format!("wk.{layer}"))?,
+                Self::wl(wlit, &format!("wv.{layer}"))?,
+                &h,
+                &p,
+            ],
+        )?;
+        Ok((lit_to_tensor(&out[0])?, lit_to_tensor(&out[1])?, lit_to_tensor(&out[2])?))
+    }
+
+    /// Full attention over a padded cache `[b, KVH, T, d]` with per-seq
+    /// valid `lengths`. Returns ctx `[b, q_dim]`.
+    pub fn attn_full(
+        &mut self,
+        q: &Tensor,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        lengths: &[i32],
+    ) -> Result<Tensor> {
+        let b = q.shape()[0];
+        let (kvh, t, d) = (self.cfg.kv_heads, self.buckets.attn_full_t, self.cfg.d_head);
+        let out = self.rt.run(
+            &format!("attn_full_b{b}_t{t}"),
+            &[
+                lit_f32(q)?,
+                lit_f32_shaped(k_cache, &[b, kvh, t, d])?,
+                lit_f32_shaped(v_cache, &[b, kvh, t, d])?,
+                lit_i32(lengths),
+            ],
+        )?;
+        lit_to_tensor(&out[0])
+    }
+
+    /// Tripartite wave attention through the L1 Pallas kernel's HLO.
+    pub fn attn_wave(&mut self, q: &Tensor, wi: &WaveInputs) -> Result<Tensor> {
+        let b = q.shape()[0];
+        let (kvh, d) = (self.cfg.kv_heads, self.cfg.d_head);
+        let (ne, m) = (self.buckets.wave_ne, self.buckets.wave_m);
+        let out = self.rt.run(
+            &format!("attn_wave_b{b}"),
+            &[
+                lit_f32(q)?,
+                lit_f32_shaped(&wi.kx, &[b, kvh, ne, d])?,
+                lit_f32_shaped(&wi.vx, &[b, kvh, ne, d])?,
+                lit_f32_shaped(&wi.kmask, &[b, kvh, ne])?,
+                lit_f32_shaped(&wi.cent, &[b, kvh, m, d])?,
+                lit_f32_shaped(&wi.vsum, &[b, kvh, m, d])?,
+                lit_f32_shaped(&wi.csize, &[b, kvh, m])?,
+                lit_f32_shaped(&wi.emask, &[b, kvh, m])?,
+            ],
+        )?;
+        lit_to_tensor(&out[0])
+    }
+
+    /// Residual + output projection + FFN.
+    pub fn mlp(&mut self, layer: usize, hidden: &Tensor, ctx: &Tensor) -> Result<Tensor> {
+        let b = hidden.shape()[0];
+        let h = lit_f32(hidden)?;
+        let c = lit_f32(ctx)?;
+        let (rt, wlit) = (&mut self.rt, &self.wlit);
+        let out = rt.run(
+            &format!("mlp_b{b}"),
+            &[
+                Self::wl(wlit, &format!("wo.{layer}"))?,
+                Self::wl(wlit, &format!("ln2.{layer}"))?,
+                Self::wl(wlit, &format!("w1.{layer}"))?,
+                Self::wl(wlit, &format!("w2.{layer}"))?,
+                &h,
+                &c,
+            ],
+        )?;
+        lit_to_tensor(&out[0])
+    }
+
+    /// hidden [b,D] -> logits [b,V].
+    pub fn logits(&mut self, hidden: &Tensor) -> Result<Tensor> {
+        let b = hidden.shape()[0];
+        let h = lit_f32(hidden)?;
+        let (rt, wlit) = (&mut self.rt, &self.wlit);
+        let out = rt.run(
+            &format!("logits_b{b}"),
+            &[Self::wl(wlit, "lnf")?, Self::wl(wlit, "unemb")?, &h],
+        )?;
+        lit_to_tensor(&out[0])
+    }
+
+    /// Greedy argmax per row of a logits tensor.
+    pub fn greedy(logits: &Tensor) -> Vec<i32> {
+        let (b, v) = (logits.shape()[0], logits.shape()[1]);
+        (0..b)
+            .map(|i| {
+                let row = &logits.data()[i * v..(i + 1) * v];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    #[test]
+    fn embed_qkv_mlp_logits_roundtrip() {
+        let mut lm = TinyLm::load(&default_artifacts_dir()).unwrap();
+        let hidden = lm.embed(&[5]).unwrap();
+        assert_eq!(hidden.shape(), &[1, 256]);
+        let (q, k, v) = lm.qkv(0, &hidden, &[0]).unwrap();
+        assert_eq!(q.shape(), &[1, 2, 4, 32]);
+        assert_eq!(k.shape(), &[1, 2, 32]);
+        assert_eq!(v.shape(), &[1, 2, 32]);
+        let ctx = Tensor::zeros(&[1, 256]);
+        let h2 = lm.mlp(0, &hidden, &ctx).unwrap();
+        assert_eq!(h2.shape(), &[1, 256]);
+        let lg = lm.logits(&h2).unwrap();
+        assert_eq!(lg.shape(), &[1, 256]);
+        assert!(lg.data().iter().all(|x| x.is_finite()));
+        let g = TinyLm::greedy(&lg);
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn wave_attention_with_single_exact_token_returns_its_value() {
+        let mut lm = TinyLm::load(&default_artifacts_dir()).unwrap();
+        let (kvh, d) = (lm.cfg.kv_heads, lm.cfg.d_head);
+        let (ne, m) = (lm.buckets.wave_ne, lm.buckets.wave_m);
+        let mut wi = WaveInputs::zeros(1, kvh, ne, m, d);
+        // one valid exact token per head with value = 7.0
+        for h in 0..kvh {
+            wi.kmask[h * ne] = 1.0;
+            for j in 0..d {
+                wi.vx[(h * ne) * d + j] = 7.0;
+            }
+        }
+        let q = Tensor::zeros(&[1, kvh, lm.cfg.group(), d]);
+        let ctx = lm.attn_wave(&q, &wi).unwrap();
+        assert_eq!(ctx.shape(), &[1, 256]);
+        for x in ctx.data() {
+            assert!((x - 7.0).abs() < 1e-5, "softmax over 1 token = its value, got {x}");
+        }
+    }
+
+    #[test]
+    fn greedy_argmax() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, 1.0, 2.0]);
+        assert_eq!(TinyLm::greedy(&t), vec![1, 0]);
+    }
+}

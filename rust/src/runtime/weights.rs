@@ -1,0 +1,63 @@
+//! TinyLM weight loading: `weights.bin` is flat f32 in manifest order.
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Named weight tensors.
+pub struct Weights {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(dir: &str, manifest: &Manifest) -> Result<Weights> {
+        let path = format!("{dir}/{}", manifest.model.weights_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
+        let mut tensors = HashMap::new();
+        for w in &manifest.weights {
+            let start = w.offset;
+            let end = start + w.elements * 4;
+            if end > bytes.len() {
+                return Err(anyhow!("{}: weight {} out of range", path, w.name));
+            }
+            let data: Vec<f32> = bytes[start..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(w.name.clone(), Tensor::from_vec(&w.shape, data));
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("weight {name} missing"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn loads_all_weights_with_shapes() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let w = Weights::load(&artifacts_dir(), &m).unwrap();
+        for spec in &m.weights {
+            let t = w.get(&spec.name).unwrap();
+            assert_eq!(t.shape(), &spec.shape[..], "{}", spec.name);
+            assert!(t.data().iter().all(|x| x.is_finite()), "{} finite", spec.name);
+        }
+        // norms initialize to 1
+        assert!(w.get("lnf").unwrap().data().iter().all(|&x| x == 1.0));
+        assert!(w.get("zzz").is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal dense f32 tensor used across the engine (host-side staging for
+//! PJRT literals, pure-Rust attention, index math). Row-major.
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < dim, "index {x} out of bound {dim} at axis {i}");
+            off = off * dim + x;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Contiguous row slice: all trailing-axis elements at a leading index.
+    /// e.g. for shape [A, B, D], `row(&[a, b])` is the D-vector at (a, b).
+    pub fn row(&self, lead: &[usize]) -> &[f32] {
+        let trailing: usize = self.shape[lead.len()..].iter().product();
+        let mut off = 0;
+        for (&x, &dim) in lead.iter().zip(&self.shape) {
+            off = off * dim + x;
+        }
+        &self.data[off * trailing..(off + 1) * trailing]
+    }
+
+    pub fn row_mut(&mut self, lead: &[usize]) -> &mut [f32] {
+        let trailing: usize = self.shape[lead.len()..].iter().product();
+        let mut off = 0;
+        for (&x, &dim) in lead.iter().zip(&self.shape) {
+            off = off * dim + x;
+        }
+        &mut self.data[off * trailing..(off + 1) * trailing]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+}
+
+/// Dot product (unrolled by 4; the index hot path uses `dot` heavily).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    for v in a {
+        *v *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 7.0);
+        assert_eq!(t.at(&[1, 2, 3]), 7.0);
+        assert_eq!(t.offset(&[1, 2, 3]), 1 * 12 + 2 * 4 + 3);
+    }
+
+    #[test]
+    fn row_slice() {
+        let data: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let t = Tensor::from_vec(&[2, 3, 4], data);
+        assert_eq!(t.row(&[1, 2]), &[20.0, 21.0, 22.0, 23.0]);
+        assert_eq!(t.row(&[0]), (0..12).map(|x| x as f32).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn row_mut_writes() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.row_mut(&[1]).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(t.at(&[1, 0]), 5.0);
+        assert_eq!(t.at(&[1, 1]), 6.0);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|x| x as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|x| (13 - x) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch() {
+        Tensor::from_vec(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|x| x as f32).collect());
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.at(&[2, 1]), 5.0);
+    }
+}

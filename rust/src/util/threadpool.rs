@@ -1,0 +1,180 @@
+//! Thread-pool substrate (no `tokio`/`rayon` available offline).
+//!
+//! A fixed pool of workers consuming boxed jobs from a shared queue.
+//! Used by the wave buffer for asynchronous cache updates (paper §4.3:
+//! "cache updates are decoupled from cache access ... performed
+//! asynchronously by the CPU, in parallel with the data copy and
+//! attention computation") and by experiment harnesses for parallel
+//! trials.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    /// jobs submitted but not yet finished
+    in_flight: AtomicUsize,
+    done: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Fixed-size worker pool with a `wait_idle` barrier.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n_threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            in_flight: AtomicUsize::new(0),
+            done: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..n_threads.max(1))
+            .map(|_| {
+                let s = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(s))
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Enqueue a job for asynchronous execution.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(f));
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.queue.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.done.wait(guard).unwrap();
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn n_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a closure over every index in `0..n` across the pool, blocking
+    /// until all are done (scoped-parallel map for experiment harnesses).
+    pub fn scoped_for_each<F: Fn(usize) + Send + Sync + 'static>(&self, n: usize, f: Arc<F>) {
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            self.submit(move || f(i));
+        }
+        self.wait_idle();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if *shared.shutdown.lock().unwrap() {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => {
+                j();
+                if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    // last job: wake any wait_idle callers
+                    let _guard = shared.queue.lock().unwrap();
+                    shared.done.notify_all();
+                }
+            }
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not deadlock
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn scoped_for_each_covers_indices() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![false; 64]));
+        let h = Arc::clone(&hits);
+        pool.scoped_for_each(
+            64,
+            Arc::new(move |i| {
+                h.lock().unwrap()[i] = true;
+            }),
+        );
+        assert!(hits.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

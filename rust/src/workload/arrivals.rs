@@ -1,0 +1,78 @@
+//! Request arrival processes for the end-to-end load experiments
+//! (Figure 17): Poisson open-loop arrivals and closed-loop clients.
+
+use crate::util::rng::Rng;
+
+/// One request in a load trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestSpec {
+    /// Arrival time in seconds from trace start.
+    pub arrive_s: f64,
+    /// Prompt length in tokens.
+    pub input_tokens: usize,
+    /// Tokens to generate.
+    pub output_tokens: usize,
+}
+
+/// Open-loop Poisson arrivals at `rate` req/s for `n` requests.
+pub fn poisson_arrivals(
+    rate: f64,
+    n: usize,
+    input_tokens: usize,
+    output_tokens: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            RequestSpec { arrive_s: t, input_tokens, output_tokens }
+        })
+        .collect()
+}
+
+/// Closed-loop trace: `clients` concurrent clients, each issuing its next
+/// request immediately (arrival time 0 with think time folded into the
+/// serving loop); total `n` requests.
+pub fn closed_loop(
+    clients: usize,
+    n: usize,
+    input_tokens: usize,
+    output_tokens: usize,
+) -> Vec<RequestSpec> {
+    (0..n)
+        .map(|i| RequestSpec {
+            // first `clients` arrive at t=0, the rest are released by the
+            // engine when a slot frees (arrive_s = f64::INFINITY marker).
+            arrive_s: if i < clients { 0.0 } else { f64::INFINITY },
+            input_tokens,
+            output_tokens,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_interarrival() {
+        let reqs = poisson_arrivals(10.0, 2000, 100, 10, 1);
+        assert_eq!(reqs.len(), 2000);
+        let total = reqs.last().unwrap().arrive_s;
+        let mean = total / 2000.0;
+        assert!((mean - 0.1).abs() < 0.02, "mean interarrival = {mean}");
+        // strictly increasing
+        for w in reqs.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s);
+        }
+    }
+
+    #[test]
+    fn closed_loop_marks_deferred() {
+        let reqs = closed_loop(4, 10, 100, 10);
+        assert_eq!(reqs.iter().filter(|r| r.arrive_s == 0.0).count(), 4);
+        assert_eq!(reqs.iter().filter(|r| r.arrive_s.is_infinite()).count(), 6);
+    }
+}

@@ -1,0 +1,150 @@
+//! Synthetic attention-geometry workloads (DESIGN.md §1 substitution for
+//! RULER / NIAH / AIME / GPQA).
+//!
+//! What the paper's benchmarks measure *through task accuracy* is whether
+//! a sparse-attention system retrieves the tokens full attention attends
+//! to. These generators produce KV geometries with the properties the
+//! paper documents — coarse positional locality of keys (RoPE, §4.2),
+//! scattered important tokens (Fig. 3), task-dependent sparsity ratios
+//! (Fig. 4) — plus planted "needles" with known ground truth, so recall
+//! and output fidelity can be measured directly.
+
+pub mod arrivals;
+pub mod tasks;
+
+pub use arrivals::{closed_loop, poisson_arrivals, RequestSpec};
+pub use tasks::{Task, TaskKind};
+
+use crate::util::rng::Rng;
+
+/// One synthetic context + its evaluation queries.
+pub struct Workload {
+    pub name: String,
+    pub d: usize,
+    /// `[n, d]` keys with topic-drift positional locality.
+    pub keys: Vec<f32>,
+    /// `[n, d]` values.
+    pub vals: Vec<f32>,
+    /// Evaluation queries, one per decode probe.
+    pub queries: Vec<Vec<f32>>,
+    /// Ground-truth needle positions per query (empty when the task has
+    /// no planted needle, e.g. aggregation).
+    pub needles: Vec<Vec<u32>>,
+}
+
+impl Workload {
+    pub fn n_tokens(&self) -> usize {
+        self.keys.len() / self.d
+    }
+}
+
+/// Parameters of the geometry generator.
+#[derive(Clone, Debug)]
+pub struct GeometryCfg {
+    pub n: usize,
+    pub d: usize,
+    /// Tokens per topic region (positional locality scale; ~RoPE window).
+    pub region: usize,
+    /// Key = topic*signal + noise; higher signal -> stronger clustering.
+    pub signal: f32,
+    pub noise: f32,
+    /// Query-needle alignment strength (how sharply attention peaks).
+    pub needle_gain: f32,
+}
+
+impl Default for GeometryCfg {
+    fn default() -> Self {
+        GeometryCfg { n: 8192, d: 32, region: 512, signal: 2.0, noise: 0.5, needle_gain: 3.0 }
+    }
+}
+
+/// Topic-drift base context: keys within a region share a topic direction
+/// (coarse spatial locality), values are independent noise.
+pub fn base_context(cfg: &GeometryCfg, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+    let (n, d) = (cfg.n, cfg.d);
+    let n_regions = n.div_ceil(cfg.region);
+    // Topics drift: each topic is the previous plus a step (adjacent
+    // regions are more similar than distant ones, like RoPE phase drift).
+    let mut topics = Vec::with_capacity(n_regions);
+    let mut cur = rng.normal_vec(d);
+    for _ in 0..n_regions {
+        let step = rng.normal_vec(d);
+        for j in 0..d {
+            cur[j] = 0.8 * cur[j] + 0.6 * step[j];
+        }
+        topics.push(cur.clone());
+    }
+    let mut keys = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let t = &topics[i / cfg.region];
+        for j in 0..d {
+            keys.push(cfg.signal * t[j] + cfg.noise * rng.normal_f32());
+        }
+    }
+    let vals = rng.normal_vec(n * d);
+    (keys, vals)
+}
+
+/// Plant `needles` tokens aligned with a fresh direction; returns
+/// (direction, positions). The needle key REPLACES the base key at each
+/// position, and its value is set to the payload so retrieval shows up in
+/// the attention output.
+pub fn plant_needle(
+    keys: &mut [f32],
+    vals: &mut [f32],
+    d: usize,
+    positions: &[u32],
+    gain: f32,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let dir = rng.normal_vec(d);
+    let payload = rng.normal_vec(d);
+    for &p in positions {
+        let p = p as usize;
+        for j in 0..d {
+            keys[p * d + j] = gain * dir[j] + 0.1 * rng.normal_f32();
+            vals[p * d + j] = payload[j];
+        }
+    }
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::attention_weights;
+    use crate::attention::sparsity::top_k_indices;
+
+    #[test]
+    fn base_context_has_positional_locality() {
+        let cfg = GeometryCfg { n: 1024, d: 16, region: 128, ..GeometryCfg::default() };
+        let mut rng = Rng::new(1);
+        let (keys, _) = base_context(&cfg, &mut rng);
+        let d = cfg.d;
+        let cos = |a: usize, b: usize| {
+            let (ka, kb) = (&keys[a * d..(a + 1) * d], &keys[b * d..(b + 1) * d]);
+            crate::util::stats::cosine(ka, kb)
+        };
+        // near pairs (same region) more similar than far pairs on average
+        let mut near = 0.0;
+        let mut far = 0.0;
+        for i in 0..50 {
+            near += cos(i * 2, i * 2 + 1);
+            far += cos(i * 2, 512 + i * 2);
+        }
+        assert!(near > far + 5.0, "near={near} far={far}");
+    }
+
+    #[test]
+    fn planted_needle_dominates_attention() {
+        let cfg = GeometryCfg { n: 2048, d: 16, region: 256, ..GeometryCfg::default() };
+        let mut rng = Rng::new(2);
+        let (mut keys, mut vals) = base_context(&cfg, &mut rng);
+        let pos = vec![777u32];
+        let dir = plant_needle(&mut keys, &mut vals, cfg.d, &pos, cfg.needle_gain, &mut rng);
+        let q: Vec<f32> = dir.iter().map(|x| x * cfg.needle_gain).collect();
+        let w = attention_weights(&q, &keys, cfg.d);
+        let top = top_k_indices(&w, 1);
+        assert_eq!(top[0], 777, "needle must be the attention argmax");
+    }
+}

@@ -1,0 +1,379 @@
+//! Integration tests: cross-module behaviour over the runtime, index,
+//! buffer and coordinator — plus randomized property tests (mini-proptest)
+//! on the invariants DESIGN.md calls out: token partition, zone ordering,
+//! budget monotonicity, cache consistency and batching equivalence.
+
+use retroinfer::attention::full_attention;
+use retroinfer::baselines::{all_systems, SparseSystem};
+use retroinfer::buffer::{ExecBuffer, WaveBuffer};
+use retroinfer::config::{BufferConfig, CachePolicy, ZoneConfig};
+use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
+use retroinfer::index::{SelectScratch, WaveIndex};
+use retroinfer::tensor::dot;
+use retroinfer::util::prop::check;
+use retroinfer::util::rng::Rng;
+use retroinfer::util::stats::cosine;
+use retroinfer::util::threadpool::ThreadPool;
+use retroinfer::{prop_assert, prop_assert_eq};
+use std::sync::Arc;
+
+fn small_zone(n: usize) -> ZoneConfig {
+    ZoneConfig {
+        steady_sink: 4,
+        steady_local: 16,
+        tokens_per_cluster: 8,
+        build_segment: (n / 2).max(64),
+        update_segment: 32,
+        kmeans_iters: 5,
+        ..ZoneConfig::default()
+    }
+}
+
+/// Invariant: build + any number of appends partitions every token into
+/// exactly one of {sink, pending, some cluster}.
+#[test]
+fn prop_index_partitions_tokens() {
+    check("index-partition", 12, |rng| {
+        let d = 8 + 8 * rng.below(2); // 8 or 16
+        let n = 64 + rng.below(400);
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let mut idx = WaveIndex::build(small_zone(n), d, 512, &keys, &vals, rng.next_u64());
+        let appends = rng.below(120);
+        for _ in 0..appends {
+            let k = rng.normal_vec(d);
+            let v = rng.normal_vec(d);
+            idx.append(&k, &v);
+        }
+        let total = n + appends;
+        prop_assert_eq!(idx.n_seen(), total);
+        let mut seen = vec![0u32; total];
+        for c in 0..idx.meta().m() {
+            for &p in idx.meta().cluster_tokens(c) {
+                seen[p as usize] += 1;
+            }
+        }
+        let sel = Default::default();
+        for p in idx.exact_positions(&sel) {
+            seen[p as usize] += 1;
+        }
+        prop_assert!(seen.iter().all(|&s| s == 1), "partition violated: {:?}", seen.iter().enumerate().filter(|(_, &s)| s != 1).take(3).collect::<Vec<_>>());
+        Ok(())
+    });
+}
+
+/// Invariant: retrieval-zone centroid scores dominate estimation-zone
+/// scores, and growing the retrieval budget only adds clusters.
+#[test]
+fn prop_zone_ordering_and_monotonicity() {
+    check("zone-ordering", 10, |rng| {
+        let d = 16;
+        let n = 256 + rng.below(512);
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let idx = WaveIndex::build(small_zone(n), d, 1024, &keys, &vals, rng.next_u64());
+        let m = idx.meta().m();
+        if m < 4 {
+            return Ok(());
+        }
+        let q = rng.normal_vec(d);
+        let mut sc = SelectScratch::default();
+        let r = 1 + rng.below(m / 2);
+        let e = rng.below(m - r);
+        let sel = idx.select_with(&q, r, e, &mut sc);
+        let score = |c: u32| dot(&q, idx.meta().centroid(c as usize));
+        let min_r = sel.retrieval.iter().map(|&c| score(c)).fold(f32::INFINITY, f32::min);
+        for &c in &sel.estimation {
+            prop_assert!(score(c) <= min_r + 1e-4, "estimation beats retrieval");
+        }
+        // monotonicity: r+1 retrieval is a superset
+        let sel2 = idx.select_with(&q, r + 1, e.saturating_sub(1), &mut sc);
+        for c in &sel.retrieval {
+            prop_assert!(sel2.retrieval.contains(c), "budget growth dropped cluster {c}");
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: wave attention converges to full attention as the retrieval
+/// budget approaches the whole index (with estimation covering the rest,
+/// fidelity is monotone-ish; at full budget it is exact).
+#[test]
+fn prop_full_budget_exactness() {
+    check("full-budget-exact", 8, |rng| {
+        let d = 16;
+        let n = 200 + rng.below(300);
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let idx = WaveIndex::build(small_zone(n), d, 1024, &keys, &vals, rng.next_u64());
+        let q = rng.normal_vec(d);
+        let mut sc = SelectScratch::default();
+        let sel = idx.select_with(&q, idx.meta().m(), 0, &mut sc);
+        let mut out = vec![0.0; d];
+        idx.attend(&q, &sel, &mut out);
+        let mut full = vec![0.0; d];
+        full_attention(&q, &keys, &vals, d, &mut full);
+        prop_assert!(cosine(&out, &full) > 0.999, "cos = {}", cosine(&out, &full));
+        Ok(())
+    });
+}
+
+/// Invariant: the wave buffer serves byte-identical data through hit and
+/// miss paths, under every cache policy, and never exceeds capacity.
+#[test]
+fn prop_buffer_consistency_all_policies() {
+    check("buffer-consistency", 8, |rng| {
+        let d = 16;
+        let n = 512;
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let idx = WaveIndex::build(small_zone(n), d, 1024, &keys, &vals, rng.next_u64());
+        let policies = [CachePolicy::Lru, CachePolicy::Fifo, CachePolicy::Clock, CachePolicy::TwoQ];
+        let policy = policies[rng.below(4)];
+        let cap = 2 + rng.below(16);
+        let bcfg = BufferConfig { policy, async_update: false, ..BufferConfig::default() };
+        let pool = Arc::new(ThreadPool::new(1));
+        let wb = WaveBuffer::new(bcfg, d, idx.store().tokens_per_block(), cap, pool);
+        wb.register_index(&idx);
+        let mut sc = SelectScratch::default();
+        let mut eb1 = ExecBuffer::new(d);
+        let mut eb2 = ExecBuffer::new(d);
+        for _ in 0..20 {
+            let q = rng.normal_vec(d);
+            let sel = idx.select_with(&q, 1 + rng.below(6), 0, &mut sc);
+            wb.assemble(&idx, &sel, &mut eb1);
+            wb.assemble(&idx, &sel, &mut eb2);
+            prop_assert_eq!(eb1.keys, eb2.keys);
+            prop_assert_eq!(eb1.vals, eb2.vals);
+            prop_assert!(wb.resident_blocks() <= cap, "capacity exceeded");
+            prop_assert!(wb.check_consistency(), "mapping/cache inconsistent");
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: every sparse system returns finite outputs and in-range
+/// positions for arbitrary budgets, including degenerate ones.
+#[test]
+fn prop_systems_robust_to_budgets() {
+    check("system-budgets", 6, |rng| {
+        let d = 16;
+        let n = 128 + rng.below(256);
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let q = rng.normal_vec(d);
+        for sys in all_systems(&keys, &vals, d, rng.next_u64()).iter_mut() {
+            for budget in [1usize, 7, n / 2, n, 3 * n] {
+                let mut out = vec![0.0; d];
+                let st = sys.decode(&q, budget, &mut out);
+                prop_assert!(
+                    out.iter().all(|x| x.is_finite()),
+                    "{} budget {budget}: non-finite",
+                    sys.name()
+                );
+                prop_assert!(
+                    st.exact_positions.iter().all(|&p| (p as usize) < n),
+                    "{} budget {budget}: bad position",
+                    sys.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant: the scheduler conserves requests — every submitted request
+/// finishes exactly once with exactly max_new tokens, under random
+/// interleavings of arrivals.
+#[test]
+fn prop_scheduler_conserves_requests() {
+    check("scheduler-conservation", 10, |rng| {
+        let max_batch = 1 + rng.below(8);
+        let mut sched = Scheduler::new(Batcher::new(&[1, 2, 4, 8], max_batch));
+        let n_req = 1 + rng.below(12);
+        let mut submitted = 0u64;
+        let mut now = 0.0;
+        let mut steps = 0;
+        while !sched.all_done() || submitted < n_req as u64 {
+            steps += 1;
+            prop_assert!(steps < 10_000, "scheduler did not terminate");
+            // random arrivals interleaved with service
+            if submitted < n_req as u64 && rng.below(3) == 0 {
+                let max_new = 1 + rng.below(5);
+                sched.submit(Request::new(submitted, vec![1, 2, 3], max_new), now);
+                submitted += 1;
+            }
+            now += 0.1;
+            match sched.next_action() {
+                Action::Prefill(id) => sched.prefill_done(id, 0, now),
+                Action::DecodeBatch(ids, bucket) => {
+                    prop_assert!(ids.len() <= bucket);
+                    prop_assert!(bucket <= 8);
+                    for id in ids {
+                        sched.token_decoded(id, 1, now);
+                    }
+                }
+                Action::Idle => {
+                    if submitted == n_req as u64 {
+                        break;
+                    }
+                }
+            }
+        }
+        // drain remaining service
+        let mut guard = 0;
+        while !sched.all_done() {
+            guard += 1;
+            prop_assert!(guard < 10_000, "drain did not terminate");
+            now += 0.1;
+            match sched.next_action() {
+                Action::Prefill(id) => sched.prefill_done(id, 0, now),
+                Action::DecodeBatch(ids, _) => {
+                    for id in ids {
+                        sched.token_decoded(id, 1, now);
+                    }
+                }
+                Action::Idle => break,
+            }
+        }
+        prop_assert_eq!(sched.sessions().count(), n_req);
+        for s in sched.sessions() {
+            prop_assert_eq!(s.generated.len(), s.req.max_new);
+            prop_assert!(s.done_s >= s.req.arrive_s, "finished before arrival");
+        }
+        Ok(())
+    });
+}
+
+/// Cross-layer: the PJRT-executed tripartite kernel agrees with the pure
+/// Rust tripartite oracle on random (masked, padded) inputs.
+#[test]
+fn kernel_matches_rust_oracle_via_pjrt() {
+    use retroinfer::attention::{tripartite_attention, TripartiteInputs};
+    use retroinfer::runtime::tinylm::{TinyLm, WaveInputs};
+    use retroinfer::runtime::default_artifacts_dir;
+    use retroinfer::tensor::Tensor;
+
+    let mut lm = TinyLm::load(&default_artifacts_dir()).unwrap();
+    let (kvh, d, g) = (lm.cfg.kv_heads, lm.cfg.d_head, lm.cfg.group());
+    let (ne, mcap) = (lm.buckets.wave_ne, lm.buckets.wave_m);
+    let mut rng = Rng::new(99);
+
+    let n_exact = 100;
+    let n_est = 37;
+    let mut wi = WaveInputs::zeros(1, kvh, ne, mcap, d);
+    for h in 0..kvh {
+        for t in 0..n_exact {
+            wi.kmask[h * ne + t] = 1.0;
+        }
+        let base = h * ne * d;
+        for x in &mut wi.kx[base..base + n_exact * d] {
+            *x = rng.normal_f32();
+        }
+        for x in &mut wi.vx[base..base + n_exact * d] {
+            *x = rng.normal_f32();
+        }
+        let mbase = h * mcap * d;
+        for x in &mut wi.cent[mbase..mbase + n_est * d] {
+            *x = rng.normal_f32();
+        }
+        for x in &mut wi.vsum[mbase..mbase + n_est * d] {
+            *x = rng.normal_f32();
+        }
+        for c in 0..n_est {
+            wi.csize[h * mcap + c] = 1.0 + rng.below(16) as f32;
+            wi.emask[h * mcap + c] = 1.0;
+        }
+    }
+    let qdata = rng.normal_vec(kvh * g * d);
+    let q = Tensor::from_vec(&[1, kvh, g, d], qdata.clone());
+    let ctx = lm.attn_wave(&q, &wi).unwrap();
+
+    for h in 0..kvh {
+        let exact: Vec<usize> = (0..n_exact).collect();
+        let estimated: Vec<usize> = (0..n_est).collect();
+        let keys = &wi.kx[h * ne * d..h * ne * d + n_exact * d];
+        let vals = &wi.vx[h * ne * d..h * ne * d + n_exact * d];
+        let inp = TripartiteInputs {
+            d,
+            keys,
+            vals,
+            exact: &exact,
+            centroids: &wi.cent[h * mcap * d..(h * mcap + n_est) * d],
+            vsum: &wi.vsum[h * mcap * d..(h * mcap + n_est) * d],
+            sizes: &wi.csize[h * mcap..h * mcap + n_est],
+            estimated: &estimated,
+        };
+        for gi in 0..g {
+            let qr = &qdata[(h * g + gi) * d..(h * g + gi + 1) * d];
+            let mut oracle = vec![0.0f32; d];
+            tripartite_attention(qr, &inp, &mut oracle);
+            let got = &ctx.data()[(h * g + gi) * d..(h * g + gi + 1) * d];
+            let c = cosine(got, &oracle);
+            assert!(c > 0.9999, "head {h} group {gi}: kernel/oracle cos {c}");
+        }
+    }
+}
+
+/// Invariant: simulator throughput is monotone in the obvious directions —
+/// more context never increases throughput; a higher hit ratio never
+/// decreases it; every breakdown term is non-negative and finite.
+#[test]
+fn prop_memsim_monotonicity() {
+    use retroinfer::config::{HardwareSpec, ModelSpec};
+    use retroinfer::memsim::{self, profiles};
+    check("memsim-monotone", 12, |rng| {
+        let model = ModelSpec::llama3_8b();
+        let hw = HardwareSpec::a100();
+        let ctx = 8 * 1024 + rng.below(120 * 1024);
+        let b = 1 + rng.below(16);
+        let h1 = rng.f64() * 0.9;
+        let h2 = (h1 + rng.f64() * (0.99 - h1)).min(0.99);
+        let p_lo = profiles::retroinfer(h1);
+        let p_hi = profiles::retroinfer(h2);
+        let t_lo = memsim::decode_throughput(&model, &hw, &p_lo, ctx, b);
+        let t_hi = memsim::decode_throughput(&model, &hw, &p_hi, ctx, b);
+        if let (Ok(lo), Ok(hi)) = (t_lo, t_hi) {
+            prop_assert!(hi >= lo - 1e-9, "higher hit ratio slower: {hi} < {lo}");
+        }
+        // more context at the same batch is never faster
+        if let (Ok(a), Ok(c)) = (
+            memsim::decode_throughput(&model, &hw, &p_lo, ctx, b),
+            memsim::decode_throughput(&model, &hw, &p_lo, ctx * 2, b),
+        ) {
+            prop_assert!(c <= a + 1e-9, "longer context faster: {c} > {a}");
+        }
+        // breakdown terms finite and non-negative
+        let br = memsim::decode_step(&model, &hw, &p_lo, ctx, b);
+        for v in [br.dense_s, br.attn_gpu_s, br.scan_s, br.estimation_s, br.pcie_s, br.cpu_s, br.overhead_s, br.total_s] {
+            prop_assert!(v.is_finite() && v >= 0.0, "bad breakdown term {v}");
+        }
+        prop_assert!(br.total_s > 0.0);
+        Ok(())
+    });
+}
+
+/// Invariant: memory accounting — max_batch is exactly the largest batch
+/// that passes check_fit, and OOM is monotone in batch and context.
+#[test]
+fn prop_memsim_oom_monotone() {
+    use retroinfer::config::{HardwareSpec, ModelSpec};
+    use retroinfer::memsim::{self, profiles};
+    check("memsim-oom", 10, |rng| {
+        let model = ModelSpec::llama3_8b();
+        let hw = HardwareSpec::a100();
+        let profs = [profiles::full(), profiles::quest(), profiles::retroinfer(0.85), profiles::infinigen()];
+        let p = &profs[rng.below(4)];
+        let ctx = 16 * 1024 + rng.below(1 << 20);
+        let mb = memsim::max_batch(&model, &hw, p, ctx);
+        if mb > 0 {
+            prop_assert!(memsim::check_fit(&model, &hw, p, ctx, mb).is_ok());
+        }
+        prop_assert!(memsim::check_fit(&model, &hw, p, ctx, mb + 1).is_err());
+        // OOM monotone in context
+        if mb == 0 {
+            prop_assert_eq!(memsim::max_batch(&model, &hw, p, ctx * 2), 0);
+        }
+        Ok(())
+    });
+}

@@ -12,7 +12,8 @@ use retroinfer::util::bench::{quick_mode, Table};
 use retroinfer::workload::tasks::{generate, TaskKind};
 
 /// Measure the block-cache hit ratio by replaying a real query trace
-/// through the real wave index + wave buffer at reduced scale.
+/// through the real wave index + wave buffer at reduced scale, and
+/// report the KV arena's occupancy/reclaim accounting for the run.
 fn measured_hit_ratio() -> f64 {
     let d = 32;
     let ctx = if quick_mode() { 4096 } else { 8192 };
@@ -27,7 +28,22 @@ fn measured_hit_ratio() -> f64 {
             b.flush();
         }
     }
-    sys.buffer().map(|b| b.stats().hit_ratio()).unwrap_or(0.0)
+    let hit = sys.buffer().map(|b| b.stats().hit_ratio()).unwrap_or(0.0);
+    let arena = std::sync::Arc::clone(sys.arena());
+    println!(
+        "# arena during replay: live={} blocks ({} B), allocated_total={}",
+        arena.live_blocks(),
+        arena.live_bytes(),
+        arena.allocated_total(),
+    );
+    drop(sys);
+    println!(
+        "# arena after session teardown: live={} blocks, reclaimed_total={}",
+        arena.live_blocks(),
+        arena.reclaimed_total(),
+    );
+    assert_eq!(arena.live_blocks(), 0, "finished session must return every block");
+    hit
 }
 
 /// A decode trajectory: the query drifts step-to-step (topic continuity),

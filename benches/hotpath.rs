@@ -8,7 +8,11 @@ use retroinfer::attention::{tripartite_attention, TripartiteInputs};
 use retroinfer::buffer::{ExecBuffer, WaveBuffer};
 use retroinfer::config::{BufferConfig, CachePolicy, ZoneConfig};
 use retroinfer::buffer::cache::BlockCache;
+use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
 use retroinfer::index::{spherical_kmeans, SelectScratch, WaveIndex};
+use retroinfer::kvcache::BlockArena;
+use retroinfer::metrics::Metrics;
+use retroinfer::runtime::tinylm::WaveInputs;
 use retroinfer::util::bench::{bench, print_result, quick_mode};
 use retroinfer::util::rng::Rng;
 use retroinfer::util::threadpool::ThreadPool;
@@ -51,6 +55,96 @@ fn main() {
         std::hint::black_box(wb.assemble(&idx, &sel, &mut eb));
     }));
     wb.flush();
+
+    // --- parallel head fan-out (decode_step's per-layer assembly) ---------
+    // b × kvh (row, head) assemblies, sequential on the caller thread vs
+    // fanned across the engine pool. The acceptance bar: parallel beats
+    // sequential for batch >= 4 at 8 kv-heads.
+    {
+        let kvh = 8;
+        let group = 4;
+        let n_ctx = 4096;
+        let zcfg = ZoneConfig {
+            retrieval_frac: 0.2,
+            build_segment: 1024,
+            update_segment: 128,
+            kmeans_iters: 5,
+            ..ZoneConfig::default()
+        };
+        let arena = BlockArena::shared(d, BufferConfig::default().block_bytes);
+        let fan_pool = Arc::new(ThreadPool::new(8));
+        let mut rng2 = Rng::new(42);
+        let mut heads: Vec<(WaveIndex, WaveBuffer)> = Vec::new();
+        for h in 0..kvh {
+            let hk = rng2.normal_vec(n_ctx * d);
+            let hv = rng2.normal_vec(n_ctx * d);
+            let hidx = WaveIndex::build_in(&arena, zcfg.clone(), &hk, &hv, 100 + h as u64);
+            let bcfg2 = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+            let cap2 = WaveBuffer::capacity_for(&bcfg2, n_ctx, hidx.store().tokens_per_block());
+            let hbuf = WaveBuffer::new(
+                bcfg2,
+                d,
+                hidx.store().tokens_per_block(),
+                cap2,
+                Arc::clone(&fan_pool),
+            );
+            hbuf.register_index(&hidx);
+            heads.push((hidx, hbuf));
+        }
+        let shape = AssembleShape { ne: 1024, m_cap: 256, d, group };
+        let metrics = Metrics::new();
+        let mut ratios = Vec::new();
+        for &bsz in &[1usize, 4, 8] {
+            let tasks: Vec<HeadTask> = (0..bsz * kvh)
+                .map(|t| {
+                    let (hidx, hbuf) = &heads[t % kvh];
+                    HeadTask { index: hidx, buffer: hbuf }
+                })
+                .collect();
+            let qg_all = rng2.normal_vec(bsz * kvh * group * d);
+            let mut wi = WaveInputs::zeros(bsz, kvh, shape.ne, shape.m_cap, d);
+            let seq = BatchAssembler::new(Arc::clone(&fan_pool), false);
+            let par = BatchAssembler::new(Arc::clone(&fan_pool), true);
+            // warm both caches and the scratch pools
+            seq.assemble_into(&tasks, &qg_all, shape, &mut wi);
+            par.assemble_into(&tasks, &qg_all, shape, &mut wi);
+            let rs = bench(&format!("assemble b={bsz} kvh={kvh} sequential"), 5, budget, || {
+                std::hint::black_box(seq.assemble_into(&tasks, &qg_all, shape, &mut wi));
+            });
+            print_result(&rs);
+            let rp = bench(&format!("assemble b={bsz} kvh={kvh} parallel"), 5, budget, || {
+                std::hint::black_box(par.assemble_into(&tasks, &qg_all, shape, &mut wi));
+            });
+            print_result(&rp);
+            // metrics export sampled OUTSIDE the timed closures so the
+            // seq/par ratio compares identical work
+            let st = par.assemble_into(&tasks, &qg_all, shape, &mut wi);
+            metrics.inc("pcie_bytes", st.pcie_bytes as u64);
+            metrics.inc("hit_blocks", st.hit_blocks as u64);
+            metrics.inc("assembled_heads", (bsz * kvh) as u64);
+            println!(
+                "  -> b={bsz}: parallel speedup {:.2}x over sequential",
+                rs.mean_ns / rp.mean_ns
+            );
+            ratios.push((bsz, rs.mean_ns / rp.mean_ns));
+        }
+        metrics.set_gauge("arena_live_blocks", arena.live_blocks() as u64);
+        metrics.set_gauge("arena_live_bytes", arena.live_bytes() as u64);
+        drop(heads);
+        metrics.set_gauge("arena_reclaimed_blocks_total", arena.reclaimed_total());
+        println!("# fan-out metrics export:");
+        for (name, v) in metrics.counters_snapshot() {
+            println!("  counter {name} = {v}");
+        }
+        for (name, v) in metrics.gauges_snapshot() {
+            println!("  gauge {name} = {v}");
+        }
+        for (bsz, r) in ratios {
+            if bsz >= 4 && r < 1.0 {
+                println!("  WARNING: batch {bsz} fan-out slower than sequential ({r:.2}x)");
+            }
+        }
+    }
 
     // --- block cache ops ---------------------------------------------------
     let mut cache = BlockCache::new(CachePolicy::Lru, 4096, 2 * 8 * d);

@@ -43,7 +43,16 @@ fn serve(
             }
             Action::Idle => break,
         }
+        // Finished sessions hand their KV blocks back to the arena.
+        for fid in sched.take_finished() {
+            eng.finish_session(fid);
+        }
     }
+    assert_eq!(
+        eng.arena().live_blocks(),
+        0,
+        "all sessions finished — every arena block must be reclaimed"
+    );
     let wall = t0.elapsed().as_secs_f64();
     let decode_tokens = eng.metrics.counter("decoded_tokens") as f64;
     let decode_wall: f64 =

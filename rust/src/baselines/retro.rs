@@ -60,6 +60,11 @@ impl Retro {
     pub fn buffer(&self) -> Option<&WaveBuffer> {
         self.buffer.as_ref()
     }
+
+    /// The block arena this system's KV storage is checked out of.
+    pub fn arena(&self) -> &std::sync::Arc<crate::kvcache::BlockArena> {
+        self.index.arena()
+    }
 }
 
 impl SparseSystem for Retro {

@@ -2,9 +2,12 @@
 //! the wave index's *logical* unit (clusters) and the wave buffer's
 //! *physical* unit (blocks). Implemented as an array indexed by cluster id
 //! for O(1) lookup, with a reverse block→cluster map so evictions can
-//! invalidate descriptors.
+//! invalidate descriptors. Blocks are addressed by their engine-global
+//! arena id (sparse across sessions, hence a hash map rather than a
+//! dense array).
 
 use crate::kvcache::BlockRef;
+use std::collections::HashMap;
 
 /// Where one of a cluster's blocks currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,13 +34,13 @@ impl ClusterDesc {
 /// Array-indexed mapping table for one head.
 pub struct MappingTable {
     clusters: Vec<ClusterDesc>,
-    /// block id -> (cluster id, index within cluster)
-    owner: Vec<(u32, u16)>,
+    /// arena block id -> (cluster id, index within cluster)
+    owner: HashMap<u64, (u32, u16)>,
 }
 
 impl MappingTable {
     pub fn new() -> Self {
-        MappingTable { clusters: Vec::new(), owner: Vec::new() }
+        MappingTable { clusters: Vec::new(), owner: HashMap::new() }
     }
 
     /// Register a cluster's blocks; cluster ids must be appended in order
@@ -45,11 +48,7 @@ impl MappingTable {
     pub fn add_cluster(&mut self, blocks: Vec<BlockRef>) -> u32 {
         let cid = self.clusters.len() as u32;
         for (i, b) in blocks.iter().enumerate() {
-            let bid = b.block as usize;
-            if self.owner.len() <= bid {
-                self.owner.resize(bid + 1, (u32::MAX, 0));
-            }
-            self.owner[bid] = (cid, i as u16);
+            self.owner.insert(b.block, (cid, i as u16));
         }
         let home = vec![BlockHome::Cpu; blocks.len()];
         self.clusters.push(ClusterDesc { blocks, home });
@@ -66,23 +65,21 @@ impl MappingTable {
     }
 
     /// Mark a block as admitted to GPU slot `slot`.
-    pub fn set_cached(&mut self, block: u32, slot: u32) {
-        let (c, i) = self.owner[block as usize];
-        debug_assert_ne!(c, u32::MAX, "block {block} unowned");
+    pub fn set_cached(&mut self, block: u64, slot: u32) {
+        let (c, i) = self.owner[&block];
         self.clusters[c as usize].home[i as usize] = BlockHome::Gpu(slot);
     }
 
     /// Invalidate a block's GPU residency (after eviction).
-    pub fn set_evicted(&mut self, block: u32) {
-        let (c, i) = self.owner[block as usize];
-        if c != u32::MAX {
+    pub fn set_evicted(&mut self, block: u64) {
+        if let Some(&(c, i)) = self.owner.get(&block) {
             self.clusters[c as usize].home[i as usize] = BlockHome::Cpu;
         }
     }
 
-    /// Owning (cluster, index) of a block id.
-    pub fn owner(&self, block: u32) -> (u32, u16) {
-        self.owner[block as usize]
+    /// Owning (cluster, index) of an arena block id.
+    pub fn owner(&self, block: u64) -> (u32, u16) {
+        self.owner.get(&block).copied().unwrap_or((u32::MAX, 0))
     }
 
     /// Blocks currently GPU-resident (for invariants/tests).
@@ -105,15 +102,15 @@ impl Default for MappingTable {
 mod tests {
     use super::*;
 
-    fn bref(block: u32, len: u16) -> BlockRef {
-        BlockRef { block, len }
+    fn bref(block: u64, idx: u32, len: u16) -> BlockRef {
+        BlockRef { block, idx, len }
     }
 
     #[test]
     fn add_and_lookup() {
         let mut mt = MappingTable::new();
-        let c0 = mt.add_cluster(vec![bref(0, 8), bref(1, 3)]);
-        let c1 = mt.add_cluster(vec![bref(2, 8)]);
+        let c0 = mt.add_cluster(vec![bref(0, 0, 8), bref(1, 1, 3)]);
+        let c1 = mt.add_cluster(vec![bref(2, 2, 8)]);
         assert_eq!((c0, c1), (0, 1));
         assert_eq!(mt.lookup(0).n_tokens(), 11);
         assert_eq!(mt.lookup(1).blocks[0].block, 2);
@@ -123,7 +120,7 @@ mod tests {
     #[test]
     fn cached_evicted_cycle() {
         let mut mt = MappingTable::new();
-        mt.add_cluster(vec![bref(0, 8), bref(1, 8)]);
+        mt.add_cluster(vec![bref(0, 0, 8), bref(1, 1, 8)]);
         mt.set_cached(1, 42);
         assert_eq!(mt.lookup(0).home[1], BlockHome::Gpu(42));
         assert_eq!(mt.gpu_resident_blocks(), 1);
@@ -133,11 +130,15 @@ mod tests {
     }
 
     #[test]
-    fn owner_reverse_map() {
+    fn owner_reverse_map_with_sparse_global_ids() {
         let mut mt = MappingTable::new();
-        mt.add_cluster(vec![bref(5, 8)]);
-        mt.add_cluster(vec![bref(3, 8), bref(4, 2)]);
-        assert_eq!(mt.owner(5), (0, 0));
-        assert_eq!(mt.owner(4), (1, 1));
+        // arena ids from a later session are large and non-contiguous
+        mt.add_cluster(vec![bref(1 << 40, 0, 8)]);
+        mt.add_cluster(vec![bref((1 << 40) + 7, 1, 8), bref((1 << 40) + 9, 2, 2)]);
+        assert_eq!(mt.owner(1 << 40), (0, 0));
+        assert_eq!(mt.owner((1 << 40) + 9), (1, 1));
+        assert_eq!(mt.owner(3), (u32::MAX, 0));
+        // evicting an unknown block is a no-op, not a panic
+        mt.set_evicted(3);
     }
 }

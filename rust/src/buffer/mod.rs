@@ -123,9 +123,10 @@ impl WaveBuffer {
 
         // Sources 2 & 3: retrieval-zone clusters via the mapping table.
         let mut hit_keys: Vec<u64> = Vec::new();
-        // (block id, data) captured for asynchronous admission — the
-        // paper's "copy from the execution buffer" (blue arrow, Fig. 9).
-        let mut missed: Vec<(u32, Vec<f32>)> = Vec::new();
+        // (arena block id, data) captured for asynchronous admission —
+        // the paper's "copy from the execution buffer" (blue arrow,
+        // Fig. 9).
+        let mut missed: Vec<(u64, Vec<f32>)> = Vec::new();
         {
             let inner = self.inner.lock().unwrap();
             for &c in &sel.retrieval {
@@ -144,7 +145,7 @@ impl WaveBuffer {
                         eb.push(&data[..n], &data[half..half + n]);
                         st.hit_blocks += 1;
                         st.g2g_bytes += nbytes;
-                        hit_keys.push(b.block as u64);
+                        hit_keys.push(b.block);
                     } else {
                         // Miss: PCIe fetch from the CPU block store.
                         let bk = index.store().block_keys(*b);
@@ -180,13 +181,13 @@ impl WaveBuffer {
                     g.cache.touch(k);
                 }
                 for (block, data) in missed {
-                    let (slot, evicted) = g.cache.admit(block as u64);
+                    let (slot, evicted) = g.cache.admit(block);
                     if slot != u32::MAX {
                         g.cache.slot_data_mut(slot).copy_from_slice(&data);
                         g.mapping.set_cached(block, slot);
                     }
                     if let Some(old) = evicted {
-                        g.mapping.set_evicted(old as u32);
+                        g.mapping.set_evicted(old);
                         stats.evictions.fetch_add(1, Ordering::Relaxed);
                     }
                 }

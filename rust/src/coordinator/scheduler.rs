@@ -20,11 +20,25 @@ pub struct Scheduler {
     sessions: HashMap<u64, Session>,
     queue: Vec<u64>,
     batcher: Batcher,
+    /// Decode-phase sessions kept sorted by (admit_s, id) — maintained
+    /// incrementally on phase transitions instead of re-collected and
+    /// re-sorted on every engine iteration.
+    decode_order: Vec<u64>,
+    /// Sessions that reached Done since the last `take_finished` —
+    /// drained by the serving loop into engine reclamation
+    /// (`LiveEngine::finish_session`).
+    finished: Vec<u64>,
 }
 
 impl Scheduler {
     pub fn new(batcher: Batcher) -> Self {
-        Scheduler { sessions: HashMap::new(), queue: Vec::new(), batcher }
+        Scheduler {
+            sessions: HashMap::new(),
+            queue: Vec::new(),
+            batcher,
+            decode_order: Vec::new(),
+            finished: Vec::new(),
+        }
     }
 
     pub fn submit(&mut self, req: Request, now_s: f64) {
@@ -43,34 +57,38 @@ impl Scheduler {
         self.sessions.get_mut(&id)
     }
 
-    /// Sessions currently decoding, oldest admission first.
-    fn decodable(&self) -> Vec<u64> {
-        let mut v: Vec<u64> = self
-            .sessions
-            .values()
-            .filter(|s| s.phase == Phase::Decode)
-            .map(|s| s.req.id)
-            .collect();
-        v.sort_by(|a, b| {
-            let (sa, sb) = (&self.sessions[a], &self.sessions[b]);
-            sa.admit_s.partial_cmp(&sb.admit_s).unwrap().then(a.cmp(b))
-        });
-        v
+    /// Sessions currently decoding, oldest admission first (the
+    /// incrementally-maintained sorted buffer).
+    pub fn decodable(&self) -> &[u64] {
+        &self.decode_order
+    }
+
+    /// Insert `id` into the sorted decode buffer.
+    fn enter_decode(&mut self, id: u64) {
+        let key = (self.sessions[&id].admit_s, id);
+        let pos = self.decode_order.partition_point(|&o| (self.sessions[&o].admit_s, o) < key);
+        self.decode_order.insert(pos, id);
+    }
+
+    /// Remove `id` from the sorted decode buffer (no-op if absent).
+    fn leave_decode(&mut self, id: u64) {
+        if let Some(p) = self.decode_order.iter().position(|&x| x == id) {
+            self.decode_order.remove(p);
+        }
     }
 
     /// Next action. Decode runs whenever a full-enough batch exists or no
     /// prefill is queued; prefill admits new work when the decode pool
     /// has headroom.
     pub fn next_action(&mut self) -> Action {
-        let decoding = self.decodable();
         let queued = self.queue.first().copied();
         match queued {
-            Some(id) if decoding.len() < self.batcher.max_batch() => {
+            Some(id) if self.decode_order.len() < self.batcher.max_batch() => {
                 self.queue.remove(0);
                 self.sessions.get_mut(&id).unwrap().phase = Phase::Prefill;
                 Action::Prefill(id)
             }
-            _ => match self.batcher.select(&decoding) {
+            _ => match self.batcher.select(&self.decode_order) {
                 Some((ids, bucket)) => Action::DecodeBatch(ids, bucket),
                 None => Action::Idle,
             },
@@ -86,6 +104,9 @@ impl Scheduler {
         if s.finished() {
             s.phase = Phase::Done;
             s.done_s = now_s;
+            self.finished.push(id);
+        } else {
+            self.enter_decode(id);
         }
     }
 
@@ -96,7 +117,16 @@ impl Scheduler {
         if s.finished() {
             s.phase = Phase::Done;
             s.done_s = now_s;
+            self.leave_decode(id);
+            self.finished.push(id);
         }
+    }
+
+    /// Drain the session-finished events accumulated since the last
+    /// call. The serving loop feeds these into engine reclamation so
+    /// finished sessions return their KV blocks to the arena.
+    pub fn take_finished(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.finished)
     }
 
     pub fn all_done(&self) -> bool {
@@ -108,7 +138,7 @@ impl Scheduler {
     }
 
     pub fn n_decoding(&self) -> usize {
-        self.sessions.values().filter(|s| s.phase == Phase::Decode).count()
+        self.decode_order.len()
     }
 }
 
@@ -178,5 +208,55 @@ mod tests {
         s.prefill_done(7, 9, 0.5);
         assert!(s.all_done());
         assert_eq!(s.session(7).unwrap().phase, Phase::Done);
+        // a session that finishes at its prefill token still emits a
+        // finished event and never enters the decode buffer
+        assert_eq!(s.take_finished(), vec![7]);
+        assert!(s.decodable().is_empty());
+    }
+
+    #[test]
+    fn decode_buffer_stays_sorted_by_admission() {
+        let mut s = sched(8);
+        // admit out of id order: id 5 first, then 2, then 9
+        for (id, at) in [(5u64, 0.0), (2, 1.0), (9, 2.0)] {
+            s.submit(Request::new(id, vec![1], 10), at);
+            assert_eq!(s.next_action(), Action::Prefill(id));
+            s.prefill_done(id, 0, at);
+        }
+        assert_eq!(s.decodable(), &[5, 2, 9]);
+        assert_eq!(s.n_decoding(), 3);
+        // finishing the middle session removes it in place
+        for _ in 0..10 {
+            s.token_decoded(2, 1, 3.0);
+        }
+        assert_eq!(s.decodable(), &[5, 9]);
+        assert_eq!(s.take_finished(), vec![2]);
+        assert!(s.take_finished().is_empty(), "events drain exactly once");
+    }
+
+    #[test]
+    fn finished_events_cover_every_session() {
+        let mut s = sched(4);
+        for id in 0..3u64 {
+            s.submit(Request::new(id, vec![1], 2), 0.0);
+        }
+        let mut finished = Vec::new();
+        let mut guard = 0;
+        while !s.all_done() {
+            guard += 1;
+            assert!(guard < 1000);
+            match s.next_action() {
+                Action::Prefill(id) => s.prefill_done(id, 0, 0.1),
+                Action::DecodeBatch(ids, _) => {
+                    for id in ids {
+                        s.token_decoded(id, 1, 0.2);
+                    }
+                }
+                Action::Idle => break,
+            }
+            finished.extend(s.take_finished());
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![0, 1, 2]);
     }
 }

@@ -1,0 +1,257 @@
+//! Per-head execution-buffer assembly and its batch fan-out.
+//!
+//! One decode step needs `batch × kv_heads` independent assemblies per
+//! layer: zone selection over the head's wave index, execution-buffer
+//! gather through the head's wave buffer, and estimation-zone meta
+//! packing. Each assembly reads one session's (index, buffer) pair and
+//! writes one disjoint `(row, head)` slice of the kernel's
+//! [`WaveInputs`], so the batch fans out across the engine
+//! [`ThreadPool`] with no synchronization beyond the buffer's own
+//! internal locks ([`BatchAssembler::assemble_into`]). The sequential
+//! path runs the exact same code in a loop — outputs are bit-identical
+//! either way (asserted by `tests/arena.rs`), only wall-clock differs.
+
+use crate::buffer::{AccessStats, ExecBuffer, WaveBuffer};
+use crate::index::{SelectScratch, WaveIndex};
+use crate::runtime::tinylm::WaveInputs;
+use crate::util::threadpool::ThreadPool;
+use std::sync::{Arc, Mutex};
+
+/// Geometry of one assembly: execution-buffer capacity, estimation-slot
+/// capacity, head dim and GQA group size.
+#[derive(Clone, Copy, Debug)]
+pub struct AssembleShape {
+    pub ne: usize,
+    pub m_cap: usize,
+    pub d: usize,
+    pub group: usize,
+}
+
+/// One (row, head) unit of work: the session's per-head index + buffer.
+#[derive(Clone, Copy)]
+pub struct HeadTask<'a> {
+    pub index: &'a WaveIndex,
+    pub buffer: &'a WaveBuffer,
+}
+
+/// The `(row, head)` slice of [`WaveInputs`] one assembly writes.
+pub struct HeadSlices<'a> {
+    pub kx: &'a mut [f32],
+    pub vx: &'a mut [f32],
+    pub kmask: &'a mut [f32],
+    pub cent: &'a mut [f32],
+    pub vsum: &'a mut [f32],
+    pub csize: &'a mut [f32],
+    pub emask: &'a mut [f32],
+}
+
+/// Assemble one (sequence, head) slice of the wave-attention inputs:
+/// zone selection, execution-buffer gather through the wave buffer, and
+/// estimation-zone meta arrays. `qg` is the `[group, d]` flat query
+/// group sharing this KV head. Slices are fully overwritten (zeroed
+/// first), so callers may reuse a dirty [`WaveInputs`] across layers
+/// and steps.
+pub fn assemble_head(
+    task: HeadTask<'_>,
+    qg: &[f32],
+    shape: AssembleShape,
+    scratch: &mut SelectScratch,
+    eb: &mut ExecBuffer,
+    out: &mut HeadSlices<'_>,
+) -> AccessStats {
+    let AssembleShape { ne, m_cap, d, group } = shape;
+    debug_assert_eq!(qg.len(), group * d);
+    out.kx.fill(0.0);
+    out.vx.fill(0.0);
+    out.kmask.fill(0.0);
+    out.cent.fill(0.0);
+    out.vsum.fill(0.0);
+    out.csize.fill(0.0);
+    out.emask.fill(0.0);
+
+    let index = task.index;
+    let m = index.meta().m();
+    // Budgets from the zone config, floored at 2 clusters per group
+    // query head (short contexts under-provision fractional budgets).
+    let r = index.cfg().retrieval_clusters(m).max(2 * group).min(m);
+    let e = index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
+    let mut sel = index.select_group_with(qg, group, r, e, scratch);
+    // Trim retrieval so steady + retrieved tokens fit the Ne buffer.
+    let mut budget = ne.saturating_sub(index.steady_tokens());
+    let mut kept = Vec::with_capacity(sel.retrieval.len());
+    for &c in &sel.retrieval {
+        let sz = index.meta().cluster_tokens(c as usize).len();
+        if sz <= budget {
+            budget -= sz;
+            kept.push(c);
+        }
+    }
+    sel.retrieval = kept;
+    sel.estimation.truncate(m_cap);
+
+    // Execution buffer via the wave buffer (steady + hits + misses).
+    let stats = task.buffer.assemble(index, &sel, eb);
+
+    let n_tok = eb.n_tokens().min(ne);
+    out.kx[..n_tok * d].copy_from_slice(&eb.keys[..n_tok * d]);
+    out.vx[..n_tok * d].copy_from_slice(&eb.vals[..n_tok * d]);
+    out.kmask[..n_tok].fill(1.0);
+
+    // Estimation zone: pack selected clusters densely into the M slots.
+    for (s, &c) in sel.estimation.iter().enumerate() {
+        let c = c as usize;
+        out.cent[s * d..(s + 1) * d].copy_from_slice(index.meta().centroid(c));
+        out.vsum[s * d..(s + 1) * d]
+            .copy_from_slice(&index.meta().vsum_flat()[c * d..(c + 1) * d]);
+        out.csize[s] = index.meta().counts()[c];
+        out.emask[s] = 1.0;
+    }
+    stats
+}
+
+/// Raw base pointers of a [`WaveInputs`], sendable across the pool so
+/// each task can carve out its own disjoint `(row, head)` slice.
+struct WavePtrs {
+    kx: *mut f32,
+    vx: *mut f32,
+    kmask: *mut f32,
+    cent: *mut f32,
+    vsum: *mut f32,
+    csize: *mut f32,
+    emask: *mut f32,
+}
+
+// SAFETY: the pointers are only dereferenced through `slices`, which
+// hands every task index a disjoint region; `assemble_into` holds the
+// `&mut WaveInputs` borrow for the whole scope.
+unsafe impl Send for WavePtrs {}
+unsafe impl Sync for WavePtrs {}
+
+impl WavePtrs {
+    fn of(wi: &mut WaveInputs) -> WavePtrs {
+        WavePtrs {
+            kx: wi.kx.as_mut_ptr(),
+            vx: wi.vx.as_mut_ptr(),
+            kmask: wi.kmask.as_mut_ptr(),
+            cent: wi.cent.as_mut_ptr(),
+            vsum: wi.vsum.as_mut_ptr(),
+            csize: wi.csize.as_mut_ptr(),
+            emask: wi.emask.as_mut_ptr(),
+        }
+    }
+
+    /// The `(row, head)` slice set of flat task `t`.
+    ///
+    /// SAFETY: caller must ensure distinct `t` for concurrent calls and
+    /// that the backing `WaveInputs` outlives the returned slices and
+    /// holds at least `(t + 1)` head segments.
+    unsafe fn slices<'a>(&self, t: usize, shape: AssembleShape) -> HeadSlices<'a> {
+        let AssembleShape { ne, m_cap, d, .. } = shape;
+        /// SAFETY: see [`WavePtrs::slices`] — disjoint `t`, live backing.
+        unsafe fn seg<'b>(p: *mut f32, t: usize, stride: usize) -> &'b mut [f32] {
+            unsafe { std::slice::from_raw_parts_mut(p.add(t * stride), stride) }
+        }
+        unsafe {
+            HeadSlices {
+                kx: seg(self.kx, t, ne * d),
+                vx: seg(self.vx, t, ne * d),
+                kmask: seg(self.kmask, t, ne),
+                cent: seg(self.cent, t, m_cap * d),
+                vsum: seg(self.vsum, t, m_cap * d),
+                csize: seg(self.csize, t, m_cap),
+                emask: seg(self.emask, t, m_cap),
+            }
+        }
+    }
+}
+
+/// Batch assembler: fans the per-(row, head) assemblies of one decode
+/// step across the engine thread pool, with recycled per-task
+/// [`SelectScratch`] / [`ExecBuffer`] instances so the hot path stays
+/// allocation-light.
+pub struct BatchAssembler {
+    pool: Arc<ThreadPool>,
+    parallel: bool,
+    scratch: Mutex<Vec<SelectScratch>>,
+    exec: Mutex<Vec<ExecBuffer>>,
+}
+
+impl BatchAssembler {
+    pub fn new(pool: Arc<ThreadPool>, parallel: bool) -> BatchAssembler {
+        BatchAssembler {
+            pool,
+            parallel,
+            scratch: Mutex::new(Vec::new()),
+            exec: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn parallel(&self) -> bool {
+        self.parallel
+    }
+
+    pub fn set_parallel(&mut self, parallel: bool) {
+        self.parallel = parallel;
+    }
+
+    /// Assemble every task's `(row, head)` slice of `wi`. `qg_all` is
+    /// `[tasks, group, d]` flat. Returns the aggregate data-movement
+    /// stats of the whole batch.
+    pub fn assemble_into(
+        &self,
+        tasks: &[HeadTask<'_>],
+        qg_all: &[f32],
+        shape: AssembleShape,
+        wi: &mut WaveInputs,
+    ) -> AccessStats {
+        let n = tasks.len();
+        let gd = shape.group * shape.d;
+        assert_eq!(qg_all.len(), n * gd, "qg_all shape mismatch");
+        // Every field the raw-pointer slicing will carve must be large
+        // enough — WaveInputs' fields are public, so an inconsistently
+        // sized input must fail loudly here, not write out of bounds.
+        let (ned, md) = (shape.ne * shape.d, shape.m_cap * shape.d);
+        assert!(wi.kx.len() >= n * ned, "WaveInputs.kx too small for batch");
+        assert!(wi.vx.len() >= n * ned, "WaveInputs.vx too small for batch");
+        assert!(wi.kmask.len() >= n * shape.ne, "WaveInputs.kmask too small for batch");
+        assert!(wi.cent.len() >= n * md, "WaveInputs.cent too small for batch");
+        assert!(wi.vsum.len() >= n * md, "WaveInputs.vsum too small for batch");
+        assert!(wi.csize.len() >= n * shape.m_cap, "WaveInputs.csize too small for batch");
+        assert!(wi.emask.len() >= n * shape.m_cap, "WaveInputs.emask too small for batch");
+        let ptrs = WavePtrs::of(wi);
+        let agg = Mutex::new(AccessStats::default());
+        let run = |t: usize| {
+            let mut scratch = self.scratch.lock().unwrap().pop().unwrap_or_default();
+            let mut eb = self
+                .exec
+                .lock()
+                .unwrap()
+                .pop()
+                .filter(|e| e.d() == shape.d)
+                .unwrap_or_else(|| ExecBuffer::new(shape.d));
+            // SAFETY: task `t` is unique within this scope, and `wi` is
+            // mutably borrowed by `assemble_into` for the scope's whole
+            // lifetime — the slices are disjoint and live long enough.
+            let mut out = unsafe { ptrs.slices(t, shape) };
+            let st = assemble_head(
+                tasks[t],
+                &qg_all[t * gd..(t + 1) * gd],
+                shape,
+                &mut scratch,
+                &mut eb,
+                &mut out,
+            );
+            agg.lock().unwrap().add(&st);
+            self.scratch.lock().unwrap().push(scratch);
+            self.exec.lock().unwrap().push(eb);
+        };
+        if self.parallel && n > 1 {
+            self.pool.scope_for_each(n, &run);
+        } else {
+            for t in 0..n {
+                run(t);
+            }
+        }
+        agg.into_inner().unwrap()
+    }
+}

@@ -3,9 +3,11 @@
 //! provides a full-attention mode over the same sessions for accuracy
 //! and latency comparison.
 
+use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, HeadTask};
 use crate::buffer::{ExecBuffer, WaveBuffer};
 use crate::config::{BufferConfig, ZoneConfig};
-use crate::index::{SelectScratch, WaveIndex, ZoneSelection};
+use crate::index::{SelectScratch, WaveIndex};
+use crate::kvcache::BlockArena;
 use crate::metrics::Metrics;
 use crate::runtime::tinylm::{TinyLm, WaveInputs};
 use crate::tensor::Tensor;
@@ -43,6 +45,9 @@ pub struct LiveEngine {
     bcfg: BufferConfig,
     mode: AttnMode,
     pool: Arc<ThreadPool>,
+    /// Engine-owned KV block pool shared by every session and head.
+    arena: Arc<BlockArena>,
+    assembler: BatchAssembler,
     states: HashMap<u64, SessionState>,
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
@@ -79,16 +84,33 @@ impl LiveEngine {
     ) -> Result<LiveEngine> {
         let lm = TinyLm::load(artifacts_dir)?;
         let pool = Arc::new(ThreadPool::new(bcfg.cpu_threads.max(1)));
+        let arena = BlockArena::shared(lm.cfg.d_head, bcfg.block_bytes);
+        let assembler = BatchAssembler::new(Arc::clone(&pool), bcfg.cpu_threads > 1);
         Ok(LiveEngine {
             lm,
             zcfg,
             bcfg,
             mode,
             pool,
+            arena,
+            assembler,
             states: HashMap::new(),
             metrics: Arc::new(Metrics::new()),
             scratch: SelectScratch::default(),
         })
+    }
+
+    /// The engine-wide KV block arena (occupancy / reclaim accounting).
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        &self.arena
+    }
+
+    /// Toggle the thread-pool head fan-out (on by default when the
+    /// buffer config has more than one CPU thread). The sequential path
+    /// produces bit-identical execution buffers — this only trades
+    /// wall-clock.
+    pub fn set_parallel_assembly(&mut self, parallel: bool) {
+        self.assembler.set_parallel(parallel);
     }
 
     pub fn mode(&self) -> AttnMode {
@@ -150,10 +172,9 @@ impl LiveEngine {
             for h in 0..kvh {
                 let keys = kc.row(&[layer, 0, h]);
                 let vals = vc.row(&[layer, 0, h]);
-                let idx = WaveIndex::build(
+                let idx = WaveIndex::build_in(
+                    &self.arena,
                     self.zcfg.clone(),
-                    d,
-                    self.bcfg.block_bytes,
                     keys,
                     vals,
                     id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1),
@@ -178,7 +199,14 @@ impl LiveEngine {
         );
         self.metrics.observe("prefill_s", t0.elapsed().as_secs_f64());
         self.metrics.inc("prefills", 1);
+        self.publish_arena_gauges();
         Ok(first)
+    }
+
+    fn publish_arena_gauges(&self) {
+        self.metrics.set_gauge("arena_live_blocks", self.arena.live_blocks() as u64);
+        self.metrics.set_gauge("arena_live_bytes", self.arena.live_bytes() as u64);
+        self.metrics.set_gauge("arena_free_blocks", self.arena.free_blocks() as u64);
     }
 
     /// One decode step for the sessions in `ids`, padded to `bucket`.
@@ -202,9 +230,17 @@ impl LiveEngine {
         let pos: Vec<i32> = (0..b).map(|i| self.states[&row_id(i)].len as i32).collect();
 
         let mut hidden = self.lm.embed(&tokens)?;
-        let (kvh, d) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head);
+        let (kvh, d, group) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head, self.lm.cfg.group());
         let (ne, m_cap) = (self.lm.buckets.wave_ne, self.lm.buckets.wave_m);
         let n_layers = self.lm.cfg.n_layers;
+        let shape = AssembleShape { ne, m_cap, d, group };
+        // Reused across layers: every (row, head) slice is fully
+        // rewritten by each layer's assembly.
+        let mut wi = match self.mode {
+            AttnMode::Wave => Some(WaveInputs::zeros(b, kvh, ne, m_cap, d)),
+            AttnMode::Full => None,
+        };
+        let mut assemble_s = 0.0f64;
 
         for layer in 0..n_layers {
             let (q, k, v) = self.lm.qkv(layer, &hidden, &pos)?;
@@ -232,14 +268,39 @@ impl LiveEngine {
 
             let ctx = match self.mode {
                 AttnMode::Wave => {
-                    let mut wi = WaveInputs::zeros(b, kvh, ne, m_cap, d);
+                    let wi = wi.as_mut().unwrap();
+                    // Group queries per (row, head), flat [b*kvh, G, d]:
+                    // zone selection scores each cluster by the MAX over
+                    // the group's queries (GQA — each query head's heavy
+                    // hitters stay retrievable).
+                    let mut qg_all = vec![0.0f32; b * kvh * group * d];
                     for i in 0..b {
-                        let id = row_id(i);
                         for h in 0..kvh {
-                            self.assemble_head(id, layer, h, i, &q, &mut wi)?;
+                            for g in 0..group {
+                                let base = ((i * kvh + h) * group + g) * d;
+                                qg_all[base..base + d].copy_from_slice(q.row(&[i, h, g]));
+                            }
                         }
                     }
-                    self.lm.attn_wave(&q, &wi)?
+                    // One task per (row, head): fan the zone selection +
+                    // exec-buffer gather across the engine thread pool.
+                    let states = &self.states;
+                    let tasks: Vec<HeadTask<'_>> = (0..b * kvh)
+                        .map(|t| {
+                            let st = &states[&row_id(t / kvh)];
+                            let slot = layer * kvh + t % kvh;
+                            HeadTask { index: &st.indexes[slot], buffer: &st.buffers[slot] }
+                        })
+                        .collect();
+                    let t_as = Instant::now();
+                    let stats = self.assembler.assemble_into(&tasks, &qg_all, shape, wi);
+                    assemble_s += t_as.elapsed().as_secs_f64();
+                    drop(tasks);
+                    self.metrics.inc("pcie_bytes", stats.pcie_bytes as u64);
+                    self.metrics.inc("hit_blocks", stats.hit_blocks as u64);
+                    self.metrics.inc("miss_blocks", stats.miss_blocks as u64);
+                    self.metrics.inc("assembled_heads", (b * kvh) as u64);
+                    self.lm.attn_wave(&q, wi)?
                 }
                 AttnMode::Full => {
                     let t_cap = self.lm.buckets.attn_full_t;
@@ -269,14 +330,24 @@ impl LiveEngine {
             out.push(all[i]);
         }
         self.metrics.observe("decode_step_s", t0.elapsed().as_secs_f64());
+        if self.mode == AttnMode::Wave {
+            self.metrics.observe("assemble_s", assemble_s);
+            let key = if self.assembler.parallel() && b * kvh > 1 {
+                "assembly_parallel_steps"
+            } else {
+                "assembly_serial_steps"
+            };
+            self.metrics.inc(key, 1);
+        }
         self.metrics.inc("decode_steps", 1);
         self.metrics.inc("decoded_tokens", ids.len() as u64);
         Ok(out)
     }
 
-    /// Assemble one (sequence, head) slice of the wave-attention inputs:
-    /// zone selection, execution-buffer gather through the wave buffer,
-    /// and estimation-zone meta arrays.
+    /// Assemble one (sequence, head) slice of the wave-attention inputs
+    /// on the caller thread — the single-head form of the batch fan-out
+    /// in `decode_step` (same code path via [`assemble_head`], so the
+    /// two are bit-identical; used by fidelity tests).
     fn assemble_head(
         &mut self,
         id: u64,
@@ -288,65 +359,31 @@ impl LiveEngine {
     ) -> Result<()> {
         let (kvh, d, group) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head, self.lm.cfg.group());
         let (ne, m_cap) = (self.lm.buckets.wave_ne, self.lm.buckets.wave_m);
+        let shape = AssembleShape { ne, m_cap, d, group };
         let slot = layer * kvh + h;
 
-        // Group queries, flat [G, d]: zone selection scores each cluster
-        // by the MAX over the group's queries (GQA — each query head's
-        // heavy hitters stay retrievable).
         let mut qg = vec![0.0f32; group * d];
         for g in 0..group {
             qg[g * d..(g + 1) * d].copy_from_slice(q.row(&[row, h, g]));
         }
 
-        let st = self.states.get_mut(&id).unwrap();
-        let index = &st.indexes[slot];
-        let m = index.meta().m();
-        // Budgets from the zone config, floored at 2 clusters per group
-        // query head (short contexts under-provision fractional budgets).
-        let r = index.cfg().retrieval_clusters(m).max(2 * group).min(m);
-        let e = index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
-        let mut sel = index.select_group_with(&qg, group, r, e, &mut self.scratch);
-        // Trim retrieval so steady + retrieved tokens fit the Ne buffer.
-        let mut budget = ne.saturating_sub(index.steady_tokens());
-        let mut kept = Vec::with_capacity(sel.retrieval.len());
-        for &c in &sel.retrieval {
-            let sz = index.meta().cluster_tokens(c as usize).len();
-            if sz <= budget {
-                budget -= sz;
-                kept.push(c);
-            }
-        }
-        sel.retrieval = kept;
-        sel.estimation.truncate(m_cap);
-        let sel = ZoneSelection { retrieval: sel.retrieval, estimation: sel.estimation };
-
-        // Execution buffer via the wave buffer (steady + hits + misses).
+        let st = self.states.get(&id).ok_or_else(|| anyhow!("unknown session {id}"))?;
+        let task = HeadTask { index: &st.indexes[slot], buffer: &st.buffers[slot] };
+        let t = row * kvh + h;
+        let mut out = HeadSlices {
+            kx: &mut wi.kx[t * ne * d..(t + 1) * ne * d],
+            vx: &mut wi.vx[t * ne * d..(t + 1) * ne * d],
+            kmask: &mut wi.kmask[t * ne..(t + 1) * ne],
+            cent: &mut wi.cent[t * m_cap * d..(t + 1) * m_cap * d],
+            vsum: &mut wi.vsum[t * m_cap * d..(t + 1) * m_cap * d],
+            csize: &mut wi.csize[t * m_cap..(t + 1) * m_cap],
+            emask: &mut wi.emask[t * m_cap..(t + 1) * m_cap],
+        };
         let mut eb = ExecBuffer::new(d);
-        let stats = st.buffers[slot].assemble(index, &sel, &mut eb);
+        let stats = assemble_head(task, &qg, shape, &mut self.scratch, &mut eb, &mut out);
         self.metrics.inc("pcie_bytes", stats.pcie_bytes as u64);
         self.metrics.inc("hit_blocks", stats.hit_blocks as u64);
         self.metrics.inc("miss_blocks", stats.miss_blocks as u64);
-
-        let n_tok = eb.n_tokens().min(ne);
-        let base = (row * kvh + h) * ne;
-        wi.kx[base * d..(base + n_tok) * d].copy_from_slice(&eb.keys[..n_tok * d]);
-        wi.vx[base * d..(base + n_tok) * d].copy_from_slice(&eb.vals[..n_tok * d]);
-        for s in 0..n_tok {
-            wi.kmask[base + s] = 1.0;
-        }
-
-        // Estimation zone: pack selected clusters densely into the M slots.
-        let mbase = (row * kvh + h) * m_cap;
-        for (s, &c) in sel.estimation.iter().enumerate() {
-            let c = c as usize;
-            wi.cent[(mbase + s) * d..(mbase + s + 1) * d]
-                .copy_from_slice(index.meta().centroid(c));
-            wi.vsum[(mbase + s) * d..(mbase + s + 1) * d].copy_from_slice(
-                &index.meta().vsum_flat()[c * d..(c + 1) * d],
-            );
-            wi.csize[mbase + s] = index.meta().counts()[c];
-            wi.emask[mbase + s] = 1.0;
-        }
         Ok(())
     }
 
@@ -355,9 +392,25 @@ impl LiveEngine {
         self.states.get(&id).map(|s| s.len)
     }
 
-    /// Drop a finished session, releasing its memory.
+    /// Tear down a finished session: drop its indexes/buffers and
+    /// return every KV block it held to the engine arena's free-list.
+    /// Returns how many blocks were reclaimed (0 for unknown ids).
+    pub fn finish_session(&mut self, id: u64) -> usize {
+        let before = self.arena.live_blocks();
+        if self.states.remove(&id).is_none() {
+            return 0;
+        }
+        let freed = before - self.arena.live_blocks();
+        self.metrics.inc("sessions_finished", 1);
+        self.metrics.inc("arena_reclaimed_blocks", freed as u64);
+        self.publish_arena_gauges();
+        freed
+    }
+
+    /// Drop a finished session, releasing its memory (alias kept for
+    /// older callers; use [`LiveEngine::finish_session`]).
     pub fn evict_session(&mut self, id: u64) {
-        self.states.remove(&id);
+        self.finish_session(id);
     }
 
     /// Overwrite the token the next decode step will consume (teacher
@@ -403,6 +456,7 @@ mod tests {
 
     #[test]
     fn wave_and_full_agree_on_greedy_tokens() {
+        crate::require_live_path!();
         // The headline live-path test: RetroInfer's sparse decode must
         // reproduce full attention's greedy decode on a real prompt.
         let dir = default_artifacts_dir();
@@ -437,6 +491,7 @@ mod tests {
 
     #[test]
     fn batched_decode_consistent_with_single() {
+        crate::require_live_path!();
         let dir = default_artifacts_dir();
         let p1 = prompt(2048, 2);
         let p2 = prompt(2048, 3);
@@ -453,6 +508,7 @@ mod tests {
 
     #[test]
     fn padded_bucket_rows_are_discarded() {
+        crate::require_live_path!();
         let dir = default_artifacts_dir();
         let p = prompt(2048, 4);
         let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
@@ -465,6 +521,7 @@ mod tests {
 
     #[test]
     fn rejects_unknown_session() {
+        crate::require_live_path!();
         let dir = default_artifacts_dir();
         let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
         assert!(eng.decode_step(&[42], 1).is_err());
@@ -482,6 +539,7 @@ mod fidelity_tests {
     /// compare against the engine's tripartite kernel output, per head.
     #[test]
     fn wave_ctx_tracks_exact_ctx() {
+        crate::require_live_path!();
         let dir = default_artifacts_dir();
         let p = crate::engine::live::structured_prompt(2048, 5);
         let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();

@@ -1,9 +1,12 @@
 //! Serving engine: drives TinyLM through PJRT with the wave index/buffer
-//! on the decode path (live engine), and an analytic load simulator for
-//! paper-scale end-to-end experiments (Figure 17).
+//! on the decode path (live engine), fans per-head execution-buffer
+//! assembly across the CPU pool (assemble), and provides an analytic
+//! load simulator for paper-scale end-to-end experiments (Figure 17).
 
+pub mod assemble;
 pub mod live;
 pub mod sim;
 
+pub use assemble::{AssembleShape, BatchAssembler, HeadTask};
 pub use live::{AttnMode, LiveEngine};
 pub use sim::{simulate_cluster, simulate_load, LoadReport};

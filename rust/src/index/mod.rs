@@ -16,8 +16,9 @@ pub use meta::MetaIndex;
 
 use crate::attention::{tripartite_attention, TripartiteInputs};
 use crate::config::ZoneConfig;
-use crate::kvcache::{BlockRef, HeadStore};
+use crate::kvcache::{BlockArena, BlockRef, HeadStore};
 use crate::tensor::dot;
+use std::sync::Arc;
 
 /// The zone decision for one query: which clusters are retrieved exactly
 /// and which are estimated.
@@ -70,7 +71,10 @@ pub struct WaveIndex {
 }
 
 impl WaveIndex {
-    /// Build from a full prefill context `[n, d]` via segmented clustering.
+    /// Build from a full prefill context `[n, d]` via segmented
+    /// clustering, allocating KV blocks from a private arena (tests and
+    /// standalone baselines; engine code shares one arena via
+    /// [`WaveIndex::build_in`]).
     pub fn build(
         cfg: ZoneConfig,
         d: usize,
@@ -79,12 +83,26 @@ impl WaveIndex {
         vals: &[f32],
         seed: u64,
     ) -> Self {
+        Self::build_in(&BlockArena::shared(d, block_bytes), cfg, keys, vals, seed)
+    }
+
+    /// Build from a full prefill context `[n, d]`, checking KV blocks
+    /// out of the shared engine arena (paper §4.3: storage is a pooled
+    /// engine resource, not per-session memory).
+    pub fn build_in(
+        arena: &Arc<BlockArena>,
+        cfg: ZoneConfig,
+        keys: &[f32],
+        vals: &[f32],
+        seed: u64,
+    ) -> Self {
+        let d = arena.d();
         let n = keys.len() / d;
         assert_eq!(keys.len(), vals.len());
         let mut idx = WaveIndex {
             cfg,
             d,
-            store: HeadStore::new(d, block_bytes),
+            store: HeadStore::new_in(Arc::clone(arena)),
             meta: MetaIndex::new(d),
             cluster_blocks: Vec::new(),
             sink_keys: Vec::new(),
@@ -348,6 +366,11 @@ impl WaveIndex {
 
     pub fn store(&self) -> &HeadStore {
         &self.store
+    }
+
+    /// The arena this index's KV blocks are checked out of.
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        self.store.arena()
     }
 
     pub fn cfg(&self) -> &ZoneConfig {

@@ -1,0 +1,207 @@
+//! Block arena: the engine-owned slab of fixed-size KV blocks (paper
+//! §4.3 treats KV placement as a storage-engine problem — a shared pool
+//! with explicit admission and reclamation, not per-session `Vec`s).
+//!
+//! One arena serves every session and every (layer, kv-head) of an
+//! engine. [`HeadStore`](super::HeadStore) handles check blocks out via
+//! [`BlockArena::alloc`] and return them through [`BlockArena::reclaim`]
+//! (driven by `HeadStore`'s `Drop`), so finishing a session puts all of
+//! its storage back on the free-list instead of leaking it for the
+//! process lifetime. Block ids are engine-global and monotonically
+//! increasing — a reclaimed slot's storage is recycled but its id is
+//! never reissued, which keeps block-cache keys and mapping-table
+//! entries free of ABA aliasing across sessions.
+//!
+//! Concurrency: allocation/reclaim take a short free-list lock; block
+//! *data* is only ever written between `alloc` and publication inside
+//! the owning `HeadStore`, and only read while that store is alive, so
+//! reads need no lock at all (the parallel head fan-out in
+//! `engine::assemble` relies on this).
+
+use super::tokens_per_block;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Storage of one fixed-size KV block: `tpb × d` keys, `tpb × d` values
+/// and `tpb` token positions. Capacity never changes after first
+/// allocation, so recycling through the free-list is realloc-free.
+pub struct BlockData {
+    pub(crate) keys: Vec<f32>,
+    pub(crate) vals: Vec<f32>,
+    pub(crate) pos: Vec<u32>,
+}
+
+impl BlockData {
+    fn zeroed(tpb: usize, d: usize) -> BlockData {
+        BlockData {
+            keys: vec![0.0; tpb * d],
+            vals: vec![0.0; tpb * d],
+            pos: vec![u32::MAX; tpb],
+        }
+    }
+}
+
+/// Engine-wide slab of KV blocks with a free-list and byte accounting.
+pub struct BlockArena {
+    d: usize,
+    tpb: usize,
+    free: Mutex<Vec<BlockData>>,
+    /// Next engine-global block id (never reused).
+    next_id: AtomicU64,
+    live_blocks: AtomicUsize,
+    free_blocks: AtomicUsize,
+    allocated_total: AtomicU64,
+    reclaimed_total: AtomicU64,
+}
+
+impl BlockArena {
+    pub fn new(d: usize, block_bytes: usize) -> BlockArena {
+        let tpb = tokens_per_block(block_bytes, d, 4);
+        BlockArena {
+            d,
+            tpb,
+            free: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            live_blocks: AtomicUsize::new(0),
+            free_blocks: AtomicUsize::new(0),
+            allocated_total: AtomicU64::new(0),
+            reclaimed_total: AtomicU64::new(0),
+        }
+    }
+
+    /// Shared-handle constructor (the form every owner actually wants).
+    pub fn shared(d: usize, block_bytes: usize) -> Arc<BlockArena> {
+        Arc::new(BlockArena::new(d, block_bytes))
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Tokens per block for this arena's geometry.
+    pub fn tokens_per_block(&self) -> usize {
+        self.tpb
+    }
+
+    /// Bytes of one full block (K + V halves), f32 elements.
+    pub fn block_bytes(&self) -> usize {
+        2 * self.tpb * self.d * 4
+    }
+
+    /// Check one block out of the arena: recycled storage when the
+    /// free-list has any, fresh zeroed storage otherwise. Returns the
+    /// block's engine-global id and its storage.
+    pub(crate) fn alloc(&self) -> (u64, BlockData) {
+        let recycled = self.free.lock().unwrap().pop();
+        let data = match recycled {
+            Some(d) => {
+                self.free_blocks.fetch_sub(1, Ordering::Relaxed);
+                d
+            }
+            None => BlockData::zeroed(self.tpb, self.d),
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.live_blocks.fetch_add(1, Ordering::Relaxed);
+        self.allocated_total.fetch_add(1, Ordering::Relaxed);
+        (id, data)
+    }
+
+    /// Return blocks to the free-list (their ids retire permanently).
+    pub(crate) fn reclaim<I: IntoIterator<Item = BlockData>>(&self, blocks: I) {
+        let mut free = self.free.lock().unwrap();
+        let mut n = 0usize;
+        for b in blocks {
+            debug_assert_eq!(b.keys.len(), self.tpb * self.d);
+            free.push(b);
+            n += 1;
+        }
+        drop(free);
+        self.free_blocks.fetch_add(n, Ordering::Relaxed);
+        self.live_blocks.fetch_sub(n, Ordering::Relaxed);
+        self.reclaimed_total.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Blocks currently checked out to live sessions.
+    pub fn live_blocks(&self) -> usize {
+        self.live_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Recycled blocks waiting on the free-list.
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Bytes held by live (checked-out) blocks.
+    pub fn live_bytes(&self) -> usize {
+        self.live_blocks() * self.block_bytes()
+    }
+
+    /// Bytes resident in the arena overall (live + free-list).
+    pub fn resident_bytes(&self) -> usize {
+        (self.live_blocks() + self.free_blocks()) * self.block_bytes()
+    }
+
+    /// Blocks ever allocated (fresh or recycled checkouts).
+    pub fn allocated_total(&self) -> u64 {
+        self.allocated_total.load(Ordering::Relaxed)
+    }
+
+    /// Blocks ever returned to the free-list.
+    pub fn reclaimed_total(&self) -> u64 {
+        self.reclaimed_total.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_matches_helper() {
+        let a = BlockArena::new(32, 2048);
+        assert_eq!(a.tokens_per_block(), 8);
+        assert_eq!(a.block_bytes(), 2 * 8 * 32 * 4);
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn alloc_reclaim_recycles_storage_not_ids() {
+        let a = BlockArena::new(4, 256);
+        let (id0, b0) = a.alloc();
+        let (id1, b1) = a.alloc();
+        assert_eq!((id0, id1), (0, 1));
+        assert_eq!(a.live_blocks(), 2);
+        assert_eq!(a.live_bytes(), 2 * a.block_bytes());
+        a.reclaim([b0, b1]);
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.free_blocks(), 2);
+        // storage recycled, ids fresh
+        let (id2, b2) = a.alloc();
+        assert_eq!(id2, 2);
+        assert_eq!(a.free_blocks(), 1);
+        assert_eq!(a.allocated_total(), 3);
+        assert_eq!(a.reclaimed_total(), 2);
+        a.reclaim([b2]);
+    }
+
+    #[test]
+    fn concurrent_alloc_reclaim_balances() {
+        let a = BlockArena::shared(8, 512);
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let a = Arc::clone(&a);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    let (_, b) = a.alloc();
+                    a.reclaim([b]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.allocated_total(), 800);
+        assert_eq!(a.reclaimed_total(), 800);
+    }
+}

@@ -1,14 +1,20 @@
-//! KV substrate: CPU-resident block store for key/value vectors.
+//! KV substrate: CPU-resident block storage for key/value vectors.
 //!
 //! The wave index operates on *clusters*; the wave buffer moves *blocks*
 //! (fixed-size physical units, paper §4.3). This module owns the physical
-//! layer: per-(layer, kv-head) block pools into which cluster tokens are
-//! packed contiguously. A cluster spans one or more blocks; blocks are not
-//! shared across clusters (the tail block of a cluster may be partially
-//! filled — the fragmentation the paper's copy kernels skip over).
+//! layer as a storage engine: one engine-wide [`BlockArena`] (slab +
+//! free-list + byte accounting) from which per-(layer, kv-head)
+//! [`HeadStore`] handles check blocks out and into which finished
+//! sessions return them. A cluster spans one or more blocks; blocks are
+//! not shared across clusters (the tail block of a cluster may be
+//! partially filled — the fragmentation the paper's copy kernels skip
+//! over). Block ids are engine-global, so the wave buffer's cache and
+//! mapping table address arena blocks directly by id.
 
+pub mod arena;
 pub mod store;
 
+pub use arena::BlockArena;
 pub use store::{BlockRef, HeadStore, KvStore};
 
 /// Tokens that fit in one physical block of `block_bytes`, given the head

@@ -1,126 +1,156 @@
-//! Block store: the CPU-memory home of all KV vectors.
+//! Block store handles: the per-(layer, kv-head) view over the shared
+//! [`BlockArena`]. A `HeadStore` owns no KV storage of its own — it is
+//! an arena reference plus the list of blocks checked out to this head,
+//! and dropping it returns every block to the arena free-list.
 
-use super::tokens_per_block;
+use super::arena::{BlockArena, BlockData};
+use std::sync::Arc;
 
-/// A reference to a span of tokens inside one physical block.
+/// A reference to a span of tokens inside one physical arena block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockRef {
-    /// Physical block id within the owning [`HeadStore`].
-    pub block: u32,
+    /// Engine-global arena block id (never reused; this is the key the
+    /// wave buffer's block cache and mapping table address blocks by).
+    pub block: u64,
+    /// Index of the block within the owning [`HeadStore`]'s block list
+    /// (O(1) data access without an id lookup).
+    pub idx: u32,
     /// Number of valid tokens in this block (≤ tokens_per_block).
     pub len: u16,
 }
 
-/// Per-(layer, kv-head) pool of KV blocks.
+/// One checked-out arena block plus its valid length.
+struct OwnedBlock {
+    id: u64,
+    len: u16,
+    data: BlockData,
+}
+
+/// Per-(layer, kv-head) handle over the shared arena.
 ///
-/// Keys and values are stored block-granular: block `b` owns
-/// `keys[b*tpb*d .. (b+1)*tpb*d]` (same for `vals`). Token positions are
-/// tracked alongside for recall metrics and needle evaluation.
+/// Keys and values are block-granular: block `b` holds `[len, d]` keys
+/// and values plus the original context position of each token slot.
 pub struct HeadStore {
-    d: usize,
-    tpb: usize,
-    keys: Vec<f32>,
-    vals: Vec<f32>,
-    /// Original context position of each token slot.
-    pos: Vec<u32>,
-    /// Valid token count per block.
-    lens: Vec<u16>,
+    arena: Arc<BlockArena>,
+    blocks: Vec<OwnedBlock>,
 }
 
 impl HeadStore {
+    /// Handle over a private single-head arena (tests, standalone
+    /// baselines). Engine code uses [`HeadStore::new_in`] with the
+    /// engine-owned arena instead.
     pub fn new(d: usize, block_bytes: usize) -> Self {
-        let tpb = tokens_per_block(block_bytes, d, 4);
-        HeadStore { d, tpb, keys: Vec::new(), vals: Vec::new(), pos: Vec::new(), lens: Vec::new() }
+        Self::new_in(BlockArena::shared(d, block_bytes))
+    }
+
+    /// Handle over a shared arena.
+    pub fn new_in(arena: Arc<BlockArena>) -> Self {
+        HeadStore { arena, blocks: Vec::new() }
     }
 
     pub fn d(&self) -> usize {
-        self.d
+        self.arena.d()
     }
 
     /// Tokens per block for this store.
     pub fn tokens_per_block(&self) -> usize {
-        self.tpb
+        self.arena.tokens_per_block()
+    }
+
+    /// The shared arena this handle allocates from.
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        &self.arena
     }
 
     pub fn n_blocks(&self) -> usize {
-        self.lens.len()
+        self.blocks.len()
     }
 
     pub fn n_tokens(&self) -> usize {
-        self.lens.iter().map(|&l| l as usize).sum()
+        self.blocks.iter().map(|b| b.len as usize).sum()
     }
 
     /// Bytes of one full block (K + V halves), f32 elements.
     pub fn block_bytes(&self) -> usize {
-        2 * self.tpb * self.d * 4
+        self.arena.block_bytes()
     }
 
-    /// Append a cluster's tokens, packing them into fresh blocks.
-    /// `keys`/`vals` are `[n, d]` flat; `pos[i]` is token i's context
-    /// position. Returns the block refs the cluster occupies, in order.
+    /// Append a cluster's tokens, packing them into freshly checked-out
+    /// arena blocks. `keys`/`vals` are `[n, d]` flat; `pos[i]` is token
+    /// i's context position. Returns the block refs the cluster
+    /// occupies, in order.
     pub fn alloc_cluster(&mut self, keys: &[f32], vals: &[f32], pos: &[u32]) -> Vec<BlockRef> {
+        let d = self.arena.d();
+        let tpb = self.arena.tokens_per_block();
         let n = pos.len();
-        debug_assert_eq!(keys.len(), n * self.d);
-        debug_assert_eq!(vals.len(), n * self.d);
-        let mut refs = Vec::with_capacity(n.div_ceil(self.tpb));
+        debug_assert_eq!(keys.len(), n * d);
+        debug_assert_eq!(vals.len(), n * d);
+        let mut refs = Vec::with_capacity(n.div_ceil(tpb));
         let mut off = 0;
         while off < n {
-            let take = (n - off).min(self.tpb);
-            let block = self.lens.len() as u32;
-            // Blocks are always allocated full-size; the tail stays zeroed
-            // (fragmentation skipped by the copy path via `len`).
-            self.keys.resize(self.keys.len() + self.tpb * self.d, 0.0);
-            self.vals.resize(self.vals.len() + self.tpb * self.d, 0.0);
-            self.pos.resize(self.pos.len() + self.tpb, u32::MAX);
-            let base = block as usize * self.tpb * self.d;
-            self.keys[base..base + take * self.d]
-                .copy_from_slice(&keys[off * self.d..(off + take) * self.d]);
-            self.vals[base..base + take * self.d]
-                .copy_from_slice(&vals[off * self.d..(off + take) * self.d]);
-            let pbase = block as usize * self.tpb;
-            self.pos[pbase..pbase + take].copy_from_slice(&pos[off..off + take]);
-            self.lens.push(take as u16);
-            refs.push(BlockRef { block, len: take as u16 });
+            let take = (n - off).min(tpb);
+            // Blocks are always checked out full-size; recycled tails
+            // stay stale but are never read (`len`-guarded accessors).
+            let (id, mut data) = self.arena.alloc();
+            data.keys[..take * d].copy_from_slice(&keys[off * d..(off + take) * d]);
+            data.vals[..take * d].copy_from_slice(&vals[off * d..(off + take) * d]);
+            data.pos[..take].copy_from_slice(&pos[off..off + take]);
+            let idx = self.blocks.len() as u32;
+            self.blocks.push(OwnedBlock { id, len: take as u16, data });
+            refs.push(BlockRef { block: id, idx, len: take as u16 });
             off += take;
         }
         refs
     }
 
+    fn owned(&self, r: BlockRef) -> &OwnedBlock {
+        let b = &self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        debug_assert_eq!(b.len, r.len);
+        b
+    }
+
     /// Key vectors of a block: `[len, d]` flat.
     pub fn block_keys(&self, r: BlockRef) -> &[f32] {
-        let base = r.block as usize * self.tpb * self.d;
-        &self.keys[base..base + r.len as usize * self.d]
+        &self.owned(r).data.keys[..r.len as usize * self.arena.d()]
     }
 
     /// Value vectors of a block: `[len, d]` flat.
     pub fn block_vals(&self, r: BlockRef) -> &[f32] {
-        let base = r.block as usize * self.tpb * self.d;
-        &self.vals[base..base + r.len as usize * self.d]
+        &self.owned(r).data.vals[..r.len as usize * self.arena.d()]
     }
 
     /// Context positions of a block's tokens.
     pub fn block_pos(&self, r: BlockRef) -> &[u32] {
-        let base = r.block as usize * self.tpb;
-        &self.pos[base..base + r.len as usize]
-    }
-
-    /// Valid length of block `b`.
-    pub fn block_len(&self, b: u32) -> u16 {
-        self.lens[b as usize]
+        &self.owned(r).data.pos[..r.len as usize]
     }
 }
 
-/// All KV data of one sequence: `layers x kv_heads` head stores.
+impl Drop for HeadStore {
+    fn drop(&mut self) {
+        // A finished session returns every block it held to the arena.
+        self.arena.reclaim(self.blocks.drain(..).map(|b| b.data));
+    }
+}
+
+/// All KV data of one sequence: `layers x kv_heads` head stores sharing
+/// one arena.
 pub struct KvStore {
     n_layers: usize,
     kv_heads: usize,
+    arena: Arc<BlockArena>,
     stores: Vec<HeadStore>,
 }
 
 impl KvStore {
     pub fn new(n_layers: usize, kv_heads: usize, d: usize, block_bytes: usize) -> Self {
-        let stores = (0..n_layers * kv_heads).map(|_| HeadStore::new(d, block_bytes)).collect();
-        KvStore { n_layers, kv_heads, stores }
+        Self::new_in(BlockArena::shared(d, block_bytes), n_layers, kv_heads)
+    }
+
+    pub fn new_in(arena: Arc<BlockArena>, n_layers: usize, kv_heads: usize) -> Self {
+        let stores =
+            (0..n_layers * kv_heads).map(|_| HeadStore::new_in(Arc::clone(&arena))).collect();
+        KvStore { n_layers, kv_heads, arena, stores }
     }
 
     pub fn head(&self, layer: usize, kv_head: usize) -> &HeadStore {
@@ -137,6 +167,10 @@ impl KvStore {
 
     pub fn kv_heads(&self) -> usize {
         self.kv_heads
+    }
+
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        &self.arena
     }
 
     /// Total CPU-resident bytes across all heads.
@@ -200,11 +234,36 @@ mod tests {
     }
 
     #[test]
+    fn drop_returns_blocks_to_arena() {
+        let d = 16;
+        let arena = BlockArena::shared(d, 512);
+        let baseline = arena.live_blocks();
+        {
+            let mut hs = HeadStore::new_in(Arc::clone(&arena));
+            let (k, v, p) = mk(30, d, 4);
+            hs.alloc_cluster(&k, &v, &p);
+            assert!(arena.live_blocks() > baseline);
+        }
+        assert_eq!(arena.live_blocks(), baseline);
+        assert!(arena.free_blocks() > 0);
+        // recycled storage serves the next store (tpb=4: 30 tokens -> 8
+        // blocks reclaimed; 8 tokens -> 2 blocks checked back out)
+        assert_eq!(arena.free_blocks(), 8);
+        let mut hs2 = HeadStore::new_in(Arc::clone(&arena));
+        let (k, v, p) = mk(8, d, 5);
+        let r = hs2.alloc_cluster(&k, &v, &p);
+        assert_eq!(hs2.block_keys(r[0]), &k[..4 * d]);
+        assert_eq!(arena.free_blocks(), 6);
+        assert_eq!(arena.allocated_total(), 10);
+    }
+
+    #[test]
     fn kvstore_shapes() {
         let st = KvStore::new(4, 2, 32, 2048);
         assert_eq!(st.n_layers(), 4);
         assert_eq!(st.kv_heads(), 2);
         assert_eq!(st.total_bytes(), 0);
+        assert_eq!(st.arena().live_blocks(), 0);
     }
 
     #[test]
@@ -215,5 +274,8 @@ mod tests {
         assert_eq!(st.head(1, 0).n_tokens(), 4);
         assert_eq!(st.head(0, 0).n_tokens(), 0);
         assert_eq!(st.head(1, 1).n_tokens(), 0);
+        // all heads draw from the one shared arena
+        assert_eq!(st.arena().live_blocks(), 1);
+        assert_eq!(st.total_bytes(), st.arena().live_bytes());
     }
 }

@@ -114,6 +114,11 @@ fn cmd_serve(args: &Args) -> i32 {
             },
             Action::Idle => break,
         }
+        // Session-finished events flow into engine reclamation: the
+        // session's KV blocks go back to the arena free-list.
+        for fid in sched.take_finished() {
+            eng.finish_session(fid);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let toks = eng.metrics.counter("decoded_tokens");
@@ -124,7 +129,21 @@ fn cmd_serve(args: &Args) -> i32 {
     if mode == AttnMode::Wave {
         println!("wave-buffer hit ratio: {:.3}", eng.buffer_hit_ratio());
         println!("pcie bytes: {}", eng.metrics.counter("pcie_bytes"));
+        println!("{}", eng.metrics.summary("assemble_s"));
+        println!(
+            "assembly steps: parallel={} serial={}",
+            eng.metrics.counter("assembly_parallel_steps"),
+            eng.metrics.counter("assembly_serial_steps"),
+        );
     }
+    println!(
+        "arena: live={} blocks ({} B), free-list={} blocks, reclaimed={} blocks over {} sessions",
+        eng.arena().live_blocks(),
+        eng.arena().live_bytes(),
+        eng.arena().free_blocks(),
+        eng.metrics.counter("arena_reclaimed_blocks"),
+        eng.metrics.counter("sessions_finished"),
+    );
     for s in sched.sessions() {
         println!(
             "  req {}: {} tokens, first {:?}...",

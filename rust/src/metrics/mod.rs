@@ -1,5 +1,6 @@
-//! Serving metrics: named counters and latency histograms with percentile
-//! summaries, shared across coordinator / engine / benches.
+//! Serving metrics: named counters, point-in-time gauges and latency
+//! histograms with percentile summaries, shared across coordinator /
+//! engine / benches.
 
 use crate::util::stats::Sample;
 use std::collections::HashMap;
@@ -9,6 +10,7 @@ use std::sync::Mutex;
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, u64>>,
+    gauges: Mutex<HashMap<String, u64>>,
     samples: Mutex<HashMap<String, Sample>>,
 }
 
@@ -23,6 +25,23 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a point-in-time gauge (e.g. arena occupancy after an event).
+    pub fn set_gauge(&self, name: &str, v: u64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all gauges, sorted by name.
+    pub fn gauges_snapshot(&self) -> Vec<(String, u64)> {
+        let mut v: Vec<(String, u64)> =
+            self.gauges.lock().unwrap().iter().map(|(k, g)| (k.clone(), *g)).collect();
+        v.sort();
+        v
     }
 
     /// Record one observation (e.g. a latency in seconds).
@@ -100,6 +119,16 @@ mod tests {
     fn summary_handles_missing_series() {
         let m = Metrics::new();
         assert!(m.summary("nope").contains("no samples"));
+    }
+
+    #[test]
+    fn gauges_overwrite_not_accumulate() {
+        let m = Metrics::new();
+        m.set_gauge("arena_live_blocks", 7);
+        m.set_gauge("arena_live_blocks", 3);
+        assert_eq!(m.gauge("arena_live_blocks"), 3);
+        assert_eq!(m.gauge("absent"), 0);
+        assert_eq!(m.gauges_snapshot(), vec![("arena_live_blocks".to_string(), 3)]);
     }
 
     #[test]

@@ -152,6 +152,7 @@ mod tests {
 
     #[test]
     fn smoke_executable_runs() {
+        crate::require_live_path!();
         let mut rt = Runtime::load(&artifacts_dir()).unwrap();
         let x = lit_f32_shaped(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
         let y = lit_f32_shaped(&[1.0; 4], &[2, 2]).unwrap();
@@ -169,6 +170,7 @@ mod tests {
 
     #[test]
     fn param_count_checked() {
+        crate::require_live_path!();
         let mut rt = Runtime::load(&artifacts_dir()).unwrap();
         let x = lit_f32_shaped(&[0.0; 4], &[2, 2]).unwrap();
         assert!(rt.run("smoke", &[x]).is_err());

@@ -156,6 +156,7 @@ mod tests {
 
     #[test]
     fn loads_real_manifest() {
+        crate::require_artifacts!();
         let m = Manifest::load(&artifacts_dir()).unwrap();
         assert_eq!(m.model.name, "tinylm");
         assert_eq!(m.model.n_layers, 4);
@@ -168,6 +169,7 @@ mod tests {
 
     #[test]
     fn weight_layout_is_contiguous() {
+        crate::require_artifacts!();
         let m = Manifest::load(&artifacts_dir()).unwrap();
         let mut off = 0;
         for w in &m.weights {
@@ -179,6 +181,7 @@ mod tests {
 
     #[test]
     fn batch_bucketing() {
+        crate::require_artifacts!();
         let m = Manifest::load(&artifacts_dir()).unwrap();
         assert_eq!(m.buckets.batch_bucket(1), Some(1));
         assert_eq!(m.buckets.batch_bucket(3), Some(4));

@@ -19,3 +19,40 @@ pub fn default_artifacts_dir() -> String {
         format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
     })
 }
+
+/// True when `make artifacts` has produced the manifest (needed by the
+/// manifest/weights loaders and everything downstream of them).
+pub fn artifacts_present() -> bool {
+    std::path::Path::new(&format!("{}/manifest.json", default_artifacts_dir())).exists()
+}
+
+/// True when the full live path can run: artifacts on disk AND a real
+/// PJRT backend (the vendored offline `xla` stub reports unavailable —
+/// see DESIGN.md §1). Tests of the live path skip cleanly when false
+/// instead of failing on an environment they cannot control.
+pub fn live_path_available() -> bool {
+    artifacts_present() && xla::PjRtClient::cpu().is_ok()
+}
+
+/// Test guard: skip (early-return) unless AOT artifacts are on disk.
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        if !$crate::runtime::artifacts_present() {
+            eprintln!("skipped: artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// Test guard: skip (early-return) unless artifacts AND a real PJRT
+/// backend are available (offline builds ship the `xla` stub).
+#[macro_export]
+macro_rules! require_live_path {
+    () => {
+        if !$crate::runtime::live_path_available() {
+            eprintln!("skipped: live PJRT path unavailable (offline build, DESIGN.md \u{a7}1)");
+            return;
+        }
+    };
+}

@@ -234,6 +234,7 @@ mod tests {
 
     #[test]
     fn embed_qkv_mlp_logits_roundtrip() {
+        crate::require_live_path!();
         let mut lm = TinyLm::load(&default_artifacts_dir()).unwrap();
         let hidden = lm.embed(&[5]).unwrap();
         assert_eq!(hidden.shape(), &[1, 256]);
@@ -253,6 +254,7 @@ mod tests {
 
     #[test]
     fn wave_attention_with_single_exact_token_returns_its_value() {
+        crate::require_live_path!();
         let mut lm = TinyLm::load(&default_artifacts_dir()).unwrap();
         let (kvh, d) = (lm.cfg.kv_heads, lm.cfg.d_head);
         let (ne, m) = (lm.buckets.wave_ne, lm.buckets.wave_m);

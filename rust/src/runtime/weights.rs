@@ -49,6 +49,7 @@ mod tests {
 
     #[test]
     fn loads_all_weights_with_shapes() {
+        crate::require_artifacts!();
         let m = Manifest::load(&artifacts_dir()).unwrap();
         let w = Weights::load(&artifacts_dir(), &m).unwrap();
         for spec in &m.weights {

@@ -4,11 +4,12 @@
 //! Used by the wave buffer for asynchronous cache updates (paper §4.3:
 //! "cache updates are decoupled from cache access ... performed
 //! asynchronously by the CPU, in parallel with the data copy and
-//! attention computation") and by experiment harnesses for parallel
-//! trials.
+//! attention computation"), by the engine's per-head execution-buffer
+//! fan-out ([`ThreadPool::scope_for_each`]) and by experiment harnesses
+//! for parallel trials.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -21,6 +22,9 @@ struct Shared {
     in_flight: AtomicUsize,
     done: Condvar,
     shutdown: Mutex<bool>,
+    /// jobs that panicked (workers survive; scopes turn this into a
+    /// caller-side panic so failures cannot be silently swallowed)
+    panicked: AtomicUsize,
 }
 
 /// Fixed-size worker pool with a `wait_idle` barrier.
@@ -37,6 +41,7 @@ impl ThreadPool {
             in_flight: AtomicUsize::new(0),
             done: Condvar::new(),
             shutdown: Mutex::new(false),
+            panicked: AtomicUsize::new(0),
         });
         let workers = (0..n_threads.max(1))
             .map(|_| {
@@ -82,6 +87,78 @@ impl ThreadPool {
         }
         self.wait_idle();
     }
+
+    /// Jobs that panicked since the pool was created.
+    pub fn panicked(&self) -> usize {
+        self.shared.panicked.load(Ordering::SeqCst)
+    }
+
+    /// Borrow-friendly scoped fan-out: run `f(i)` for every `i in 0..n`
+    /// across the pool and return once *these* jobs (not the whole
+    /// queue) have completed. Unlike [`ThreadPool::scoped_for_each`],
+    /// `f` may borrow the caller's stack — the decode hot path fans
+    /// per-(sequence, head) execution-buffer assembly out through here
+    /// with borrowed session state.
+    ///
+    /// Panics if any job panicked. Must not be called from a pool
+    /// worker (the scope would wait on jobs that can be queued behind
+    /// itself).
+    pub fn scope_for_each<F: Fn(usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        let scope = Arc::new(Scope {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            job_panicked: AtomicBool::new(false),
+        });
+        // SAFETY: `f` is smuggled across the 'static job boundary as a
+        // raw pointer. Every job is joined below before this function
+        // returns, so the pointer never outlives the borrow; jobs that
+        // panic still release the scope via `ScopeTicket`'s Drop. `F:
+        // Sync` makes the concurrent `&F` calls sound.
+        let fp = f as *const F as usize;
+        for i in 0..n {
+            let scope = Arc::clone(&scope);
+            self.submit(move || {
+                let _ticket = ScopeTicket(scope);
+                unsafe { (*(fp as *const F))(i) }
+            });
+        }
+        let mut left = scope.remaining.lock().unwrap();
+        while *left > 0 {
+            left = scope.done.wait(left).unwrap();
+        }
+        drop(left);
+        // The flag is set in ScopeTicket::drop, BEFORE the final
+        // decrement/notify (ordered by the scope mutex), so it cannot
+        // race the wakeup; being scope-local, a panic in an unrelated
+        // pool job can never fail a successful scope.
+        assert!(!scope.job_panicked.load(Ordering::SeqCst), "a scoped pool job panicked");
+    }
+}
+
+/// Join state of one `scope_for_each` call.
+struct Scope {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    job_panicked: AtomicBool,
+}
+
+/// Releases one unit of a `scope_for_each` scope, panic or not.
+struct ScopeTicket(Arc<Scope>);
+
+impl Drop for ScopeTicket {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.job_panicked.store(true, Ordering::SeqCst);
+        }
+        let mut left = self.0.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.0.done.notify_all();
+        }
+    }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -100,7 +177,13 @@ fn worker_loop(shared: Arc<Shared>) {
         };
         match job {
             Some(j) => {
-                j();
+                // Contain job panics: the worker survives, the panic is
+                // counted, and scoped callers re-raise it. Without this
+                // a panicking job would strand `in_flight` and deadlock
+                // every later `wait_idle`.
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
+                    shared.panicked.fetch_add(1, Ordering::SeqCst);
+                }
                 if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
                     // last job: wake any wait_idle callers
                     let _guard = shared.queue.lock().unwrap();
@@ -161,6 +244,65 @@ mod tests {
             }),
         );
         assert!(hits.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn scope_for_each_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<u64> = (0..128).collect();
+        let out: Vec<Mutex<u64>> = (0..128).map(|_| Mutex::new(0)).collect();
+        pool.scope_for_each(input.len(), &|i| {
+            *out[i].lock().unwrap() = input[i] * 2;
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(*o.lock().unwrap(), 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn scope_waits_only_for_its_own_jobs() {
+        // A slow unrelated job must not block the scope's return.
+        let pool = ThreadPool::new(2);
+        let slow = Arc::new(AtomicU64::new(0));
+        let s = Arc::clone(&slow);
+        pool.submit(move || {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            s.store(1, Ordering::SeqCst);
+        });
+        let hits = Mutex::new(0usize);
+        pool.scope_for_each(8, &|_| {
+            *hits.lock().unwrap() += 1;
+        });
+        assert_eq!(*hits.lock().unwrap(), 8);
+        pool.wait_idle();
+        assert_eq!(slow.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool job panicked")]
+    fn scope_reraises_job_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scope_for_each(4, &|i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_job_panic() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("contained"));
+        pool.wait_idle();
+        assert_eq!(pool.panicked(), 1);
+        // pool still functional afterwards
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.submit(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
     }
 
     #[test]

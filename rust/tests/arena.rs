@@ -1,0 +1,191 @@
+//! Arena lifecycle + parallel fan-out integration tests (DESIGN.md §2-3
+//! invariants): finishing sessions returns every KV block to the shared
+//! [`BlockArena`]'s free-list (no leaks across session churn), recycled
+//! storage serves later sessions, and the thread-pool head fan-out
+//! assembles execution buffers bit-identical to the sequential path.
+
+use retroinfer::buffer::WaveBuffer;
+use retroinfer::config::{BufferConfig, ZoneConfig};
+use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
+use retroinfer::index::WaveIndex;
+use retroinfer::kvcache::BlockArena;
+use retroinfer::prop_assert;
+use retroinfer::prop_assert_eq;
+use retroinfer::runtime::tinylm::WaveInputs;
+use retroinfer::util::prop::check;
+use retroinfer::util::rng::Rng;
+use retroinfer::util::threadpool::ThreadPool;
+use std::sync::Arc;
+
+fn small_zone() -> ZoneConfig {
+    ZoneConfig {
+        steady_sink: 4,
+        steady_local: 16,
+        tokens_per_cluster: 8,
+        build_segment: 256,
+        update_segment: 32,
+        kmeans_iters: 4,
+        ..ZoneConfig::default()
+    }
+}
+
+/// A "session" at the substrate level: layers × heads wave indexes
+/// checked out of one shared arena, like `LiveEngine::prefill` builds.
+fn build_session(
+    arena: &Arc<BlockArena>,
+    layers: usize,
+    heads: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<WaveIndex> {
+    let d = arena.d();
+    (0..layers * heads)
+        .map(|slot| {
+            let keys = rng.normal_vec(n * d);
+            let vals = rng.normal_vec(n * d);
+            WaveIndex::build_in(arena, small_zone(), &keys, &vals, slot as u64)
+        })
+        .collect()
+}
+
+/// Invariant: after any number of sessions are created, decoded
+/// (appended into), and finished, the arena's live-block count returns
+/// to its pre-session baseline — nothing leaks, and the free-list is
+/// actually recycled by later sessions.
+#[test]
+fn prop_arena_reclaims_every_session_block() {
+    check("arena-reclaim", 8, |rng| {
+        let d = 16;
+        let arena = BlockArena::shared(d, 512);
+        let baseline = arena.live_blocks();
+        prop_assert_eq!(baseline, 0);
+        let sessions = 1 + rng.below(4);
+        let mut max_live = 0usize;
+        for s in 0..sessions {
+            let n = 128 + rng.below(256);
+            let mut idxs = build_session(&arena, 2, 2, n, rng);
+            prop_assert!(arena.live_blocks() > baseline, "session holds no blocks");
+            // decode phase: appends trigger incremental re-clustering,
+            // which checks out more blocks mid-session
+            let appends = rng.below(100);
+            for _ in 0..appends {
+                for idx in idxs.iter_mut() {
+                    let k = rng.normal_vec(d);
+                    let v = rng.normal_vec(d);
+                    idx.append(&k, &v);
+                }
+            }
+            let live_before_drop = arena.live_blocks();
+            max_live = max_live.max(live_before_drop);
+            let expect_reclaimed = arena.reclaimed_total() + live_before_drop as u64;
+            drop(idxs);
+            prop_assert!(
+                arena.live_blocks() == baseline,
+                "session {} leaked {} blocks",
+                s,
+                arena.live_blocks() - baseline
+            );
+            prop_assert_eq!(arena.reclaimed_total(), expect_reclaimed);
+            prop_assert!(arena.free_blocks() >= live_before_drop, "free-list lost blocks");
+        }
+        // sessions run one at a time, so recycled storage must bound the
+        // arena's footprint by the LARGEST session — not the sum of all
+        // sessions (the grow-only leak this refactor removes)
+        prop_assert_eq!(arena.free_blocks(), max_live);
+        prop_assert_eq!(arena.resident_bytes(), max_live * arena.block_bytes());
+        Ok(())
+    });
+}
+
+/// Invariant: the batched thread-pool fan-out writes exactly the same
+/// WaveInputs bytes as the sequential loop — parallel assembly can
+/// never change decoded tokens (the kernel consumes only these arrays).
+#[test]
+fn prop_parallel_assembly_bit_identical_to_sequential() {
+    check("assembly-parallel-identical", 6, |rng| {
+        let d = 16;
+        let (kvh, group) = (4, 2);
+        let b = 1 + rng.below(4);
+        let n = 256 + rng.below(256);
+        let arena = BlockArena::shared(d, 512);
+        let pool = Arc::new(ThreadPool::new(4));
+        let bcfg = BufferConfig { cpu_threads: 4, ..BufferConfig::default() };
+        let mut heads = Vec::new();
+        for h in 0..kvh {
+            let keys = rng.normal_vec(n * d);
+            let vals = rng.normal_vec(n * d);
+            let idx = WaveIndex::build_in(&arena, small_zone(), &keys, &vals, h as u64);
+            let cap = WaveBuffer::capacity_for(&bcfg, n, idx.store().tokens_per_block());
+            let buf = WaveBuffer::new(
+                bcfg.clone(),
+                d,
+                idx.store().tokens_per_block(),
+                cap,
+                Arc::clone(&pool),
+            );
+            buf.register_index(&idx);
+            heads.push((idx, buf));
+        }
+        let tasks: Vec<HeadTask> = (0..b * kvh)
+            .map(|t| {
+                let (idx, buf) = &heads[t % kvh];
+                HeadTask { index: idx, buffer: buf }
+            })
+            .collect();
+        let shape = AssembleShape { ne: 128, m_cap: 32, d, group };
+        let qg_all = rng.normal_vec(b * kvh * group * d);
+
+        let seq = BatchAssembler::new(Arc::clone(&pool), false);
+        let par = BatchAssembler::new(Arc::clone(&pool), true);
+        // dirty both outputs first: assembly must fully overwrite its
+        // slice, so reuse across layers/steps cannot leak stale state
+        let mut wi_seq = WaveInputs::zeros(b, kvh, shape.ne, shape.m_cap, d);
+        let mut wi_par = WaveInputs::zeros(b, kvh, shape.ne, shape.m_cap, d);
+        wi_seq.kmask.fill(7.0);
+        wi_par.cent.fill(-3.0);
+        for round in 0..3 {
+            seq.assemble_into(&tasks, &qg_all, shape, &mut wi_seq);
+            par.assemble_into(&tasks, &qg_all, shape, &mut wi_par);
+            prop_assert!(wi_seq.kx == wi_par.kx, "kx diverged (round {})", round);
+            prop_assert!(wi_seq.vx == wi_par.vx, "vx diverged (round {})", round);
+            prop_assert!(wi_seq.kmask == wi_par.kmask, "kmask diverged (round {})", round);
+            prop_assert!(wi_seq.cent == wi_par.cent, "cent diverged (round {})", round);
+            prop_assert!(wi_seq.vsum == wi_par.vsum, "vsum diverged (round {})", round);
+            prop_assert!(wi_seq.csize == wi_par.csize, "csize diverged (round {})", round);
+            prop_assert!(wi_seq.emask == wi_par.emask, "emask diverged (round {})", round);
+        }
+        for (_, buf) in &heads {
+            buf.flush();
+            prop_assert!(buf.check_consistency(), "buffer inconsistent after fan-out");
+        }
+        Ok(())
+    });
+}
+
+/// The engine-facing shape of reclamation: many concurrent "sessions"
+/// live at once, finish out of order, and the arena ends at baseline
+/// with its id space still monotone (no reuse, so stale cache keys from
+/// finished sessions can never alias a new session's blocks).
+#[test]
+fn interleaved_session_churn_keeps_arena_balanced() {
+    let d = 16;
+    let arena = BlockArena::shared(d, 512);
+    let mut rng = Rng::new(77);
+    let mut live: Vec<Vec<WaveIndex>> = Vec::new();
+    for round in 0..6 {
+        live.push(build_session(&arena, 2, 2, 192 + 32 * round, &mut rng));
+        if round % 2 == 1 {
+            // finish the OLDEST session while newer ones stay live
+            live.remove(0);
+        }
+        let held: usize = live
+            .iter()
+            .flat_map(|s| s.iter())
+            .map(|i| i.store().n_blocks())
+            .sum();
+        assert_eq!(arena.live_blocks(), held, "arena count != sum of live handles");
+    }
+    live.clear();
+    assert_eq!(arena.live_blocks(), 0);
+    assert_eq!(arena.allocated_total(), arena.reclaimed_total());
+}

@@ -249,6 +249,7 @@ fn prop_scheduler_conserves_requests() {
 /// Rust tripartite oracle on random (masked, padded) inputs.
 #[test]
 fn kernel_matches_rust_oracle_via_pjrt() {
+    retroinfer::require_live_path!();
     use retroinfer::attention::{tripartite_attention, TripartiteInputs};
     use retroinfer::runtime::tinylm::{TinyLm, WaveInputs};
     use retroinfer::runtime::default_artifacts_dir;

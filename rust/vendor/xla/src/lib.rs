@@ -1,0 +1,230 @@
+//! Offline stub of the `xla` PJRT bindings (DESIGN.md §1).
+//!
+//! The build image ships no XLA/PJRT shared library, so this vendored
+//! crate keeps the engine compiling and testing offline. Host-side
+//! literal plumbing (construction, reshape, readback) is real; anything
+//! that needs a device — client construction, HLO parsing, compilation,
+//! execution — returns [`Error::Unavailable`]. `runtime::Runtime::load`
+//! therefore fails cleanly at session start, and every live-PJRT code
+//! path (engine tests, serve examples) reports the stub instead of
+//! crashing. Swapping this path dependency for the real `xla` crate in
+//! `rust/Cargo.toml` re-enables live TinyLM execution with no source
+//! changes.
+
+use std::borrow::Borrow;
+
+/// Stub error. `Unavailable` marks device functionality that needs the
+/// real PJRT bindings; `Shape` marks host-side literal misuse.
+#[derive(Clone, Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+    Shape(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Element types a [`Literal`] can hold. Public only because the sealed
+/// [`NativeType`] trait mentions it; not part of the usable API.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dims of an array-shaped literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Native element types supported by the stub.
+pub trait NativeType: sealed::Sealed + Copy {
+    fn wrap(data: Vec<Self>) -> Payload
+    where
+        Self: Sized;
+    fn unwrap(p: &Payload) -> Option<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+use self::Payload as P;
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        P::F32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<f32>> {
+        match p {
+            P::F32(v) => Some(v.clone()),
+            P::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        P::I32(data)
+    }
+    fn unwrap(p: &Payload) -> Option<Vec<i32>> {
+        match p {
+            P::I32(v) => Some(v.clone()),
+            P::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side literal: shaped, typed data.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// 1-D literal over a native slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { shape: vec![data.len() as i64], payload: T::wrap(data.to_vec()) }
+    }
+
+    /// Scalar i32 literal.
+    pub fn scalar(v: i32) -> Literal {
+        Literal { shape: Vec::new(), payload: P::I32(vec![v]) }
+    }
+
+    fn elements(&self) -> usize {
+        match &self.payload {
+            P::F32(v) => v.len(),
+            P::I32(v) => v.len(),
+        }
+    }
+
+    /// Same data, new logical shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.elements() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.shape
+            )));
+        }
+        Ok(Literal { shape: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they
+    /// only come back from device execution), so this is unavailable.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple on a stub literal")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.shape.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .ok_or_else(|| Error::Shape("literal element type mismatch".into()))
+    }
+}
+
+/// Parsed HLO module (device-side only; never constructible offline).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file (offline xla stub)")
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (never constructible offline).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync (offline xla stub)")
+    }
+}
+
+/// Compiled executable (never constructible offline).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute (offline xla stub)")
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b (offline xla stub)")
+    }
+}
+
+/// PJRT client handle. Construction fails offline — this is the single
+/// gate that keeps every live-execution path behind a clean error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable(
+            "PjRtClient::cpu: PJRT is not available in this offline build \
+             (vendored xla stub; swap rust/Cargo.toml to the real `xla` crate)",
+        )
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile (offline xla stub)")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal (offline xla stub)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn device_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}

@@ -3,35 +3,68 @@
 //! batch of requests through the full coordinator -> scheduler -> wave
 //! index -> wave buffer -> PJRT pipeline in BOTH attention modes, and
 //! reports latency, throughput, data movement and cross-mode agreement.
+//! A third pass re-serves the wave workload under an arena capacity cap
+//! sized BELOW the uncapped run's peak occupancy: admission control must
+//! defer prefills, keep resident bytes under the cap at every step, and
+//! still complete every request (DESIGN.md §2 "Admission & quotas").
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 //!
 //! Flags: --requests N (default 4)  --prompt-len L (2048)  --max-new M (24)
+//!        --tenants T (2)  --capacity-blocks C (0 = auto: 60% of peak)
 
+use retroinfer::config::CapacityConfig;
 use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
 use retroinfer::engine::{live::structured_prompt, AttnMode, LiveEngine};
 use retroinfer::runtime::default_artifacts_dir;
 use retroinfer::util::cli::Args;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
+
+struct ServeStats {
+    out: HashMap<u64, Vec<i32>>,
+    wall_s: f64,
+    decode_tps: f64,
+    hit_ratio: f64,
+    peak_live_blocks: u64,
+    deferrals: u64,
+}
 
 fn serve(
     mode: AttnMode,
     prompts: &[Vec<i32>],
     max_new: usize,
-) -> anyhow::Result<(HashMap<u64, Vec<i32>>, f64, f64, f64)> {
+    tenants: usize,
+    capacity_blocks: Option<usize>,
+) -> anyhow::Result<ServeStats> {
     let dir = default_artifacts_dir();
     let mut eng = LiveEngine::new(&dir, mode)?;
-    let mut sched = Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8));
+    let mut sched = match capacity_blocks {
+        Some(cap) => {
+            eng.set_arena_capacity_blocks(Some(cap));
+            // default knobs: 20% decode headroom, 1.5x footprint fudge
+            Scheduler::with_admission(
+                Batcher::new(&[1, 2, 4, 8], 8),
+                Arc::clone(eng.arena()),
+                eng.admission_config(&CapacityConfig::default()),
+            )
+        }
+        None => Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8)),
+    };
     for (id, p) in prompts.iter().enumerate() {
-        sched.submit(Request::new(id as u64, p.clone(), max_new), 0.0);
+        let tenant = (id % tenants.max(1)) as u32;
+        sched.submit(Request::new(id as u64, p.clone(), max_new).with_tenant(tenant), 0.0);
     }
     let t0 = Instant::now();
     while !sched.all_done() {
         match sched.next_action() {
             Action::Prefill(id) => {
-                let p = sched.session(id).unwrap().req.prompt.clone();
-                let tok = eng.prefill(id, &p)?;
+                let (tenant, p) = {
+                    let s = sched.session(id).unwrap();
+                    (s.req.tenant, s.req.prompt.clone())
+                };
+                let tok = eng.prefill_for(id, tenant, &p)?;
                 sched.prefill_done(id, tok, t0.elapsed().as_secs_f64());
             }
             Action::DecodeBatch(ids, bucket) => {
@@ -41,7 +74,22 @@ fn serve(
                     sched.token_decoded(*id, t, now);
                 }
             }
+            // deferred prefills re-enter once reclamation below frees blocks
+            Action::Defer => {}
             Action::Idle => break,
+        }
+        // the capped run's core invariant, checked at EVERY step
+        if let Some(cap) = capacity_blocks {
+            assert!(
+                eng.arena().live_blocks() <= cap,
+                "arena live blocks {} exceeded capacity {cap}",
+                eng.arena().live_blocks()
+            );
+            assert!(
+                eng.arena().resident_bytes() <= cap * eng.arena().block_bytes(),
+                "arena resident bytes {} exceeded capacity",
+                eng.arena().resident_bytes()
+            );
         }
         // Finished sessions hand their KV blocks back to the arena.
         for fid in sched.take_finished() {
@@ -53,13 +101,24 @@ fn serve(
         0,
         "all sessions finished — every arena block must be reclaimed"
     );
+    assert_eq!(sched.n_rejections(), 0, "no request may be dropped");
+    for s in sched.sessions() {
+        assert_eq!(s.generated.len(), max_new, "request {} lost tokens", s.req.id);
+    }
     let wall = t0.elapsed().as_secs_f64();
     let decode_tokens = eng.metrics.counter("decoded_tokens") as f64;
     let decode_wall: f64 =
         eng.metrics.mean("decode_step_s") * eng.metrics.count("decode_step_s") as f64;
     let out: HashMap<u64, Vec<i32>> =
         sched.sessions().map(|s| (s.req.id, s.generated.clone())).collect();
-    Ok((out, wall, decode_tokens / decode_wall.max(1e-9), eng.buffer_hit_ratio()))
+    Ok(ServeStats {
+        out,
+        wall_s: wall,
+        decode_tps: decode_tokens / decode_wall.max(1e-9),
+        hit_ratio: eng.buffer_hit_ratio(),
+        peak_live_blocks: eng.metrics.gauge("arena_live_blocks_peak"),
+        deferrals: sched.n_deferrals(),
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -67,36 +126,70 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 4);
     let prompt_len = args.usize_or("prompt-len", 2048);
     let max_new = args.usize_or("max-new", 24);
+    let tenants = args.usize_or("tenants", 2);
+    let cap_flag = args.usize_or("capacity-blocks", 0);
 
-    println!("# end-to-end serve: {n_requests} requests x {prompt_len} prompt + {max_new} new tokens");
+    println!("# end-to-end serve: {n_requests} requests x {prompt_len} prompt + {max_new} new tokens ({tenants} tenants)");
     let prompts: Vec<Vec<i32>> =
         (0..n_requests).map(|i| structured_prompt(prompt_len, 100 + i as u64)).collect();
 
-    let (full_out, full_wall, full_tps, _) = serve(AttnMode::Full, &prompts, max_new)?;
-    println!("full attention : wall={full_wall:.2}s decode={full_tps:.1} tok/s");
+    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None)?;
+    println!("full attention : wall={:.2}s decode={:.1} tok/s", full.wall_s, full.decode_tps);
 
-    let (_wave_out, wave_wall, wave_tps, hit) = serve(AttnMode::Wave, &prompts, max_new)?;
-    println!("wave attention : wall={wave_wall:.2}s decode={wave_tps:.1} tok/s hit_ratio={hit:.3}");
+    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None)?;
+    println!(
+        "wave attention : wall={:.2}s decode={:.1} tok/s hit_ratio={:.3} peak_arena={} blocks",
+        wave.wall_s, wave.decode_tps, wave.hit_ratio, wave.peak_live_blocks
+    );
+
+    // Overcommitted re-run: cap the arena below the uncapped peak so the
+    // aggregate footprint exceeds it; admission must defer, never drop.
+    // The floor of 2x one session's share keeps a single request always
+    // admittable (usable capacity must cover its ~1.5x-fudged estimate).
+    let peak = wave.peak_live_blocks as usize;
+    let cap = if cap_flag > 0 {
+        cap_flag
+    } else {
+        (peak * 3 / 5).max(2 * peak / n_requests.max(1)).max(1)
+    };
+    let capped = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap))?;
+    println!(
+        "wave (capped)  : wall={:.2}s cap={cap} blocks peak={} blocks deferral_events={}",
+        capped.wall_s, capped.peak_live_blocks, capped.deferrals
+    );
+    if n_requests > 1 && cap_flag == 0 {
+        assert!(
+            capped.deferrals > 0,
+            "cap at 60% of peak must force deferrals (peak={})",
+            wave.peak_live_blocks
+        );
+    }
+    assert_eq!(capped.out.len(), n_requests, "capped serve dropped requests");
+    // capped serving changes scheduling, never results: same prompts with
+    // teacher-free greedy decode must produce the same token streams
+    for (id, toks) in &wave.out {
+        assert_eq!(toks, &capped.out[id], "capped serve changed request {id}'s tokens");
+    }
 
     // Cross-mode agreement, TEACHER-FORCED: replay full attention's token
     // history through the wave engine and compare each step's prediction
     // (autoregressive free-running diverges after any single mismatch, so
     // per-step prediction agreement is the meaningful fidelity metric).
     let dir2 = default_artifacts_dir();
-    let mut wave = LiveEngine::new(&dir2, AttnMode::Wave)?;
+    let mut wave_eng = LiveEngine::new(&dir2, AttnMode::Wave)?;
     let mut same = 0usize;
     let mut total = 0usize;
     for (i, p) in prompts.iter().enumerate() {
         let id = i as u64;
-        let first = wave.prefill(id, p)?;
-        let ftoks = &full_out[&id];
+        let first = wave_eng.prefill(id, p)?;
+        let ftoks = &full.out[&id];
         if first == ftoks[0] {
             same += 1;
         }
         total += 1;
         for step in 0..ftoks.len() - 1 {
-            wave.force_token(id, ftoks[step]);
-            let pred = wave.decode_step(&[id], 1)?[0];
+            wave_eng.force_token(id, ftoks[step]);
+            let pred = wave_eng.decode_step(&[id], 1)?[0];
             total += 1;
             if pred == ftoks[step + 1] {
                 same += 1;
@@ -107,7 +200,7 @@ fn main() -> anyhow::Result<()> {
     println!("teacher-forced prediction agreement: {same}/{total} = {agreement:.3}");
     println!(
         "decode speed ratio (wave/full, CPU-interpreted kernels): {:.2}x",
-        wave_tps / full_tps
+        wave.decode_tps / full.decode_tps
     );
     if agreement < 0.5 {
         anyhow::bail!("wave decode agreement below 0.5 — accuracy regression");

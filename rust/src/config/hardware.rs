@@ -1,5 +1,7 @@
 //! Hardware specs used by the analytic simulator: device compute/bandwidth
-//! parameters calibrated to the paper's testbed numbers (§2.2, §5.1).
+//! parameters calibrated to the paper's testbed numbers (§2.2, §5.1) —
+//! plus the serving-capacity knobs ([`CapacityConfig`]) that bound the
+//! KV arena inside a hardware budget (DESIGN.md §2 "Admission & quotas").
 
 /// A device-level hardware description (GPU + host + interconnect).
 #[derive(Clone, Debug, PartialEq)]
@@ -92,9 +94,103 @@ impl HardwareSpec {
     }
 }
 
+/// Serving-capacity knobs: the byte budget the KV block arena may
+/// occupy, an optional per-tenant quota, and the admission gate's
+/// tuning. `None` means unbounded (the single-tenant dev default —
+/// exactly the pre-cap behaviour).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapacityConfig {
+    /// Hard cap on arena-resident KV bytes (live + free-list).
+    pub arena_capacity_bytes: Option<usize>,
+    /// Per-tenant cap on live KV bytes.
+    pub tenant_quota_bytes: Option<usize>,
+    /// Fraction of the capacity the admission gate holds back so
+    /// decode-time growth of already-admitted sessions cannot hit the
+    /// cap.
+    pub admit_headroom_frac: f64,
+    /// Multiplier on the analytic block-footprint estimate (cluster
+    /// tail-block fragmentation: clusters never share blocks).
+    pub est_fudge: f64,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        CapacityConfig {
+            arena_capacity_bytes: None,
+            tenant_quota_bytes: None,
+            admit_headroom_frac: 0.2,
+            est_fudge: 1.5,
+        }
+    }
+}
+
+impl CapacityConfig {
+    /// Unbounded config (explicit-name alias of `Default`).
+    pub fn unbounded() -> Self {
+        Self::default()
+    }
+
+    /// Budget the arena at `cpu_frac` of the host's DRAM (the paper
+    /// places the KV store in CPU memory; the serving process cannot
+    /// take all of it).
+    pub fn for_hardware(hw: &HardwareSpec, cpu_frac: f64) -> Self {
+        CapacityConfig {
+            arena_capacity_bytes: Some((hw.cpu_mem_bytes as f64 * cpu_frac) as usize),
+            ..Self::default()
+        }
+    }
+
+    /// Arena capacity in whole blocks of `block_bytes` (minimum one).
+    pub fn capacity_blocks(&self, block_bytes: usize) -> Option<usize> {
+        self.arena_capacity_bytes.map(|b| (b / block_bytes.max(1)).max(1))
+    }
+
+    /// Tenant quota in whole blocks of `block_bytes` (minimum one).
+    pub fn quota_blocks(&self, block_bytes: usize) -> Option<usize> {
+        self.tenant_quota_bytes.map(|b| (b / block_bytes.max(1)).max(1))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn capacity_defaults_unbounded() {
+        let c = CapacityConfig::default();
+        assert_eq!(c.capacity_blocks(2048), None);
+        assert_eq!(c.quota_blocks(2048), None);
+        assert!(c.admit_headroom_frac > 0.0 && c.admit_headroom_frac < 1.0);
+        assert!(c.est_fudge >= 1.0);
+        assert_eq!(c, CapacityConfig::unbounded());
+    }
+
+    #[test]
+    fn capacity_blocks_round_down() {
+        let c = CapacityConfig {
+            arena_capacity_bytes: Some(10_000),
+            tenant_quota_bytes: Some(2048),
+            ..CapacityConfig::default()
+        };
+        assert_eq!(c.capacity_blocks(2048), Some(4));
+        assert_eq!(c.quota_blocks(2048), Some(1));
+        // sub-block budgets clamp to one block rather than zero
+        let tiny = CapacityConfig {
+            arena_capacity_bytes: Some(100),
+            ..CapacityConfig::default()
+        };
+        assert_eq!(tiny.capacity_blocks(2048), Some(1));
+    }
+
+    #[test]
+    fn for_hardware_budgets_host_dram() {
+        let hw = HardwareSpec::a100();
+        let c = CapacityConfig::for_hardware(&hw, 0.5);
+        assert_eq!(c.arena_capacity_bytes, Some(hw.cpu_mem_bytes / 2));
+        // paper testbed: 850 GB budget -> ~445M 2KB blocks
+        let blocks = c.capacity_blocks(2048).unwrap();
+        assert!(blocks > 100_000_000, "blocks = {blocks}");
+    }
 
     #[test]
     fn a100_ratio_matches_paper() {

@@ -5,7 +5,7 @@
 pub mod hardware;
 pub mod model;
 
-pub use hardware::HardwareSpec;
+pub use hardware::{CapacityConfig, HardwareSpec};
 pub use model::ModelSpec;
 
 /// Zone / index configuration for the wave index (paper §5.1 defaults).

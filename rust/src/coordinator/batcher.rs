@@ -1,6 +1,11 @@
 //! Continuous batcher: each engine step assembles a decode batch from all
 //! sessions in the Decode phase, padded up to the nearest executable
-//! batch bucket (vLLM-style iteration-level scheduling).
+//! batch bucket (vLLM-style iteration-level scheduling). Under
+//! multi-tenant load, batch slots are dealt round-robin across tenants so
+//! one tenant's decode backlog cannot monopolize every step.
+
+use crate::kvcache::TenantId;
+use std::collections::VecDeque;
 
 /// Decode-batch assembly policy.
 pub struct Batcher {
@@ -29,6 +34,47 @@ impl Batcher {
         }
         let n = decodable.len().min(self.max_batch).min(*self.buckets.last().unwrap());
         let take: Vec<u64> = decodable[..n].to_vec();
+        let bucket = self.buckets.iter().copied().find(|&b| b >= n)?;
+        Some((take, bucket))
+    }
+
+    /// Tenant-fair selection: when the decodable set spans more than one
+    /// tenant, deal batch slots round-robin across tenants (tenants
+    /// ordered by first appearance, per-tenant order preserved). With a
+    /// single tenant this is exactly [`Batcher::select`].
+    pub fn select_by_tenant(
+        &self,
+        decodable: &[u64],
+        tenant_of: impl Fn(u64) -> TenantId,
+    ) -> Option<(Vec<u64>, usize)> {
+        if decodable.is_empty() {
+            return None;
+        }
+        let mut tenants: Vec<TenantId> = Vec::new();
+        let mut per: Vec<VecDeque<u64>> = Vec::new();
+        for &id in decodable {
+            let t = tenant_of(id);
+            match tenants.iter().position(|&x| x == t) {
+                Some(i) => per[i].push_back(id),
+                None => {
+                    tenants.push(t);
+                    per.push(VecDeque::new());
+                    per.last_mut().unwrap().push_back(id);
+                }
+            }
+        }
+        if tenants.len() <= 1 {
+            return self.select(decodable);
+        }
+        let n = decodable.len().min(self.max_batch).min(*self.buckets.last().unwrap());
+        let mut take = Vec::with_capacity(n);
+        let mut ring = 0usize;
+        while take.len() < n {
+            if let Some(id) = per[ring].pop_front() {
+                take.push(id);
+            }
+            ring = (ring + 1) % per.len();
+        }
         let bucket = self.buckets.iter().copied().find(|&b| b >= n)?;
         Some((take, bucket))
     }
@@ -67,5 +113,36 @@ mod tests {
     fn empty_queue_is_none() {
         let b = Batcher::new(&[1, 2], 2);
         assert!(b.select(&[]).is_none());
+    }
+
+    #[test]
+    fn single_tenant_fair_select_matches_plain() {
+        let b = Batcher::new(&[1, 2, 4, 8], 8);
+        let ids = [10u64, 11, 12];
+        assert_eq!(b.select_by_tenant(&ids, |_| 0), b.select(&ids));
+    }
+
+    #[test]
+    fn fair_select_interleaves_tenants() {
+        let b = Batcher::new(&[1, 2, 4, 8], 4);
+        // tenant 0 owns ids 0..5 (older), tenant 1 owns 10..12
+        let ids = [0u64, 1, 2, 3, 4, 10, 11, 12];
+        let tenant_of = |id: u64| if id < 10 { 0u32 } else { 1 };
+        let (take, bucket) = b.select_by_tenant(&ids, tenant_of).unwrap();
+        assert_eq!(bucket, 4);
+        // slots dealt alternately: tenant 1 gets half the batch despite
+        // tenant 0's longer (older) backlog
+        assert_eq!(take, vec![0, 10, 1, 11]);
+    }
+
+    #[test]
+    fn fair_select_drains_exhausted_tenant() {
+        let b = Batcher::new(&[1, 2, 4, 8], 8);
+        let ids = [0u64, 10, 1, 2, 3];
+        let tenant_of = |id: u64| if id < 10 { 0u32 } else { 1 };
+        let (take, bucket) = b.select_by_tenant(&ids, tenant_of).unwrap();
+        assert_eq!(bucket, 8);
+        // tenant 1 has one session; after it drains, tenant 0 fills the rest
+        assert_eq!(take, vec![0, 10, 1, 2, 3]);
     }
 }

@@ -1,6 +1,8 @@
 //! L3 coordinator: request lifecycle, routing, continuous batching and
 //! prefill/decode scheduling (the serving-side contribution that wraps
-//! the wave index / wave buffer, per the paper's system integration).
+//! the wave index / wave buffer, per the paper's system integration) —
+//! plus admission control that gates prefills on the KV arena's
+//! capacity and per-tenant quotas (DESIGN.md §2 "Admission & quotas").
 
 pub mod batcher;
 pub mod request;
@@ -10,4 +12,4 @@ pub mod scheduler;
 pub use batcher::Batcher;
 pub use request::{Phase, Request, Session};
 pub use router::Router;
-pub use scheduler::{Action, Scheduler};
+pub use scheduler::{Action, AdmissionConfig, Scheduler};

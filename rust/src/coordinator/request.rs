@@ -1,9 +1,14 @@
 //! Request and session state tracked by the coordinator.
 
+use crate::kvcache::{TenantId, DEFAULT_TENANT};
+
 /// An inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
+    /// Tenant the request bills its KV blocks to (quota accounting and
+    /// admission fairness key).
+    pub tenant: TenantId,
     pub prompt: Vec<i32>,
     pub max_new: usize,
     /// Arrival time (seconds from trace start).
@@ -12,7 +17,13 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Request { id, prompt, max_new, arrive_s: 0.0 }
+        Request { id, tenant: DEFAULT_TENANT, prompt, max_new, arrive_s: 0.0 }
+    }
+
+    /// Attribute the request to a tenant (builder form).
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
     }
 }
 
@@ -31,6 +42,10 @@ pub struct Session {
     pub req: Request,
     pub phase: Phase,
     pub generated: Vec<i32>,
+    /// Set when admission control refused the request outright (its
+    /// estimated footprint can never fit the capacity/quota). Rejected
+    /// sessions are `Done` with no generated tokens.
+    pub rejected: bool,
     /// Time the request was admitted / finished prefill / completed.
     pub admit_s: f64,
     pub first_token_s: f64,
@@ -43,6 +58,7 @@ impl Session {
             req,
             phase: Phase::Queued,
             generated: Vec::new(),
+            rejected: false,
             admit_s: f64::NAN,
             first_token_s: f64::NAN,
             done_s: f64::NAN,
@@ -73,6 +89,8 @@ mod tests {
     fn lifecycle_fields() {
         let mut s = Session::new(Request::new(1, vec![1, 2, 3], 2));
         assert_eq!(s.phase, Phase::Queued);
+        assert_eq!(s.req.tenant, DEFAULT_TENANT);
+        assert!(!s.rejected);
         assert!(!s.finished());
         s.generated.push(7);
         s.generated.push(8);
@@ -80,5 +98,12 @@ mod tests {
         s.req.arrive_s = 1.0;
         s.done_s = 3.5;
         assert!((s.latency_s() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn with_tenant_attributes() {
+        let r = Request::new(2, vec![1], 1).with_tenant(5);
+        assert_eq!(r.tenant, 5);
+        assert_eq!(r.id, 2);
     }
 }

@@ -5,9 +5,10 @@
 
 use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, HeadTask};
 use crate::buffer::{ExecBuffer, WaveBuffer};
-use crate::config::{BufferConfig, ZoneConfig};
+use crate::config::{BufferConfig, CapacityConfig, ZoneConfig};
+use crate::coordinator::AdmissionConfig;
 use crate::index::{SelectScratch, WaveIndex};
-use crate::kvcache::BlockArena;
+use crate::kvcache::{BlockArena, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
 use crate::runtime::tinylm::{TinyLm, WaveInputs};
 use crate::tensor::Tensor;
@@ -144,8 +145,18 @@ impl LiveEngine {
 
     /// Prefill one prompt (length must be a prefill bucket); builds the
     /// session's wave indexes via segmented clustering and returns the
-    /// first generated token.
+    /// first generated token. Default-tenant form of
+    /// [`LiveEngine::prefill_for`].
     pub fn prefill(&mut self, id: u64, prompt: &[i32]) -> Result<i32> {
+        self.prefill_for(id, DEFAULT_TENANT, prompt)
+    }
+
+    /// Tenant-attributed prefill. If the arena refuses a KV block
+    /// (capacity cap or tenant quota), every block the partial session
+    /// checked out is returned and a typed error propagates — the engine
+    /// never panics on exhaustion; the scheduler's admission gate is
+    /// expected to keep this path cold.
+    pub fn prefill_for(&mut self, id: u64, tenant: TenantId, prompt: &[i32]) -> Result<i32> {
         let t0 = Instant::now();
         let (kc, vc, logits) = self.lm.prefill(prompt)?;
         // kc/vc: [L, 1, KVH, T, d]
@@ -172,13 +183,23 @@ impl LiveEngine {
             for h in 0..kvh {
                 let keys = kc.row(&[layer, 0, h]);
                 let vals = vc.row(&[layer, 0, h]);
-                let idx = WaveIndex::build_in(
+                let idx = match WaveIndex::try_build_in_for(
                     &self.arena,
+                    tenant,
                     self.zcfg.clone(),
                     keys,
                     vals,
                     id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1),
-                );
+                ) {
+                    Ok(idx) => idx,
+                    Err(e) => {
+                        // `indexes`/`buffers` drop here: the partial
+                        // session's blocks all return to the arena.
+                        self.metrics.inc("prefill_alloc_failures", 1);
+                        self.publish_arena_gauges();
+                        return Err(anyhow!("prefill {id} (tenant {tenant}): {e}"));
+                    }
+                };
                 let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
                 let buf = WaveBuffer::new(
                     self.bcfg.clone(),
@@ -207,6 +228,50 @@ impl LiveEngine {
         self.metrics.set_gauge("arena_live_blocks", self.arena.live_blocks() as u64);
         self.metrics.set_gauge("arena_live_bytes", self.arena.live_bytes() as u64);
         self.metrics.set_gauge("arena_free_blocks", self.arena.free_blocks() as u64);
+        self.metrics.set_gauge("arena_resident_bytes", self.arena.resident_bytes() as u64);
+        self.metrics.set_gauge_max("arena_live_blocks_peak", self.arena.live_blocks() as u64);
+        if let Some(cap) = self.arena.capacity_blocks() {
+            self.metrics.set_gauge("arena_capacity_blocks", cap as u64);
+        }
+    }
+
+    /// Cap the engine arena's live-block occupancy (`None` = unbounded).
+    pub fn set_arena_capacity_blocks(&self, cap: Option<usize>) {
+        self.arena.set_capacity_blocks(cap);
+        self.publish_arena_gauges();
+    }
+
+    /// Set a tenant's block quota on the engine arena.
+    pub fn set_tenant_quota_blocks(&self, tenant: TenantId, quota: Option<usize>) {
+        self.arena.set_tenant_quota(tenant, quota);
+    }
+
+    /// Apply a [`CapacityConfig`]'s byte budgets to the engine arena:
+    /// the arena cap, plus the per-tenant quota for each tenant in
+    /// `tenants`.
+    pub fn apply_capacity(&self, cap: &CapacityConfig, tenants: &[TenantId]) {
+        let bb = self.arena.block_bytes();
+        self.arena.set_capacity_blocks(cap.capacity_blocks(bb));
+        if let Some(q) = cap.quota_blocks(bb) {
+            for &t in tenants {
+                self.arena.set_tenant_quota(t, Some(q));
+            }
+        }
+        self.publish_arena_gauges();
+    }
+
+    /// Admission-gate parameters matching this engine's KV geometry
+    /// (`heads = layers × kv-heads`, the arena's block size), with the
+    /// headroom and estimate-fudge tuning taken from `cap` (the fudge
+    /// covers cluster tail-block fragmentation — clusters never share
+    /// blocks — plus decode-time update segments).
+    pub fn admission_config(&self, cap: &CapacityConfig) -> AdmissionConfig {
+        AdmissionConfig {
+            heads: self.lm.cfg.n_layers * self.lm.cfg.kv_heads,
+            tokens_per_block: self.arena.tokens_per_block(),
+            headroom_frac: cap.admit_headroom_frac,
+            est_fudge: cap.est_fudge,
+        }
     }
 
     /// One decode step for the sessions in `ids`, padded to `bucket`.
@@ -253,7 +318,9 @@ impl LiveEngine {
                     match self.mode {
                         AttnMode::Wave => {
                             let slot = layer * kvh + h;
-                            st.indexes[slot].append(key, val);
+                            st.indexes[slot].try_append(key, val).map_err(|e| {
+                                anyhow!("session {id}: decode kv append refused: {e}")
+                            })?;
                             st.buffers[slot].sync_new_clusters(&st.indexes[slot]);
                         }
                         AttnMode::Full => {
@@ -341,6 +408,9 @@ impl LiveEngine {
         }
         self.metrics.inc("decode_steps", 1);
         self.metrics.inc("decoded_tokens", ids.len() as u64);
+        // decode-time appends grow the arena; keep the occupancy gauges
+        // (and the peak tracker the capacity asserts read) current
+        self.publish_arena_gauges();
         Ok(out)
     }
 
@@ -525,6 +595,26 @@ mod tests {
         let dir = default_artifacts_dir();
         let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
         assert!(eng.decode_step(&[42], 1).is_err());
+    }
+
+    #[test]
+    fn capped_arena_prefill_fails_gracefully_and_leaks_nothing() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        let p = prompt(2048, 6);
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        eng.set_arena_capacity_blocks(Some(8));
+        assert!(eng.prefill_for(1, 3, &p).is_err(), "capped prefill must refuse, not panic");
+        assert_eq!(eng.arena().live_blocks(), 0, "failed prefill must return every block");
+        assert_eq!(eng.arena().tenant_live_blocks(3), 0);
+        assert_eq!(eng.metrics.counter("prefill_alloc_failures"), 1);
+        // lifting the cap lets the same request serve
+        eng.set_arena_capacity_blocks(None);
+        assert!(eng.prefill_for(1, 3, &p).is_ok());
+        assert!(eng.arena().live_blocks() > 0);
+        assert!(eng.arena().tenant_live_blocks(3) > 0);
+        eng.finish_session(1);
+        assert_eq!(eng.arena().tenant_live_blocks(3), 0);
     }
 }
 

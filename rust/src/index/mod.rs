@@ -16,7 +16,7 @@ pub use meta::MetaIndex;
 
 use crate::attention::{tripartite_attention, TripartiteInputs};
 use crate::config::ZoneConfig;
-use crate::kvcache::{BlockArena, BlockRef, HeadStore};
+use crate::kvcache::{AllocError, BlockArena, BlockRef, HeadStore, TenantId, DEFAULT_TENANT};
 use crate::tensor::dot;
 use std::sync::Arc;
 
@@ -41,6 +41,16 @@ impl ZoneSelection {
 pub struct SelectScratch {
     scores: Vec<f32>,
     order: Vec<u32>,
+}
+
+/// Tokens a partially-failed segment clustering could not place, handed
+/// back (position order) so the caller can restore them to the pending
+/// buffer — the token-partition invariant survives an arena refusal.
+struct SegmentDrop {
+    err: AllocError,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    pos: Vec<u32>,
 }
 
 /// Per-head wave index.
@@ -74,7 +84,7 @@ impl WaveIndex {
     /// Build from a full prefill context `[n, d]` via segmented
     /// clustering, allocating KV blocks from a private arena (tests and
     /// standalone baselines; engine code shares one arena via
-    /// [`WaveIndex::build_in`]).
+    /// [`WaveIndex::try_build_in_for`]).
     pub fn build(
         cfg: ZoneConfig,
         d: usize,
@@ -88,7 +98,9 @@ impl WaveIndex {
 
     /// Build from a full prefill context `[n, d]`, checking KV blocks
     /// out of the shared engine arena (paper §4.3: storage is a pooled
-    /// engine resource, not per-session memory).
+    /// engine resource, not per-session memory). Panics if the arena
+    /// refuses a block — capped arenas use
+    /// [`WaveIndex::try_build_in_for`], which reports a typed error.
     pub fn build_in(
         arena: &Arc<BlockArena>,
         cfg: ZoneConfig,
@@ -96,13 +108,28 @@ impl WaveIndex {
         vals: &[f32],
         seed: u64,
     ) -> Self {
+        Self::try_build_in_for(arena, DEFAULT_TENANT, cfg, keys, vals, seed)
+            .expect("wave index build refused a KV block — capped arenas use try_build_in_for")
+    }
+
+    /// Fallible, tenant-attributed build (the serving path under arena
+    /// capacity caps). On failure every block the partial build checked
+    /// out is returned to the arena — the caller sees an unchanged pool.
+    pub fn try_build_in_for(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        keys: &[f32],
+        vals: &[f32],
+        seed: u64,
+    ) -> Result<Self, AllocError> {
         let d = arena.d();
         let n = keys.len() / d;
         assert_eq!(keys.len(), vals.len());
         let mut idx = WaveIndex {
             cfg,
             d,
-            store: HeadStore::new_in(Arc::clone(arena)),
+            store: HeadStore::new_in_for(Arc::clone(arena), tenant),
             meta: MetaIndex::new(d),
             cluster_blocks: Vec::new(),
             sink_keys: Vec::new(),
@@ -134,11 +161,15 @@ impl WaveIndex {
             if seg < idx.cfg.tokens_per_cluster {
                 break;
             }
-            idx.cluster_segment(
+            let pos: Vec<u32> = (start as u32..(start + seg) as u32).collect();
+            // On failure `idx` drops here and its HeadStore returns every
+            // block already checked out — a failed build leaves no residue.
+            idx.try_cluster_segment(
                 &keys[start * d..(start + seg) * d],
                 &vals[start * d..(start + seg) * d],
-                start as u32,
-            );
+                &pos,
+            )
+            .map_err(|sd| sd.err)?;
             start += seg;
         }
         // Remainder + local window pend as the steady-local zone.
@@ -146,13 +177,24 @@ impl WaveIndex {
         idx.pend_vals.extend_from_slice(&vals[start * d..]);
         idx.pend_pos.extend(start as u32..n as u32);
         idx.n_seen = n;
-        idx
+        Ok(idx)
     }
 
-    /// Cluster one segment and append its clusters to meta + store.
-    fn cluster_segment(&mut self, keys: &[f32], vals: &[f32], base_pos: u32) {
+    /// Cluster one segment (`pos[i]` is token i's context position) and
+    /// append its clusters to meta + store. On an arena refusal the
+    /// tokens of the failed cluster and of every not-yet-committed
+    /// cluster come back in the error (position order) so the caller can
+    /// restore them; already-committed clusters stay indexed, keeping
+    /// the token partition intact.
+    fn try_cluster_segment(
+        &mut self,
+        keys: &[f32],
+        vals: &[f32],
+        pos: &[u32],
+    ) -> Result<(), SegmentDrop> {
         let d = self.d;
-        let n = keys.len() / d;
+        let n = pos.len();
+        debug_assert_eq!(keys.len(), n * d);
         let k = self.cfg.clusters_for_segment(n);
         let cl = spherical_kmeans(
             keys,
@@ -160,7 +202,7 @@ impl WaveIndex {
             k,
             self.cfg.kmeans_iters,
             self.cfg.centering,
-            self.seed ^ (base_pos as u64).wrapping_mul(0x9e3779b1),
+            self.seed ^ (pos[0] as u64).wrapping_mul(0x9e3779b1),
         );
         // Gather members per cluster, preserving context order.
         let mut members: Vec<Vec<u32>> = vec![Vec::new(); cl.k];
@@ -182,29 +224,62 @@ impl WaveIndex {
                 let i = i as usize;
                 ck.extend_from_slice(&keys[i * d..(i + 1) * d]);
                 cv.extend_from_slice(&vals[i * d..(i + 1) * d]);
-                cp.push(base_pos + i as u32);
+                cp.push(pos[i]);
                 for j in 0..d {
                     vsum[j] += vals[i * d + j];
                 }
             }
-            let refs = self.store.alloc_cluster(&ck, &cv, &cp);
-            let id = self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], &vsum, cp.clone());
-            debug_assert_eq!(id, self.cluster_blocks.len());
-            self.cluster_blocks.push(refs);
+            match self.store.try_alloc_cluster(&ck, &cv, &cp) {
+                Ok(refs) => {
+                    let id =
+                        self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], &vsum, cp.clone());
+                    debug_assert_eq!(id, self.cluster_blocks.len());
+                    self.cluster_blocks.push(refs);
+                }
+                Err(err) => {
+                    // hand the failed + remaining clusters' tokens back,
+                    // oldest (lowest position) first
+                    let mut rest: Vec<u32> =
+                        members[ci..].iter().flat_map(|m| m.iter().copied()).collect();
+                    rest.sort_unstable();
+                    let mut rk = Vec::with_capacity(rest.len() * d);
+                    let mut rv = Vec::with_capacity(rest.len() * d);
+                    let mut rp = Vec::with_capacity(rest.len());
+                    for &i in &rest {
+                        let i = i as usize;
+                        rk.extend_from_slice(&keys[i * d..(i + 1) * d]);
+                        rv.extend_from_slice(&vals[i * d..(i + 1) * d]);
+                        rp.push(pos[i]);
+                    }
+                    return Err(SegmentDrop { err, keys: rk, vals: rv, pos: rp });
+                }
+            }
         }
+        Ok(())
     }
 
     /// Append one decoded token (paper §4.2 "Lightweight Index Updates").
-    /// Re-clusters the oldest `update_segment` pending tokens once the
-    /// pending buffer exceeds `steady_local + update_segment`.
+    /// Panics if the arena refuses a block — capped serving paths use
+    /// [`WaveIndex::try_append`].
     pub fn append(&mut self, key: &[f32], val: &[f32]) {
+        self.try_append(key, val)
+            .expect("wave index append refused a KV block — capped arenas use try_append")
+    }
+
+    /// Fallible append: re-clusters the oldest `update_segment` pending
+    /// tokens once the pending buffer exceeds `steady_local +
+    /// update_segment`. If the arena refuses a block mid-re-clustering,
+    /// the not-yet-committed tokens return to the pending buffer — no
+    /// token is ever lost — and the re-clustering retries on a later
+    /// append once reclamation frees space.
+    pub fn try_append(&mut self, key: &[f32], val: &[f32]) -> Result<(), AllocError> {
         debug_assert_eq!(key.len(), self.d);
         if self.n_seen < self.cfg.steady_sink {
             self.sink_keys.extend_from_slice(key);
             self.sink_vals.extend_from_slice(val);
             self.sink_pos.push(self.n_seen as u32);
             self.n_seen += 1;
-            return;
+            return Ok(());
         }
         self.pend_keys.extend_from_slice(key);
         self.pend_vals.extend_from_slice(val);
@@ -214,14 +289,23 @@ impl WaveIndex {
         let seg = self.cfg.update_segment;
         if self.pend_pos.len() >= self.cfg.steady_local + seg {
             let d = self.d;
-            let base = self.pend_pos[0];
             // Split off the oldest segment.
             let keys: Vec<f32> = self.pend_keys.drain(..seg * d).collect();
             let vals: Vec<f32> = self.pend_vals.drain(..seg * d).collect();
-            self.pend_pos.drain(..seg);
-            self.cluster_segment(&keys, &vals, base);
-            self.n_updates += 1;
+            let pos: Vec<u32> = self.pend_pos.drain(..seg).collect();
+            match self.try_cluster_segment(&keys, &vals, &pos) {
+                Ok(()) => self.n_updates += 1,
+                Err(sd) => {
+                    // un-drain the unplaced tokens (oldest first) so the
+                    // steady zone still covers them exactly
+                    self.pend_keys.splice(0..0, sd.keys);
+                    self.pend_vals.splice(0..0, sd.vals);
+                    self.pend_pos.splice(0..0, sd.pos);
+                    return Err(sd.err);
+                }
+            }
         }
+        Ok(())
     }
 
     /// Zone selection with explicit budgets (r retrieval, e estimation).
@@ -571,6 +655,59 @@ mod tests {
         // steady zone stays bounded
         assert!(idx.steady_tokens() <= cfg.steady_sink + cfg.steady_local + cfg.update_segment);
         // no token lost
+        assert_eq!(idx.meta().n_tokens() + idx.steady_tokens(), idx.n_seen());
+    }
+
+    #[test]
+    fn try_build_failure_leaves_arena_unchanged() {
+        let d = 16;
+        let (k, v) = mk_ctx(512, d, 30);
+        let arena = BlockArena::shared(d, 512); // tpb = 4
+        arena.set_capacity_blocks(Some(10));
+        let err = WaveIndex::try_build_in_for(&arena, 3, small_cfg(), &k, &v, 1).unwrap_err();
+        assert!(matches!(err, AllocError::ArenaFull { .. }));
+        assert_eq!(arena.live_blocks(), 0, "failed build must return every block");
+        assert_eq!(arena.tenant_live_blocks(3), 0);
+        // lifting the cap lets the same build succeed, and finishing the
+        // session returns the pool to empty
+        arena.set_capacity_blocks(None);
+        let idx = WaveIndex::try_build_in_for(&arena, 3, small_cfg(), &k, &v, 1).unwrap();
+        assert!(arena.live_blocks() > 0);
+        drop(idx);
+        assert_eq!(arena.live_blocks(), 0);
+    }
+
+    #[test]
+    fn try_append_failure_restores_pending_tokens() {
+        let d = 8;
+        let cfg = small_cfg(); // sink 4, local 16, update_segment 32
+        let arena = BlockArena::shared(d, 512); // tpb = 8
+        let (k, v) = mk_ctx(64, d, 31);
+        let mut idx =
+            WaveIndex::try_build_in_for(&arena, 0, cfg.clone(), &k, &v, 13).unwrap();
+        // freeze the arena at current occupancy: re-clustering must fail
+        arena.set_capacity_blocks(Some(arena.live_blocks()));
+        let mut rng = Rng::new(14);
+        let mut failed = 0;
+        for _ in 0..(cfg.steady_local + cfg.update_segment + 8) {
+            let key = rng.normal_vec(d);
+            let val = rng.normal_vec(d);
+            if idx.try_append(&key, &val).is_err() {
+                failed += 1;
+            }
+        }
+        assert!(failed > 0, "capped arena must refuse the re-clustering");
+        // no token lost: every token is still in exactly one of
+        // {sink, pending, some cluster}
+        assert_eq!(idx.meta().n_tokens() + idx.steady_tokens(), idx.n_seen());
+        // lifting the cap lets the deferred re-clustering land on a later
+        // append (the pending buffer is still over threshold)
+        arena.set_capacity_blocks(None);
+        let n_upd = idx.n_updates();
+        let key = rng.normal_vec(d);
+        let val = rng.normal_vec(d);
+        idx.try_append(&key, &val).unwrap();
+        assert!(idx.n_updates() > n_upd, "re-clustering must resume after reclamation");
         assert_eq!(idx.meta().n_tokens() + idx.steady_tokens(), idx.n_seen());
     }
 

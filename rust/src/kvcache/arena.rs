@@ -4,23 +4,67 @@
 //!
 //! One arena serves every session and every (layer, kv-head) of an
 //! engine. [`HeadStore`](super::HeadStore) handles check blocks out via
-//! [`BlockArena::alloc`] and return them through [`BlockArena::reclaim`]
-//! (driven by `HeadStore`'s `Drop`), so finishing a session puts all of
-//! its storage back on the free-list instead of leaking it for the
-//! process lifetime. Block ids are engine-global and monotonically
-//! increasing — a reclaimed slot's storage is recycled but its id is
-//! never reissued, which keeps block-cache keys and mapping-table
-//! entries free of ABA aliasing across sessions.
+//! [`BlockArena::try_alloc_for`] and return them through
+//! [`BlockArena::reclaim_for`] (driven by `HeadStore`'s `Drop`), so
+//! finishing a session puts all of its storage back on the free-list
+//! instead of leaking it for the process lifetime. Block ids are
+//! engine-global and monotonically increasing — a reclaimed slot's
+//! storage is recycled but its id is never reissued, which keeps
+//! block-cache keys and mapping-table entries free of ABA aliasing
+//! across sessions.
 //!
-//! Concurrency: allocation/reclaim take a short free-list lock; block
-//! *data* is only ever written between `alloc` and publication inside
-//! the owning `HeadStore`, and only read while that store is alive, so
-//! reads need no lock at all (the parallel head fan-out in
-//! `engine::assemble` relies on this).
+//! Capacity and multi-tenancy (DESIGN.md §2 "Admission & quotas"): the
+//! arena optionally enforces a hard block cap and per-tenant quotas.
+//! Allocation under a cap goes through the fallible
+//! [`BlockArena::try_alloc_for`] path, which reports a typed
+//! [`AllocError`] instead of growing forever; the scheduler's admission
+//! gate consults the same counters to defer prefills before they can
+//! hit the cap. Because allocation always recycles the free-list before
+//! creating fresh storage, bounding *live* blocks at `capacity` bounds
+//! the arena's *resident* footprint (live + free) at `capacity` too.
+//!
+//! Concurrency: allocation/reclaim take a short free-list lock (the
+//! capacity check happens under it, so concurrent allocators cannot
+//! both sneak past the cap); block *data* is only ever written between
+//! alloc and publication inside the owning `HeadStore`, and only read
+//! while that store is alive, so reads need no lock at all (the
+//! parallel head fan-out in `engine::assemble` relies on this).
 
 use super::tokens_per_block;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Tenant identity threaded from `Request` down to block accounting.
+pub type TenantId = u32;
+
+/// The tenant used by single-tenant paths (tests, standalone baselines).
+pub const DEFAULT_TENANT: TenantId = 0;
+
+/// Why a block checkout was refused (typed so the scheduler/engine can
+/// defer instead of panicking).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocError {
+    /// The arena's live-block count reached its configured capacity.
+    ArenaFull { capacity_blocks: usize },
+    /// The requesting tenant reached its per-tenant block quota.
+    QuotaExceeded { tenant: TenantId, quota_blocks: usize },
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::ArenaFull { capacity_blocks } => {
+                write!(f, "arena full ({capacity_blocks} blocks)")
+            }
+            AllocError::QuotaExceeded { tenant, quota_blocks } => {
+                write!(f, "tenant {tenant} quota exceeded ({quota_blocks} blocks)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// Storage of one fixed-size KV block: `tpb × d` keys, `tpb × d` values
 /// and `tpb` token positions. Capacity never changes after first
@@ -41,11 +85,23 @@ impl BlockData {
     }
 }
 
-/// Engine-wide slab of KV blocks with a free-list and byte accounting.
+/// Per-tenant quota + occupancy record.
+#[derive(Default)]
+struct TenantUsage {
+    quota_blocks: Option<usize>,
+    live_blocks: usize,
+}
+
+/// Engine-wide slab of KV blocks with a free-list, byte accounting, an
+/// optional capacity cap and per-tenant quotas.
 pub struct BlockArena {
     d: usize,
     tpb: usize,
     free: Mutex<Vec<BlockData>>,
+    /// Hard cap on live blocks; `usize::MAX` means unbounded.
+    capacity_blocks: AtomicUsize,
+    /// Per-tenant quota + live occupancy (small map; one entry per tenant).
+    tenants: Mutex<HashMap<TenantId, TenantUsage>>,
     /// Next engine-global block id (never reused).
     next_id: AtomicU64,
     live_blocks: AtomicUsize,
@@ -61,6 +117,8 @@ impl BlockArena {
             d,
             tpb,
             free: Mutex::new(Vec::new()),
+            capacity_blocks: AtomicUsize::new(usize::MAX),
+            tenants: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(0),
             live_blocks: AtomicUsize::new(0),
             free_blocks: AtomicUsize::new(0),
@@ -72,6 +130,19 @@ impl BlockArena {
     /// Shared-handle constructor (the form every owner actually wants).
     pub fn shared(d: usize, block_bytes: usize) -> Arc<BlockArena> {
         Arc::new(BlockArena::new(d, block_bytes))
+    }
+
+    /// Shared arena with a byte capacity (rounded down to whole blocks,
+    /// minimum one block).
+    pub fn shared_with_capacity(
+        d: usize,
+        block_bytes: usize,
+        capacity_bytes: usize,
+    ) -> Arc<BlockArena> {
+        let a = BlockArena::new(d, block_bytes);
+        let cap = (capacity_bytes / a.block_bytes()).max(1);
+        a.set_capacity_blocks(Some(cap));
+        Arc::new(a)
     }
 
     pub fn d(&self) -> usize {
@@ -88,26 +159,83 @@ impl BlockArena {
         2 * self.tpb * self.d * 4
     }
 
-    /// Check one block out of the arena: recycled storage when the
-    /// free-list has any, fresh zeroed storage otherwise. Returns the
-    /// block's engine-global id and its storage.
-    pub(crate) fn alloc(&self) -> (u64, BlockData) {
-        let recycled = self.free.lock().unwrap().pop();
-        let data = match recycled {
+    /// The configured live-block cap (`None` = unbounded).
+    pub fn capacity_blocks(&self) -> Option<usize> {
+        match self.capacity_blocks.load(Ordering::Relaxed) {
+            usize::MAX => None,
+            c => Some(c),
+        }
+    }
+
+    /// The configured capacity in bytes (`None` = unbounded).
+    pub fn capacity_bytes(&self) -> Option<usize> {
+        self.capacity_blocks().map(|c| c * self.block_bytes())
+    }
+
+    /// Set (or clear) the live-block cap. Lowering the cap below current
+    /// occupancy does not evict anything — it only refuses new checkouts
+    /// until reclamation brings occupancy back under the cap.
+    pub fn set_capacity_blocks(&self, cap: Option<usize>) {
+        self.capacity_blocks.store(cap.unwrap_or(usize::MAX), Ordering::Relaxed);
+    }
+
+    /// Set (or clear) a tenant's block quota.
+    pub fn set_tenant_quota(&self, tenant: TenantId, quota_blocks: Option<usize>) {
+        self.tenants.lock().unwrap().entry(tenant).or_default().quota_blocks = quota_blocks;
+    }
+
+    /// A tenant's configured quota (`None` = unbounded).
+    pub fn tenant_quota_blocks(&self, tenant: TenantId) -> Option<usize> {
+        self.tenants.lock().unwrap().get(&tenant).and_then(|u| u.quota_blocks)
+    }
+
+    /// Blocks currently checked out to `tenant`'s sessions.
+    pub fn tenant_live_blocks(&self, tenant: TenantId) -> usize {
+        self.tenants.lock().unwrap().get(&tenant).map(|u| u.live_blocks).unwrap_or(0)
+    }
+
+    /// Fallible checkout on behalf of `tenant`: recycled storage when the
+    /// free-list has any, fresh zeroed storage otherwise. Refuses (with a
+    /// typed error, no allocation performed) when the arena cap or the
+    /// tenant's quota is reached. Returns the block's engine-global id
+    /// and its storage.
+    pub fn try_alloc_for(&self, tenant: TenantId) -> Result<(u64, BlockData), AllocError> {
+        let mut free = self.free.lock().unwrap();
+        let cap = self.capacity_blocks.load(Ordering::Relaxed);
+        if self.live_blocks.load(Ordering::Relaxed) >= cap {
+            return Err(AllocError::ArenaFull { capacity_blocks: cap });
+        }
+        {
+            let mut tn = self.tenants.lock().unwrap();
+            let u = tn.entry(tenant).or_default();
+            if let Some(q) = u.quota_blocks {
+                if u.live_blocks >= q {
+                    return Err(AllocError::QuotaExceeded { tenant, quota_blocks: q });
+                }
+            }
+            u.live_blocks += 1;
+        }
+        let data = match free.pop() {
             Some(d) => {
                 self.free_blocks.fetch_sub(1, Ordering::Relaxed);
                 d
             }
             None => BlockData::zeroed(self.tpb, self.d),
         };
+        // live_blocks must advance BEFORE the free-list lock drops:
+        // a concurrent allocator re-checks the cap under this lock, so
+        // publishing the increment late would let two checkouts share
+        // the last slot and overshoot the capacity.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.live_blocks.fetch_add(1, Ordering::Relaxed);
         self.allocated_total.fetch_add(1, Ordering::Relaxed);
-        (id, data)
+        drop(free);
+        Ok((id, data))
     }
 
-    /// Return blocks to the free-list (their ids retire permanently).
-    pub(crate) fn reclaim<I: IntoIterator<Item = BlockData>>(&self, blocks: I) {
+    /// Return `tenant`'s blocks to the free-list (their ids retire
+    /// permanently; the tenant's occupancy drops accordingly).
+    pub fn reclaim_for<I: IntoIterator<Item = BlockData>>(&self, tenant: TenantId, blocks: I) {
         let mut free = self.free.lock().unwrap();
         let mut n = 0usize;
         for b in blocks {
@@ -115,10 +243,23 @@ impl BlockArena {
             free.push(b);
             n += 1;
         }
-        drop(free);
+        if n == 0 {
+            return;
+        }
+        // counters update under the free lock so allocators never observe
+        // pushed storage without the matching live/free adjustment
         self.free_blocks.fetch_add(n, Ordering::Relaxed);
         self.live_blocks.fetch_sub(n, Ordering::Relaxed);
         self.reclaimed_total.fetch_add(n as u64, Ordering::Relaxed);
+        drop(free);
+        let mut tn = self.tenants.lock().unwrap();
+        let u = tn.entry(tenant).or_default();
+        u.live_blocks = u.live_blocks.saturating_sub(n);
+    }
+
+    /// Return default-tenant blocks to the free-list.
+    pub fn reclaim<I: IntoIterator<Item = BlockData>>(&self, blocks: I) {
+        self.reclaim_for(DEFAULT_TENANT, blocks)
     }
 
     /// Blocks currently checked out to live sessions.
@@ -156,19 +297,25 @@ impl BlockArena {
 mod tests {
     use super::*;
 
+    /// Uncapped checkout for the default tenant (test shorthand).
+    fn alloc(a: &BlockArena) -> (u64, BlockData) {
+        a.try_alloc_for(DEFAULT_TENANT).unwrap()
+    }
+
     #[test]
     fn geometry_matches_helper() {
         let a = BlockArena::new(32, 2048);
         assert_eq!(a.tokens_per_block(), 8);
         assert_eq!(a.block_bytes(), 2 * 8 * 32 * 4);
         assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.capacity_blocks(), None);
     }
 
     #[test]
     fn alloc_reclaim_recycles_storage_not_ids() {
         let a = BlockArena::new(4, 256);
-        let (id0, b0) = a.alloc();
-        let (id1, b1) = a.alloc();
+        let (id0, b0) = alloc(&a);
+        let (id1, b1) = alloc(&a);
         assert_eq!((id0, id1), (0, 1));
         assert_eq!(a.live_blocks(), 2);
         assert_eq!(a.live_bytes(), 2 * a.block_bytes());
@@ -176,7 +323,7 @@ mod tests {
         assert_eq!(a.live_blocks(), 0);
         assert_eq!(a.free_blocks(), 2);
         // storage recycled, ids fresh
-        let (id2, b2) = a.alloc();
+        let (id2, b2) = alloc(&a);
         assert_eq!(id2, 2);
         assert_eq!(a.free_blocks(), 1);
         assert_eq!(a.allocated_total(), 3);
@@ -192,7 +339,7 @@ mod tests {
             let a = Arc::clone(&a);
             handles.push(std::thread::spawn(move || {
                 for _ in 0..200 {
-                    let (_, b) = a.alloc();
+                    let (_, b) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
                     a.reclaim([b]);
                 }
             }));
@@ -203,5 +350,67 @@ mod tests {
         assert_eq!(a.live_blocks(), 0);
         assert_eq!(a.allocated_total(), 800);
         assert_eq!(a.reclaimed_total(), 800);
+    }
+
+    #[test]
+    fn capacity_refuses_at_cap_and_readmits_after_reclaim() {
+        let a = BlockArena::new(4, 256);
+        a.set_capacity_blocks(Some(2));
+        let (_, b0) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
+        let (_, b1) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
+        assert_eq!(
+            a.try_alloc_for(DEFAULT_TENANT).unwrap_err(),
+            AllocError::ArenaFull { capacity_blocks: 2 }
+        );
+        a.reclaim([b0]);
+        // reclamation frees capacity; the freed storage is recycled so the
+        // resident footprint stays at the cap
+        let (_, b2) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
+        assert_eq!(a.live_blocks(), 2);
+        assert_eq!(a.resident_bytes(), 2 * a.block_bytes());
+        a.reclaim([b1, b2]);
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn quota_is_per_tenant() {
+        let a = BlockArena::new(4, 256);
+        a.set_tenant_quota(1, Some(1));
+        let (_, b1) = a.try_alloc_for(1).unwrap();
+        assert_eq!(
+            a.try_alloc_for(1).unwrap_err(),
+            AllocError::QuotaExceeded { tenant: 1, quota_blocks: 1 }
+        );
+        // another tenant is unaffected by tenant 1's quota
+        let (_, b2) = a.try_alloc_for(2).unwrap();
+        assert_eq!(a.tenant_live_blocks(1), 1);
+        assert_eq!(a.tenant_live_blocks(2), 1);
+        a.reclaim_for(1, [b1]);
+        assert_eq!(a.tenant_live_blocks(1), 0);
+        let (_, b3) = a.try_alloc_for(1).unwrap();
+        a.reclaim_for(1, [b3]);
+        a.reclaim_for(2, [b2]);
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn byte_capacity_rounds_to_blocks() {
+        let a = BlockArena::shared_with_capacity(4, 256, 1000);
+        // block_bytes = 2 * 8 * 4 * 4 = 256 -> 3 whole blocks fit in 1000 B
+        assert_eq!(a.block_bytes(), 256);
+        assert_eq!(a.capacity_blocks(), Some(3));
+        assert_eq!(a.capacity_bytes(), Some(768));
+    }
+
+    #[test]
+    fn failed_alloc_changes_nothing() {
+        let a = BlockArena::new(4, 256);
+        a.set_capacity_blocks(Some(1));
+        let (_, b0) = a.try_alloc_for(7).unwrap();
+        let before = (a.live_blocks(), a.free_blocks(), a.allocated_total(), a.tenant_live_blocks(7));
+        assert!(a.try_alloc_for(7).is_err());
+        let after = (a.live_blocks(), a.free_blocks(), a.allocated_total(), a.tenant_live_blocks(7));
+        assert_eq!(before, after, "a refused checkout must not mutate accounting");
+        a.reclaim_for(7, [b0]);
     }
 }

@@ -10,11 +10,16 @@
 //! partially filled — the fragmentation the paper's copy kernels skip
 //! over). Block ids are engine-global, so the wave buffer's cache and
 //! mapping table address arena blocks directly by id.
+//!
+//! The arena optionally enforces a hard capacity and per-tenant quotas
+//! ([`AllocError`], [`BlockArena::try_alloc_for`]); the scheduler's
+//! admission gate (DESIGN.md §2 "Admission & quotas") defers prefills
+//! against the same counters so serving never outgrows the budget.
 
 pub mod arena;
 pub mod store;
 
-pub use arena::BlockArena;
+pub use arena::{AllocError, BlockArena, TenantId, DEFAULT_TENANT};
 pub use store::{BlockRef, HeadStore, KvStore};
 
 /// Tokens that fit in one physical block of `block_bytes`, given the head

@@ -2,8 +2,11 @@
 //! [`BlockArena`]. A `HeadStore` owns no KV storage of its own — it is
 //! an arena reference plus the list of blocks checked out to this head,
 //! and dropping it returns every block to the arena free-list.
+//!
+//! Every handle carries the [`TenantId`] it allocates on behalf of, so
+//! quota accounting follows the blocks from checkout to reclamation.
 
-use super::arena::{BlockArena, BlockData};
+use super::arena::{AllocError, BlockArena, BlockData, TenantId, DEFAULT_TENANT};
 use std::sync::Arc;
 
 /// A reference to a span of tokens inside one physical arena block.
@@ -32,6 +35,7 @@ struct OwnedBlock {
 /// and values plus the original context position of each token slot.
 pub struct HeadStore {
     arena: Arc<BlockArena>,
+    tenant: TenantId,
     blocks: Vec<OwnedBlock>,
 }
 
@@ -43,9 +47,15 @@ impl HeadStore {
         Self::new_in(BlockArena::shared(d, block_bytes))
     }
 
-    /// Handle over a shared arena.
+    /// Handle over a shared arena, default tenant.
     pub fn new_in(arena: Arc<BlockArena>) -> Self {
-        HeadStore { arena, blocks: Vec::new() }
+        Self::new_in_for(arena, DEFAULT_TENANT)
+    }
+
+    /// Handle over a shared arena on behalf of `tenant` (multi-tenant
+    /// serving: quota accounting follows the handle's checkouts).
+    pub fn new_in_for(arena: Arc<BlockArena>, tenant: TenantId) -> Self {
+        HeadStore { arena, tenant, blocks: Vec::new() }
     }
 
     pub fn d(&self) -> usize {
@@ -62,6 +72,11 @@ impl HeadStore {
         &self.arena
     }
 
+    /// The tenant this handle allocates on behalf of.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
     pub fn n_blocks(&self) -> usize {
         self.blocks.len()
     }
@@ -75,23 +90,43 @@ impl HeadStore {
         self.arena.block_bytes()
     }
 
-    /// Append a cluster's tokens, packing them into freshly checked-out
-    /// arena blocks. `keys`/`vals` are `[n, d]` flat; `pos[i]` is token
-    /// i's context position. Returns the block refs the cluster
-    /// occupies, in order.
-    pub fn alloc_cluster(&mut self, keys: &[f32], vals: &[f32], pos: &[u32]) -> Vec<BlockRef> {
+    /// Fallible form of [`HeadStore::alloc_cluster`]: append a cluster's
+    /// tokens, packing them into freshly checked-out arena blocks.
+    /// `keys`/`vals` are `[n, d]` flat; `pos[i]` is token i's context
+    /// position. Returns the block refs the cluster occupies, in order.
+    ///
+    /// Failure atomicity: if the arena refuses a block mid-cluster, every
+    /// block this call already checked out is returned and the store is
+    /// left exactly as it was.
+    pub fn try_alloc_cluster(
+        &mut self,
+        keys: &[f32],
+        vals: &[f32],
+        pos: &[u32],
+    ) -> Result<Vec<BlockRef>, AllocError> {
         let d = self.arena.d();
         let tpb = self.arena.tokens_per_block();
         let n = pos.len();
         debug_assert_eq!(keys.len(), n * d);
         debug_assert_eq!(vals.len(), n * d);
+        let start_blocks = self.blocks.len();
         let mut refs = Vec::with_capacity(n.div_ceil(tpb));
         let mut off = 0;
         while off < n {
             let take = (n - off).min(tpb);
             // Blocks are always checked out full-size; recycled tails
             // stay stale but are never read (`len`-guarded accessors).
-            let (id, mut data) = self.arena.alloc();
+            let (id, mut data) = match self.arena.try_alloc_for(self.tenant) {
+                Ok(x) => x,
+                Err(e) => {
+                    // roll back this call's checkouts
+                    self.arena.reclaim_for(
+                        self.tenant,
+                        self.blocks.drain(start_blocks..).map(|b| b.data),
+                    );
+                    return Err(e);
+                }
+            };
             data.keys[..take * d].copy_from_slice(&keys[off * d..(off + take) * d]);
             data.vals[..take * d].copy_from_slice(&vals[off * d..(off + take) * d]);
             data.pos[..take].copy_from_slice(&pos[off..off + take]);
@@ -100,7 +135,14 @@ impl HeadStore {
             refs.push(BlockRef { block: id, idx, len: take as u16 });
             off += take;
         }
-        refs
+        Ok(refs)
+    }
+
+    /// Append a cluster's tokens (infallible form — only valid against
+    /// uncapped arenas; capped paths use [`HeadStore::try_alloc_cluster`]).
+    pub fn alloc_cluster(&mut self, keys: &[f32], vals: &[f32], pos: &[u32]) -> Vec<BlockRef> {
+        self.try_alloc_cluster(keys, vals, pos)
+            .expect("KV block allocation refused — capped arenas must use try_alloc_cluster")
     }
 
     fn owned(&self, r: BlockRef) -> &OwnedBlock {
@@ -129,12 +171,12 @@ impl HeadStore {
 impl Drop for HeadStore {
     fn drop(&mut self) {
         // A finished session returns every block it held to the arena.
-        self.arena.reclaim(self.blocks.drain(..).map(|b| b.data));
+        self.arena.reclaim_for(self.tenant, self.blocks.drain(..).map(|b| b.data));
     }
 }
 
 /// All KV data of one sequence: `layers x kv_heads` head stores sharing
-/// one arena.
+/// one arena (and one tenant).
 pub struct KvStore {
     n_layers: usize,
     kv_heads: usize,
@@ -148,8 +190,19 @@ impl KvStore {
     }
 
     pub fn new_in(arena: Arc<BlockArena>, n_layers: usize, kv_heads: usize) -> Self {
-        let stores =
-            (0..n_layers * kv_heads).map(|_| HeadStore::new_in(Arc::clone(&arena))).collect();
+        Self::new_in_for(arena, DEFAULT_TENANT, n_layers, kv_heads)
+    }
+
+    /// Per-tenant form: every head handle allocates on `tenant`'s quota.
+    pub fn new_in_for(
+        arena: Arc<BlockArena>,
+        tenant: TenantId,
+        n_layers: usize,
+        kv_heads: usize,
+    ) -> Self {
+        let stores = (0..n_layers * kv_heads)
+            .map(|_| HeadStore::new_in_for(Arc::clone(&arena), tenant))
+            .collect();
         KvStore { n_layers, kv_heads, arena, stores }
     }
 
@@ -255,6 +308,46 @@ mod tests {
         assert_eq!(hs2.block_keys(r[0]), &k[..4 * d]);
         assert_eq!(arena.free_blocks(), 6);
         assert_eq!(arena.allocated_total(), 10);
+    }
+
+    #[test]
+    fn failed_cluster_rolls_back_this_call_only() {
+        let d = 16; // tpb = 4 at 512-byte blocks
+        let arena = BlockArena::shared(d, 512);
+        arena.set_capacity_blocks(Some(3));
+        let mut hs = HeadStore::new_in(Arc::clone(&arena));
+        let (k, v, p) = mk(8, d, 6);
+        let refs = hs.try_alloc_cluster(&k, &v, &p).unwrap(); // 2 blocks
+        assert_eq!(refs.len(), 2);
+        // second cluster needs 2 blocks but only 1 slot remains: the call
+        // fails and returns its own partial checkout, leaving the first
+        // cluster intact and readable
+        let (k2, v2, p2) = mk(8, d, 7);
+        let err = hs.try_alloc_cluster(&k2, &v2, &p2).unwrap_err();
+        assert_eq!(err, AllocError::ArenaFull { capacity_blocks: 3 });
+        assert_eq!(hs.n_blocks(), 2);
+        assert_eq!(hs.n_tokens(), 8);
+        assert_eq!(arena.live_blocks(), 2);
+        assert_eq!(hs.block_keys(refs[0]), &k[..4 * d]);
+        // a smaller cluster still fits
+        let (k3, v3, p3) = mk(3, d, 8);
+        assert!(hs.try_alloc_cluster(&k3, &v3, &p3).is_ok());
+        assert_eq!(arena.live_blocks(), 3);
+    }
+
+    #[test]
+    fn tenant_follows_store_through_drop() {
+        let d = 16;
+        let arena = BlockArena::shared(d, 512);
+        {
+            let mut hs = HeadStore::new_in_for(Arc::clone(&arena), 9);
+            assert_eq!(hs.tenant(), 9);
+            let (k, v, p) = mk(10, d, 9);
+            hs.alloc_cluster(&k, &v, &p);
+            assert_eq!(arena.tenant_live_blocks(9), 3);
+        }
+        assert_eq!(arena.tenant_live_blocks(9), 0);
+        assert_eq!(arena.live_blocks(), 0);
     }
 
     #[test]

@@ -112,6 +112,8 @@ fn cmd_serve(args: &Args) -> i32 {
                     return 1;
                 }
             },
+            // admission-gated prefills re-enter after reclamation below
+            Action::Defer => {}
             Action::Idle => break,
         }
         // Session-finished events flow into engine reclamation: the

@@ -36,6 +36,17 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
+    /// Raise a gauge to `v` only if `v` exceeds its current value —
+    /// high-water-mark tracking (e.g. peak arena occupancy, the number
+    /// the capacity invariant is asserted against).
+    pub fn set_gauge_max(&self, name: &str, v: u64) {
+        let mut g = self.gauges.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert(0);
+        if v > *e {
+            *e = v;
+        }
+    }
+
     /// Snapshot of all gauges, sorted by name.
     pub fn gauges_snapshot(&self) -> Vec<(String, u64)> {
         let mut v: Vec<(String, u64)> =
@@ -129,6 +140,16 @@ mod tests {
         assert_eq!(m.gauge("arena_live_blocks"), 3);
         assert_eq!(m.gauge("absent"), 0);
         assert_eq!(m.gauges_snapshot(), vec![("arena_live_blocks".to_string(), 3)]);
+    }
+
+    #[test]
+    fn gauge_max_tracks_high_water_mark() {
+        let m = Metrics::new();
+        m.set_gauge_max("peak", 5);
+        m.set_gauge_max("peak", 3);
+        assert_eq!(m.gauge("peak"), 5);
+        m.set_gauge_max("peak", 9);
+        assert_eq!(m.gauge("peak"), 9);
     }
 
     #[test]

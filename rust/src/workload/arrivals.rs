@@ -1,6 +1,8 @@
 //! Request arrival processes for the end-to-end load experiments
-//! (Figure 17): Poisson open-loop arrivals and closed-loop clients.
+//! (Figure 17): Poisson open-loop arrivals, closed-loop clients, and
+//! multi-tenant mixes for the admission-control scenarios.
 
+use crate::kvcache::TenantId;
 use crate::util::rng::Rng;
 
 /// One request in a load trace.
@@ -12,6 +14,8 @@ pub struct RequestSpec {
     pub input_tokens: usize,
     /// Tokens to generate.
     pub output_tokens: usize,
+    /// Issuing tenant (0 for single-tenant traces).
+    pub tenant: TenantId,
 }
 
 /// Open-loop Poisson arrivals at `rate` req/s for `n` requests.
@@ -27,7 +31,7 @@ pub fn poisson_arrivals(
     (0..n)
         .map(|_| {
             t += rng.exponential(rate);
-            RequestSpec { arrive_s: t, input_tokens, output_tokens }
+            RequestSpec { arrive_s: t, input_tokens, output_tokens, tenant: 0 }
         })
         .collect()
 }
@@ -48,8 +52,39 @@ pub fn closed_loop(
             arrive_s: if i < clients { 0.0 } else { f64::INFINITY },
             input_tokens,
             output_tokens,
+            tenant: 0,
         })
         .collect()
+}
+
+/// Multi-tenant open-loop mix: tenant `t` issues `n_per_tenant` Poisson
+/// arrivals at `rates[t]` req/s from an independent seeded stream; the
+/// streams are merged into one trace sorted by arrival time. Unequal
+/// rates give the skewed per-tenant backlogs the admission gate's
+/// fairness rule is tested against.
+pub fn multi_tenant_poisson(
+    rates: &[f64],
+    n_per_tenant: usize,
+    input_tokens: usize,
+    output_tokens: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let mut all = Vec::with_capacity(rates.len() * n_per_tenant);
+    for (t, &rate) in rates.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut now = 0.0;
+        for _ in 0..n_per_tenant {
+            now += rng.exponential(rate);
+            all.push(RequestSpec {
+                arrive_s: now,
+                input_tokens,
+                output_tokens,
+                tenant: t as TenantId,
+            });
+        }
+    }
+    all.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+    all
 }
 
 #[cfg(test)]
@@ -74,5 +109,24 @@ mod tests {
         let reqs = closed_loop(4, 10, 100, 10);
         assert_eq!(reqs.iter().filter(|r| r.arrive_s == 0.0).count(), 4);
         assert_eq!(reqs.iter().filter(|r| r.arrive_s.is_infinite()).count(), 6);
+    }
+
+    #[test]
+    fn multi_tenant_mix_merges_sorted_streams() {
+        let reqs = multi_tenant_poisson(&[8.0, 2.0, 1.0], 50, 100, 10, 3);
+        assert_eq!(reqs.len(), 150);
+        for t in 0..3u32 {
+            assert_eq!(reqs.iter().filter(|r| r.tenant == t).count(), 50);
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s, "trace not sorted");
+        }
+        // the fast tenant's 50 arrivals finish earlier than the slow one's
+        let last = |t: u32| {
+            reqs.iter().filter(|r| r.tenant == t).map(|r| r.arrive_s).fold(0.0, f64::max)
+        };
+        assert!(last(0) < last(2), "rate skew must show in arrival spans");
+        // deterministic across calls
+        assert_eq!(reqs, multi_tenant_poisson(&[8.0, 2.0, 1.0], 50, 100, 10, 3));
     }
 }

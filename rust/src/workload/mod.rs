@@ -10,9 +10,11 @@
 //! and output fidelity can be measured directly.
 
 pub mod arrivals;
+pub mod pressure;
 pub mod tasks;
 
-pub use arrivals::{closed_loop, poisson_arrivals, RequestSpec};
+pub use arrivals::{closed_loop, multi_tenant_poisson, poisson_arrivals, RequestSpec};
+pub use pressure::{run_memory_pressure, PressureConfig, PressureReport};
 pub use tasks::{Task, TaskKind};
 
 use crate::util::rng::Rng;

@@ -1,0 +1,250 @@
+//! Deterministic multi-tenant memory-pressure harness.
+//!
+//! Drives the real [`Scheduler`] admission gate against the real
+//! [`BlockArena`] capacity/quota accounting with a *modelled* KV
+//! footprint (block checkouts shaped like `WaveIndex::build_in`:
+//! clusters that never share blocks, decode-time growth every
+//! `tokens_per_block` generated tokens) — no model artifacts needed, so
+//! the oversubscribed-serving invariants run in tier-1 CI. Used by
+//! `rust/tests/admission.rs` (property harness), `benches/fig13_*`
+//! (capped-replay report) and anything else that wants a seeded
+//! overcommit scenario.
+//!
+//! The driver samples the arena's counters after every scheduler step
+//! and *counts* violations instead of panicking, so callers (property
+//! tests, benches) can assert the report:
+//!
+//! - `capacity_violations == 0` — live/resident blocks never exceeded
+//!   the cap at any step;
+//! - `quota_violations == 0` — no tenant ever exceeded its quota;
+//! - `completed + rejected == n` with `prefill_failures == 0` — every
+//!   deferred prefill was eventually admitted once reclamation freed
+//!   space (no lost requests, no deadlock).
+
+use crate::coordinator::{Action, AdmissionConfig, Batcher, Request, Scheduler};
+use crate::kvcache::{BlockArena, KvStore, TenantId};
+use crate::workload::RequestSpec;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::Arc;
+
+/// Geometry + budget of a pressure scenario.
+#[derive(Clone, Debug)]
+pub struct PressureConfig {
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub d: usize,
+    pub block_bytes: usize,
+    /// Hard arena cap in blocks.
+    pub capacity_blocks: usize,
+    /// Optional per-tenant quota in blocks (applied to every tenant in
+    /// the trace).
+    pub tenant_quota_blocks: Option<usize>,
+    /// Admission headroom for decode-time growth.
+    pub headroom_frac: f64,
+    /// Decode-pool admission cap (continuous-batching slot count).
+    pub max_batch: usize,
+}
+
+impl Default for PressureConfig {
+    fn default() -> Self {
+        PressureConfig {
+            layers: 2,
+            kv_heads: 2,
+            d: 16,
+            block_bytes: 512, // tpb = 4 at d=16 f32
+            capacity_blocks: 512,
+            tenant_quota_blocks: None,
+            headroom_frac: 0.25,
+            max_batch: 4,
+        }
+    }
+}
+
+/// What a pressure run observed (callers assert on this).
+#[derive(Clone, Debug, Default)]
+pub struct PressureReport {
+    /// Requests that finished with their full token budget.
+    pub completed: usize,
+    /// Requests the gate rejected outright (can never fit).
+    pub rejected: usize,
+    /// Gate-blocked head-of-queue observations (see
+    /// `Scheduler::n_deferrals`).
+    pub deferrals: u64,
+    /// Prefill-time block checkouts the arena refused (admission should
+    /// keep this at zero).
+    pub prefill_failures: usize,
+    /// Decode-time block checkouts the arena refused (headroom should
+    /// keep this at zero).
+    pub append_failures: usize,
+    /// Steps where live blocks or resident bytes exceeded the cap
+    /// (must be zero — the harness's core invariant).
+    pub capacity_violations: usize,
+    /// Steps where some tenant exceeded its quota (must be zero).
+    pub quota_violations: usize,
+    pub peak_live_blocks: usize,
+    pub peak_resident_bytes: usize,
+    /// Peak live blocks observed per tenant.
+    pub per_tenant_peak: HashMap<TenantId, usize>,
+    /// Scheduler iterations the run took.
+    pub steps: usize,
+    /// False only if the guard tripped before the trace drained
+    /// (deadlock — must be true).
+    pub drained: bool,
+}
+
+/// Blocks one head checks out for `tokens` of context, allocated as
+/// clusters of `2 * tpb - 1` tokens so partial tail blocks (clusters
+/// never share blocks) are part of the model.
+fn checkout_prompt(store: &mut KvStore, layers: usize, heads: usize, tokens: usize) -> bool {
+    let d = store.arena().d();
+    let tpb = store.arena().tokens_per_block();
+    let cluster = (2 * tpb).saturating_sub(1).max(1);
+    for l in 0..layers {
+        for h in 0..heads {
+            let mut off = 0usize;
+            while off < tokens {
+                let take = (tokens - off).min(cluster);
+                let keys = vec![0.0f32; take * d];
+                let vals = vec![0.0f32; take * d];
+                let pos: Vec<u32> = (off as u32..(off + take) as u32).collect();
+                if store.head_mut(l, h).try_alloc_cluster(&keys, &vals, &pos).is_err() {
+                    return false;
+                }
+                off += take;
+            }
+        }
+    }
+    true
+}
+
+/// Run one seeded pressure scenario to completion (or guard) and report.
+pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> PressureReport {
+    let arena = BlockArena::shared(cfg.d, cfg.block_bytes);
+    arena.set_capacity_blocks(Some(cfg.capacity_blocks));
+    let tenants: BTreeSet<TenantId> = trace.iter().map(|r| r.tenant).collect();
+    if let Some(q) = cfg.tenant_quota_blocks {
+        for &t in &tenants {
+            arena.set_tenant_quota(t, Some(q));
+        }
+    }
+    let tpb = arena.tokens_per_block();
+    let adm = AdmissionConfig {
+        heads: cfg.layers * cfg.kv_heads,
+        tokens_per_block: tpb,
+        headroom_frac: cfg.headroom_frac,
+        est_fudge: 1.5,
+    };
+    let mut sched = Scheduler::with_admission(
+        Batcher::new(&[1, 2, 4, 8], cfg.max_batch),
+        Arc::clone(&arena),
+        adm,
+    );
+    // The whole trace queues up-front: pressure comes from aggregate
+    // footprint, not wall-clock pacing (admit_s keeps arrival order).
+    for (i, r) in trace.iter().enumerate() {
+        sched.submit(
+            Request::new(i as u64, vec![1; r.input_tokens], r.output_tokens.max(1))
+                .with_tenant(r.tenant),
+            r.arrive_s,
+        );
+    }
+
+    let cap_bytes = cfg.capacity_blocks * arena.block_bytes();
+    let mut rep = PressureReport::default();
+    let mut stores: HashMap<u64, KvStore> = HashMap::new();
+    let mut decoded: HashMap<u64, usize> = HashMap::new();
+    let mut guard = 0usize;
+    while !sched.all_done() {
+        guard += 1;
+        if guard > 200_000 {
+            rep.drained = false;
+            rep.deferrals = sched.n_deferrals();
+            return rep;
+        }
+        rep.steps += 1;
+        let now = rep.steps as f64 * 1e-3;
+        match sched.next_action() {
+            Action::Prefill(id) => {
+                let (tenant, prompt_len) = {
+                    let s = sched.session(id).unwrap();
+                    (s.req.tenant, s.req.prompt.len())
+                };
+                let mut st =
+                    KvStore::new_in_for(Arc::clone(&arena), tenant, cfg.layers, cfg.kv_heads);
+                if checkout_prompt(&mut st, cfg.layers, cfg.kv_heads, prompt_len) {
+                    stores.insert(id, st);
+                    decoded.insert(id, 0);
+                    sched.prefill_done(id, 0, now);
+                } else {
+                    // admission let an unservable prefill through; the
+                    // partial store drops (rollback) and the run reports it
+                    rep.prefill_failures += 1;
+                    sched.prefill_done(id, 0, now);
+                }
+            }
+            Action::DecodeBatch(ids, _bucket) => {
+                for id in ids {
+                    sched.token_decoded(id, 1, now);
+                    let n = decoded.entry(id).or_insert(0);
+                    *n += 1;
+                    // one fresh block per head every tpb generated tokens
+                    if *n % tpb == 0 {
+                        if let Some(st) = stores.get_mut(&id) {
+                            'grow: for l in 0..cfg.layers {
+                                for h in 0..cfg.kv_heads {
+                                    let d = cfg.d;
+                                    let keys = vec![0.0f32; tpb * d];
+                                    let vals = vec![0.0f32; tpb * d];
+                                    let pos: Vec<u32> = (0..tpb as u32).collect();
+                                    if st
+                                        .head_mut(l, h)
+                                        .try_alloc_cluster(&keys, &vals, &pos)
+                                        .is_err()
+                                    {
+                                        rep.append_failures += 1;
+                                        break 'grow;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Action::Defer | Action::Idle => {}
+        }
+        // sample the invariants after every step
+        let live = arena.live_blocks();
+        let resident = arena.resident_bytes();
+        rep.peak_live_blocks = rep.peak_live_blocks.max(live);
+        rep.peak_resident_bytes = rep.peak_resident_bytes.max(resident);
+        if live > cfg.capacity_blocks || resident > cap_bytes {
+            rep.capacity_violations += 1;
+        }
+        for &t in &tenants {
+            let tl = arena.tenant_live_blocks(t);
+            let e = rep.per_tenant_peak.entry(t).or_insert(0);
+            if tl > *e {
+                *e = tl;
+            }
+            if let Some(q) = cfg.tenant_quota_blocks {
+                if tl > q {
+                    rep.quota_violations += 1;
+                }
+            }
+        }
+        // reclamation: finished sessions drop their stores, returning
+        // blocks to the arena (this is what re-admits deferred prefills)
+        for fid in sched.take_finished() {
+            stores.remove(&fid);
+            decoded.remove(&fid);
+        }
+    }
+    rep.drained = true;
+    rep.deferrals = sched.n_deferrals();
+    rep.rejected = sched.n_rejections() as usize;
+    rep.completed = sched
+        .sessions()
+        .filter(|s| !s.rejected && s.generated.len() >= s.req.max_new)
+        .count();
+    rep
+}

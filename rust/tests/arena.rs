@@ -8,7 +8,7 @@ use retroinfer::buffer::WaveBuffer;
 use retroinfer::config::{BufferConfig, ZoneConfig};
 use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
 use retroinfer::index::WaveIndex;
-use retroinfer::kvcache::BlockArena;
+use retroinfer::kvcache::{AllocError, BlockArena, DEFAULT_TENANT};
 use retroinfer::prop_assert;
 use retroinfer::prop_assert_eq;
 use retroinfer::runtime::tinylm::WaveInputs;
@@ -158,6 +158,124 @@ fn prop_parallel_assembly_bit_identical_to_sequential() {
             buf.flush();
             prop_assert!(buf.check_consistency(), "buffer inconsistent after fan-out");
         }
+        Ok(())
+    });
+}
+
+/// Invariant (capacity satellite): under ANY interleaving of alloc /
+/// reclaim against a capped arena, the arena's counters track a simple
+/// reference model exactly — no double-free is representable (block
+/// storage moves), reclaimed global ids are never reissued, ids stay
+/// strictly monotone, `live = allocated_total - reclaimed_total`, and
+/// the resident footprint (live + free) never exceeds the cap.
+#[test]
+fn prop_interleaved_alloc_reclaim_accounting_consistent() {
+    check("arena-accounting", 10, |rng| {
+        let d = 8;
+        let arena = BlockArena::shared(d, 256); // tpb = 4, block_bytes = 256
+        let cap = 8 + rng.below(48);
+        arena.set_capacity_blocks(Some(cap));
+        let mut held: Vec<(u64, retroinfer::kvcache::arena::BlockData)> = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        let (mut model_live, mut model_free) = (0usize, 0usize);
+        for step in 0..400 {
+            if rng.below(2) == 0 {
+                match arena.try_alloc_for(DEFAULT_TENANT) {
+                    Ok((id, data)) => {
+                        prop_assert!(seen.insert(id), "block id {} reissued (step {})", id, step);
+                        // ids issue sequentially (single-threaded), so a
+                        // reclaimed id can never resurrect
+                        prop_assert_eq!(id, arena.allocated_total() - 1);
+                        prop_assert!(model_live < cap, "alloc succeeded at capacity");
+                        // the arena recycles free storage before growing
+                        if model_free > 0 {
+                            model_free -= 1;
+                        }
+                        model_live += 1;
+                        held.push((id, data));
+                    }
+                    Err(e) => {
+                        prop_assert_eq!(model_live, cap);
+                        prop_assert!(
+                            matches!(e, AllocError::ArenaFull { .. }),
+                            "unexpected error {:?}",
+                            e
+                        );
+                    }
+                }
+            } else if !held.is_empty() {
+                let k = 1 + rng.below(held.len());
+                let at = held.len() - k;
+                let drained: Vec<_> = held.drain(at..).map(|(_, b)| b).collect();
+                arena.reclaim_for(DEFAULT_TENANT, drained);
+                model_live -= k;
+                model_free += k;
+            }
+            prop_assert_eq!(arena.live_blocks(), model_live);
+            prop_assert_eq!(arena.free_blocks(), model_free);
+            prop_assert_eq!(
+                arena.allocated_total() - arena.reclaimed_total(),
+                model_live as u64
+            );
+            prop_assert!(
+                arena.live_blocks() + arena.free_blocks() <= cap,
+                "resident {} blocks exceeds cap {}",
+                arena.live_blocks() + arena.free_blocks(),
+                cap
+            );
+            prop_assert_eq!(arena.resident_bytes(), (model_live + model_free) * 256);
+        }
+        let rest: Vec<_> = held.drain(..).map(|(_, b)| b).collect();
+        arena.reclaim_for(DEFAULT_TENANT, rest);
+        prop_assert_eq!(arena.live_blocks(), 0);
+        prop_assert_eq!(arena.allocated_total(), arena.reclaimed_total());
+        Ok(())
+    });
+}
+
+/// Quota accounting follows interleaved multi-tenant traffic: each
+/// tenant's occupancy is tracked independently, refusals are typed, and
+/// reclamation re-opens exactly the reclaimed tenant's budget.
+#[test]
+fn prop_tenant_quota_accounting_consistent() {
+    check("arena-quota", 8, |rng| {
+        let arena = BlockArena::shared(8, 256);
+        let quotas = [3 + rng.below(6), 3 + rng.below(6)];
+        arena.set_tenant_quota(0, Some(quotas[0]));
+        arena.set_tenant_quota(1, Some(quotas[1]));
+        let mut held: Vec<Vec<retroinfer::kvcache::arena::BlockData>> =
+            vec![Vec::new(), Vec::new()];
+        for _ in 0..200 {
+            let t = rng.below(2);
+            if rng.below(2) == 0 {
+                match arena.try_alloc_for(t as u32) {
+                    Ok((_, b)) => {
+                        held[t].push(b);
+                        prop_assert!(held[t].len() <= quotas[t], "quota overshoot");
+                    }
+                    Err(e) => {
+                        prop_assert_eq!(held[t].len(), quotas[t]);
+                        prop_assert_eq!(
+                            e,
+                            AllocError::QuotaExceeded {
+                                tenant: t as u32,
+                                quota_blocks: quotas[t]
+                            }
+                        );
+                    }
+                }
+            } else if !held[t].is_empty() {
+                let b = held[t].pop().unwrap();
+                arena.reclaim_for(t as u32, [b]);
+            }
+            prop_assert_eq!(arena.tenant_live_blocks(t as u32), held[t].len());
+        }
+        for (t, blocks) in held.into_iter().enumerate() {
+            arena.reclaim_for(t as u32, blocks);
+        }
+        prop_assert_eq!(arena.live_blocks(), 0);
+        prop_assert_eq!(arena.tenant_live_blocks(0), 0);
+        prop_assert_eq!(arena.tenant_live_blocks(1), 0);
         Ok(())
     });
 }

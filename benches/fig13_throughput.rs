@@ -99,6 +99,44 @@ fn capped_admission_report() {
     assert!(rep.deferrals > 0, "cap sized to force deferrals");
 }
 
+/// Serve the same overcommitted trace with the cold spill tier enabled
+/// (ROADMAP: CPU-tier spill): the hot cap binds at every step while the
+/// total live footprint exceeds it — the spill-forcing config the
+/// EXPERIMENTS.md tiered-arena table is fed by.
+fn spill_pressure_report() {
+    let n_per_tenant = if quick_mode() { 3 } else { 6 };
+    let trace = multi_tenant_poisson(&[4.0, 2.0], n_per_tenant, 120, 8, 13);
+    let cfg = PressureConfig {
+        capacity_blocks: 256,
+        tenant_quota_blocks: None,
+        spill: true,
+        ..PressureConfig::default()
+    };
+    let rep = run_memory_pressure(&cfg, &trace);
+    println!(
+        "# tiered arena under spill: {} reqs, hot cap={} blocks -> completed={} \
+         demoted={} promoted={} peak_hot={} peak_total={} blocks (cold peak {})",
+        trace.len(),
+        cfg.capacity_blocks,
+        rep.completed,
+        rep.demotions,
+        rep.promotions,
+        rep.peak_live_blocks,
+        rep.peak_total_live_blocks,
+        rep.peak_cold_blocks,
+    );
+    assert!(rep.drained, "spill run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap");
+    assert_eq!(rep.deferrals, 0, "tiered admission must never defer");
+    assert_eq!(rep.completed, trace.len(), "requests lost under spill");
+    assert!(rep.demotions > 0, "config sized to force spill");
+    assert!(
+        rep.peak_total_live_blocks > cfg.capacity_blocks,
+        "total live must exceed the hot tier for the report to mean anything"
+    );
+    assert_eq!(rep.final_cold_blocks, 0, "cold blocks must die with their sessions");
+}
+
 fn main() {
     let model = ModelSpec::llama3_8b();
     let hw = HardwareSpec::a100();
@@ -106,6 +144,7 @@ fn main() {
     println!("# measured wave-buffer hit ratio (real trace replay): {hit:.3}");
     println!("# paper reports 0.79-0.94 across tasks at 5% cache");
     capped_admission_report();
+    spill_pressure_report();
     println!();
 
     let contexts: &[(usize, &str)] =
@@ -124,6 +163,9 @@ fn main() {
             profiles::infinigen(),
             profiles::pqcache(),
             profiles::retroinfer(hit),
+            // tiered arena: 30% of uncached fetches climb from the cold
+            // spill tier first (hot RAM tier capped below the working set)
+            profiles::retroinfer_spilled(hit, 0.3),
         ] {
             let mut row = vec![p.name.to_string()];
             let mut peak = 0.0f64;

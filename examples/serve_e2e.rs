@@ -7,6 +7,12 @@
 //! sized BELOW the uncapped run's peak occupancy: admission control must
 //! defer prefills, keep resident bytes under the cap at every step, and
 //! still complete every request (DESIGN.md §2 "Admission & quotas").
+//! A fourth pass re-serves it with the TIERED arena: the hot tier is
+//! capped at ~40% of the uncapped peak and the cold spill tier absorbs
+//! the overflow — no admission gate, zero deferrals, demote-then-retry
+//! everywhere, tokens bit-identical to the single-tier run, and
+//! promotions/demotions > 0 with hot-resident blocks ≤ cap at every
+//! step (DESIGN.md §2 "Tiered arena & spill").
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 //!
@@ -16,6 +22,7 @@
 use retroinfer::config::CapacityConfig;
 use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
 use retroinfer::engine::{live::structured_prompt, AttnMode, LiveEngine};
+use retroinfer::kvcache::ColdestFirst;
 use retroinfer::runtime::default_artifacts_dir;
 use retroinfer::util::cli::Args;
 use std::collections::HashMap;
@@ -29,6 +36,9 @@ struct ServeStats {
     hit_ratio: f64,
     peak_live_blocks: u64,
     deferrals: u64,
+    demoted: u64,
+    promoted: u64,
+    cold_hits: u64,
 }
 
 fn serve(
@@ -37,11 +47,15 @@ fn serve(
     max_new: usize,
     tenants: usize,
     capacity_blocks: Option<usize>,
+    spill: bool,
 ) -> anyhow::Result<ServeStats> {
     let dir = default_artifacts_dir();
     let mut eng = LiveEngine::new(&dir, mode)?;
+    if spill {
+        eng.enable_spill(Arc::new(ColdestFirst));
+    }
     let mut sched = match capacity_blocks {
-        Some(cap) => {
+        Some(cap) if !spill => {
             eng.set_arena_capacity_blocks(Some(cap));
             // default knobs: 20% decode headroom, 1.5x footprint fudge
             Scheduler::with_admission(
@@ -49,6 +63,12 @@ fn serve(
                 Arc::clone(eng.arena()),
                 eng.admission_config(&CapacityConfig::default()),
             )
+        }
+        Some(cap) => {
+            // tiered: the hot cap is the engine's problem (demote, then
+            // retry) — no occupancy gate, so nothing can defer forever
+            eng.set_arena_capacity_blocks(Some(cap));
+            Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8))
         }
         None => Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8)),
     };
@@ -78,16 +98,18 @@ fn serve(
             Action::Defer => {}
             Action::Idle => break,
         }
-        // the capped run's core invariant, checked at EVERY step
+        // the capped run's core invariant, checked at EVERY step (for
+        // tiered runs this bounds the HOT tier; total live KV may —
+        // and must, to mean anything — exceed it)
         if let Some(cap) = capacity_blocks {
             assert!(
                 eng.arena().live_blocks() <= cap,
-                "arena live blocks {} exceeded capacity {cap}",
+                "arena hot live blocks {} exceeded capacity {cap}",
                 eng.arena().live_blocks()
             );
             assert!(
                 eng.arena().resident_bytes() <= cap * eng.arena().block_bytes(),
-                "arena resident bytes {} exceeded capacity",
+                "arena hot resident bytes {} exceeded capacity",
                 eng.arena().resident_bytes()
             );
         }
@@ -99,7 +121,12 @@ fn serve(
     assert_eq!(
         eng.arena().live_blocks(),
         0,
-        "all sessions finished — every arena block must be reclaimed"
+        "all sessions finished — every hot arena block must be reclaimed"
+    );
+    assert_eq!(
+        eng.arena().cold_blocks(),
+        0,
+        "all sessions finished — every cold block must have been dropped"
     );
     assert_eq!(sched.n_rejections(), 0, "no request may be dropped");
     for s in sched.sessions() {
@@ -118,6 +145,9 @@ fn serve(
         hit_ratio: eng.buffer_hit_ratio(),
         peak_live_blocks: eng.metrics.gauge("arena_live_blocks_peak"),
         deferrals: sched.n_deferrals(),
+        demoted: eng.arena().demoted_total(),
+        promoted: eng.arena().promoted_total(),
+        cold_hits: eng.metrics.counter("cold_hit_blocks"),
     })
 }
 
@@ -133,10 +163,10 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<Vec<i32>> =
         (0..n_requests).map(|i| structured_prompt(prompt_len, 100 + i as u64)).collect();
 
-    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None)?;
+    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None, false)?;
     println!("full attention : wall={:.2}s decode={:.1} tok/s", full.wall_s, full.decode_tps);
 
-    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None)?;
+    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None, false)?;
     println!(
         "wave attention : wall={:.2}s decode={:.1} tok/s hit_ratio={:.3} peak_arena={} blocks",
         wave.wall_s, wave.decode_tps, wave.hit_ratio, wave.peak_live_blocks
@@ -152,7 +182,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         (peak * 3 / 5).max(2 * peak / n_requests.max(1)).max(1)
     };
-    let capped = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap))?;
+    let capped = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap), false)?;
     println!(
         "wave (capped)  : wall={:.2}s cap={cap} blocks peak={} blocks deferral_events={}",
         capped.wall_s, capped.peak_live_blocks, capped.deferrals
@@ -169,6 +199,30 @@ fn main() -> anyhow::Result<()> {
     // teacher-free greedy decode must produce the same token streams
     for (id, toks) in &wave.out {
         assert_eq!(toks, &capped.out[id], "capped serve changed request {id}'s tokens");
+    }
+
+    // Tiered re-run: hot tier at ~40% of the uncapped peak (floored so
+    // one session still fits hot — a session under construction cannot
+    // spill its own half-built heads), cold tier absorbing the rest.
+    // No admission gate: a full hot tier demotes-then-retries, so
+    // nothing can defer forever.
+    let hot_cap = (peak * 2 / 5).max(peak / n_requests.max(1) + 8).max(1);
+    let tiered = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true)?;
+    println!(
+        "wave (tiered)  : wall={:.2}s hot_cap={hot_cap} blocks demoted={} promoted={} \
+         cold_hit_blocks={} deferral_events={}",
+        tiered.wall_s, tiered.demoted, tiered.promoted, tiered.cold_hits, tiered.deferrals
+    );
+    assert_eq!(tiered.deferrals, 0, "tiered serving must never defer");
+    assert_eq!(tiered.out.len(), n_requests, "tiered serve dropped requests");
+    if n_requests > 1 {
+        assert!(tiered.demoted > 0, "hot cap at 40% of peak must force demotions");
+        assert!(tiered.promoted > 0, "decode must promote spilled clusters back");
+    }
+    // the tiered arena changes placement, never results: tokens must be
+    // bit-identical to the single-tier run
+    for (id, toks) in &wave.out {
+        assert_eq!(toks, &tiered.out[id], "tiered serve changed request {id}'s tokens");
     }
 
     // Cross-mode agreement, TEACHER-FORCED: replay full attention's token

@@ -183,6 +183,23 @@ impl BlockCache {
         (slot, evicted)
     }
 
+    /// Drop a resident block outright (tier demotion: a block moving to
+    /// the cold spill tier must not keep occupying a GPU slot). Returns
+    /// the freed slot, or `None` if the key is not resident.
+    pub fn remove(&mut self, key: u64) -> Option<u32> {
+        let s = self.map.remove(&key)?;
+        if self.in_a1[s as usize] {
+            self.a1in.remove(s);
+            self.in_a1[s as usize] = false;
+        } else {
+            self.main.remove(s);
+        }
+        self.refbit[s as usize] = false;
+        self.keys[s as usize] = u64::MAX;
+        self.free.push(s);
+        Some(s)
+    }
+
     fn evict_slot(&mut self) -> u32 {
         match self.policy {
             CachePolicy::Lru | CachePolicy::Fifo => {
@@ -314,6 +331,27 @@ mod tests {
         let (s, _) = c.admit(9);
         c.slot_data_mut(s).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(c.slot_data(s), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn remove_frees_slot_under_every_policy() {
+        for p in [CachePolicy::Lru, CachePolicy::Fifo, CachePolicy::Clock, CachePolicy::TwoQ] {
+            let mut c = BlockCache::new(p, 2, 4);
+            c.admit(1);
+            c.admit(2);
+            if p == CachePolicy::TwoQ {
+                c.touch(1); // exercise removal from Am as well as A1in
+            }
+            assert!(c.remove(1).is_some());
+            assert!(c.remove(1).is_none(), "{p:?}: double remove");
+            assert!(c.peek(1).is_none());
+            assert_eq!(c.len(), 1);
+            // the freed slot is reusable and eviction still works
+            c.admit(3);
+            let (_, ev) = c.admit(4);
+            assert!(ev.is_some(), "{p:?}: eviction broken after remove");
+            assert_eq!(c.len(), 2);
+        }
     }
 
     #[test]

@@ -51,10 +51,15 @@ pub struct AccessStats {
     pub hit_blocks: usize,
     /// Blocks fetched from CPU memory (PCIe transfer).
     pub miss_blocks: usize,
+    /// Blocks served from the cold spill tier (a cold-hit stall: the
+    /// block was neither GPU-cached nor hot in CPU RAM when selected).
+    pub cold_blocks: usize,
     /// Bytes copied GPU→GPU (steady + cache hits).
     pub g2g_bytes: usize,
     /// Bytes moved over PCIe (cache misses).
     pub pcie_bytes: usize,
+    /// Bytes read from the spill tier (cold-hit stalls).
+    pub spill_bytes: usize,
 }
 
 impl AccessStats {
@@ -71,8 +76,10 @@ impl AccessStats {
         self.steady_tokens += o.steady_tokens;
         self.hit_blocks += o.hit_blocks;
         self.miss_blocks += o.miss_blocks;
+        self.cold_blocks += o.cold_blocks;
         self.g2g_bytes += o.g2g_bytes;
         self.pcie_bytes += o.pcie_bytes;
+        self.spill_bytes += o.spill_bytes;
     }
 }
 
@@ -100,10 +107,20 @@ mod tests {
 
     #[test]
     fn stats_add() {
-        let mut a = AccessStats { steady_tokens: 1, hit_blocks: 2, miss_blocks: 3, g2g_bytes: 4, pcie_bytes: 5 };
+        let mut a = AccessStats {
+            steady_tokens: 1,
+            hit_blocks: 2,
+            miss_blocks: 3,
+            cold_blocks: 4,
+            g2g_bytes: 5,
+            pcie_bytes: 6,
+            spill_bytes: 7,
+        };
         let b = a;
         a.add(&b);
         assert_eq!(a.miss_blocks, 6);
-        assert_eq!(a.pcie_bytes, 10);
+        assert_eq!(a.cold_blocks, 8);
+        assert_eq!(a.pcie_bytes, 12);
+        assert_eq!(a.spill_bytes, 14);
     }
 }

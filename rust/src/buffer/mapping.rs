@@ -12,10 +12,14 @@ use std::collections::HashMap;
 /// Where one of a cluster's blocks currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BlockHome {
-    /// Only in CPU memory.
+    /// Hot CPU memory only.
     Cpu,
     /// Cached in the given GPU cache slot.
     Gpu(u32),
+    /// Demoted to the cold spill tier (neither GPU-cached nor hot in
+    /// CPU RAM — a selection touching it is a cold-hit stall until the
+    /// engine promotes it).
+    Cold,
 }
 
 /// Descriptor of one cluster: its CPU blocks and their GPU residency.
@@ -70,11 +74,68 @@ impl MappingTable {
         self.clusters[c as usize].home[i as usize] = BlockHome::Gpu(slot);
     }
 
-    /// Invalidate a block's GPU residency (after eviction).
+    /// Invalidate a block's GPU residency (after eviction). Only a
+    /// `Gpu` home transitions back to `Cpu` — evicting a block whose
+    /// base tier is cold must leave it `Cold`, not resurrect a phantom
+    /// hot-CPU residency.
     pub fn set_evicted(&mut self, block: u64) {
         if let Some(&(c, i)) = self.owner.get(&block) {
-            self.clusters[c as usize].home[i as usize] = BlockHome::Cpu;
+            let h = &mut self.clusters[c as usize].home[i as usize];
+            if matches!(h, BlockHome::Gpu(_)) {
+                *h = BlockHome::Cpu;
+            }
         }
+    }
+
+    /// Mark a block demoted to the cold tier. Callers must drop any
+    /// GPU-cache copy first (`WaveBuffer::note_demoted` does both under
+    /// one lock) so a block is never `Gpu` in the cache and `Cold` here.
+    pub fn set_cold(&mut self, block: u64) {
+        if let Some(&(c, i)) = self.owner.get(&block) {
+            self.clusters[c as usize].home[i as usize] = BlockHome::Cold;
+        }
+    }
+
+    /// Mark a cold block promoted back to hot CPU memory.
+    pub fn set_hot(&mut self, block: u64) {
+        if let Some(&(c, i)) = self.owner.get(&block) {
+            let h = &mut self.clusters[c as usize].home[i as usize];
+            if *h == BlockHome::Cold {
+                *h = BlockHome::Cpu;
+            }
+        }
+    }
+
+    /// Invalidate a whole cluster's descriptor: every block's
+    /// reverse-map entry is removed regardless of its `BlockHome` state
+    /// — a mixed `Gpu` + `Cold` cluster must not leave stale `owner`
+    /// entries behind (the eviction-bookkeeping regression in
+    /// `tests/spill.rs`). Returns the removed blocks with their last
+    /// homes so the caller can drop GPU slots / cold pages. No serving
+    /// path retires clusters yet (today's pipeline only appends and
+    /// tears whole heads down, which drops the table outright); this is
+    /// the teardown entry point cluster rebuilds must go through.
+    pub fn invalidate_cluster(&mut self, cluster: u32) -> Vec<(u64, BlockHome)> {
+        let desc = &mut self.clusters[cluster as usize];
+        let blocks = std::mem::take(&mut desc.blocks);
+        let homes = std::mem::take(&mut desc.home);
+        let mut removed = Vec::with_capacity(blocks.len());
+        for (b, h) in blocks.iter().zip(homes) {
+            // remove only entries this cluster actually owns: an id
+            // re-registered by a later cluster must keep its new owner
+            if self.owner.get(&b.block).is_some_and(|&(c, _)| c == cluster) {
+                self.owner.remove(&b.block);
+            }
+            removed.push((b.block, h));
+        }
+        removed
+    }
+
+    /// Current home of a block (`None` for unknown ids).
+    pub fn home(&self, block: u64) -> Option<BlockHome> {
+        self.owner
+            .get(&block)
+            .map(|&(c, i)| self.clusters[c as usize].home[i as usize])
     }
 
     /// Owning (cluster, index) of an arena block id.
@@ -88,6 +149,15 @@ impl MappingTable {
             .iter()
             .flat_map(|c| &c.home)
             .filter(|h| matches!(h, BlockHome::Gpu(_)))
+            .count()
+    }
+
+    /// Blocks currently marked cold (for invariants/tests).
+    pub fn cold_blocks(&self) -> usize {
+        self.clusters
+            .iter()
+            .flat_map(|c| &c.home)
+            .filter(|h| matches!(h, BlockHome::Cold))
             .count()
     }
 }
@@ -127,6 +197,50 @@ mod tests {
         mt.set_evicted(1);
         assert_eq!(mt.lookup(0).home[1], BlockHome::Cpu);
         assert_eq!(mt.gpu_resident_blocks(), 0);
+    }
+
+    #[test]
+    fn cold_transitions_do_not_fabricate_cpu_homes() {
+        let mut mt = MappingTable::new();
+        mt.add_cluster(vec![bref(0, 0, 8), bref(1, 1, 8)]);
+        mt.set_cold(0);
+        assert_eq!(mt.lookup(0).home[0], BlockHome::Cold);
+        assert_eq!(mt.cold_blocks(), 1);
+        // evicting a cold block must not resurrect a hot-CPU home
+        mt.set_evicted(0);
+        assert_eq!(mt.lookup(0).home[0], BlockHome::Cold);
+        mt.set_hot(0);
+        assert_eq!(mt.lookup(0).home[0], BlockHome::Cpu);
+        assert_eq!(mt.cold_blocks(), 0);
+        // set_hot on a GPU-cached block is a no-op
+        mt.set_cached(1, 3);
+        mt.set_hot(1);
+        assert_eq!(mt.lookup(0).home[1], BlockHome::Gpu(3));
+        // unknown ids are no-ops, not panics
+        mt.set_cold(99);
+        mt.set_hot(99);
+    }
+
+    #[test]
+    fn invalidate_cluster_removes_every_owner_entry() {
+        let mut mt = MappingTable::new();
+        let c0 = mt.add_cluster(vec![bref(0, 0, 8), bref(1, 1, 8), bref(2, 2, 4)]);
+        // mixed homes: Gpu + Cold + Cpu
+        mt.set_cached(0, 7);
+        mt.set_cold(1);
+        let removed = mt.invalidate_cluster(c0);
+        assert_eq!(removed.len(), 3);
+        assert_eq!(removed[0], (0, BlockHome::Gpu(7)));
+        assert_eq!(removed[1], (1, BlockHome::Cold));
+        assert_eq!(removed[2], (2, BlockHome::Cpu));
+        for b in 0..3u64 {
+            assert_eq!(mt.owner(b), (u32::MAX, 0), "stale owner entry for block {b}");
+        }
+        assert_eq!(mt.gpu_resident_blocks(), 0);
+        assert_eq!(mt.cold_blocks(), 0);
+        // later clusters can re-register the same descriptor slot count
+        let c1 = mt.add_cluster(vec![bref(9, 0, 8)]);
+        assert_eq!(mt.owner(9), (c1, 0));
     }
 
     #[test]

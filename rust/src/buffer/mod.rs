@@ -27,8 +27,12 @@ pub struct BufferStats {
     pub lookups: AtomicU64,
     pub hit_blocks: AtomicU64,
     pub miss_blocks: AtomicU64,
+    /// Cold-hit stalls: selected blocks served through the spill tier.
+    pub cold_blocks: AtomicU64,
     pub g2g_bytes: AtomicU64,
     pub pcie_bytes: AtomicU64,
+    /// Bytes read from the cold spill tier.
+    pub spill_bytes: AtomicU64,
     pub evictions: AtomicU64,
     pub async_updates: AtomicU64,
 }
@@ -146,10 +150,10 @@ impl WaveBuffer {
                         st.hit_blocks += 1;
                         st.g2g_bytes += nbytes;
                         hit_keys.push(b.block);
-                    } else {
-                        // Miss: PCIe fetch from the CPU block store.
-                        let bk = index.store().block_keys(*b);
-                        let bv = index.store().block_vals(*b);
+                    } else if let (Some(bk), Some(bv)) =
+                        (index.store().try_block_keys(*b), index.store().try_block_vals(*b))
+                    {
+                        // Miss: PCIe fetch from the hot CPU block store.
                         eb.push(bk, bv);
                         st.miss_blocks += 1;
                         st.pcie_bytes += nbytes;
@@ -160,6 +164,16 @@ impl WaveBuffer {
                             data[half..half + bv.len()].copy_from_slice(bv);
                             missed.push((b.block, data));
                         }
+                    } else {
+                        // Cold-hit stall: the block is neither GPU-cached
+                        // nor hot in CPU RAM. The data path reads through
+                        // the spill tier (byte-identical to the hot path);
+                        // promote-then-fill is the engine's async job, and
+                        // cold reads are never admitted to the GPU cache —
+                        // admission copies come from hot blocks only.
+                        index.store().copy_block_kv(*b, &mut eb.keys, &mut eb.vals);
+                        st.cold_blocks += 1;
+                        st.spill_bytes += nbytes;
                     }
                 }
             }
@@ -168,8 +182,10 @@ impl WaveBuffer {
         self.stats.lookups.fetch_add(1, Ordering::Relaxed);
         self.stats.hit_blocks.fetch_add(st.hit_blocks as u64, Ordering::Relaxed);
         self.stats.miss_blocks.fetch_add(st.miss_blocks as u64, Ordering::Relaxed);
+        self.stats.cold_blocks.fetch_add(st.cold_blocks as u64, Ordering::Relaxed);
         self.stats.g2g_bytes.fetch_add(st.g2g_bytes as u64, Ordering::Relaxed);
         self.stats.pcie_bytes.fetch_add(st.pcie_bytes as u64, Ordering::Relaxed);
+        self.stats.spill_bytes.fetch_add(st.spill_bytes as u64, Ordering::Relaxed);
 
         // Cache update: policy touches for hits, admission for misses.
         if self.cfg.gpu_cache_enabled && (!hit_keys.is_empty() || !missed.is_empty()) {
@@ -181,6 +197,12 @@ impl WaveBuffer {
                     g.cache.touch(k);
                 }
                 for (block, data) in missed {
+                    // a block demoted to the cold tier between the
+                    // assembly snapshot and this update must not
+                    // re-enter the GPU cache (cold blocks hold no slots)
+                    if g.mapping.home(block) == Some(BlockHome::Cold) {
+                        continue;
+                    }
                     let (slot, evicted) = g.cache.admit(block);
                     if slot != u32::MAX {
                         g.cache.slot_data_mut(slot).copy_from_slice(&data);
@@ -205,6 +227,33 @@ impl WaveBuffer {
     /// Register clusters appended by incremental index updates.
     pub fn sync_new_clusters(&self, index: &WaveIndex) {
         self.register_index(index);
+    }
+
+    /// Tier bookkeeping for a demotion: the blocks lose their GPU-cache
+    /// copies (a cold block must not keep occupying GPU slots) and
+    /// their mapping homes go `Cold` — both under one lock, so the
+    /// mapping never claims a GPU residency the cache no longer holds.
+    pub fn note_demoted(&self, blocks: &[crate::kvcache::BlockRef]) {
+        let mut g = self.inner.lock().unwrap();
+        for b in blocks {
+            if g.cache.remove(b.block).is_some() {
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            g.mapping.set_cold(b.block);
+        }
+    }
+
+    /// Tier bookkeeping for a promotion: cold homes return to hot CPU.
+    pub fn note_promoted(&self, blocks: &[crate::kvcache::BlockRef]) {
+        let mut g = self.inner.lock().unwrap();
+        for b in blocks {
+            g.mapping.set_hot(b.block);
+        }
+    }
+
+    /// Blocks the mapping table currently marks cold.
+    pub fn cold_marked_blocks(&self) -> usize {
+        self.inner.lock().unwrap().mapping.cold_blocks()
     }
 
     /// Wait for all pending asynchronous cache updates.
@@ -368,6 +417,47 @@ mod tests {
             "locality hit ratio = {}",
             wb.stats().hit_ratio()
         );
+    }
+
+    #[test]
+    fn cold_blocks_serve_identical_bytes_through_the_spill_tier() {
+        let d = 16;
+        let mut idx = mk_index(512, d, 7);
+        let wb = mk_buffer(&idx, 64, false);
+        let q = vec![0.4; d];
+        let mut sc = SelectScratch::default();
+        let sel = idx.select_with(&q, 4, 0, &mut sc);
+        let mut eb_hot = ExecBuffer::new(d);
+        wb.assemble(&idx, &sel, &mut eb_hot); // all misses; admits copies
+        // demote every retrieved cluster; GPU copies must go with them
+        for &c in &sel.retrieval {
+            assert!(idx.demote_cluster(c) > 0);
+            wb.note_demoted(idx.cluster_blocks(c));
+        }
+        assert!(wb.check_consistency());
+        assert!(wb.cold_marked_blocks() > 0);
+        let mut eb_cold = ExecBuffer::new(d);
+        let st = wb.assemble(&idx, &sel, &mut eb_cold);
+        assert!(st.cold_blocks > 0, "demoted blocks must be cold-hit stalls");
+        assert_eq!(st.miss_blocks, 0);
+        assert_eq!(st.hit_blocks, 0);
+        assert!(st.spill_bytes > 0);
+        // the cold data path is byte-identical to the hot one
+        assert_eq!(eb_hot.keys, eb_cold.keys);
+        assert_eq!(eb_hot.vals, eb_cold.vals);
+        // promotion restores the hot fetch + admission path
+        for &c in &sel.retrieval {
+            let (n, _, err) = idx.promote_cluster(c);
+            assert!(err.is_none(), "uncapped promote must not fail");
+            assert!(n > 0);
+            wb.note_promoted(idx.cluster_blocks(c));
+        }
+        assert_eq!(wb.cold_marked_blocks(), 0);
+        let mut eb_back = ExecBuffer::new(d);
+        let st = wb.assemble(&idx, &sel, &mut eb_back);
+        assert_eq!(st.cold_blocks, 0);
+        assert!(st.miss_blocks > 0, "promoted blocks fetch hot again");
+        assert_eq!(eb_back.keys, eb_hot.keys);
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct HardwareSpec {
     pub gpu_flops: f64,
     /// PCIe unidirectional bandwidth, bytes/s.
     pub pcie_bw: f64,
+    /// Cold-spill-tier sequential bandwidth, bytes/s (NVMe-class store
+    /// behind the DRAM KV tier — the level below the paper's hierarchy,
+    /// used by the tiered-arena term in `memsim`).
+    pub spill_bw: f64,
     /// Host DRAM capacity in bytes.
     pub cpu_mem_bytes: usize,
     /// Host memory bandwidth available to the serving process, bytes/s.
@@ -37,6 +41,7 @@ impl HardwareSpec {
             gpu_bw: 2.039e12,   // 2039 GB/s HBM2e
             gpu_flops: 312e12,  // bf16 tensor core
             pcie_bw: 32e9,      // PCIe 4.0 x16 unidirectional
+            spill_bw: 7e9,      // PCIe 4.0 x4 NVMe sequential read
             cpu_mem_bytes: 1700 * (1 << 30),
             cpu_bw: 80e9,       // one NUMA node of EPYC 7V12
             cpu_flops: 1.2e12,  // 12 cores * AVX2 fp32
@@ -53,6 +58,7 @@ impl HardwareSpec {
             gpu_bw: 768e9,
             gpu_flops: 155e12,
             pcie_bw: 32e9,
+            spill_bw: 7e9,
             cpu_mem_bytes: 1700 * (1 << 30),
             cpu_bw: 80e9,
             cpu_flops: 1.2e12,

@@ -50,6 +50,13 @@ pub struct AdmissionConfig {
     /// covering cluster tail-block fragmentation (clusters never share
     /// blocks) and decode-time update segments.
     pub est_fudge: f64,
+    /// The arena behind the gate is tiered (cold spill enabled): a full
+    /// hot tier means the engine demotes and retries, so occupancy
+    /// never defers admission — the cold tier absorbs the overflow and
+    /// only the batcher's slot count paces new work. This is the
+    /// "demote, then retry, before defer" change of meaning for
+    /// `ArenaFull` (DESIGN.md §2 "Tiered arena & spill").
+    pub tiered: bool,
 }
 
 impl AdmissionConfig {
@@ -175,6 +182,11 @@ impl Scheduler {
         let (Some(arena), Some(adm)) = (&self.arena, &self.admission) else {
             return Gate::Admit;
         };
+        if adm.tiered {
+            // Tiered arena: hot-tier occupancy is the engine's problem
+            // (demote-then-retry), not an admission signal.
+            return Gate::Admit;
+        }
         let s = &self.sessions[&id];
         // lifetime footprint: the prompt plus every token the session
         // may decode (so quota admission can never strand a session
@@ -435,6 +447,40 @@ mod tests {
         }
         finished.sort_unstable();
         assert_eq!(finished, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tiered_gate_admits_past_a_full_hot_tier() {
+        // hot tier far too small for even one request's estimate: the
+        // single-tier gate would reject, the tiered gate must admit
+        // (the engine demotes-then-retries; cold absorbs the overflow)
+        let arena = BlockArena::shared(16, 512);
+        arena.set_capacity_blocks(Some(2));
+        let adm = AdmissionConfig {
+            heads: 4,
+            tokens_per_block: 4,
+            headroom_frac: 0.2,
+            est_fudge: 1.5,
+            tiered: true,
+        };
+        let mut s = Scheduler::with_admission(
+            Batcher::new(&[1, 2, 4, 8], 4),
+            Arc::clone(&arena),
+            adm.clone(),
+        );
+        s.submit(Request::new(1, vec![1; 400], 4), 0.0);
+        assert_eq!(s.next_action(), Action::Prefill(1));
+        assert_eq!(s.n_deferrals(), 0);
+        assert_eq!(s.n_rejections(), 0);
+        // the same request under the single-tier gate is rejected
+        let mut s1 = Scheduler::with_admission(
+            Batcher::new(&[1, 2, 4, 8], 4),
+            Arc::clone(&arena),
+            AdmissionConfig { tiered: false, ..adm },
+        );
+        s1.submit(Request::new(2, vec![1; 400], 4), 0.0);
+        assert_ne!(s1.next_action(), Action::Prefill(2));
+        assert_eq!(s1.n_rejections(), 1);
     }
 
     #[test]

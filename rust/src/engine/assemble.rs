@@ -89,7 +89,15 @@ pub fn assemble_head(
     sel.retrieval = kept;
     sel.estimation.truncate(m_cap);
 
-    // Execution buffer via the wave buffer (steady + hits + misses).
+    // Record the selection for the spill machinery: access epochs feed
+    // the demotion policy, and the wanted set (retrieval + estimation)
+    // is what the engine prefetches from the cold tier for the next
+    // step — the estimation zone is the estimator's shortlist of what
+    // retrieval will want as the query drifts.
+    index.note_selection(&sel);
+
+    // Execution buffer via the wave buffer (steady + hits + misses +
+    // cold-hit stalls).
     let stats = task.buffer.assemble(index, &sel, eb);
 
     let n_tok = eb.n_tokens().min(ne);

@@ -8,14 +8,14 @@ use crate::buffer::{ExecBuffer, WaveBuffer};
 use crate::config::{BufferConfig, CapacityConfig, ZoneConfig};
 use crate::coordinator::AdmissionConfig;
 use crate::index::{SelectScratch, WaveIndex};
-use crate::kvcache::{BlockArena, TenantId, DEFAULT_TENANT};
+use crate::kvcache::{AllocError, BlockArena, SpillPolicy, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
 use crate::runtime::tinylm::{TinyLm, WaveInputs};
 use crate::tensor::Tensor;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Attention mode for decode.
@@ -50,6 +50,11 @@ pub struct LiveEngine {
     arena: Arc<BlockArena>,
     assembler: BatchAssembler,
     states: HashMap<u64, SessionState>,
+    /// Cold-tier spill: `Some(policy)` arms demote-then-retry on every
+    /// layer (index appends, prefill builds, promotions) plus the
+    /// decode-step prefetch worker. `None` = single-tier (PR 2
+    /// semantics exactly).
+    spill_policy: Option<Arc<dyn SpillPolicy>>,
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
 }
@@ -96,6 +101,7 @@ impl LiveEngine {
             arena,
             assembler,
             states: HashMap::new(),
+            spill_policy: None,
             metrics: Arc::new(Metrics::new()),
             scratch: SelectScratch::default(),
         })
@@ -104,6 +110,106 @@ impl LiveEngine {
     /// The engine-wide KV block arena (occupancy / reclaim accounting).
     pub fn arena(&self) -> &Arc<BlockArena> {
         &self.arena
+    }
+
+    /// Enable cold-tier spill under `policy`: from here on a full hot
+    /// tier means "demote, then retry" (prefill builds, decode appends,
+    /// promotions) instead of a hard refusal, and decode steps prefetch
+    /// the clusters the estimator selected for the *next* step through
+    /// the thread-pool so promotion overlaps compute. Applies to
+    /// already-live sessions too.
+    pub fn enable_spill(&mut self, policy: Arc<dyn SpillPolicy>) {
+        for st in self.states.values_mut() {
+            for idx in st.indexes.iter_mut() {
+                idx.set_spill_policy(Some(Arc::clone(&policy)));
+            }
+        }
+        self.spill_policy = Some(policy);
+    }
+
+    /// Whether cold-tier spill is armed.
+    pub fn spill_enabled(&self) -> bool {
+        self.spill_policy.is_some()
+    }
+
+    /// Demote cold clusters engine-wide (spill-policy order, sessions
+    /// in id order for determinism) until at least `need` hot blocks
+    /// were freed or nothing demotable remains. Returns blocks freed.
+    fn make_room(&mut self, need: usize) -> usize {
+        let Some(policy) = self.spill_policy.clone() else {
+            return 0;
+        };
+        let mut freed = 0usize;
+        let mut ids: Vec<u64> = self.states.keys().copied().collect();
+        ids.sort_unstable();
+        'outer: for id in ids {
+            let st = self.states.get_mut(&id).unwrap();
+            for slot in 0..st.indexes.len() {
+                if freed >= need {
+                    break 'outer;
+                }
+                let (n, demoted) = st.indexes[slot].demote_until(policy.as_ref(), need - freed);
+                freed += n;
+                for c in demoted {
+                    // drop the demoted blocks' GPU-cache copies and mark
+                    // their mapping homes cold
+                    st.buffers[slot].note_demoted(st.indexes[slot].cluster_blocks(c));
+                }
+            }
+        }
+        if freed > 0 {
+            self.metrics.inc("spill_make_room_blocks", freed as u64);
+        }
+        freed
+    }
+
+    /// Promote the clusters each batch head's estimator selected last
+    /// step (its `recent_clusters`) back into the hot tier before
+    /// assembly — consuming the pages the async prefetcher staged. A
+    /// full hot tier demotes colder clusters first (bounded retries);
+    /// clusters that still cannot fit stay cold and assembly serves
+    /// them through the spill tier (counted as cold-hit stalls).
+    fn promote_prefetched(&mut self, ids: &[u64]) {
+        for &id in ids {
+            let n_slots = match self.states.get(&id) {
+                Some(st) => st.indexes.len(),
+                None => continue,
+            };
+            for slot in 0..n_slots {
+                let wanted = self.states[&id].indexes[slot].recent_clusters();
+                for c in wanted {
+                    let mut attempts = 0;
+                    loop {
+                        let (n, _staged, err) = {
+                            let st = self.states.get_mut(&id).unwrap();
+                            st.indexes[slot].promote_cluster(c)
+                        };
+                        if n > 0 {
+                            let st = self.states.get_mut(&id).unwrap();
+                            // a partial promotion leaves some blocks cold:
+                            // only the actually-hot ones flip their homes
+                            let hot_refs: Vec<crate::kvcache::BlockRef> = st.indexes[slot]
+                                .cluster_blocks(c)
+                                .iter()
+                                .copied()
+                                .filter(|r| st.indexes[slot].store().is_hot(*r))
+                                .collect();
+                            st.buffers[slot].note_promoted(&hot_refs);
+                        }
+                        match err {
+                            None => break,
+                            Some(AllocError::ArenaFull { .. }) => {
+                                attempts += 1;
+                                if attempts > 2 || self.make_room(8) == 0 {
+                                    break;
+                                }
+                            }
+                            Some(_) => break,
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Toggle the thread-pool head fan-out (on by default when the
@@ -183,21 +289,48 @@ impl LiveEngine {
             for h in 0..kvh {
                 let keys = kc.row(&[layer, 0, h]);
                 let vals = vc.row(&[layer, 0, h]);
-                let idx = match WaveIndex::try_build_in_for(
-                    &self.arena,
-                    tenant,
-                    self.zcfg.clone(),
-                    keys,
-                    vals,
-                    id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1),
-                ) {
-                    Ok(idx) => idx,
-                    Err(e) => {
-                        // `indexes`/`buffers` drop here: the partial
-                        // session's blocks all return to the arena.
-                        self.metrics.inc("prefill_alloc_failures", 1);
-                        self.publish_arena_gauges();
-                        return Err(anyhow!("prefill {id} (tenant {tenant}): {e}"));
+                let seed = id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1);
+                // Tiered arena: make hot room for this head's build up
+                // front — full hot tier means "demote, then retry", not
+                // "refuse and defer".
+                if self.spill_enabled() {
+                    if let Some(cap) = self.arena.capacity_blocks() {
+                        let tpb = self.arena.tokens_per_block();
+                        let need =
+                            t.div_ceil(tpb) + t.div_ceil(self.zcfg.tokens_per_cluster) + 2;
+                        let headroom = cap.saturating_sub(self.arena.live_blocks());
+                        if headroom < need {
+                            self.make_room(need - headroom);
+                        }
+                    }
+                }
+                let idx = loop {
+                    match WaveIndex::try_build_in_for(
+                        &self.arena,
+                        tenant,
+                        self.zcfg.clone(),
+                        keys,
+                        vals,
+                        seed,
+                    ) {
+                        Ok(mut idx) => {
+                            if let Some(p) = &self.spill_policy {
+                                idx.set_spill_policy(Some(Arc::clone(p)));
+                            }
+                            break idx;
+                        }
+                        Err(e) => {
+                            let retry = matches!(e, AllocError::ArenaFull { .. })
+                                && self.spill_enabled()
+                                && self.make_room(64) > 0;
+                            if !retry {
+                                // `indexes`/`buffers` drop here: the partial
+                                // session's blocks all return to the arena.
+                                self.metrics.inc("prefill_alloc_failures", 1);
+                                self.publish_arena_gauges();
+                                return Err(anyhow!("prefill {id} (tenant {tenant}): {e}"));
+                            }
+                        }
                     }
                 };
                 let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
@@ -233,6 +366,18 @@ impl LiveEngine {
         if let Some(cap) = self.arena.capacity_blocks() {
             self.metrics.set_gauge("arena_capacity_blocks", cap as u64);
         }
+        // Cold-tier gauges (zero everywhere in single-tier runs).
+        self.metrics.set_gauge("arena_cold_blocks", self.arena.cold_blocks() as u64);
+        self.metrics.set_gauge("arena_cold_bytes", self.arena.cold_bytes() as u64);
+        self.metrics.set_gauge("arena_demoted_total", self.arena.demoted_total());
+        self.metrics.set_gauge("arena_promoted_total", self.arena.promoted_total());
+        self.metrics.set_ratio_gauge(
+            "spill_overlap_pct",
+            self.arena.promoted_staged_total(),
+            self.arena.promoted_total(),
+        );
+        self.metrics
+            .set_gauge_max("arena_total_live_blocks_peak", self.arena.total_live_blocks() as u64);
     }
 
     /// Cap the engine arena's live-block occupancy (`None` = unbounded).
@@ -271,6 +416,7 @@ impl LiveEngine {
             tokens_per_block: self.arena.tokens_per_block(),
             headroom_frac: cap.admit_headroom_frac,
             est_fudge: cap.est_fudge,
+            tiered: self.spill_enabled(),
         }
     }
 
@@ -282,10 +428,22 @@ impl LiveEngine {
         if ids.is_empty() || ids.len() > b {
             return Err(anyhow!("bad batch: {} ids, bucket {b}", ids.len()));
         }
-        for id in ids {
+        for (a, id) in ids.iter().enumerate() {
             if !self.states.contains_key(id) {
                 return Err(anyhow!("unknown session {id}"));
             }
+            // uniqueness keeps the parallel per-session append fan-out
+            // alias-free (the scheduler never emits duplicates)
+            if ids[..a].contains(id) {
+                return Err(anyhow!("duplicate session {id} in batch"));
+            }
+        }
+        if self.spill_enabled() {
+            // Promote the clusters each head's estimator selected last
+            // step, consuming the pages the async prefetcher staged —
+            // the promotion happened off the critical path; this is
+            // just the cheap install.
+            self.promote_prefetched(ids);
         }
         // Pad rows replicate the first live session (outputs discarded).
         let row_id = |i: usize| ids[i.min(ids.len() - 1)];
@@ -309,27 +467,59 @@ impl LiveEngine {
 
         for layer in 0..n_layers {
             let (q, k, v) = self.lm.qkv(layer, &hidden, &pos)?;
-            // Append the new token's KV (live rows only, once per session).
-            for (i, id) in ids.iter().enumerate() {
-                let st = self.states.get_mut(id).unwrap();
-                for h in 0..kvh {
-                    let key = k.row(&[i, h]);
-                    let val = v.row(&[i, h]);
-                    match self.mode {
-                        AttnMode::Wave => {
-                            let slot = layer * kvh + h;
-                            st.indexes[slot].try_append(key, val).map_err(|e| {
-                                anyhow!("session {id}: decode kv append refused: {e}")
-                            })?;
-                            st.buffers[slot].sync_new_clusters(&st.indexes[slot]);
-                        }
-                        AttnMode::Full => {
-                            let t_cap = self.lm.buckets.attn_full_t;
-                            let off = h * t_cap * d + st.len * d;
-                            st.k_full[layer][off..off + d].copy_from_slice(key);
-                            st.v_full[layer][off..off + d].copy_from_slice(val);
+            // Append the new token's KV (live rows only, once per
+            // session). Sessions are disjoint `&mut`s, so the per-
+            // session appends fan out across the pool (ROADMAP "fan-out
+            // past assembly"); the serial path runs the identical
+            // closure, so per-session state is bit-identical either way
+            // (property-tested in tests/arena.rs).
+            {
+                let mode = self.mode;
+                let t_cap = self.lm.buckets.attn_full_t;
+                let mut row_states: Vec<(usize, u64, &mut SessionState)> = self
+                    .states
+                    .iter_mut()
+                    .filter_map(|(sid, st)| {
+                        let sid = *sid;
+                        ids.iter().position(|x| *x == sid).map(|i| (i, sid, st))
+                    })
+                    .collect();
+                row_states.sort_unstable_by_key(|e| e.0);
+                let errs: Mutex<Vec<(u64, AllocError)>> = Mutex::new(Vec::new());
+                let kt = &k;
+                let vt = &v;
+                let append_one = |_t: usize, e: &mut (usize, u64, &mut SessionState)| {
+                    let (i, id, st) = (e.0, e.1, &mut *e.2);
+                    for h in 0..kvh {
+                        let key = kt.row(&[i, h]);
+                        let val = vt.row(&[i, h]);
+                        match mode {
+                            AttnMode::Wave => {
+                                let slot = layer * kvh + h;
+                                if let Err(err) = st.indexes[slot].try_append(key, val) {
+                                    errs.lock().unwrap().push((id, err));
+                                    return;
+                                }
+                                st.buffers[slot].sync_new_clusters(&st.indexes[slot]);
+                            }
+                            AttnMode::Full => {
+                                let off = h * t_cap * d + st.len * d;
+                                st.k_full[layer][off..off + d].copy_from_slice(key);
+                                st.v_full[layer][off..off + d].copy_from_slice(val);
+                            }
                         }
                     }
+                };
+                if self.assembler.parallel() && row_states.len() > 1 {
+                    self.pool.scope_for_each_mut(&mut row_states, &append_one);
+                } else {
+                    for ti in 0..row_states.len() {
+                        append_one(ti, &mut row_states[ti]);
+                    }
+                }
+                drop(row_states);
+                if let Some((id, e)) = errs.into_inner().unwrap().into_iter().next() {
+                    return Err(anyhow!("session {id}: decode kv append refused: {e}"));
                 }
             }
 
@@ -362,25 +552,76 @@ impl LiveEngine {
                     let t_as = Instant::now();
                     let stats = self.assembler.assemble_into(&tasks, &qg_all, shape, wi);
                     assemble_s += t_as.elapsed().as_secs_f64();
+                    if self.spill_policy.is_some() {
+                        // Async prefetch: stage the cold blocks of the
+                        // clusters each head's estimator just selected
+                        // for the next step. The pool job's spill reads
+                        // overlap this layer's attention + MLP the way
+                        // the wave buffer overlaps PCIe with compute;
+                        // the next decode step installs the staged
+                        // pages via `promote_prefetched`.
+                        let mut want_cold: Vec<u64> = Vec::new();
+                        for task in &tasks {
+                            for c in task.index.recent_clusters() {
+                                for r in task.index.cluster_blocks(c) {
+                                    if !task.index.store().is_hot(*r) {
+                                        want_cold.push(r.block);
+                                    }
+                                }
+                            }
+                        }
+                        if !want_cold.is_empty() {
+                            want_cold.sort_unstable();
+                            want_cold.dedup();
+                            self.metrics
+                                .inc("spill_prefetch_blocks", want_cold.len() as u64);
+                            let arena = Arc::clone(&self.arena);
+                            self.pool.submit(move || {
+                                for bid in want_cold {
+                                    arena.prefetch(bid);
+                                }
+                            });
+                        }
+                    }
                     drop(tasks);
                     self.metrics.inc("pcie_bytes", stats.pcie_bytes as u64);
                     self.metrics.inc("hit_blocks", stats.hit_blocks as u64);
                     self.metrics.inc("miss_blocks", stats.miss_blocks as u64);
+                    self.metrics.inc("cold_hit_blocks", stats.cold_blocks as u64);
+                    self.metrics.inc("spill_bytes", stats.spill_bytes as u64);
                     self.metrics.inc("assembled_heads", (b * kvh) as u64);
                     self.lm.attn_wave(&q, wi)?
                 }
                 AttnMode::Full => {
                     let t_cap = self.lm.buckets.attn_full_t;
-                    let mut kb = vec![0.0f32; b * kvh * t_cap * d];
-                    let mut vb = vec![0.0f32; b * kvh * t_cap * d];
+                    let row = kvh * t_cap * d;
+                    let mut kb = vec![0.0f32; b * row];
+                    let mut vb = vec![0.0f32; b * row];
                     let mut lens = vec![0i32; b];
-                    for i in 0..b {
-                        let st = &self.states[&row_id(i)];
-                        let row = kvh * t_cap * d;
-                        kb[i * row..(i + 1) * row].copy_from_slice(&st.k_full[layer]);
-                        vb[i * row..(i + 1) * row].copy_from_slice(&st.v_full[layer]);
-                        lens[i] = (st.len + 1) as i32;
+                    for (i, len) in lens.iter_mut().enumerate() {
+                        *len = (self.states[&row_id(i)].len + 1) as i32;
                     }
+                    // Fan the full-attention KV broadcast across the
+                    // pool: each task copies one row's [KVH, T, d]
+                    // cache into its disjoint output slice (ROADMAP
+                    // "fan-out past assembly"); serial and parallel
+                    // paths write identical bytes.
+                    let states = &self.states;
+                    let fill = |i: usize, out: &mut (&mut [f32], &mut [f32])| {
+                        let st = &states[&row_id(i)];
+                        out.0.copy_from_slice(&st.k_full[layer]);
+                        out.1.copy_from_slice(&st.v_full[layer]);
+                    };
+                    let mut rows: Vec<(&mut [f32], &mut [f32])> =
+                        kb.chunks_mut(row).zip(vb.chunks_mut(row)).collect();
+                    if self.assembler.parallel() && b > 1 {
+                        self.pool.scope_for_each_mut(&mut rows, &fill);
+                    } else {
+                        for (i, r) in rows.iter_mut().enumerate() {
+                            fill(i, r);
+                        }
+                    }
+                    drop(rows);
                     self.lm.attn_full(&q, &kb, &vb, &lens)?
                 }
             };

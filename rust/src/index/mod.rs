@@ -16,9 +16,13 @@ pub use meta::MetaIndex;
 
 use crate::attention::{tripartite_attention, TripartiteInputs};
 use crate::config::ZoneConfig;
-use crate::kvcache::{AllocError, BlockArena, BlockRef, HeadStore, TenantId, DEFAULT_TENANT};
+use crate::kvcache::{
+    AllocError, BlockArena, BlockRef, HeadStore, SpillCandidate, SpillPolicy, TenantId,
+    DEFAULT_TENANT,
+};
 use crate::tensor::dot;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// The zone decision for one query: which clusters are retrieved exactly
 /// and which are estimated.
@@ -78,6 +82,20 @@ pub struct WaveIndex {
     /// Number of incremental re-clusterings performed.
     n_updates: usize,
     seed: u64,
+    /// Monotone selection counter (bumped by [`WaveIndex::note_selection`]).
+    epoch: AtomicU64,
+    /// Per-cluster last-retrieved epoch (0 = never retrieved) — the
+    /// access metadata spill policies rank victims by. Atomics so the
+    /// parallel assembly fan-out can record accesses through `&self`.
+    access_epoch: Vec<AtomicU64>,
+    /// Clusters the most recent selection wanted (retrieval +
+    /// estimation): the estimator's picks for the *next* step, i.e. the
+    /// engine's prefetch set.
+    recent: Mutex<Vec<u32>>,
+    /// With a policy armed, an append whose re-clustering would hit a
+    /// full hot tier demotes this head's coldest clusters first
+    /// (ArenaFull means "demote, then retry" before "defer").
+    spill_policy: Option<Arc<dyn SpillPolicy>>,
 }
 
 impl WaveIndex {
@@ -141,6 +159,10 @@ impl WaveIndex {
             n_seen: 0,
             n_updates: 0,
             seed,
+            epoch: AtomicU64::new(0),
+            access_epoch: Vec::new(),
+            recent: Mutex::new(Vec::new()),
+            spill_policy: None,
         };
         // Sink tokens stay out of the index (position-based steady zone).
         let sink = idx.cfg.steady_sink.min(n);
@@ -235,6 +257,7 @@ impl WaveIndex {
                         self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], &vsum, cp.clone());
                     debug_assert_eq!(id, self.cluster_blocks.len());
                     self.cluster_blocks.push(refs);
+                    self.access_epoch.push(AtomicU64::new(0));
                 }
                 Err(err) => {
                     // hand the failed + remaining clusters' tokens back,
@@ -288,6 +311,10 @@ impl WaveIndex {
 
         let seg = self.cfg.update_segment;
         if self.pend_pos.len() >= self.cfg.steady_local + seg {
+            // Tiered arena: make hot room for the re-clustering up
+            // front by demoting this head's coldest clusters — a full
+            // hot tier means "demote, then retry", not "fail".
+            self.make_hot_room(seg);
             let d = self.d;
             // Split off the oldest segment.
             let keys: Vec<f32> = self.pend_keys.drain(..seg * d).collect();
@@ -306,6 +333,156 @@ impl WaveIndex {
             }
         }
         Ok(())
+    }
+
+    /// Demote this head's coldest clusters until the arena has hot
+    /// headroom for a `seg`-token segment build (no-op without a spill
+    /// policy or a capacity cap).
+    fn make_hot_room(&mut self, seg: usize) {
+        let Some(policy) = self.spill_policy.clone() else {
+            return;
+        };
+        let (tpb, live, cap) = {
+            let a = self.store.arena();
+            (a.tokens_per_block(), a.live_blocks(), a.capacity_blocks())
+        };
+        let Some(cap) = cap else {
+            return;
+        };
+        // worst case: every cluster of the segment adds a partial tail
+        // block on top of the dense packing
+        let need = seg.div_ceil(tpb) + self.cfg.clusters_for_segment(seg);
+        let headroom = cap.saturating_sub(live);
+        if headroom < need {
+            self.demote_until(policy.as_ref(), need - headroom);
+        }
+    }
+
+    /// Arm (or disarm) index-level demote-then-retry against the given
+    /// spill policy. The engine sets this on every session index when
+    /// cold-tier spill is enabled.
+    pub fn set_spill_policy(&mut self, policy: Option<Arc<dyn SpillPolicy>>) {
+        self.spill_policy = policy;
+    }
+
+    /// Record a selection for the spill machinery: bumps the epoch,
+    /// stamps the retrieved clusters' access metadata, and publishes
+    /// the wanted set ([`WaveIndex::recent_clusters`]) the engine
+    /// prefetches for the next step: the retrieval zone plus the
+    /// estimator's top picks (the estimation zone head — bounded, so a
+    /// config that estimates *every* cluster cannot turn prefetch into
+    /// a full-arena sweep each step). `&self` + atomics so the parallel
+    /// assembly fan-out can call it.
+    pub fn note_selection(&self, sel: &ZoneSelection) {
+        let e = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        for &c in &sel.retrieval {
+            self.access_epoch[c as usize].store(e, Ordering::Relaxed);
+        }
+        let mut recent = self.recent.lock().unwrap();
+        recent.clear();
+        recent.extend_from_slice(&sel.retrieval);
+        let cap_e = sel.retrieval.len().max(4);
+        recent.extend(sel.estimation.iter().take(cap_e).copied());
+    }
+
+    /// Clusters the most recent selection wanted (the prefetch set).
+    pub fn recent_clusters(&self) -> Vec<u32> {
+        self.recent.lock().unwrap().clone()
+    }
+
+    /// Selection epoch a cluster was last retrieved at (0 = never).
+    pub fn cluster_last_access(&self, c: u32) -> u64 {
+        self.access_epoch[c as usize].load(Ordering::Relaxed)
+    }
+
+    /// Selections recorded so far.
+    pub fn selection_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Whether every block of a cluster is hot.
+    pub fn cluster_is_hot(&self, c: u32) -> bool {
+        self.cluster_blocks[c as usize].iter().all(|r| self.store.is_hot(*r))
+    }
+
+    /// Hot blocks a cluster currently holds.
+    pub fn cluster_hot_blocks(&self, c: u32) -> usize {
+        self.cluster_blocks[c as usize].iter().filter(|r| self.store.is_hot(**r)).count()
+    }
+
+    /// Demote every hot block of cluster `c` into the cold tier;
+    /// returns how many blocks were demoted.
+    pub fn demote_cluster(&mut self, c: u32) -> usize {
+        let refs: Vec<BlockRef> = self.cluster_blocks[c as usize].clone();
+        let mut n = 0;
+        for r in refs {
+            if self.store.demote_block(r) {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Promote every cold block of cluster `c` back into the hot tier.
+    /// Returns `(promoted, staged, err)`: blocks promoted by this call,
+    /// how many were served from the async-prefetch stage, and the
+    /// refusal that stopped a partial promotion (already-promoted
+    /// blocks stay hot — a later retry resumes where this one stopped).
+    pub fn promote_cluster(&mut self, c: u32) -> (usize, usize, Option<AllocError>) {
+        let refs: Vec<BlockRef> = self.cluster_blocks[c as usize].clone();
+        let (mut n, mut staged) = (0, 0);
+        for r in refs {
+            match self.store.promote_block(r) {
+                Ok(Some(s)) => {
+                    n += 1;
+                    if s {
+                        staged += 1;
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => return (n, staged, Some(e)),
+            }
+        }
+        (n, staged, None)
+    }
+
+    /// Policy-driven demotion: rank this head's clusters with hot
+    /// blocks by the spill policy (coldest first under the default) and
+    /// demote from the front until at least `need_blocks` hot blocks
+    /// were freed or nothing demotable remains. Returns the freed count
+    /// and the demoted cluster ids (so callers can invalidate derived
+    /// GPU-cache copies).
+    pub fn demote_until(
+        &mut self,
+        policy: &dyn SpillPolicy,
+        need_blocks: usize,
+    ) -> (usize, Vec<u32>) {
+        let mut cands: Vec<SpillCandidate> = Vec::new();
+        for c in 0..self.cluster_blocks.len() {
+            let hot = self.cluster_hot_blocks(c as u32);
+            if hot == 0 {
+                continue;
+            }
+            cands.push(SpillCandidate {
+                cluster: c as u32,
+                last_access: self.access_epoch[c].load(Ordering::Relaxed),
+                hot_blocks: hot,
+            });
+        }
+        policy.order(&mut cands);
+        let mut freed = 0;
+        let mut demoted = Vec::new();
+        for cand in cands {
+            if freed >= need_blocks {
+                break;
+            }
+            let n = self.demote_cluster(cand.cluster);
+            if n > 0 {
+                freed += n;
+                demoted.push(cand.cluster);
+            }
+        }
+        (freed, demoted)
     }
 
     /// Zone selection with explicit budgets (r retrieval, e estimation).
@@ -413,8 +590,8 @@ impl WaveIndex {
         ex_vals.extend_from_slice(&self.pend_vals);
         for &c in &sel.retrieval {
             for r in &self.cluster_blocks[c as usize] {
-                ex_keys.extend_from_slice(self.store.block_keys(*r));
-                ex_vals.extend_from_slice(self.store.block_vals(*r));
+                // reads through the spill tier when the block is cold
+                self.store.copy_block_kv(*r, &mut ex_keys, &mut ex_vals);
             }
         }
         let n_exact = ex_keys.len() / d;

@@ -23,13 +23,28 @@
 //! creating fresh storage, bounding *live* blocks at `capacity` bounds
 //! the arena's *resident* footprint (live + free) at `capacity` too.
 //!
+//! Tiers (DESIGN.md §2 "Tiered arena & spill"): the slab above is the
+//! **hot** tier; behind it sits a cold [`SpillStore`] keyed by the same
+//! engine-global ids. [`BlockArena::demote_for`] moves a live block's
+//! data into a cold page and returns its hot storage to the free-list
+//! (hot occupancy drops — this is what "demote, then retry" frees when
+//! the hot tier is full); [`BlockArena::try_promote_for`] checks hot
+//! storage back out under the same capacity/quota gates as a fresh
+//! alloc and refills it from the cold page, preserving the block's id.
+//! A block is never in both tiers, and capacity/quota bound the *hot*
+//! tier only — the cold tier is the overflow the wave buffer's
+//! hierarchy exists for.
+//!
 //! Concurrency: allocation/reclaim take a short free-list lock (the
 //! capacity check happens under it, so concurrent allocators cannot
 //! both sneak past the cap); block *data* is only ever written between
 //! alloc and publication inside the owning `HeadStore`, and only read
 //! while that store is alive, so reads need no lock at all (the
-//! parallel head fan-out in `engine::assemble` relies on this).
+//! parallel head fan-out in `engine::assemble` relies on this). Tier
+//! moves go through the owning `HeadStore`'s `&mut` methods, so a
+//! block's residency never changes under a concurrent reader.
 
+use super::spill::SpillStore;
 use super::tokens_per_block;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -76,7 +91,7 @@ pub struct BlockData {
 }
 
 impl BlockData {
-    fn zeroed(tpb: usize, d: usize) -> BlockData {
+    pub(crate) fn zeroed(tpb: usize, d: usize) -> BlockData {
         BlockData {
             keys: vec![0.0; tpb * d],
             vals: vec![0.0; tpb * d],
@@ -108,6 +123,13 @@ pub struct BlockArena {
     free_blocks: AtomicUsize,
     allocated_total: AtomicU64,
     reclaimed_total: AtomicU64,
+    /// Cold tier: spilled pages keyed by the same engine-global ids.
+    spill: SpillStore,
+    demoted_total: AtomicU64,
+    promoted_total: AtomicU64,
+    /// Promotions served from the async-prefetch staging area (the
+    /// overlap win the prefetch worker exists for).
+    promoted_staged_total: AtomicU64,
 }
 
 impl BlockArena {
@@ -124,6 +146,10 @@ impl BlockArena {
             free_blocks: AtomicUsize::new(0),
             allocated_total: AtomicU64::new(0),
             reclaimed_total: AtomicU64::new(0),
+            spill: SpillStore::new(d, tpb),
+            demoted_total: AtomicU64::new(0),
+            promoted_total: AtomicU64::new(0),
+            promoted_staged_total: AtomicU64::new(0),
         }
     }
 
@@ -262,6 +288,122 @@ impl BlockArena {
         self.reclaim_for(DEFAULT_TENANT, blocks)
     }
 
+    /// The cold-tier spill store behind this arena's block ids.
+    pub fn spill(&self) -> &SpillStore {
+        &self.spill
+    }
+
+    /// Demote a live hot block on behalf of `tenant`: its data moves to
+    /// a cold page (same id), its hot storage returns to the free-list,
+    /// and its hot occupancy (arena + tenant) drops — the resident hot
+    /// footprint never grows. Panics if the id is already cold (a block
+    /// must never be in two tiers).
+    pub fn demote_for(&self, tenant: TenantId, id: u64, data: BlockData) {
+        debug_assert_eq!(data.keys.len(), self.tpb * self.d);
+        self.spill.write(id, &data);
+        let mut free = self.free.lock().unwrap();
+        free.push(data);
+        self.free_blocks.fetch_add(1, Ordering::Relaxed);
+        self.live_blocks.fetch_sub(1, Ordering::Relaxed);
+        self.reclaimed_total.fetch_add(1, Ordering::Relaxed);
+        drop(free);
+        self.demoted_total.fetch_add(1, Ordering::Relaxed);
+        let mut tn = self.tenants.lock().unwrap();
+        let u = tn.entry(tenant).or_default();
+        u.live_blocks = u.live_blocks.saturating_sub(1);
+    }
+
+    /// Promote a cold block back into the hot tier on behalf of
+    /// `tenant`: hot storage is checked out under the same capacity and
+    /// quota gates as a fresh alloc (so promotion can never violate the
+    /// hot cap) and refilled bit-exactly from the cold page. Returns the
+    /// storage plus whether the page was served from the async-prefetch
+    /// staging area. Panics if the id is not cold.
+    pub fn try_promote_for(
+        &self,
+        tenant: TenantId,
+        id: u64,
+    ) -> Result<(BlockData, bool), AllocError> {
+        let mut free = self.free.lock().unwrap();
+        let cap = self.capacity_blocks.load(Ordering::Relaxed);
+        if self.live_blocks.load(Ordering::Relaxed) >= cap {
+            return Err(AllocError::ArenaFull { capacity_blocks: cap });
+        }
+        {
+            let mut tn = self.tenants.lock().unwrap();
+            let u = tn.entry(tenant).or_default();
+            if let Some(q) = u.quota_blocks {
+                if u.live_blocks >= q {
+                    return Err(AllocError::QuotaExceeded { tenant, quota_blocks: q });
+                }
+            }
+            u.live_blocks += 1;
+        }
+        let mut data = match free.pop() {
+            Some(d) => {
+                self.free_blocks.fetch_sub(1, Ordering::Relaxed);
+                d
+            }
+            None => BlockData::zeroed(self.tpb, self.d),
+        };
+        self.live_blocks.fetch_add(1, Ordering::Relaxed);
+        self.allocated_total.fetch_add(1, Ordering::Relaxed);
+        drop(free);
+        let staged = self
+            .spill
+            .take_into(id, &mut data)
+            .expect("promote of a block that is not in the cold tier");
+        self.promoted_total.fetch_add(1, Ordering::Relaxed);
+        if staged {
+            self.promoted_staged_total.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((data, staged))
+    }
+
+    /// Drop a cold block outright (finished sessions reclaim cold
+    /// blocks without promoting them). Returns false if the id is not
+    /// cold.
+    pub fn drop_cold(&self, id: u64) -> bool {
+        self.spill.drop_block(id)
+    }
+
+    /// Stage a cold page for a later promotion (async prefetch; safe to
+    /// call from thread-pool jobs — this is the worker-side read that
+    /// overlaps decode). Returns false if the block is not cold.
+    pub fn prefetch(&self, id: u64) -> bool {
+        self.spill.stage(id)
+    }
+
+    /// Blocks currently resident in the cold tier.
+    pub fn cold_blocks(&self) -> usize {
+        self.spill.cold_blocks()
+    }
+
+    /// Bytes currently resident in the cold tier.
+    pub fn cold_bytes(&self) -> usize {
+        self.spill.cold_bytes()
+    }
+
+    /// Live blocks across both tiers (hot checked-out + cold spilled).
+    pub fn total_live_blocks(&self) -> usize {
+        self.live_blocks() + self.cold_blocks()
+    }
+
+    /// Blocks ever demoted into the cold tier.
+    pub fn demoted_total(&self) -> u64 {
+        self.demoted_total.load(Ordering::Relaxed)
+    }
+
+    /// Blocks ever promoted back into the hot tier.
+    pub fn promoted_total(&self) -> u64 {
+        self.promoted_total.load(Ordering::Relaxed)
+    }
+
+    /// Promotions served from the async-prefetch staging area.
+    pub fn promoted_staged_total(&self) -> u64 {
+        self.promoted_staged_total.load(Ordering::Relaxed)
+    }
+
     /// Blocks currently checked out to live sessions.
     pub fn live_blocks(&self) -> usize {
         self.live_blocks.load(Ordering::Relaxed)
@@ -282,12 +424,15 @@ impl BlockArena {
         (self.live_blocks() + self.free_blocks()) * self.block_bytes()
     }
 
-    /// Blocks ever allocated (fresh or recycled checkouts).
+    /// Hot-storage checkouts ever performed (fresh or recycled; fresh
+    /// allocs and promotions both count, so `live_blocks =
+    /// allocated_total - reclaimed_total` holds in tiered runs too).
     pub fn allocated_total(&self) -> u64 {
         self.allocated_total.load(Ordering::Relaxed)
     }
 
-    /// Blocks ever returned to the free-list.
+    /// Hot storage ever returned to the free-list (reclaims and
+    /// demotions both count).
     pub fn reclaimed_total(&self) -> u64 {
         self.reclaimed_total.load(Ordering::Relaxed)
     }
@@ -400,6 +545,66 @@ mod tests {
         assert_eq!(a.block_bytes(), 256);
         assert_eq!(a.capacity_blocks(), Some(3));
         assert_eq!(a.capacity_bytes(), Some(768));
+    }
+
+    #[test]
+    fn demote_frees_hot_occupancy_and_promote_restores_it() {
+        let a = BlockArena::new(4, 256);
+        a.set_capacity_blocks(Some(2));
+        let (id0, b0) = a.try_alloc_for(7).unwrap();
+        let (_, b1) = a.try_alloc_for(7).unwrap();
+        assert!(a.try_alloc_for(7).is_err(), "hot tier full");
+        // demote-then-retry: spilling id0 opens a hot slot
+        a.demote_for(7, id0, b0);
+        assert_eq!(a.live_blocks(), 1);
+        assert_eq!(a.cold_blocks(), 1);
+        assert_eq!(a.total_live_blocks(), 2);
+        assert_eq!(a.tenant_live_blocks(7), 1);
+        let (_, b2) = a.try_alloc_for(7).unwrap();
+        // hot tier full again: promotion respects the cap
+        assert!(matches!(
+            a.try_promote_for(7, id0),
+            Err(AllocError::ArenaFull { capacity_blocks: 2 })
+        ));
+        a.reclaim_for(7, [b2]);
+        let (b0_back, staged) = a.try_promote_for(7, id0).unwrap();
+        assert!(!staged);
+        assert_eq!(a.cold_blocks(), 0);
+        assert_eq!(a.live_blocks(), 2);
+        assert_eq!(a.demoted_total(), 1);
+        assert_eq!(a.promoted_total(), 1);
+        // resident hot footprint never exceeded the cap through the
+        // whole demote/promote cycle
+        assert!(a.resident_bytes() <= 2 * a.block_bytes());
+        a.reclaim_for(7, [b0_back, b1]);
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.tenant_live_blocks(7), 0);
+    }
+
+    #[test]
+    fn prefetch_stages_cold_pages_for_promotion() {
+        let a = BlockArena::new(4, 256);
+        let (id, b) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
+        a.demote_for(DEFAULT_TENANT, id, b);
+        assert!(a.prefetch(id), "cold block must stage");
+        let (data, staged) = a.try_promote_for(DEFAULT_TENANT, id).unwrap();
+        assert!(staged, "promotion must consume the staged page");
+        assert_eq!(a.promoted_staged_total(), 1);
+        // prefetching a hot block is a no-op
+        assert!(!a.prefetch(id));
+        a.reclaim([data]);
+    }
+
+    #[test]
+    fn dropped_cold_blocks_never_promote() {
+        let a = BlockArena::new(4, 256);
+        let (id, b) = a.try_alloc_for(DEFAULT_TENANT).unwrap();
+        a.demote_for(DEFAULT_TENANT, id, b);
+        assert_eq!(a.cold_blocks(), 1);
+        assert!(a.drop_cold(id));
+        assert_eq!(a.cold_blocks(), 0);
+        assert!(!a.drop_cold(id));
+        assert_eq!(a.live_blocks(), 0);
     }
 
     #[test]

@@ -15,11 +15,20 @@
 //! ([`AllocError`], [`BlockArena::try_alloc_for`]); the scheduler's
 //! admission gate (DESIGN.md §2 "Admission & quotas") defers prefills
 //! against the same counters so serving never outgrows the budget.
+//!
+//! The arena is **tiered** (DESIGN.md §2 "Tiered arena & spill"): the
+//! capacity-bounded slab is the hot tier, and a [`spill::SpillStore`]
+//! keyed by the same engine-global block ids holds demoted blocks so
+//! total live KV can exceed the hot cap. `demote`/`promote` move blocks
+//! between tiers; a full hot tier now means "demote, then retry" before
+//! the scheduler's "defer".
 
 pub mod arena;
+pub mod spill;
 pub mod store;
 
 pub use arena::{AllocError, BlockArena, TenantId, DEFAULT_TENANT};
+pub use spill::{ColdestFirst, LargestColdFirst, SpillCandidate, SpillPolicy, SpillStore};
 pub use store::{BlockRef, HeadStore, KvStore};
 
 /// Tokens that fit in one physical block of `block_bytes`, given the head

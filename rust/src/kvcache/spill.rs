@@ -1,0 +1,453 @@
+//! Cold-tier spill store: the file/mmap-simulated page store behind the
+//! tiered [`BlockArena`](super::BlockArena) (DESIGN.md §2 "Tiered arena
+//! & spill"). The paper's wave buffer exists because the KV cache
+//! outgrows the fast tier (HBM) and must live in a slower one (DRAM)
+//! behind an asynchronous transfer path (§4.3); this module reproduces
+//! that hierarchy one level down — hot RAM tier ↔ cold spill tier — the
+//! way InfiniGen's offload+prefetch pipeline does for HBM↔DRAM.
+//!
+//! Pages are keyed by the same engine-global block ids the hot tier
+//! uses, so mapping tables and block caches never re-key when a block
+//! changes tier. Serialization is little-endian per element and
+//! round-trips every f32 bit pattern exactly (`tests/spill.rs` asserts
+//! demote→promote bit-identity), which is what lets a tiered replay
+//! emit tokens bit-identical to a single-tier run.
+//!
+//! Concurrency: all state sits behind internal locks, so spilled pages
+//! can be written, staged (async prefetch) and read from `&self` — the
+//! engine submits `stage` jobs to its [`ThreadPool`]
+//! (`crate::util::threadpool::ThreadPool`) so promotion overlaps decode
+//! the way the wave buffer overlaps PCIe with GPU compute. Lock order
+//! is always file → staging; the two are never taken in the other
+//! order.
+
+use super::arena::BlockData;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The simulated page file: a flat byte heap carved into fixed-size
+/// pages (the mmap stand-in), an id → page index, and a free page list.
+struct SpillFile {
+    data: Vec<u8>,
+    index: HashMap<u64, u32>,
+    free: Vec<u32>,
+}
+
+/// Cold-tier block store keyed by engine-global block ids.
+pub struct SpillStore {
+    d: usize,
+    tpb: usize,
+    /// Serialized bytes of one page: K + V halves as f32 LE, positions
+    /// as u32 LE.
+    page_bytes: usize,
+    file: Mutex<SpillFile>,
+    /// Async-prefetch staging area: pages read ahead of promotion by
+    /// pool jobs, consumed (without a second file read) when the block
+    /// is promoted.
+    staged: Mutex<HashMap<u64, BlockData>>,
+    writes_total: AtomicU64,
+    reads_total: AtomicU64,
+    dropped_total: AtomicU64,
+    staged_total: AtomicU64,
+    staged_hits: AtomicU64,
+}
+
+impl SpillStore {
+    pub fn new(d: usize, tpb: usize) -> SpillStore {
+        SpillStore {
+            d,
+            tpb,
+            page_bytes: 2 * tpb * d * 4 + tpb * 4,
+            file: Mutex::new(SpillFile {
+                data: Vec::new(),
+                index: HashMap::new(),
+                free: Vec::new(),
+            }),
+            staged: Mutex::new(HashMap::new()),
+            writes_total: AtomicU64::new(0),
+            reads_total: AtomicU64::new(0),
+            dropped_total: AtomicU64::new(0),
+            staged_total: AtomicU64::new(0),
+            staged_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Serialized size of one cold page in bytes.
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    fn serialize_into(&self, data: &BlockData, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.page_bytes);
+        let mut off = 0;
+        for x in data.keys.iter().chain(data.vals.iter()) {
+            out[off..off + 4].copy_from_slice(&x.to_le_bytes());
+            off += 4;
+        }
+        for p in &data.pos {
+            out[off..off + 4].copy_from_slice(&p.to_le_bytes());
+            off += 4;
+        }
+    }
+
+    fn deserialize_into(&self, page: &[u8], out: &mut BlockData) {
+        debug_assert_eq!(page.len(), self.page_bytes);
+        debug_assert_eq!(out.keys.len(), self.tpb * self.d);
+        let half = self.tpb * self.d;
+        let mut off = 0;
+        for i in 0..half {
+            out.keys[i] = f32::from_le_bytes(page[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        for i in 0..half {
+            out.vals[i] = f32::from_le_bytes(page[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        for i in 0..self.tpb {
+            out.pos[i] = u32::from_le_bytes(page[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+    }
+
+    /// Write (demote) one block's data into a cold page. Panics if the
+    /// id is already cold — a block must never be in two tiers.
+    pub fn write(&self, id: u64, data: &BlockData) {
+        let mut f = self.file.lock().unwrap();
+        assert!(!f.index.contains_key(&id), "block {id} already in the cold tier");
+        let page = match f.free.pop() {
+            Some(p) => p,
+            None => {
+                let p = (f.data.len() / self.page_bytes) as u32;
+                f.data.resize(f.data.len() + self.page_bytes, 0);
+                p
+            }
+        };
+        let start = page as usize * self.page_bytes;
+        let pb = self.page_bytes;
+        // split the borrow: serialize into the page slice in place
+        let slice = &mut f.data[start..start + pb];
+        self.serialize_into(data, slice);
+        f.index.insert(id, page);
+        self.writes_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether `id` currently lives in the cold tier.
+    pub fn contains(&self, id: u64) -> bool {
+        self.file.lock().unwrap().index.contains_key(&id)
+    }
+
+    /// Copy a cold page into `out` without changing residency (the
+    /// synchronous cold-read path of a GPU-cache miss on a cold block).
+    /// Returns false if `id` is not cold.
+    pub fn peek_into(&self, id: u64, out: &mut BlockData) -> bool {
+        let f = self.file.lock().unwrap();
+        let Some(&page) = f.index.get(&id) else {
+            return false;
+        };
+        let start = page as usize * self.page_bytes;
+        self.deserialize_into(&f.data[start..start + self.page_bytes], out);
+        self.reads_total.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Append the first `n_elems` key and value f32s of a cold page
+    /// directly to `k_out` / `v_out` (no intermediate allocation — the
+    /// cold-read data path of execution-buffer assembly). Residency is
+    /// unchanged. Returns false if `id` is not cold.
+    pub fn peek_kv_into(
+        &self,
+        id: u64,
+        n_elems: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) -> bool {
+        let f = self.file.lock().unwrap();
+        let Some(&page) = f.index.get(&id) else {
+            return false;
+        };
+        let half = self.tpb * self.d;
+        debug_assert!(n_elems <= half);
+        let start = page as usize * self.page_bytes;
+        k_out.reserve(n_elems);
+        v_out.reserve(n_elems);
+        for i in 0..n_elems {
+            let off = start + 4 * i;
+            k_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
+        }
+        let vstart = start + 4 * half;
+        for i in 0..n_elems {
+            let off = vstart + 4 * i;
+            v_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
+        }
+        self.reads_total.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Async-prefetch one page into the staging area (no residency
+    /// change; the matching [`SpillStore::take_into`] consumes it).
+    /// Returns false if `id` is not cold — a block promoted or dropped
+    /// while the prefetch job was queued is simply skipped.
+    pub fn stage(&self, id: u64) -> bool {
+        let f = self.file.lock().unwrap();
+        let Some(&page) = f.index.get(&id) else {
+            return false;
+        };
+        let mut data = BlockData::zeroed(self.tpb, self.d);
+        let start = page as usize * self.page_bytes;
+        self.deserialize_into(&f.data[start..start + self.page_bytes], &mut data);
+        self.reads_total.fetch_add(1, Ordering::Relaxed);
+        self.staged_total.fetch_add(1, Ordering::Relaxed);
+        // lock order: file → staged (held file lock keeps the page from
+        // being promoted/dropped between the read and the insert)
+        self.staged.lock().unwrap().insert(id, data);
+        true
+    }
+
+    /// Take (promote) a cold page out of the store into `out`. Serves
+    /// from the staging area when an async prefetch already read the
+    /// page (returns `Some(true)` — the overlap win), from the file
+    /// otherwise (`Some(false)` — a cold-hit stall). `None` if the id
+    /// is not cold.
+    pub fn take_into(&self, id: u64, out: &mut BlockData) -> Option<bool> {
+        let mut f = self.file.lock().unwrap();
+        let page = f.index.remove(&id)?;
+        f.free.push(page);
+        let staged = self.staged.lock().unwrap().remove(&id);
+        match staged {
+            Some(data) => {
+                out.keys.copy_from_slice(&data.keys);
+                out.vals.copy_from_slice(&data.vals);
+                out.pos.copy_from_slice(&data.pos);
+                self.staged_hits.fetch_add(1, Ordering::Relaxed);
+                Some(true)
+            }
+            None => {
+                let start = page as usize * self.page_bytes;
+                self.deserialize_into(&f.data[start..start + self.page_bytes], out);
+                self.reads_total.fetch_add(1, Ordering::Relaxed);
+                Some(false)
+            }
+        }
+    }
+
+    /// Drop a cold block outright (finished-session reclamation: cold
+    /// blocks die in place, never promoted first). Returns false if the
+    /// id is not cold.
+    pub fn drop_block(&self, id: u64) -> bool {
+        let mut f = self.file.lock().unwrap();
+        let Some(page) = f.index.remove(&id) else {
+            return false;
+        };
+        f.free.push(page);
+        self.staged.lock().unwrap().remove(&id);
+        self.dropped_total.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Blocks currently resident in the cold tier.
+    pub fn cold_blocks(&self) -> usize {
+        self.file.lock().unwrap().index.len()
+    }
+
+    /// Bytes of cold pages currently holding blocks.
+    pub fn cold_bytes(&self) -> usize {
+        self.cold_blocks() * self.page_bytes
+    }
+
+    /// Total bytes of the backing "file" (live + recycled pages — the
+    /// spill tier's resident footprint).
+    pub fn file_bytes(&self) -> usize {
+        self.file.lock().unwrap().data.len()
+    }
+
+    /// Pages currently staged by async prefetch.
+    pub fn staged_blocks(&self) -> usize {
+        self.staged.lock().unwrap().len()
+    }
+
+    pub fn writes_total(&self) -> u64 {
+        self.writes_total.load(Ordering::Relaxed)
+    }
+
+    pub fn reads_total(&self) -> u64 {
+        self.reads_total.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_total.load(Ordering::Relaxed)
+    }
+
+    pub fn staged_hits(&self) -> u64 {
+        self.staged_hits.load(Ordering::Relaxed)
+    }
+}
+
+/// One cluster's spill-relevant metadata, fed to a [`SpillPolicy`] by
+/// `WaveIndex::demote_until` (the wave index owns the access epochs the
+/// policy ranks by).
+#[derive(Clone, Copy, Debug)]
+pub struct SpillCandidate {
+    pub cluster: u32,
+    /// Selection epoch the cluster was last retrieved at (0 = never).
+    pub last_access: u64,
+    /// Hot blocks the cluster currently holds (what demotion frees).
+    pub hot_blocks: usize,
+}
+
+/// Pluggable victim ordering for demotion. Implementations sort the
+/// candidate list demote-first; callers demote from the front until
+/// enough hot blocks are free.
+pub trait SpillPolicy: Send + Sync {
+    fn order(&self, candidates: &mut [SpillCandidate]);
+    fn name(&self) -> &'static str;
+}
+
+/// Default policy: demote the least-recently-selected clusters first
+/// (ties broken by cluster id for determinism). Mirrors the wave
+/// buffer's LRU default one tier down.
+pub struct ColdestFirst;
+
+impl SpillPolicy for ColdestFirst {
+    fn order(&self, candidates: &mut [SpillCandidate]) {
+        candidates.sort_by_key(|c| (c.last_access, c.cluster));
+    }
+
+    fn name(&self) -> &'static str {
+        "coldest-first"
+    }
+}
+
+/// Alternative policy: among cold clusters, demote the largest first so
+/// the fewest clusters lose hot residency (fewer, bigger writebacks).
+pub struct LargestColdFirst;
+
+impl SpillPolicy for LargestColdFirst {
+    fn order(&self, candidates: &mut [SpillCandidate]) {
+        candidates.sort_by_key(|c| (c.last_access, std::cmp::Reverse(c.hot_blocks), c.cluster));
+    }
+
+    fn name(&self) -> &'static str {
+        "largest-cold-first"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(tpb: usize, d: usize, seed: u32) -> BlockData {
+        let mut b = BlockData::zeroed(tpb, d);
+        for (i, x) in b.keys.iter_mut().enumerate() {
+            *x = f32::from_bits(seed.wrapping_mul(31).wrapping_add(i as u32));
+        }
+        for (i, x) in b.vals.iter_mut().enumerate() {
+            *x = f32::from_bits(seed.wrapping_mul(37).wrapping_add(i as u32) | 1);
+        }
+        for (i, p) in b.pos.iter_mut().enumerate() {
+            *p = seed.wrapping_add(i as u32);
+        }
+        b
+    }
+
+    fn bits(b: &BlockData) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        (
+            b.keys.iter().map(|x| x.to_bits()).collect(),
+            b.vals.iter().map(|x| x.to_bits()).collect(),
+            b.pos.clone(),
+        )
+    }
+
+    #[test]
+    fn write_take_roundtrip_is_bit_exact() {
+        let s = SpillStore::new(8, 4);
+        // includes NaN/denormal bit patterns via from_bits
+        let b = filled(4, 8, 0x7fc0_0001);
+        let want = bits(&b);
+        s.write(9, &b);
+        assert!(s.contains(9));
+        assert_eq!(s.cold_blocks(), 1);
+        assert_eq!(s.cold_bytes(), s.page_bytes());
+        let mut out = BlockData::zeroed(4, 8);
+        assert_eq!(s.take_into(9, &mut out), Some(false));
+        assert_eq!(bits(&out), want);
+        assert_eq!(s.cold_blocks(), 0);
+        assert!(s.take_into(9, &mut out).is_none());
+    }
+
+    #[test]
+    fn staged_pages_serve_promotion_without_a_second_read() {
+        let s = SpillStore::new(4, 4);
+        let b = filled(4, 4, 7);
+        let want = bits(&b);
+        s.write(1, &b);
+        assert!(s.stage(1));
+        assert_eq!(s.staged_blocks(), 1);
+        let reads_before = s.reads_total();
+        let mut out = BlockData::zeroed(4, 4);
+        assert_eq!(s.take_into(1, &mut out), Some(true));
+        assert_eq!(bits(&out), want);
+        assert_eq!(s.reads_total(), reads_before, "staged take must not re-read the file");
+        assert_eq!(s.staged_hits(), 1);
+        assert_eq!(s.staged_blocks(), 0);
+        // staging a block that is no longer cold is a no-op
+        assert!(!s.stage(1));
+    }
+
+    #[test]
+    fn pages_recycle_and_peek_does_not_change_residency() {
+        let s = SpillStore::new(4, 4);
+        s.write(1, &filled(4, 4, 1));
+        s.write(2, &filled(4, 4, 2));
+        let file_before = s.file_bytes();
+        let mut out = BlockData::zeroed(4, 4);
+        assert!(s.peek_into(1, &mut out));
+        assert_eq!(s.cold_blocks(), 2, "peek must not evict");
+        // direct kv-prefix read matches the full-page deserialization
+        let b2 = filled(4, 4, 2);
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        assert!(s.peek_kv_into(2, 10, &mut k, &mut v));
+        assert_eq!(
+            k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b2.keys[..10].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b2.vals[..10].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(!s.peek_kv_into(99, 1, &mut k, &mut v));
+        assert!(s.drop_block(1));
+        assert!(!s.drop_block(1));
+        // a new write reuses the freed page: the file does not grow
+        s.write(3, &filled(4, 4, 3));
+        assert_eq!(s.file_bytes(), file_before);
+        assert_eq!(s.cold_blocks(), 2);
+        assert_eq!(s.dropped_total(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already in the cold tier")]
+    fn double_demote_panics() {
+        let s = SpillStore::new(4, 4);
+        s.write(5, &filled(4, 4, 5));
+        s.write(5, &filled(4, 4, 6));
+    }
+
+    #[test]
+    fn policies_order_victims() {
+        let mk = |cluster, last_access, hot_blocks| SpillCandidate {
+            cluster,
+            last_access,
+            hot_blocks,
+        };
+        let base = vec![mk(0, 5, 2), mk(1, 1, 1), mk(2, 1, 4), mk(3, 9, 8)];
+        let mut c = base.clone();
+        ColdestFirst.order(&mut c);
+        assert_eq!(c.iter().map(|x| x.cluster).collect::<Vec<_>>(), vec![1, 2, 0, 3]);
+        let mut c = base.clone();
+        LargestColdFirst.order(&mut c);
+        assert_eq!(c.iter().map(|x| x.cluster).collect::<Vec<_>>(), vec![2, 1, 0, 3]);
+        assert_eq!(ColdestFirst.name(), "coldest-first");
+        assert_eq!(LargestColdFirst.name(), "largest-cold-first");
+    }
+}

@@ -1,7 +1,19 @@
 //! Block store handles: the per-(layer, kv-head) view over the shared
 //! [`BlockArena`]. A `HeadStore` owns no KV storage of its own — it is
 //! an arena reference plus the list of blocks checked out to this head,
-//! and dropping it returns every block to the arena free-list.
+//! and dropping it returns every hot block to the arena free-list and
+//! every cold block to the spill store's free pages (cold blocks die in
+//! place, never promoted first).
+//!
+//! Tier-awareness (DESIGN.md §2 "Tiered arena & spill"): each owned
+//! block is either **hot** (its [`BlockData`] lives in this handle) or
+//! **cold** (its data lives in the arena's spill store under the same
+//! engine-global id). The `len`-guarded slice accessors only serve hot
+//! blocks; possibly-cold callers use the fallible
+//! [`HeadStore::try_block_keys`] family or [`HeadStore::copy_block_kv`]
+//! (which reads through the spill tier without changing residency).
+//! [`HeadStore::demote_block`] / [`HeadStore::promote_block`] move one
+//! block between tiers.
 //!
 //! Every handle carries the [`TenantId`] it allocates on behalf of, so
 //! quota accounting follows the blocks from checkout to reclamation.
@@ -22,11 +34,13 @@ pub struct BlockRef {
     pub len: u16,
 }
 
-/// One checked-out arena block plus its valid length.
+/// One checked-out arena block plus its valid length. `data` is `None`
+/// while the block lives in the cold tier (its bytes sit in the arena's
+/// spill store under `id`).
 struct OwnedBlock {
     id: u64,
     len: u16,
-    data: BlockData,
+    data: Option<BlockData>,
 }
 
 /// Per-(layer, kv-head) handle over the shared arena.
@@ -119,10 +133,13 @@ impl HeadStore {
             let (id, mut data) = match self.arena.try_alloc_for(self.tenant) {
                 Ok(x) => x,
                 Err(e) => {
-                    // roll back this call's checkouts
+                    // roll back this call's checkouts (all hot: they
+                    // were pushed by this very call)
                     self.arena.reclaim_for(
                         self.tenant,
-                        self.blocks.drain(start_blocks..).map(|b| b.data),
+                        self.blocks
+                            .drain(start_blocks..)
+                            .map(|b| b.data.expect("freshly allocated blocks are hot")),
                     );
                     return Err(e);
                 }
@@ -131,7 +148,7 @@ impl HeadStore {
             data.vals[..take * d].copy_from_slice(&vals[off * d..(off + take) * d]);
             data.pos[..take].copy_from_slice(&pos[off..off + take]);
             let idx = self.blocks.len() as u32;
-            self.blocks.push(OwnedBlock { id, len: take as u16, data });
+            self.blocks.push(OwnedBlock { id, len: take as u16, data: Some(data) });
             refs.push(BlockRef { block: id, idx, len: take as u16 });
             off += take;
         }
@@ -152,26 +169,166 @@ impl HeadStore {
         b
     }
 
-    /// Key vectors of a block: `[len, d]` flat.
+    fn hot_data(&self, r: BlockRef) -> &BlockData {
+        self.owned(r)
+            .data
+            .as_ref()
+            .expect("block is in the cold tier — promote it or use the copy accessors")
+    }
+
+    /// Whether a block's data is resident in the hot tier.
+    pub fn is_hot(&self, r: BlockRef) -> bool {
+        self.owned(r).data.is_some()
+    }
+
+    /// Key vectors of a hot block: `[len, d]` flat. Panics on a cold
+    /// block (use [`HeadStore::try_block_keys`] / `copy_block_kv`).
     pub fn block_keys(&self, r: BlockRef) -> &[f32] {
-        &self.owned(r).data.keys[..r.len as usize * self.arena.d()]
+        &self.hot_data(r).keys[..r.len as usize * self.arena.d()]
     }
 
-    /// Value vectors of a block: `[len, d]` flat.
+    /// Value vectors of a hot block: `[len, d]` flat.
     pub fn block_vals(&self, r: BlockRef) -> &[f32] {
-        &self.owned(r).data.vals[..r.len as usize * self.arena.d()]
+        &self.hot_data(r).vals[..r.len as usize * self.arena.d()]
     }
 
-    /// Context positions of a block's tokens.
+    /// Context positions of a hot block's tokens.
     pub fn block_pos(&self, r: BlockRef) -> &[u32] {
-        &self.owned(r).data.pos[..r.len as usize]
+        &self.hot_data(r).pos[..r.len as usize]
+    }
+
+    /// Fallible key access: `None` when the block is cold.
+    pub fn try_block_keys(&self, r: BlockRef) -> Option<&[f32]> {
+        let b = self.owned(r);
+        b.data.as_ref().map(|d| &d.keys[..r.len as usize * self.arena.d()])
+    }
+
+    /// Fallible value access: `None` when the block is cold.
+    pub fn try_block_vals(&self, r: BlockRef) -> Option<&[f32]> {
+        let b = self.owned(r);
+        b.data.as_ref().map(|d| &d.vals[..r.len as usize * self.arena.d()])
+    }
+
+    /// Append a block's valid keys and values to `k_out` / `v_out`,
+    /// reading through the spill tier when the block is cold (residency
+    /// unchanged — this is the cold-read data path the wave buffer's
+    /// assembly falls back to). Returns whether the block was hot.
+    pub fn copy_block_kv(&self, r: BlockRef, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) -> bool {
+        let n = r.len as usize * self.arena.d();
+        match &self.owned(r).data {
+            Some(d) => {
+                k_out.extend_from_slice(&d.keys[..n]);
+                v_out.extend_from_slice(&d.vals[..n]);
+                true
+            }
+            None => {
+                let found = self.arena.spill().peek_kv_into(r.block, n, k_out, v_out);
+                assert!(found, "cold block {} missing from the spill store", r.block);
+                false
+            }
+        }
+    }
+
+    /// Demote one block into the cold tier. Returns false if it was
+    /// already cold.
+    pub fn demote_block(&mut self, r: BlockRef) -> bool {
+        let b = &mut self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        match b.data.take() {
+            Some(data) => {
+                self.arena.demote_for(self.tenant, b.id, data);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Promote one block back into the hot tier (hot capacity and the
+    /// tenant quota gate the checkout, exactly like a fresh alloc).
+    /// `Ok(None)` if the block was already hot; `Ok(Some(staged))`
+    /// reports whether the async prefetcher had staged the page.
+    pub fn promote_block(&mut self, r: BlockRef) -> Result<Option<bool>, AllocError> {
+        let b = &self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        if b.data.is_some() {
+            return Ok(None);
+        }
+        let (data, staged) = self.arena.try_promote_for(self.tenant, r.block)?;
+        self.blocks[r.idx as usize].data = Some(data);
+        Ok(Some(staged))
+    }
+
+    /// Demote up to `n` hot blocks, oldest first; returns how many were
+    /// demoted (the driver-level spill path for modelled workloads).
+    pub fn demote_oldest(&mut self, n: usize) -> usize {
+        let mut done = 0;
+        for i in 0..self.blocks.len() {
+            if done >= n {
+                break;
+            }
+            let (id, len, hot) = {
+                let b = &self.blocks[i];
+                (b.id, b.len, b.data.is_some())
+            };
+            if !hot {
+                continue;
+            }
+            if self.demote_block(BlockRef { block: id, idx: i as u32, len }) {
+                done += 1;
+            }
+        }
+        done
+    }
+
+    /// Promote up to `n` cold blocks, oldest first, stopping at the
+    /// first refused checkout; returns how many were promoted.
+    pub fn promote_oldest(&mut self, n: usize) -> usize {
+        let mut done = 0;
+        for i in 0..self.blocks.len() {
+            if done >= n {
+                break;
+            }
+            let (id, len, hot) = {
+                let b = &self.blocks[i];
+                (b.id, b.len, b.data.is_some())
+            };
+            if hot {
+                continue;
+            }
+            match self.promote_block(BlockRef { block: id, idx: i as u32, len }) {
+                Ok(_) => done += 1,
+                Err(_) => break,
+            }
+        }
+        done
+    }
+
+    /// Blocks of this handle currently hot.
+    pub fn n_hot_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.data.is_some()).count()
+    }
+
+    /// Blocks of this handle currently cold.
+    pub fn n_cold_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.data.is_none()).count()
     }
 }
 
 impl Drop for HeadStore {
     fn drop(&mut self) {
-        // A finished session returns every block it held to the arena.
-        self.arena.reclaim_for(self.tenant, self.blocks.drain(..).map(|b| b.data));
+        // A finished session returns every hot block to the arena and
+        // drops its cold blocks in place — never promoting them first
+        // (the scheduler's reclamation path must not touch the hot cap).
+        let mut hot = Vec::new();
+        for b in self.blocks.drain(..) {
+            match b.data {
+                Some(data) => hot.push(data),
+                None => {
+                    self.arena.drop_cold(b.id);
+                }
+            }
+        }
+        self.arena.reclaim_for(self.tenant, hot);
     }
 }
 
@@ -229,6 +386,37 @@ impl KvStore {
     /// Total CPU-resident bytes across all heads.
     pub fn total_bytes(&self) -> usize {
         self.stores.iter().map(|s| s.n_blocks() * s.block_bytes()).sum()
+    }
+
+    /// Demote up to `n` hot blocks across heads (head order, oldest
+    /// blocks first); returns how many were demoted.
+    pub fn demote_blocks(&mut self, n: usize) -> usize {
+        let mut done = 0;
+        for s in self.stores.iter_mut() {
+            if done >= n {
+                break;
+            }
+            done += s.demote_oldest(n - done);
+        }
+        done
+    }
+
+    /// Promote up to `n` cold blocks across heads, stopping early if
+    /// the hot tier refuses a checkout; returns how many were promoted.
+    pub fn promote_blocks(&mut self, n: usize) -> usize {
+        let mut done = 0;
+        for s in self.stores.iter_mut() {
+            if done >= n {
+                break;
+            }
+            done += s.promote_oldest(n - done);
+        }
+        done
+    }
+
+    /// Cold blocks held across all heads.
+    pub fn n_cold_blocks(&self) -> usize {
+        self.stores.iter().map(|s| s.n_cold_blocks()).sum()
     }
 }
 
@@ -348,6 +536,78 @@ mod tests {
         }
         assert_eq!(arena.tenant_live_blocks(9), 0);
         assert_eq!(arena.live_blocks(), 0);
+    }
+
+    #[test]
+    fn demote_promote_roundtrip_preserves_block_bytes() {
+        let d = 16; // tpb = 4 at 512-byte blocks
+        let arena = BlockArena::shared(d, 512);
+        let mut hs = HeadStore::new_in(Arc::clone(&arena));
+        let (k, v, p) = mk(10, d, 21);
+        let refs = hs.alloc_cluster(&k, &v, &p);
+        assert_eq!(refs.len(), 3);
+        let want_k = hs.block_keys(refs[2]).to_vec();
+        let want_v = hs.block_vals(refs[2]).to_vec();
+        assert!(hs.demote_block(refs[2]));
+        assert!(!hs.is_hot(refs[2]));
+        assert!(!hs.demote_block(refs[2]), "second demote is a no-op");
+        assert_eq!(hs.n_cold_blocks(), 1);
+        assert_eq!(hs.n_hot_blocks(), 2);
+        assert_eq!(arena.cold_blocks(), 1);
+        assert_eq!(arena.live_blocks(), 2);
+        assert!(hs.try_block_keys(refs[2]).is_none());
+        // cold read path serves identical bytes without promoting
+        let (mut ck, mut cv) = (Vec::new(), Vec::new());
+        assert!(!hs.copy_block_kv(refs[2], &mut ck, &mut cv));
+        assert_eq!(ck, want_k);
+        assert_eq!(cv, want_v);
+        assert!(!hs.is_hot(refs[2]));
+        // promotion restores the exact bytes and the hot accessors
+        assert_eq!(hs.promote_block(refs[2]).unwrap(), Some(false));
+        assert_eq!(hs.promote_block(refs[2]).unwrap(), None, "already hot");
+        assert_eq!(hs.block_keys(refs[2]), &want_k[..]);
+        assert_eq!(hs.block_vals(refs[2]), &want_v[..]);
+        assert_eq!(arena.cold_blocks(), 0);
+        // token accounting is tier-independent
+        assert_eq!(hs.n_tokens(), 10);
+    }
+
+    #[test]
+    fn dropping_a_store_with_cold_blocks_reclaims_both_tiers() {
+        let d = 16;
+        let arena = BlockArena::shared(d, 512);
+        {
+            let mut hs = HeadStore::new_in_for(Arc::clone(&arena), 4);
+            let (k, v, p) = mk(12, d, 22);
+            hs.alloc_cluster(&k, &v, &p); // 3 blocks
+            assert_eq!(hs.demote_oldest(2), 2);
+            assert_eq!(arena.cold_blocks(), 2);
+            assert_eq!(arena.live_blocks(), 1);
+            assert_eq!(arena.tenant_live_blocks(4), 1);
+        }
+        // drop reclaims the hot block and drops the cold ones in place
+        assert_eq!(arena.live_blocks(), 0);
+        assert_eq!(arena.cold_blocks(), 0);
+        assert_eq!(arena.tenant_live_blocks(4), 0);
+        assert_eq!(arena.spill().dropped_total(), 2);
+    }
+
+    #[test]
+    fn kvstore_tier_moves_span_heads() {
+        let mut st = KvStore::new(2, 2, 8, 512); // tpb = 8
+        let (k, v, p) = mk(8, 8, 23);
+        for l in 0..2 {
+            for h in 0..2 {
+                st.head_mut(l, h).alloc_cluster(&k, &v, &p);
+            }
+        }
+        assert_eq!(st.arena().live_blocks(), 4);
+        assert_eq!(st.demote_blocks(3), 3);
+        assert_eq!(st.n_cold_blocks(), 3);
+        assert_eq!(st.arena().live_blocks(), 1);
+        assert_eq!(st.promote_blocks(2), 2);
+        assert_eq!(st.n_cold_blocks(), 1);
+        assert_eq!(st.arena().total_live_blocks(), 4);
     }
 
     #[test]

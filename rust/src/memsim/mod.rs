@@ -27,6 +27,9 @@ pub struct StepBreakdown {
     pub scan_s: f64,
     pub estimation_s: f64,
     pub pcie_s: f64,
+    /// Cold-spill-tier read time (tiered KV arena: the fraction of
+    /// uncached fetches whose blocks live below the hot RAM tier).
+    pub spill_s: f64,
     pub cpu_s: f64,
     pub overhead_s: f64,
     /// Final composed step latency.
@@ -148,6 +151,12 @@ pub fn decode_step(
         if fetch > 0.0 {
             br.pcie_s = fetch / hw.pcie_bw + model.n_layers as f64 * hw.pcie_latency_s;
         }
+        // Tiered arena: part of the uncached fetches first climb from
+        // the cold spill tier into hot RAM (fig13/fig14 account for the
+        // new tier through this term).
+        if fetch > 0.0 && profile.spill_frac > 0.0 {
+            br.spill_s = fetch * profile.spill_frac / hw.spill_bw;
+        }
     }
 
     // Representative / meta / signature scan per step.
@@ -173,13 +182,17 @@ pub fn decode_step(
     // Compose with overlap:
     let gpu_s = br.dense_s + br.attn_gpu_s + br.scan_s + br.estimation_s;
     br.total_s = if profile.overlap_transfers {
-        // PCIe + async CPU work overlap GPU compute (wave buffer).
-        gpu_s.max(br.pcie_s).max(br.cpu_s + if profile.async_update { 0.0 } else { mgmt_s })
+        // PCIe + spill prefetch + async CPU work overlap GPU compute
+        // (wave buffer one level up, prefetch worker one level down).
+        gpu_s
+            .max(br.pcie_s)
+            .max(br.spill_s)
+            .max(br.cpu_s + if profile.async_update { 0.0 } else { mgmt_s })
             + if profile.async_update { 0.0 } else { mgmt_s }
             + br.overhead_s
     } else {
         // Serial composition (InfiniGen/PQCache-style pipelines).
-        gpu_s + br.pcie_s + br.cpu_s + mgmt_s + br.overhead_s
+        gpu_s + br.pcie_s + br.spill_s + br.cpu_s + mgmt_s + br.overhead_s
     };
     br
 }
@@ -313,6 +326,23 @@ mod tests {
         let t_async = decode_throughput(&m, &hw, &retroinfer(0.85), ctx, b).unwrap();
         assert!(t_cache > 1.2 * t_base, "cache helps: {t_cache} vs {t_base}");
         assert!(t_async > 1.02 * t_cache, "async helps: {t_async} vs {t_cache}");
+    }
+
+    #[test]
+    fn spill_tier_costs_bandwidth_but_survives_1m() {
+        let (m, hw) = setup();
+        let ctx = 1 << 20;
+        let b = 4;
+        let t_hot = decode_throughput(&m, &hw, &retroinfer(0.85), ctx, b).unwrap();
+        let t_some = decode_throughput(&m, &hw, &retroinfer_spilled(0.85, 0.3), ctx, b).unwrap();
+        let t_most = decode_throughput(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b).unwrap();
+        assert!(t_some <= t_hot, "spill cannot be free: {t_some} vs {t_hot}");
+        assert!(t_most <= t_some, "more spill is monotonically slower");
+        assert!(t_most > 0.0, "spilled serving still survives at 1M");
+        // the spill term shows up in the breakdown
+        let br = decode_step(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b);
+        assert!(br.spill_s > 0.0);
+        assert_eq!(decode_step(&m, &hw, &retroinfer(0.85), ctx, b).spill_s, 0.0);
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct SystemProfile {
     /// Fraction of exact-attention bytes that must cross PCIe (before
     /// cache hits): 0 for GPU-resident systems, 1 for offload systems.
     pub pcie_fetch_frac: f64,
+    /// Fraction of the PCIe-fetched (uncached) bytes that additionally
+    /// come from the cold spill tier (tiered arena: hot RAM tier capped
+    /// below the working set). 0 = single-tier.
+    pub spill_frac: f64,
     /// GPU cache hit ratio on fetched bytes (measured; RetroInfer only).
     pub hit_ratio: f64,
     /// Fraction of context covered by the estimation zone (RetroInfer).
@@ -74,6 +78,7 @@ fn base(name: &'static str) -> SystemProfile {
         exact_frac: 0.018,
         exact_fixed: 68,
         pcie_fetch_frac: 0.0,
+        spill_frac: 0.0,
         hit_ratio: 0.0,
         est_frac: 0.0,
         cpu_attention: false,
@@ -170,6 +175,14 @@ pub fn retroinfer(hit_ratio: f64) -> SystemProfile {
         cpu_mgmt_s_per_seq: 0.3e-6,
         ..base("retroinfer")
     }
+}
+
+/// RetroInfer over a tiered KV arena: the hot RAM tier is capped below
+/// the working set, so `spill_frac` of the uncached fetches read
+/// through the cold spill tier first (DESIGN.md §2 "Tiered arena &
+/// spill"; prefetch overlap is modeled by `overlap_transfers`).
+pub fn retroinfer_spilled(hit_ratio: f64, spill_frac: f64) -> SystemProfile {
+    SystemProfile { name: "retroinfer-spill", spill_frac, ..retroinfer(hit_ratio) }
 }
 
 /// Figure 16 "Base": KV offloaded, no GPU cache, synchronous management.

@@ -47,6 +47,20 @@ impl Metrics {
         }
     }
 
+    /// Set gauge `name` to the integer percentage `100 * num / den`
+    /// (0 when `den` is zero — an empty ratio reports no activity, so a
+    /// run that never exercised the rate cannot read as a perfect one).
+    /// Used for rates like the spill prefetch-overlap ratio (staged
+    /// promotions / promotions).
+    pub fn set_ratio_gauge(&self, name: &str, num: u64, den: u64) {
+        let v = if den == 0 {
+            0
+        } else {
+            (100.0 * num as f64 / den as f64).round() as u64
+        };
+        self.set_gauge(name, v);
+    }
+
     /// Snapshot of all gauges, sorted by name.
     pub fn gauges_snapshot(&self) -> Vec<(String, u64)> {
         let mut v: Vec<(String, u64)> =
@@ -150,6 +164,17 @@ mod tests {
         assert_eq!(m.gauge("peak"), 5);
         m.set_gauge_max("peak", 9);
         assert_eq!(m.gauge("peak"), 9);
+    }
+
+    #[test]
+    fn ratio_gauge_is_integer_percent() {
+        let m = Metrics::new();
+        m.set_ratio_gauge("overlap", 3, 4);
+        assert_eq!(m.gauge("overlap"), 75);
+        m.set_ratio_gauge("overlap", 0, 0);
+        assert_eq!(m.gauge("overlap"), 0, "empty ratio reports no activity");
+        m.set_ratio_gauge("overlap", 1, 3);
+        assert_eq!(m.gauge("overlap"), 33);
     }
 
     #[test]

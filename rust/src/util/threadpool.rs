@@ -136,6 +136,54 @@ impl ThreadPool {
         // pool job can never fail a successful scope.
         assert!(!scope.job_panicked.load(Ordering::SeqCst), "a scoped pool job panicked");
     }
+
+    /// Mutable scoped fan-out: run `f(i, &mut items[i])` for every item
+    /// across the pool, returning once these jobs complete. Each job
+    /// receives a *disjoint* element, so `T` only needs `Send`; the
+    /// engine fans per-session KV appends out through here (sessions
+    /// are disjoint `&mut SessionState`s). Same contract as
+    /// [`ThreadPool::scope_for_each`]: panics are re-raised, and it
+    /// must not be called from a pool worker.
+    pub fn scope_for_each_mut<T: Send, F: Fn(usize, &mut T) + Sync>(
+        &self,
+        items: &mut [T],
+        f: &F,
+    ) {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let scope = Arc::new(Scope {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+            job_panicked: AtomicBool::new(false),
+        });
+        // SAFETY: as in `scope_for_each`, `f` and the slice base are
+        // smuggled across the 'static job boundary as raw addresses.
+        // Every job is joined below before this function returns, so
+        // neither pointer outlives its borrow; each job dereferences a
+        // distinct element (`add(i)`, unique `i`), so the `&mut`s are
+        // disjoint. `T: Send` moves the elements' mutable access across
+        // threads; `F: Sync` makes the concurrent `&F` calls sound.
+        let base = items.as_mut_ptr() as usize;
+        let fp = f as *const F as usize;
+        for i in 0..n {
+            let scope = Arc::clone(&scope);
+            self.submit(move || {
+                let _ticket = ScopeTicket(scope);
+                unsafe {
+                    let item = &mut *(base as *mut T).add(i);
+                    (*(fp as *const F))(i, item)
+                }
+            });
+        }
+        let mut left = scope.remaining.lock().unwrap();
+        while *left > 0 {
+            left = scope.done.wait(left).unwrap();
+        }
+        drop(left);
+        assert!(!scope.job_panicked.load(Ordering::SeqCst), "a scoped pool job panicked");
+    }
 }
 
 /// Join state of one `scope_for_each` call.
@@ -276,6 +324,33 @@ mod tests {
         assert_eq!(*hits.lock().unwrap(), 8);
         pool.wait_idle();
         assert_eq!(slow.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_for_each_mut_gives_disjoint_mutable_access() {
+        let pool = ThreadPool::new(4);
+        let mut items: Vec<Vec<u64>> = (0..64).map(|i| vec![i]).collect();
+        pool.scope_for_each_mut(&mut items, &|i, v| {
+            v.push(2 * i as u64);
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(v, &vec![i as u64, 2 * i as u64]);
+        }
+        // empty input is a no-op, not a hang
+        let mut none: Vec<u64> = Vec::new();
+        pool.scope_for_each_mut(&mut none, &|_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped pool job panicked")]
+    fn scope_for_each_mut_reraises_job_panics() {
+        let pool = ThreadPool::new(2);
+        let mut items = vec![0u64; 4];
+        pool.scope_for_each_mut(&mut items, &|i, _| {
+            if i == 1 {
+                panic!("boom");
+            }
+        });
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! - `completed + rejected == n` with `prefill_failures == 0` — every
 //!   deferred prefill was eventually admitted once reclamation freed
 //!   space (no lost requests, no deadlock).
+//!
+//! With [`PressureConfig::spill`] the same driver exercises the tiered
+//! arena instead: the cap bounds the hot tier only, refused checkouts
+//! demote the oldest live blocks and retry, decode steps promote
+//! spilled blocks back, and the report additionally asserts that total
+//! live blocks exceeded the hot cap while hot-resident blocks never did
+//! (`tests/spill.rs`).
 
 use crate::coordinator::{Action, AdmissionConfig, Batcher, Request, Scheduler};
 use crate::kvcache::{BlockArena, KvStore, TenantId};
@@ -43,6 +50,12 @@ pub struct PressureConfig {
     pub headroom_frac: f64,
     /// Decode-pool admission cap (continuous-batching slot count).
     pub max_batch: usize,
+    /// Enable the cold spill tier: `capacity_blocks` bounds the HOT
+    /// tier only, admission never defers on occupancy (tiered gate),
+    /// and a refused checkout demotes the oldest live blocks to the
+    /// cold tier and retries — total live bytes may exceed the hot cap
+    /// while hot-resident bytes never do.
+    pub spill: bool,
 }
 
 impl Default for PressureConfig {
@@ -56,6 +69,7 @@ impl Default for PressureConfig {
             tenant_quota_blocks: None,
             headroom_frac: 0.25,
             max_batch: 4,
+            spill: false,
         }
     }
 }
@@ -90,6 +104,18 @@ pub struct PressureReport {
     /// False only if the guard tripped before the trace drained
     /// (deadlock — must be true).
     pub drained: bool,
+    /// Blocks demoted to the cold tier (spill runs).
+    pub demotions: usize,
+    /// Blocks promoted back to the hot tier (spill runs).
+    pub promotions: usize,
+    /// Peak of hot + cold live blocks (exceeds `capacity_blocks` when
+    /// the workload genuinely overcommits the hot tier).
+    pub peak_total_live_blocks: usize,
+    /// Peak cold-tier residency in blocks.
+    pub peak_cold_blocks: usize,
+    /// Cold blocks left after the trace drained (must be 0: finished
+    /// sessions drop their cold blocks).
+    pub final_cold_blocks: usize,
 }
 
 /// Blocks one head checks out for `tokens` of context, allocated as
@@ -117,6 +143,22 @@ fn checkout_prompt(store: &mut KvStore, layers: usize, heads: usize, tokens: usi
     true
 }
 
+/// Demote hot blocks from live stores (session id order, oldest blocks
+/// first) until `need` were freed or nothing remains; the driver-level
+/// "demote, then retry" path of a spill-enabled run.
+fn demote_from_stores(stores: &mut HashMap<u64, KvStore>, need: usize) -> usize {
+    let mut ids: Vec<u64> = stores.keys().copied().collect();
+    ids.sort_unstable();
+    let mut freed = 0;
+    for id in ids {
+        if freed >= need {
+            break;
+        }
+        freed += stores.get_mut(&id).unwrap().demote_blocks(need - freed);
+    }
+    freed
+}
+
 /// Run one seeded pressure scenario to completion (or guard) and report.
 pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> PressureReport {
     let arena = BlockArena::shared(cfg.d, cfg.block_bytes);
@@ -133,6 +175,7 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         tokens_per_block: tpb,
         headroom_frac: cfg.headroom_frac,
         est_fudge: 1.5,
+        tiered: cfg.spill,
     };
     let mut sched = Scheduler::with_admission(
         Batcher::new(&[1, 2, 4, 8], cfg.max_batch),
@@ -169,18 +212,42 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                     let s = sched.session(id).unwrap();
                     (s.req.tenant, s.req.prompt.len())
                 };
-                let mut st =
-                    KvStore::new_in_for(Arc::clone(&arena), tenant, cfg.layers, cfg.kv_heads);
-                if checkout_prompt(&mut st, cfg.layers, cfg.kv_heads, prompt_len) {
-                    stores.insert(id, st);
-                    decoded.insert(id, 0);
-                    sched.prefill_done(id, 0, now);
-                } else {
-                    // admission let an unservable prefill through; the
-                    // partial store drops (rollback) and the run reports it
-                    rep.prefill_failures += 1;
-                    sched.prefill_done(id, 0, now);
+                // generous footprint estimate: dense packing plus one
+                // tail block per (2·tpb − 1)-token cluster
+                let est = cfg.layers * cfg.kv_heads * prompt_len.div_ceil(tpb) * 2;
+                let mut served = false;
+                for _attempt in 0..64 {
+                    let mut st = KvStore::new_in_for(
+                        Arc::clone(&arena),
+                        tenant,
+                        cfg.layers,
+                        cfg.kv_heads,
+                    );
+                    if checkout_prompt(&mut st, cfg.layers, cfg.kv_heads, prompt_len) {
+                        stores.insert(id, st);
+                        decoded.insert(id, 0);
+                        served = true;
+                        break;
+                    }
+                    // the partial store drops here (rollback)
+                    drop(st);
+                    if !cfg.spill {
+                        break;
+                    }
+                    // full hot tier means demote-then-retry, not defer:
+                    // spill the oldest live blocks and rebuild
+                    let freed = demote_from_stores(&mut stores, est);
+                    rep.demotions += freed;
+                    if freed == 0 {
+                        break;
+                    }
                 }
+                if !served {
+                    // single-tier: admission let an unservable prefill
+                    // through; spill: nothing left to demote
+                    rep.prefill_failures += 1;
+                }
+                sched.prefill_done(id, 0, now);
             }
             Action::DecodeBatch(ids, _bucket) => {
                 for id in ids {
@@ -188,25 +255,71 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                     let n = decoded.entry(id).or_insert(0);
                     *n += 1;
                     // one fresh block per head every tpb generated tokens
-                    if *n % tpb == 0 {
-                        if let Some(st) = stores.get_mut(&id) {
-                            'grow: for l in 0..cfg.layers {
-                                for h in 0..cfg.kv_heads {
-                                    let d = cfg.d;
-                                    let keys = vec![0.0f32; tpb * d];
-                                    let vals = vec![0.0f32; tpb * d];
-                                    let pos: Vec<u32> = (0..tpb as u32).collect();
-                                    if st
-                                        .head_mut(l, h)
-                                        .try_alloc_cluster(&keys, &vals, &pos)
-                                        .is_err()
-                                    {
-                                        rep.append_failures += 1;
-                                        break 'grow;
-                                    }
+                    if *n % tpb != 0 || !stores.contains_key(&id) {
+                        continue;
+                    }
+                    if cfg.spill {
+                        // model the decode read path: each growth step
+                        // promotes a couple of this session's spilled
+                        // blocks back into the hot tier, demoting other
+                        // sessions' cold blocks first when the hot tier
+                        // is full (demote-then-retry)
+                        let has_cold =
+                            stores.get(&id).map(|s| s.n_cold_blocks() > 0).unwrap_or(false);
+                        if has_cold {
+                            let got = stores.get_mut(&id).unwrap().promote_blocks(2);
+                            rep.promotions += got;
+                            if got < 2 {
+                                let freed = demote_from_stores(&mut stores, 4);
+                                rep.demotions += freed;
+                                if freed > 0 {
+                                    let more =
+                                        stores.get_mut(&id).unwrap().promote_blocks(2 - got);
+                                    rep.promotions += more;
                                 }
                             }
                         }
+                    }
+                    let d = cfg.d;
+                    let keys = vec![0.0f32; tpb * d];
+                    let vals = vec![0.0f32; tpb * d];
+                    let pos: Vec<u32> = (0..tpb as u32).collect();
+                    let mut pending: Vec<(usize, usize)> = Vec::new();
+                    for l in 0..cfg.layers {
+                        for h in 0..cfg.kv_heads {
+                            pending.push((l, h));
+                        }
+                    }
+                    let mut attempts = 0;
+                    loop {
+                        let mut still = Vec::new();
+                        {
+                            let st = stores.get_mut(&id).unwrap();
+                            for &(l, h) in &pending {
+                                if st
+                                    .head_mut(l, h)
+                                    .try_alloc_cluster(&keys, &vals, &pos)
+                                    .is_err()
+                                {
+                                    still.push((l, h));
+                                }
+                            }
+                        }
+                        if still.is_empty() {
+                            break;
+                        }
+                        attempts += 1;
+                        if !cfg.spill || attempts > 8 {
+                            rep.append_failures += still.len();
+                            break;
+                        }
+                        let freed = demote_from_stores(&mut stores, 2 * still.len());
+                        rep.demotions += freed;
+                        if freed == 0 {
+                            rep.append_failures += still.len();
+                            break;
+                        }
+                        pending = still;
                     }
                 }
             }
@@ -215,8 +328,11 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         // sample the invariants after every step
         let live = arena.live_blocks();
         let resident = arena.resident_bytes();
+        let cold = arena.cold_blocks();
         rep.peak_live_blocks = rep.peak_live_blocks.max(live);
         rep.peak_resident_bytes = rep.peak_resident_bytes.max(resident);
+        rep.peak_cold_blocks = rep.peak_cold_blocks.max(cold);
+        rep.peak_total_live_blocks = rep.peak_total_live_blocks.max(live + cold);
         if live > cfg.capacity_blocks || resident > cap_bytes {
             rep.capacity_violations += 1;
         }
@@ -240,6 +356,7 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         }
     }
     rep.drained = true;
+    rep.final_cold_blocks = arena.cold_blocks();
     rep.deferrals = sched.n_deferrals();
     rep.rejected = sched.n_rejections() as usize;
     rep.completed = sched

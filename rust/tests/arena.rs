@@ -162,6 +162,92 @@ fn prop_parallel_assembly_bit_identical_to_sequential() {
     });
 }
 
+/// Satellite (ROADMAP "fan-out past assembly"): fanning the decode-step
+/// KV appends across sessions produces per-session index state
+/// bit-identical to the sequential loop. Appends mutate only their own
+/// session, so parallelism can only change the interleaving of arena
+/// block-id issuance — never data, clustering, or the steady zone.
+#[test]
+fn prop_parallel_session_appends_bit_identical_to_sequential() {
+    check("append-fanout-identical", 4, |rng| {
+        let d = 16;
+        let n_sessions = 2 + rng.below(3);
+        let n0 = 128 + rng.below(128);
+        let steps = 40 + rng.below(60);
+        let base_seed = rng.next_u64();
+        let mk = |seed: u64| -> Vec<Vec<WaveIndex>> {
+            let arena = BlockArena::shared(d, 512);
+            let mut r = Rng::new(seed);
+            (0..n_sessions).map(|_| build_session(&arena, 2, 2, n0, &mut r)).collect()
+        };
+        let mut seq = mk(base_seed);
+        let mut par = mk(base_seed);
+        // deterministic token stream per (session, slot, step)
+        let tok = |si: usize, slot: usize, step: usize| -> (Vec<f32>, Vec<f32>) {
+            let mut r = Rng::new(
+                base_seed ^ ((si as u64) << 40) ^ ((slot as u64) << 20) ^ step as u64,
+            );
+            (r.normal_vec(d), r.normal_vec(d))
+        };
+        let pool = ThreadPool::new(4);
+        for step in 0..steps {
+            for (si, sess) in seq.iter_mut().enumerate() {
+                for (slot, idx) in sess.iter_mut().enumerate() {
+                    let (k, v) = tok(si, slot, step);
+                    idx.try_append(&k, &v).unwrap();
+                }
+            }
+            pool.scope_for_each_mut(&mut par, &|si, sess| {
+                for (slot, idx) in sess.iter_mut().enumerate() {
+                    let (k, v) = tok(si, slot, step);
+                    idx.try_append(&k, &v).unwrap();
+                }
+            });
+        }
+        for (sa, sb) in seq.iter().zip(&par) {
+            for (ia, ib) in sa.iter().zip(sb) {
+                prop_assert_eq!(ia.n_seen(), ib.n_seen());
+                prop_assert_eq!(ia.n_updates(), ib.n_updates());
+                prop_assert_eq!(ia.meta().m(), ib.meta().m());
+                prop_assert!(
+                    ia.meta().centroids_flat() == ib.meta().centroids_flat(),
+                    "centroids diverged"
+                );
+                prop_assert!(ia.meta().vsum_flat() == ib.meta().vsum_flat(), "vsum diverged");
+                prop_assert!(ia.meta().counts() == ib.meta().counts(), "counts diverged");
+                let (ka, va) = ia.steady_kv();
+                let (kb, vb) = ib.steady_kv();
+                prop_assert!(ka == kb && va == vb, "steady zone diverged");
+                for c in 0..ia.meta().m() {
+                    prop_assert!(
+                        ia.meta().cluster_tokens(c) == ib.meta().cluster_tokens(c),
+                        "cluster {} tokens diverged",
+                        c
+                    );
+                    let ra = ia.cluster_blocks(c as u32);
+                    let rb = ib.cluster_blocks(c as u32);
+                    prop_assert_eq!(ra.len(), rb.len());
+                    // block IDS may differ (allocation order is racy);
+                    // block BYTES must not
+                    for (x, y) in ra.iter().zip(rb) {
+                        prop_assert!(
+                            ia.store().block_keys(*x) == ib.store().block_keys(*y),
+                            "cluster {} block keys diverged",
+                            c
+                        );
+                        prop_assert!(
+                            ia.store().block_vals(*x) == ib.store().block_vals(*y),
+                            "cluster {} block vals diverged",
+                            c
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Invariant (capacity satellite): under ANY interleaving of alloc /
 /// reclaim against a capped arena, the arena's counters track a simple
 /// reference model exactly — no double-free is representable (block

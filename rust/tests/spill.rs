@@ -1,0 +1,393 @@
+//! Tiered-arena (cold-tier spill) integration tests — DESIGN.md §2
+//! "Tiered arena & spill" invariants:
+//!
+//! 1. **No block in two tiers**: under any interleaving of alloc /
+//!    demote / promote / reclaim, a block id is hot xor cold, and the
+//!    arena's tier counters track a reference model exactly.
+//! 2. **Bit-identity**: demote→promote round-trips reproduce every f32
+//!    bit pattern; the cold read path serves bytes identical to hot.
+//! 3. **Hot cap holds under overcommit**: with the spill tier enabled,
+//!    the `workload::pressure` driver keeps hot-resident blocks ≤ cap
+//!    at every step even while total live blocks exceed the cap, with
+//!    zero deferrals (tiered admission) and zero lost requests.
+//! 4. **Mapping bookkeeping**: invalidating a cluster with mixed
+//!    `BlockHome` states (`Gpu` + `Cold` + `Cpu`) leaves no stale
+//!    `owner` reverse-map entry (eviction-bookkeeping regression).
+
+use retroinfer::attention::full_attention;
+use retroinfer::buffer::{BlockHome, ExecBuffer, MappingTable, WaveBuffer};
+use retroinfer::config::{BufferConfig, ZoneConfig};
+use retroinfer::index::{SelectScratch, WaveIndex};
+use retroinfer::kvcache::arena::BlockData;
+use retroinfer::kvcache::{BlockArena, BlockRef, ColdestFirst, HeadStore, DEFAULT_TENANT};
+use retroinfer::prop_assert;
+use retroinfer::prop_assert_eq;
+use retroinfer::util::prop::check;
+use retroinfer::util::rng::Rng;
+use retroinfer::util::threadpool::ThreadPool;
+use retroinfer::workload::{multi_tenant_poisson, run_memory_pressure, PressureConfig};
+use std::sync::Arc;
+
+fn small_zone() -> ZoneConfig {
+    ZoneConfig {
+        steady_sink: 4,
+        steady_local: 16,
+        tokens_per_cluster: 8,
+        build_segment: 256,
+        update_segment: 32,
+        kmeans_iters: 4,
+        ..ZoneConfig::default()
+    }
+}
+
+/// (1) Tier accounting vs a reference model under random interleaving.
+#[test]
+fn prop_arena_tier_accounting_consistent() {
+    check("arena-tier-accounting", 8, |rng| {
+        let arena = BlockArena::shared(8, 256);
+        let cap = 6 + rng.below(20);
+        arena.set_capacity_blocks(Some(cap));
+        let mut hot: Vec<(u64, BlockData)> = Vec::new();
+        let mut cold: Vec<u64> = Vec::new();
+        for _ in 0..300 {
+            match rng.below(4) {
+                0 => match arena.try_alloc_for(DEFAULT_TENANT) {
+                    Ok((id, b)) => {
+                        prop_assert!(hot.len() < cap, "alloc succeeded at the hot cap");
+                        hot.push((id, b));
+                    }
+                    Err(_) => prop_assert_eq!(hot.len(), cap),
+                },
+                1 if !hot.is_empty() => {
+                    let k = rng.below(hot.len());
+                    let (id, b) = hot.swap_remove(k);
+                    arena.demote_for(DEFAULT_TENANT, id, b);
+                    cold.push(id);
+                }
+                2 if !cold.is_empty() => {
+                    let k = rng.below(cold.len());
+                    let id = cold.swap_remove(k);
+                    match arena.try_promote_for(DEFAULT_TENANT, id) {
+                        Ok((b, _)) => hot.push((id, b)),
+                        Err(_) => {
+                            prop_assert_eq!(hot.len(), cap);
+                            cold.push(id);
+                        }
+                    }
+                }
+                3 if !hot.is_empty() => {
+                    let (_, b) = hot.pop().unwrap();
+                    arena.reclaim_for(DEFAULT_TENANT, [b]);
+                }
+                _ => {}
+            }
+            prop_assert_eq!(arena.live_blocks(), hot.len());
+            prop_assert_eq!(arena.cold_blocks(), cold.len());
+            prop_assert_eq!(arena.total_live_blocks(), hot.len() + cold.len());
+            prop_assert!(
+                arena.live_blocks() + arena.free_blocks() <= cap,
+                "hot-resident {} blocks exceeds cap {}",
+                arena.live_blocks() + arena.free_blocks(),
+                cap
+            );
+            prop_assert_eq!(
+                arena.allocated_total() - arena.reclaimed_total(),
+                hot.len() as u64
+            );
+            // no block is ever in two tiers
+            for &id in &cold {
+                prop_assert!(arena.spill().contains(id), "cold block {} lost", id);
+            }
+            for (id, _) in &hot {
+                prop_assert!(!arena.spill().contains(*id), "hot block {} also cold", id);
+            }
+        }
+        // teardown: cold blocks drop in place, hot blocks reclaim
+        for id in cold {
+            prop_assert!(arena.drop_cold(id));
+        }
+        arena.reclaim_for(DEFAULT_TENANT, hot.into_iter().map(|(_, b)| b));
+        prop_assert_eq!(arena.live_blocks(), 0);
+        prop_assert_eq!(arena.cold_blocks(), 0);
+        Ok(())
+    });
+}
+
+/// (2) Demote→promote round-trips are bit-identical for every block —
+/// including NaN / denormal / negative-zero f32 bit patterns.
+#[test]
+fn prop_demote_promote_roundtrip_bit_identical() {
+    check("spill-roundtrip", 8, |rng| {
+        let d = 8;
+        let arena = BlockArena::shared(d, 256); // tpb = 4
+        let mut hs = HeadStore::new_in(Arc::clone(&arena));
+        let n = 9 + rng.below(40);
+        let keys: Vec<f32> =
+            (0..n * d).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let vals: Vec<f32> =
+            (0..n * d).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let pos: Vec<u32> = (0..n as u32).collect();
+        let refs = hs.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+        let snap: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> = refs
+            .iter()
+            .map(|r| {
+                (
+                    hs.block_keys(*r).iter().map(|x| x.to_bits()).collect(),
+                    hs.block_vals(*r).iter().map(|x| x.to_bits()).collect(),
+                    hs.block_pos(*r).to_vec(),
+                )
+            })
+            .collect();
+        for r in &refs {
+            prop_assert!(hs.demote_block(*r));
+        }
+        prop_assert_eq!(arena.live_blocks(), 0);
+        prop_assert_eq!(arena.cold_blocks(), refs.len());
+        // promote in a scrambled order: page recycling must not leak
+        // one block's bytes into another
+        let mut order: Vec<usize> = (0..refs.len()).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            prop_assert!(hs.promote_block(refs[i]).unwrap().is_some());
+        }
+        for (r, want) in refs.iter().zip(&snap) {
+            let got_k: Vec<u32> = hs.block_keys(*r).iter().map(|x| x.to_bits()).collect();
+            let got_v: Vec<u32> = hs.block_vals(*r).iter().map(|x| x.to_bits()).collect();
+            prop_assert!(got_k == want.0, "keys changed bits across the round-trip");
+            prop_assert!(got_v == want.1, "vals changed bits across the round-trip");
+            prop_assert!(hs.block_pos(*r) == &want.2[..], "positions changed");
+        }
+        prop_assert_eq!(arena.cold_blocks(), 0);
+        Ok(())
+    });
+}
+
+/// (2b) End-to-end data-path identity: attention over a fully demoted
+/// index is bit-identical to attention over the hot index, and matches
+/// full attention at full retrieval budget.
+#[test]
+fn attend_is_bit_identical_after_full_demotion() {
+    let d = 16;
+    let mut rng = Rng::new(42);
+    let k = rng.normal_vec(512 * d);
+    let v = rng.normal_vec(512 * d);
+    let mut idx = WaveIndex::build(small_zone(), d, 1024, &k, &v, 7);
+    let m = idx.meta().m();
+    assert!(m > 0);
+    let q = rng.normal_vec(d);
+    let mut sc = SelectScratch::default();
+    let sel = idx.select_with(&q, m, 0, &mut sc); // retrieve ALL clusters
+    let mut hot_out = vec![0.0; d];
+    idx.attend(&q, &sel, &mut hot_out);
+    // demote every cluster
+    let mut demoted = 0;
+    for c in 0..m {
+        demoted += idx.demote_cluster(c as u32);
+        assert!(!idx.cluster_is_hot(c as u32));
+    }
+    assert!(demoted > 0);
+    assert_eq!(idx.arena().live_blocks(), 0, "all clustered blocks must be cold");
+    let mut cold_out = vec![0.0; d];
+    idx.attend(&q, &sel, &mut cold_out);
+    assert_eq!(
+        hot_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        cold_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "cold-tier attention must be bit-identical to hot"
+    );
+    let mut full = vec![0.0; d];
+    full_attention(&q, &k, &v, d, &mut full);
+    let cos = retroinfer::util::stats::cosine(&cold_out, &full);
+    assert!(cos > 0.999, "cold full-budget attention vs full: {cos}");
+}
+
+/// Policy-driven demotion respects access recency: the clusters the
+/// last selection retrieved are demoted last.
+#[test]
+fn demote_until_spills_coldest_clusters_first() {
+    let d = 16;
+    let mut rng = Rng::new(9);
+    let k = rng.normal_vec(768 * d);
+    let v = rng.normal_vec(768 * d);
+    let mut idx = WaveIndex::build(small_zone(), d, 1024, &k, &v, 3);
+    let m = idx.meta().m();
+    assert!(m >= 4);
+    let q = rng.normal_vec(d);
+    let mut sc = SelectScratch::default();
+    let sel = idx.select_with(&q, 2, 0, &mut sc);
+    idx.note_selection(&sel);
+    assert!(idx.selection_epoch() > 0);
+    let hot_sel: Vec<u32> = sel.retrieval.clone();
+    // demote roughly half the blocks: the recently-selected clusters
+    // must survive in the hot tier
+    let total_hot: usize = (0..m).map(|c| idx.cluster_hot_blocks(c as u32)).sum();
+    let (freed, demoted) = idx.demote_until(&ColdestFirst, total_hot / 2);
+    assert!(freed >= total_hot / 2);
+    for c in &hot_sel {
+        assert!(
+            !demoted.contains(c) && idx.cluster_is_hot(*c),
+            "recently-retrieved cluster {c} was demoted before colder ones"
+        );
+    }
+    // the recent (wanted) set is what the engine prefetches
+    assert_eq!(idx.recent_clusters(), hot_sel);
+}
+
+/// (4) Mapping regression: invalidating a cluster with mixed homes
+/// cannot leave a stale owner reverse-map entry, and the wave buffer's
+/// demote/promote notes keep cache and mapping consistent.
+#[test]
+fn mapping_invalidation_and_tier_notes_stay_consistent() {
+    let bref = |block: u64, idx: u32, len: u16| BlockRef { block, idx, len };
+    let mut mt = MappingTable::new();
+    let c0 = mt.add_cluster(vec![bref(100, 0, 8), bref(101, 1, 8), bref(102, 2, 2)]);
+    let c1 = mt.add_cluster(vec![bref(103, 0, 8)]);
+    mt.set_cached(100, 5);
+    mt.set_cold(101);
+    // mixed Gpu + Cold + Cpu: every owner entry must go
+    let removed = mt.invalidate_cluster(c0);
+    assert_eq!(removed.len(), 3);
+    assert!(removed.contains(&(100, BlockHome::Gpu(5))));
+    assert!(removed.contains(&(101, BlockHome::Cold)));
+    assert!(removed.contains(&(102, BlockHome::Cpu)));
+    for b in [100u64, 101, 102] {
+        assert_eq!(mt.owner(b), (u32::MAX, 0), "stale owner entry for {b}");
+    }
+    // the untouched cluster keeps its entries; stale-id updates are
+    // no-ops rather than corruption
+    assert_eq!(mt.owner(103), (c1, 0));
+    mt.set_cold(101);
+    mt.set_evicted(100);
+    assert_eq!(mt.gpu_resident_blocks(), 0);
+    assert_eq!(mt.cold_blocks(), 0);
+}
+
+/// Cold clusters selected by a query are cold-hit stalls served through
+/// the spill tier with bytes identical to the hot path (buffer-level
+/// counterpart of the engine's promote-then-fill).
+#[test]
+fn buffer_assembly_survives_mid_stream_demotion() {
+    let d = 16;
+    let mut rng = Rng::new(11);
+    let k = rng.normal_vec(512 * d);
+    let v = rng.normal_vec(512 * d);
+    let mut idx = WaveIndex::build(small_zone(), d, 1024, &k, &v, 5);
+    let pool = Arc::new(ThreadPool::new(2));
+    let bcfg = BufferConfig::default();
+    let cap = WaveBuffer::capacity_for(&bcfg, 512, idx.store().tokens_per_block());
+    let wb = WaveBuffer::new(bcfg, d, idx.store().tokens_per_block(), cap, Arc::clone(&pool));
+    wb.register_index(&idx);
+    let q = rng.normal_vec(d);
+    let mut sc = SelectScratch::default();
+    let sel = idx.select_with(&q, 4, 0, &mut sc);
+    let mut eb_hot = ExecBuffer::new(d);
+    wb.assemble(&idx, &sel, &mut eb_hot);
+    wb.flush();
+    // demote the retrieved clusters (GPU copies go with them)
+    for &c in &sel.retrieval {
+        idx.demote_cluster(c);
+        wb.note_demoted(idx.cluster_blocks(c));
+    }
+    assert!(wb.check_consistency());
+    let mut eb_cold = ExecBuffer::new(d);
+    let st = wb.assemble(&idx, &sel, &mut eb_cold);
+    assert!(st.cold_blocks > 0, "demoted blocks must count as cold-hit stalls");
+    assert_eq!(st.hit_blocks, 0, "demotion must invalidate GPU-cache copies");
+    assert_eq!(eb_hot.keys, eb_cold.keys, "cold assembly changed bytes");
+    assert_eq!(eb_hot.vals, eb_cold.vals);
+    assert!(wb.stats().spill_bytes.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}
+
+/// (3) Overcommitted multi-tenant trace with the cold tier enabled:
+/// hot-resident blocks never exceed the hot cap while total live blocks
+/// do; no deferrals (tiered admission), no lost requests, tier traffic
+/// in both directions, and cold blocks die with their sessions.
+#[test]
+fn spilled_pressure_run_keeps_hot_tier_bounded() {
+    let cfg = PressureConfig {
+        capacity_blocks: 256,
+        tenant_quota_blocks: None,
+        spill: true,
+        ..PressureConfig::default()
+    };
+    let trace = multi_tenant_poisson(&[4.0, 2.0, 1.0], 4, 112, 8, 11);
+    let rep = run_memory_pressure(&cfg, &trace);
+    assert!(rep.drained, "tiered run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap: {rep:?}");
+    assert_eq!(rep.prefill_failures, 0, "demote-then-retry failed a prefill: {rep:?}");
+    assert_eq!(rep.append_failures, 0, "demote-then-retry failed an append: {rep:?}");
+    assert_eq!(rep.deferrals, 0, "tiered admission must never defer: {rep:?}");
+    assert_eq!(rep.rejected, 0);
+    assert_eq!(rep.completed, trace.len(), "requests lost under spill: {rep:?}");
+    assert!(rep.demotions > 0, "overcommit must force demotions: {rep:?}");
+    assert!(rep.promotions > 0, "decode must promote spilled blocks: {rep:?}");
+    assert!(
+        rep.peak_total_live_blocks > cfg.capacity_blocks,
+        "workload must genuinely exceed the hot tier: {rep:?}"
+    );
+    assert!(rep.peak_live_blocks <= cfg.capacity_blocks);
+    assert_eq!(rep.final_cold_blocks, 0, "finished sessions must drop cold blocks: {rep:?}");
+}
+
+/// Same invariants across seeds (tier-1 scale).
+#[test]
+fn prop_spilled_pressure_invariants_across_seeds() {
+    check("spill-pressure", 3, |rng| {
+        let seed = rng.next_u64();
+        let input = 96 + rng.below(25);
+        let output = 4 + rng.below(8);
+        let cfg = PressureConfig {
+            capacity_blocks: 192 + 64 * rng.below(3),
+            tenant_quota_blocks: None,
+            spill: true,
+            ..PressureConfig::default()
+        };
+        let trace = multi_tenant_poisson(&[4.0, 2.0, 1.0], 4, input, output, seed);
+        let rep = run_memory_pressure(&cfg, &trace);
+        prop_assert!(rep.drained, "deadlock: {:?}", rep);
+        prop_assert_eq!(rep.capacity_violations, 0);
+        prop_assert_eq!(rep.prefill_failures, 0);
+        prop_assert_eq!(rep.append_failures, 0);
+        prop_assert_eq!(rep.deferrals, 0);
+        prop_assert_eq!(rep.completed, trace.len());
+        prop_assert!(rep.demotions > 0, "no demotions: {:?}", rep);
+        prop_assert_eq!(rep.final_cold_blocks, 0);
+        prop_assert!(rep.peak_live_blocks <= cfg.capacity_blocks, "hot cap broken");
+        Ok(())
+    });
+}
+
+/// Nightly-scale sweep (CI `spill-pressure` job runs it via
+/// `--include-ignored`): more tenants, longer backlogs, more seeds.
+#[test]
+#[ignore = "nightly-scale tiered-arena overcommit sweep; run with --include-ignored"]
+fn prop_spilled_pressure_nightly_sweep() {
+    check("spill-pressure-nightly", 8, |rng| {
+        let seed = rng.next_u64();
+        let rates = [8.0, 4.0, 2.0, 1.0];
+        let input = 80 + rng.below(41);
+        let output = 4 + rng.below(12);
+        let cfg = PressureConfig {
+            capacity_blocks: 192 + 96 * rng.below(4),
+            tenant_quota_blocks: None,
+            max_batch: 1 + rng.below(8),
+            spill: true,
+            ..PressureConfig::default()
+        };
+        let trace = multi_tenant_poisson(&rates, 6, input, output, seed);
+        let rep = run_memory_pressure(&cfg, &trace);
+        prop_assert!(rep.drained, "deadlock: {:?}", rep);
+        prop_assert_eq!(rep.capacity_violations, 0);
+        prop_assert_eq!(rep.prefill_failures, 0);
+        prop_assert_eq!(rep.append_failures, 0);
+        prop_assert_eq!(rep.deferrals, 0);
+        prop_assert_eq!(rep.completed, trace.len());
+        prop_assert_eq!(rep.final_cold_blocks, 0);
+        prop_assert!(
+            rep.peak_live_blocks <= cfg.capacity_blocks,
+            "hot peak {} > cap {}",
+            rep.peak_live_blocks,
+            cfg.capacity_blocks
+        );
+        Ok(())
+    });
+}

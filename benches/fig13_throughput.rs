@@ -10,7 +10,10 @@ use retroinfer::config::{HardwareSpec, ModelSpec};
 use retroinfer::memsim::{self, profiles};
 use retroinfer::util::bench::{quick_mode, Table};
 use retroinfer::workload::tasks::{generate, TaskKind};
-use retroinfer::workload::{multi_tenant_poisson, run_memory_pressure, PressureConfig};
+use retroinfer::workload::{
+    multi_tenant_poisson, poisson_arrivals, run_memory_pressure, stamp_shared_prefix,
+    PressureConfig,
+};
 
 /// Measure the block-cache hit ratio by replaying a real query trace
 /// through the real wave index + wave buffer at reduced scale, and
@@ -137,6 +140,46 @@ fn spill_pressure_report() {
     assert_eq!(rep.final_cold_blocks, 0, "cold blocks must die with their sessions");
 }
 
+/// Serve a shared-prefix trace through the real refcounted arena
+/// (ROADMAP: cross-session block-cache sharing): N sessions over one
+/// template prefix — one donor seals it, everyone else attaches — and
+/// report the dedup factor plus the resident/transfer bytes it saves.
+/// Feeds the EXPERIMENTS.md "Prefix sharing" table.
+fn shared_prefix_report() {
+    let n = if quick_mode() { 6 } else { 12 };
+    let mut trace = poisson_arrivals(20.0, n, 120, 6, 17);
+    stamp_shared_prefix(&mut trace, 0x7E3A);
+    let cfg = PressureConfig {
+        capacity_blocks: 420,
+        shared_prefix_tokens: 96,
+        ..PressureConfig::default()
+    };
+    let rep = run_memory_pressure(&cfg, &trace);
+    // block geometry of the run (d=16, 512 B blocks -> tpb 4)
+    let block_bytes = 512;
+    let dedup = rep.peak_shared_refs as f64 / rep.peak_shared_blocks.max(1) as f64;
+    let saved_blocks = rep.peak_shared_refs.saturating_sub(rep.peak_shared_blocks);
+    println!(
+        "# shared-prefix replay: {} reqs x one 96-token template, cap={} blocks -> \
+         donors={} attaches={} peak_shared={} blocks peak_refs={} \
+         (dedup {dedup:.1}x, {} B resident+transfer saved at peak)",
+        trace.len(),
+        cfg.capacity_blocks,
+        rep.prefix_donors,
+        rep.prefix_attaches,
+        rep.peak_shared_blocks,
+        rep.peak_shared_refs,
+        saved_blocks * block_bytes,
+    );
+    assert!(rep.drained, "shared-prefix run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "resident bytes exceeded the cap");
+    assert_eq!(rep.prefill_failures, 0, "gate admitted an unservable prefill");
+    assert_eq!(rep.completed + rep.rejected, trace.len(), "requests lost");
+    assert_eq!(rep.prefix_donors, 1, "one donor per template");
+    assert!(dedup >= 2.0, "peak dedup must reflect concurrent sharers: {rep:?}");
+    assert_eq!(rep.final_live_blocks, 0, "shared refcounts must drain");
+}
+
 fn main() {
     let model = ModelSpec::llama3_8b();
     let hw = HardwareSpec::a100();
@@ -145,6 +188,7 @@ fn main() {
     println!("# paper reports 0.79-0.94 across tasks at 5% cache");
     capped_admission_report();
     spill_pressure_report();
+    shared_prefix_report();
     println!();
 
     let contexts: &[(usize, &str)] =
@@ -166,6 +210,10 @@ fn main() {
             // tiered arena: 30% of uncached fetches climb from the cold
             // spill tier first (hot RAM tier capped below the working set)
             profiles::retroinfer_spilled(hit, 0.3),
+            // cross-session prefix sharing: half of each sequence's KV
+            // is a template prefix resident once per batch (refcounted
+            // blocks + shared GPU prefix cache)
+            profiles::retroinfer_prefix(hit, 0.5),
         ] {
             let mut row = vec![p.name.to_string()];
             let mut peak = 0.0f64;

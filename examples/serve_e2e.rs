@@ -14,12 +14,19 @@
 //! promotions/demotions > 0 with hot-resident blocks ≤ cap at every
 //! step (DESIGN.md §2 "Tiered arena & spill").
 //!
+//! A fifth pass serves N sessions over a COMMON prompt prefix with
+//! cross-session prefix sharing armed (DESIGN.md §2 "Prefix sharing &
+//! CoW"): tokens bit-identical to the unshared run, the prefix resident
+//! once in the arena (dedup ratio ≈ N on the shared region), and a
+//! capped re-run where the admission discount admits a session mix the
+//! unshared gate defers.
+//!
 //!     make artifacts && cargo run --release --example serve_e2e
 //!
 //! Flags: --requests N (default 4)  --prompt-len L (2048)  --max-new M (24)
 //!        --tenants T (2)  --capacity-blocks C (0 = auto: 60% of peak)
 
-use retroinfer::config::CapacityConfig;
+use retroinfer::config::{BufferConfig, CapacityConfig, ZoneConfig};
 use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
 use retroinfer::engine::{live::structured_prompt, AttnMode, LiveEngine};
 use retroinfer::kvcache::ColdestFirst;
@@ -151,6 +158,116 @@ fn serve(
     })
 }
 
+struct PrefixStats {
+    out: HashMap<u64, Vec<i32>>,
+    peak_live_blocks: u64,
+    peak_shared_blocks: usize,
+    peak_shared_refs: usize,
+    deferrals: u64,
+    prefix_hits: u64,
+    matched_tokens: u64,
+}
+
+/// Serve `prompts` (which share a long common prefix) through a
+/// smaller-segment wave config, with prefix sharing armed or not.
+/// Content-derived clustering seeds in BOTH modes make the token
+/// streams bit-comparable.
+fn serve_prefix(
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    capacity_blocks: Option<usize>,
+    share: bool,
+) -> anyhow::Result<PrefixStats> {
+    let dir = default_artifacts_dir();
+    // build segments at 512 tokens so a 2048-token prompt carries
+    // several sealable chain links (the default live config clusters
+    // whole prompts in one segment — nothing would be prefix-aligned)
+    let zcfg = ZoneConfig {
+        retrieval_frac: 0.5,
+        estimation_frac: 1.0,
+        build_segment: 512,
+        update_segment: 256,
+        ..ZoneConfig::default()
+    };
+    let bcfg = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+    let mut eng = LiveEngine::with_config(&dir, AttnMode::Wave, zcfg, bcfg)?;
+    let reg = if share {
+        Some(eng.enable_prefix_sharing(16))
+    } else {
+        eng.set_content_seeds(true);
+        None
+    };
+    let mut sched = match capacity_blocks {
+        Some(cap) => {
+            eng.set_arena_capacity_blocks(Some(cap));
+            let mut s = Scheduler::with_admission(
+                Batcher::new(&[1, 2, 4, 8], 8),
+                Arc::clone(eng.arena()),
+                eng.admission_config(&CapacityConfig::default()),
+            );
+            if let Some(r) = &reg {
+                s.set_prefix_registry(Arc::clone(r));
+            }
+            s
+        }
+        None => Scheduler::new(Batcher::new(&[1, 2, 4, 8], 8)),
+    };
+    for (id, p) in prompts.iter().enumerate() {
+        sched.submit(Request::new(id as u64, p.clone(), max_new), 0.0);
+    }
+    let t0 = Instant::now();
+    let mut peak_shared_blocks = 0usize;
+    let mut peak_shared_refs = 0usize;
+    while !sched.all_done() {
+        match sched.next_action() {
+            Action::Prefill(id) => {
+                let p = sched.session(id).unwrap().req.prompt.clone();
+                let tok = eng.prefill(id, &p)?;
+                sched.prefill_done(id, tok, t0.elapsed().as_secs_f64());
+            }
+            Action::DecodeBatch(ids, bucket) => {
+                let toks = eng.decode_step(&ids, bucket)?;
+                let now = t0.elapsed().as_secs_f64();
+                for (id, t) in ids.iter().zip(toks) {
+                    sched.token_decoded(*id, t, now);
+                }
+            }
+            Action::Defer => {}
+            Action::Idle => break,
+        }
+        if let Some(cap) = capacity_blocks {
+            assert!(
+                eng.arena().live_blocks() <= cap,
+                "shared-prefix serve: live blocks {} exceeded cap {cap}",
+                eng.arena().live_blocks()
+            );
+        }
+        peak_shared_blocks = peak_shared_blocks.max(eng.arena().shared_blocks_live());
+        peak_shared_refs = peak_shared_refs.max(eng.arena().shared_session_refs());
+        for fid in sched.take_finished() {
+            eng.finish_session(fid);
+        }
+    }
+    assert_eq!(sched.n_rejections(), 0, "no request may be dropped");
+    for s in sched.sessions() {
+        assert_eq!(s.generated.len(), max_new, "request {} lost tokens", s.req.id);
+    }
+    // the registry keeps the prefix pinned past session exit; clearing
+    // it must drain every refcount
+    eng.clear_prefix_cache();
+    assert_eq!(eng.arena().live_blocks(), 0, "prefix blocks must free at refcount zero");
+    let out = sched.sessions().map(|s| (s.req.id, s.generated.clone())).collect();
+    Ok(PrefixStats {
+        out,
+        peak_live_blocks: eng.metrics.gauge("arena_live_blocks_peak"),
+        peak_shared_blocks,
+        peak_shared_refs,
+        deferrals: sched.n_deferrals(),
+        prefix_hits: eng.metrics.counter("prefix_hits"),
+        matched_tokens: eng.metrics.counter("prefix_matched_tokens"),
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
     let n_requests = args.usize_or("requests", 4);
@@ -223,6 +340,73 @@ fn main() -> anyhow::Result<()> {
     // bit-identical to the single-tier run
     for (id, toks) in &wave.out {
         assert_eq!(toks, &tiered.out[id], "tiered serve changed request {id}'s tokens");
+    }
+
+    // Shared-prefix pass: N sessions over one 1792-token template plus a
+    // distinct 256-token tail each. Chain links seal at 512-token
+    // segments, so sessions 2..N graft the first 1540 tokens (sink + 3
+    // segments) as shared refcounted blocks instead of recomputing them.
+    let shared_n = n_requests.max(3);
+    let template = structured_prompt(1792, 500);
+    let shared_prompts: Vec<Vec<i32>> = (0..shared_n)
+        .map(|i| {
+            let mut p = template.clone();
+            p.extend_from_slice(&structured_prompt(256, 600 + i as u64));
+            p
+        })
+        .collect();
+    let unshared = serve_prefix(&shared_prompts, max_new, None, false)?;
+    let shared = serve_prefix(&shared_prompts, max_new, None, true)?;
+    let dedup = shared.peak_shared_refs as f64 / shared.peak_shared_blocks.max(1) as f64;
+    println!(
+        "wave (shared-prefix): {} sessions, prefix_hits={} matched_tokens={} \
+         peak_arena={} blocks (unshared {}) shared_peak={} blocks x{dedup:.1} refs",
+        shared_n,
+        shared.prefix_hits,
+        shared.matched_tokens,
+        shared.peak_live_blocks,
+        unshared.peak_live_blocks,
+        shared.peak_shared_blocks,
+    );
+    // sharing changes placement, never results: token streams are
+    // bit-identical to the unshared (content-seeded) run
+    for (id, toks) in &unshared.out {
+        assert_eq!(toks, &shared.out[id], "prefix sharing changed request {id}'s tokens");
+    }
+    assert_eq!(shared.prefix_hits, shared_n as u64 - 1, "every follower must match");
+    assert!(shared.peak_shared_blocks > 0);
+    // the shared region is resident once, referenced by every live
+    // session: dedup ratio ≈ N on the prefix
+    assert!(
+        dedup >= (shared_n - 1) as f64,
+        "dedup ratio {dedup:.1} below expected ~{shared_n}x"
+    );
+    assert!(
+        shared.peak_live_blocks < unshared.peak_live_blocks,
+        "sharing must shrink the peak arena footprint"
+    );
+    // capped re-run: under a cap that makes the unshared gate defer,
+    // the prefix-discounted gate admits the shared mix
+    let upeak = unshared.peak_live_blocks as usize;
+    let pcap = (upeak * 3 / 5).max(2 * upeak / shared_n.max(1)).max(1);
+    let unshared_capped = serve_prefix(&shared_prompts, max_new, Some(pcap), false)?;
+    let shared_capped = serve_prefix(&shared_prompts, max_new, Some(pcap), true)?;
+    println!(
+        "wave (shared-prefix, cap={pcap}): deferral_events shared={} unshared={}",
+        shared_capped.deferrals, unshared_capped.deferrals
+    );
+    assert!(
+        unshared_capped.deferrals > 0,
+        "cap at 60% of peak must force deferrals without sharing"
+    );
+    assert!(
+        shared_capped.deferrals < unshared_capped.deferrals,
+        "the admission discount must admit a mix that defers unshared ({} vs {})",
+        shared_capped.deferrals,
+        unshared_capped.deferrals
+    );
+    for (id, toks) in &unshared.out {
+        assert_eq!(toks, &shared_capped.out[id], "capped sharing changed request {id}");
     }
 
     // Cross-mode agreement, TEACHER-FORCED: replay full attention's token

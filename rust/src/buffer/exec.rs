@@ -49,6 +49,9 @@ pub struct AccessStats {
     pub steady_tokens: usize,
     /// Blocks found in the GPU cache (GPU→GPU copy).
     pub hit_blocks: usize,
+    /// Hits served from the cross-session shared prefix cache (subset
+    /// of `hit_blocks`: one GPU slot deduped across sessions).
+    pub shared_hit_blocks: usize,
     /// Blocks fetched from CPU memory (PCIe transfer).
     pub miss_blocks: usize,
     /// Blocks served from the cold spill tier (a cold-hit stall: the
@@ -75,6 +78,7 @@ impl AccessStats {
     pub fn add(&mut self, o: &AccessStats) {
         self.steady_tokens += o.steady_tokens;
         self.hit_blocks += o.hit_blocks;
+        self.shared_hit_blocks += o.shared_hit_blocks;
         self.miss_blocks += o.miss_blocks;
         self.cold_blocks += o.cold_blocks;
         self.g2g_bytes += o.g2g_bytes;
@@ -110,6 +114,7 @@ mod tests {
         let mut a = AccessStats {
             steady_tokens: 1,
             hit_blocks: 2,
+            shared_hit_blocks: 1,
             miss_blocks: 3,
             cold_blocks: 4,
             g2g_bytes: 5,

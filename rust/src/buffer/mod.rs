@@ -15,7 +15,7 @@ pub use cache::BlockCache;
 pub use exec::{AccessStats, ExecBuffer};
 pub use mapping::{BlockHome, ClusterDesc, MappingTable};
 
-use crate::config::BufferConfig;
+use crate::config::{BufferConfig, CachePolicy};
 use crate::index::{WaveIndex, ZoneSelection};
 use crate::util::threadpool::ThreadPool;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,6 +27,10 @@ pub struct BufferStats {
     pub lookups: AtomicU64,
     pub hit_blocks: AtomicU64,
     pub miss_blocks: AtomicU64,
+    /// Hits served from the cross-session shared prefix cache (also
+    /// counted in `hit_blocks` — a GPU hit is a GPU hit; this splits
+    /// out the dedup share).
+    pub shared_hit_blocks: AtomicU64,
     /// Cold-hit stalls: selected blocks served through the spill tier.
     pub cold_blocks: AtomicU64,
     pub g2g_bytes: AtomicU64,
@@ -35,6 +39,93 @@ pub struct BufferStats {
     pub spill_bytes: AtomicU64,
     pub evictions: AtomicU64,
     pub async_updates: AtomicU64,
+}
+
+/// Cross-session GPU block cache for shared (refcounted) prefix blocks
+/// (DESIGN.md §2 "Prefix sharing & CoW", ROADMAP "cross-session
+/// block-cache sharing"): one engine-owned cache per (layer, kv-head)
+/// slot, consulted by every session's wave buffer, so a prefix shared
+/// by N decoding sessions occupies ONE GPU slot instead of N.
+///
+/// Consistency is by construction: only shared blocks — read-only and
+/// never demoted while any owner holds them — are admitted, so an
+/// entry can never go stale; and per-session mapping tables never
+/// record shared-cache residency (their homes stay `Cpu`), so eviction
+/// here needs no multi-owner home walk — the next access simply misses
+/// back to the hot CPU copy.
+pub struct SharedBlockCache {
+    inner: Mutex<BlockCache>,
+    slot_elems: usize,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+impl SharedBlockCache {
+    /// `capacity` in blocks; `slot_elems` = 2 × tokens_per_block × d.
+    pub fn new(policy: CachePolicy, capacity: usize, slot_elems: usize) -> SharedBlockCache {
+        SharedBlockCache {
+            inner: Mutex::new(BlockCache::new(policy, capacity, slot_elems)),
+            slot_elems,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shared(policy: CachePolicy, capacity: usize, slot_elems: usize) -> Arc<SharedBlockCache> {
+        Arc::new(SharedBlockCache::new(policy, capacity, slot_elems))
+    }
+
+    /// Copy a resident block's first `n` key/value elements into the
+    /// execution buffer; false on a miss. Read-only (policy touches run
+    /// in the asynchronous update, like the private cache).
+    pub fn copy_into(&self, id: u64, n: usize, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) -> bool {
+        let g = self.inner.lock().unwrap();
+        match g.peek(id) {
+            Some(slot) => {
+                let data = g.slot_data(slot);
+                let half = self.slot_elems / 2;
+                k_out.extend_from_slice(&data[..n]);
+                v_out.extend_from_slice(&data[half..half + n]);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Policy touch for a hit (asynchronous update path).
+    pub fn touch(&self, id: u64) {
+        self.inner.lock().unwrap().touch(id);
+    }
+
+    /// Admit a copy of a shared block (asynchronous update path).
+    pub fn admit_copy(&self, id: u64, keys: &[f32], vals: &[f32]) {
+        let mut g = self.inner.lock().unwrap();
+        let (slot, evicted) = g.admit(id);
+        if slot != u32::MAX {
+            let half = self.slot_elems / 2;
+            let data = g.slot_data_mut(slot);
+            data[..keys.len()].copy_from_slice(keys);
+            data[half..half + vals.len()].copy_from_slice(vals);
+        }
+        if evicted.is_some() {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Blocks currently resident.
+    pub fn resident_blocks(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
 }
 
 impl BufferStats {
@@ -62,6 +153,9 @@ pub struct WaveBuffer {
     inner: Arc<Mutex<Inner>>,
     pool: Arc<ThreadPool>,
     stats: Arc<BufferStats>,
+    /// Cross-session cache for shared prefix blocks (one per engine
+    /// head slot; `None` when prefix sharing is off).
+    shared: Option<Arc<SharedBlockCache>>,
 }
 
 impl WaveBuffer {
@@ -85,7 +179,14 @@ impl WaveBuffer {
             tokens_per_block,
             pool,
             stats: Arc::new(BufferStats::default()),
+            shared: None,
         }
+    }
+
+    /// Attach the engine's cross-session shared prefix cache for this
+    /// buffer's head slot (set before the first assembly).
+    pub fn set_shared_cache(&mut self, cache: Arc<SharedBlockCache>) {
+        self.shared = Some(cache);
     }
 
     /// Cache capacity sized from the config: `cache_frac` of `n_tokens`.
@@ -127,10 +228,13 @@ impl WaveBuffer {
 
         // Sources 2 & 3: retrieval-zone clusters via the mapping table.
         let mut hit_keys: Vec<u64> = Vec::new();
+        let mut shared_hit_keys: Vec<u64> = Vec::new();
         // (arena block id, data) captured for asynchronous admission —
         // the paper's "copy from the execution buffer" (blue arrow,
-        // Fig. 9).
+        // Fig. 9). Shared (refcounted prefix) blocks admit to the
+        // cross-session cache instead of this session's private one.
         let mut missed: Vec<(u64, Vec<f32>)> = Vec::new();
+        let mut missed_shared: Vec<(u64, Vec<f32>, Vec<f32>)> = Vec::new();
         {
             let inner = self.inner.lock().unwrap();
             for &c in &sel.retrieval {
@@ -141,6 +245,7 @@ impl WaveBuffer {
                         BlockHome::Gpu(slot) if self.cfg.gpu_cache_enabled => Some(slot),
                         _ => None,
                     };
+                    let is_shared = self.shared.is_some() && index.store().is_shared(*b);
                     if let Some(slot) = cached {
                         // GPU cache hit: copy slot -> exec buffer.
                         let data = inner.cache.slot_data(slot);
@@ -150,6 +255,20 @@ impl WaveBuffer {
                         st.hit_blocks += 1;
                         st.g2g_bytes += nbytes;
                         hit_keys.push(b.block);
+                    } else if is_shared
+                        && self.cfg.gpu_cache_enabled
+                        && self
+                            .shared
+                            .as_ref()
+                            .unwrap()
+                            .copy_into(b.block, b.len as usize * d, &mut eb.keys, &mut eb.vals)
+                    {
+                        // Cross-session hit: the prefix block is GPU-
+                        // resident ONCE for every sharing session.
+                        st.hit_blocks += 1;
+                        st.shared_hit_blocks += 1;
+                        st.g2g_bytes += nbytes;
+                        shared_hit_keys.push(b.block);
                     } else if let (Some(bk), Some(bv)) =
                         (index.store().try_block_keys(*b), index.store().try_block_vals(*b))
                     {
@@ -157,7 +276,9 @@ impl WaveBuffer {
                         eb.push(bk, bv);
                         st.miss_blocks += 1;
                         st.pcie_bytes += nbytes;
-                        if self.cfg.gpu_cache_enabled {
+                        if self.cfg.gpu_cache_enabled && is_shared {
+                            missed_shared.push((b.block, bk.to_vec(), bv.to_vec()));
+                        } else if self.cfg.gpu_cache_enabled {
                             let mut data = vec![0.0f32; 2 * self.tokens_per_block * d];
                             data[..bk.len()].copy_from_slice(bk);
                             let half = self.tokens_per_block * d;
@@ -181,6 +302,9 @@ impl WaveBuffer {
 
         self.stats.lookups.fetch_add(1, Ordering::Relaxed);
         self.stats.hit_blocks.fetch_add(st.hit_blocks as u64, Ordering::Relaxed);
+        self.stats
+            .shared_hit_blocks
+            .fetch_add(st.shared_hit_blocks as u64, Ordering::Relaxed);
         self.stats.miss_blocks.fetch_add(st.miss_blocks as u64, Ordering::Relaxed);
         self.stats.cold_blocks.fetch_add(st.cold_blocks as u64, Ordering::Relaxed);
         self.stats.g2g_bytes.fetch_add(st.g2g_bytes as u64, Ordering::Relaxed);
@@ -188,29 +312,49 @@ impl WaveBuffer {
         self.stats.spill_bytes.fetch_add(st.spill_bytes as u64, Ordering::Relaxed);
 
         // Cache update: policy touches for hits, admission for misses.
-        if self.cfg.gpu_cache_enabled && (!hit_keys.is_empty() || !missed.is_empty()) {
+        // Shared prefix blocks go to the cross-session cache under its
+        // own lock; the rest to this session's private cache.
+        if self.cfg.gpu_cache_enabled
+            && (!hit_keys.is_empty()
+                || !missed.is_empty()
+                || !shared_hit_keys.is_empty()
+                || !missed_shared.is_empty())
+        {
             let inner = Arc::clone(&self.inner);
             let stats = Arc::clone(&self.stats);
+            let shared = self.shared.clone();
             let update = move || {
-                let mut g = inner.lock().unwrap();
-                for k in hit_keys {
-                    g.cache.touch(k);
+                {
+                    let mut g = inner.lock().unwrap();
+                    for k in hit_keys {
+                        g.cache.touch(k);
+                    }
+                    for (block, data) in missed {
+                        // a block demoted to the cold tier between the
+                        // assembly snapshot and this update must not
+                        // re-enter the GPU cache (cold blocks hold no slots)
+                        if g.mapping.home(block) == Some(BlockHome::Cold) {
+                            continue;
+                        }
+                        let (slot, evicted) = g.cache.admit(block);
+                        if slot != u32::MAX {
+                            g.cache.slot_data_mut(slot).copy_from_slice(&data);
+                            g.mapping.set_cached(block, slot);
+                        }
+                        if let Some(old) = evicted {
+                            g.mapping.set_evicted(old);
+                            stats.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                 }
-                for (block, data) in missed {
-                    // a block demoted to the cold tier between the
-                    // assembly snapshot and this update must not
-                    // re-enter the GPU cache (cold blocks hold no slots)
-                    if g.mapping.home(block) == Some(BlockHome::Cold) {
-                        continue;
+                if let Some(sc) = shared {
+                    for k in shared_hit_keys {
+                        sc.touch(k);
                     }
-                    let (slot, evicted) = g.cache.admit(block);
-                    if slot != u32::MAX {
-                        g.cache.slot_data_mut(slot).copy_from_slice(&data);
-                        g.mapping.set_cached(block, slot);
-                    }
-                    if let Some(old) = evicted {
-                        g.mapping.set_evicted(old);
-                        stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    // shared blocks never demote while refs are held, so
+                    // no tier re-check is needed before admission
+                    for (block, bk, bv) in missed_shared {
+                        sc.admit_copy(block, &bk, &bv);
                     }
                 }
                 stats.async_updates.fetch_add(1, Ordering::Relaxed);
@@ -458,6 +602,87 @@ mod tests {
         assert_eq!(st.cold_blocks, 0);
         assert!(st.miss_blocks > 0, "promoted blocks fetch hot again");
         assert_eq!(eb_back.keys, eb_hot.keys);
+    }
+
+    #[test]
+    fn shared_prefix_cache_dedups_across_buffers() {
+        use crate::kvcache::BlockArena;
+        let d = 16;
+        let zcfg = ZoneConfig {
+            steady_sink: 4,
+            steady_local: 16,
+            tokens_per_cluster: 8,
+            build_segment: 128,
+            update_segment: 32,
+            kmeans_iters: 5,
+            ..ZoneConfig::default()
+        };
+        let mut rng = Rng::new(21);
+        let k = rng.normal_vec(512 * d);
+        let v = rng.normal_vec(512 * d);
+        let arena = BlockArena::shared(d, 2048);
+        let mut idx_a =
+            WaveIndex::try_build_in_for(&arena, 0, zcfg.clone(), &k, &v, 9).unwrap();
+        let covered = idx_a.clustered_prefix_tokens();
+        let sealed = idx_a.seal_prefix(covered);
+        // pin like the registry would, so the prefix outlives any session
+        for c in &sealed.clusters {
+            for b in &c.blocks {
+                assert!(arena.pin_shared(b.id));
+            }
+        }
+        let idx_b =
+            WaveIndex::try_build_grafted_in_for(&arena, 1, zcfg.clone(), &sealed, covered, &k, &v, 9)
+                .unwrap();
+        assert!(idx_b.n_shared_blocks() > 0);
+        let tpb = idx_a.store().tokens_per_block();
+        let sc = SharedBlockCache::shared(CachePolicy::Lru, 64, 2 * tpb * d);
+        let mk_buf = |idx: &WaveIndex| {
+            let bcfg = BufferConfig {
+                policy: CachePolicy::Lru,
+                async_update: false,
+                ..BufferConfig::default()
+            };
+            let pool = Arc::new(ThreadPool::new(1));
+            let mut wb = WaveBuffer::new(bcfg, d, tpb, 64, pool);
+            wb.set_shared_cache(Arc::clone(&sc));
+            wb.register_index(idx);
+            wb
+        };
+        let wb_a = mk_buf(&idx_a);
+        let wb_b = mk_buf(&idx_b);
+        let q = vec![0.3; d];
+        let mut scr = SelectScratch::default();
+        let sel_a = idx_a.select_with(&q, 4, 0, &mut scr);
+        let mut eb_a = ExecBuffer::new(d);
+        let s1 = wb_a.assemble(&idx_a, &sel_a, &mut eb_a);
+        assert!(s1.miss_blocks > 0);
+        assert_eq!(s1.hit_blocks, 0);
+        // session B retrieves the same clusters (identical grafted meta):
+        // served from the ONE shared GPU copy session A's miss admitted
+        let sel_b = idx_b.select_with(&q, 4, 0, &mut scr);
+        assert_eq!(sel_a.retrieval, sel_b.retrieval, "grafted meta must select identically");
+        let mut eb_b = ExecBuffer::new(d);
+        let s2 = wb_b.assemble(&idx_b, &sel_b, &mut eb_b);
+        assert_eq!(s2.miss_blocks, 0, "cross-session cache must serve B's blocks");
+        assert!(s2.shared_hit_blocks > 0);
+        assert_eq!(s2.hit_blocks, s2.shared_hit_blocks);
+        assert_eq!(eb_a.keys, eb_b.keys, "shared-cache path serves identical bytes");
+        assert_eq!(eb_a.vals, eb_b.vals);
+        // shared blocks never enter the per-session private caches —
+        // the prefix occupies one GPU slot set, not one per session
+        assert_eq!(wb_a.resident_blocks(), 0);
+        assert_eq!(wb_b.resident_blocks(), 0);
+        assert_eq!(sc.resident_blocks(), s1.miss_blocks);
+        assert_eq!(sc.hit_count(), s2.shared_hit_blocks as u64);
+        drop(idx_b);
+        drop(idx_a);
+        for c in &sealed.clusters {
+            for b in &c.blocks {
+                arena.unpin_shared(b.id);
+            }
+        }
+        assert_eq!(arena.live_blocks(), 0, "prefix storage frees at refcount zero");
     }
 
     #[test]

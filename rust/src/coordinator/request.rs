@@ -13,16 +13,28 @@ pub struct Request {
     pub max_new: usize,
     /// Arrival time (seconds from trace start).
     pub arrive_s: f64,
+    /// Prompt tokens expected to be served from an already-resident
+    /// shared prefix (admission-footprint hint for callers without a
+    /// live `PrefixRegistry` — the registry, when armed on the
+    /// scheduler, supersedes this).
+    pub prefix_tokens: usize,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Request { id, tenant: DEFAULT_TENANT, prompt, max_new, arrive_s: 0.0 }
+        Request { id, tenant: DEFAULT_TENANT, prompt, max_new, arrive_s: 0.0, prefix_tokens: 0 }
     }
 
     /// Attribute the request to a tenant (builder form).
     pub fn with_tenant(mut self, tenant: TenantId) -> Self {
         self.tenant = tenant;
+        self
+    }
+
+    /// Declare that `tokens` of the prompt are served from a shared
+    /// prefix (builder form; see `prefix_tokens`).
+    pub fn with_prefix_tokens(mut self, tokens: usize) -> Self {
+        self.prefix_tokens = tokens;
         self
     }
 }
@@ -46,6 +58,10 @@ pub struct Session {
     /// estimated footprint can never fit the capacity/quota). Rejected
     /// sessions are `Done` with no generated tokens.
     pub rejected: bool,
+    /// Prefix chain links of the prompt, computed once by the first
+    /// admission-gate pass (the links are immutable per request; only
+    /// the registry's entry map changes between passes).
+    pub prefix_links: Option<Vec<(usize, u64)>>,
     /// Time the request was admitted / finished prefill / completed.
     pub admit_s: f64,
     pub first_token_s: f64,
@@ -59,6 +75,7 @@ impl Session {
             phase: Phase::Queued,
             generated: Vec::new(),
             rejected: false,
+            prefix_links: None,
             admit_s: f64::NAN,
             first_token_s: f64::NAN,
             done_s: f64::NAN,

@@ -2,24 +2,43 @@
 //! model-parallel groups). Least-loaded with round-robin tie-break —
 //! the multi-GPU story of §4.5 (wave index/buffer are per-head modular,
 //! so routing is the only cross-GPU coordination needed).
+//!
+//! Prefix affinity (DESIGN.md §2 "Prefix sharing & CoW"): requests
+//! carrying a prefix hash ([`crate::workload::RequestSpec::prefix_hash`])
+//! route to the worker already holding that prefix hot, so its sealed
+//! blocks and shared GPU cache are reused instead of re-materialized on
+//! a second worker. Affinity yields to load balance when the home
+//! worker is badly overloaded (the prefix re-homes to the least-loaded
+//! worker); requests without a hash fall back to least-loaded.
+
+use std::collections::HashMap;
 
 pub struct Router {
     loads: Vec<usize>,
     rr: usize,
+    /// prefix hash → worker currently holding that prefix hot.
+    prefix_home: HashMap<u64, usize>,
+    affinity_hits: u64,
+    affinity_misses: u64,
 }
 
 impl Router {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Router { loads: vec![0; workers], rr: 0 }
+        Router {
+            loads: vec![0; workers],
+            rr: 0,
+            prefix_home: HashMap::new(),
+            affinity_hits: 0,
+            affinity_misses: 0,
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.loads.len()
     }
 
-    /// Route one request; returns the worker index.
-    pub fn route(&mut self) -> usize {
+    fn least_loaded(&mut self) -> usize {
         let min = *self.loads.iter().min().unwrap();
         // round-robin among the least-loaded
         let n = self.loads.len();
@@ -27,11 +46,42 @@ impl Router {
             let w = (self.rr + off) % n;
             if self.loads[w] == min {
                 self.rr = (w + 1) % n;
-                self.loads[w] += 1;
                 return w;
             }
         }
         unreachable!()
+    }
+
+    /// Route one request; returns the worker index.
+    pub fn route(&mut self) -> usize {
+        self.route_with_prefix(None)
+    }
+
+    /// Route one request with an optional prefix-affinity hint. A known
+    /// prefix routes to its home worker (affinity hit) unless that
+    /// worker's load exceeds the cluster minimum by more than one slot
+    /// per worker, in which case the prefix re-homes to the
+    /// least-loaded worker (counted as a miss). An unknown prefix homes
+    /// on the least-loaded worker (affinity miss).
+    pub fn route_with_prefix(&mut self, prefix: Option<u64>) -> usize {
+        let Some(p) = prefix else {
+            let w = self.least_loaded();
+            self.loads[w] += 1;
+            return w;
+        };
+        if let Some(&home) = self.prefix_home.get(&p) {
+            let min = *self.loads.iter().min().unwrap();
+            if self.loads[home] <= min + self.loads.len() {
+                self.affinity_hits += 1;
+                self.loads[home] += 1;
+                return home;
+            }
+        }
+        let w = self.least_loaded();
+        self.affinity_misses += 1;
+        self.prefix_home.insert(p, w);
+        self.loads[w] += 1;
+        w
     }
 
     /// Mark a request on `worker` complete.
@@ -41,6 +91,21 @@ impl Router {
 
     pub fn load(&self, worker: usize) -> usize {
         self.loads[worker]
+    }
+
+    /// Requests routed to a prefix's home worker.
+    pub fn affinity_hits(&self) -> u64 {
+        self.affinity_hits
+    }
+
+    /// Prefix-carrying requests that had no (usable) home yet.
+    pub fn affinity_misses(&self) -> u64 {
+        self.affinity_misses
+    }
+
+    /// The worker currently homing a prefix, if any.
+    pub fn prefix_home(&self, prefix: u64) -> Option<usize> {
+        self.prefix_home.get(&prefix).copied()
     }
 }
 
@@ -74,5 +139,47 @@ mod tests {
         assert_eq!(r.route(), 0);
         assert_eq!(r.route(), 0);
         assert_eq!(r.load(0), 2);
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_to_the_home_worker() {
+        let mut r = Router::new(3);
+        let w0 = r.route_with_prefix(Some(7));
+        assert_eq!(r.affinity_misses(), 1, "first sight homes the prefix");
+        // later requests with the same prefix follow, despite other
+        // workers being idle
+        for _ in 0..2 {
+            assert_eq!(r.route_with_prefix(Some(7)), w0);
+        }
+        assert_eq!(r.affinity_hits(), 2);
+        assert_eq!(r.load(w0), 3);
+        // a different prefix homes elsewhere (least-loaded)
+        let w1 = r.route_with_prefix(Some(9));
+        assert_ne!(w1, w0);
+        assert_eq!(r.prefix_home(9), Some(w1));
+        // hash-less requests keep balancing
+        let w2 = r.route_with_prefix(None);
+        assert_ne!(w2, w0);
+        assert_ne!(w2, w1);
+    }
+
+    #[test]
+    fn overloaded_home_rehomes_the_prefix() {
+        let mut r = Router::new(2);
+        let w0 = r.route_with_prefix(Some(1));
+        // a pure burst of one prefix must eventually spill off its home
+        // (load exceeds the idle worker's by more than one slot/worker)
+        let mut rehomed = None;
+        for _ in 0..8 {
+            let w = r.route_with_prefix(Some(1));
+            if w != w0 {
+                rehomed = Some(w);
+                break;
+            }
+        }
+        let w1 = rehomed.expect("a hot home must yield to load balance");
+        assert_eq!(r.prefix_home(1), Some(w1), "the prefix re-homes");
+        assert!(r.affinity_hits() >= 1);
+        assert_eq!(r.affinity_misses(), 2, "the re-home counts as a miss");
     }
 }

@@ -19,7 +19,7 @@
 
 use super::batcher::Batcher;
 use super::request::{Phase, Request, Session};
-use crate::kvcache::{BlockArena, TenantId};
+use crate::kvcache::{BlockArena, PrefixRegistry, TenantId};
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
@@ -90,6 +90,12 @@ pub struct Scheduler {
     /// dev default).
     arena: Option<Arc<BlockArena>>,
     admission: Option<AdmissionConfig>,
+    /// Prefix registry for footprint discounts: tokens served from a
+    /// registered shared prefix are resident once (charged to the
+    /// prefix's first owner), so a queued request's estimate subtracts
+    /// them — shared-prefix sessions admit under caps that would
+    /// otherwise defer them.
+    prefix: Option<Arc<PrefixRegistry>>,
     /// Decode-phase sessions kept sorted by (admit_s, id) — maintained
     /// incrementally on phase transitions instead of re-collected and
     /// re-sorted on every engine iteration.
@@ -111,6 +117,7 @@ impl Scheduler {
             batcher,
             arena: None,
             admission: None,
+            prefix: None,
             decode_order: Vec::new(),
             finished: Vec::new(),
             deferrals: 0,
@@ -131,11 +138,31 @@ impl Scheduler {
         s
     }
 
+    /// Arm prefix-aware admission: the gate's footprint estimate
+    /// subtracts the tokens a queued prompt would serve from the
+    /// longest registered prefix (the registry map is re-probed on
+    /// every pass — a prefix registered after the request queued still
+    /// discounts it). Chain links of already-queued requests are
+    /// computed here, of later ones at `submit`; gate passes only probe.
+    pub fn set_prefix_registry(&mut self, registry: Arc<PrefixRegistry>) {
+        for s in self.sessions.values_mut() {
+            if s.prefix_links.is_none() {
+                s.prefix_links = Some(registry.links(&s.req.prompt));
+            }
+        }
+        self.prefix = Some(registry);
+    }
+
     pub fn submit(&mut self, req: Request, now_s: f64) {
         let id = req.id;
         let tenant = req.tenant;
         let mut s = Session::new(req);
         s.admit_s = now_s;
+        // links are immutable per request: hash the prompt once here,
+        // not on every gate pass
+        if let Some(reg) = &self.prefix {
+            s.prefix_links = Some(reg.links(&s.req.prompt));
+        }
         self.sessions.insert(id, s);
         match self.queues.iter_mut().find(|(t, _)| *t == tenant) {
             Some((_, q)) => q.push_back(id),
@@ -190,8 +217,14 @@ impl Scheduler {
         let s = &self.sessions[&id];
         // lifetime footprint: the prompt plus every token the session
         // may decode (so quota admission can never strand a session
-        // mid-decode on QuotaExceeded)
-        let est = adm.estimate_blocks(s.req.prompt.len() + s.req.max_new);
+        // mid-decode on QuotaExceeded), minus the tokens a registered
+        // shared prefix already keeps resident (charged once, to the
+        // prefix's first owner — not to this session)
+        let shared = match (&self.prefix, &s.prefix_links) {
+            (Some(reg), Some(links)) => reg.matched_tokens_for_links(links),
+            _ => s.req.prefix_tokens.min(s.req.prompt.len()),
+        };
+        let est = adm.estimate_blocks(s.req.prompt.len() - shared + s.req.max_new);
         if let Some(cap) = arena.capacity_blocks() {
             let usable =
                 (((cap as f64) * (1.0 - adm.headroom_frac)).floor() as usize).max(1);
@@ -481,6 +514,75 @@ mod tests {
         s1.submit(Request::new(2, vec![1; 400], 4), 0.0);
         assert_ne!(s1.next_action(), Action::Prefill(2));
         assert_eq!(s1.n_rejections(), 1);
+    }
+
+    #[test]
+    fn prefix_hint_discounts_admission_footprint() {
+        // cap sized so the FULL estimate never fits (reject) but the
+        // prefix-discounted remainder does
+        let arena = BlockArena::shared(16, 512); // tpb = 4
+        arena.set_capacity_blocks(Some(100));
+        let adm = AdmissionConfig {
+            heads: 4,
+            tokens_per_block: 4,
+            headroom_frac: 0.2,
+            est_fudge: 1.5,
+            tiered: false,
+        };
+        let mk = |hint: usize| {
+            let mut s = Scheduler::with_admission(
+                Batcher::new(&[1, 2, 4, 8], 4),
+                Arc::clone(&arena),
+                adm.clone(),
+            );
+            // full estimate: 4 heads × ceil(404/4) × 1.5 = 606 blocks ≫ 80
+            s.submit(Request::new(1, vec![1; 400], 4).with_prefix_tokens(hint), 0.0);
+            s
+        };
+        let mut unshared = mk(0);
+        assert_ne!(unshared.next_action(), Action::Prefill(1));
+        assert_eq!(unshared.n_rejections(), 1, "full footprint can never fit");
+        // with 384 prefix tokens resident elsewhere: 4 × ceil(20/4) × 1.5
+        // = 30 blocks < 80 usable
+        let mut shared = mk(384);
+        assert_eq!(shared.next_action(), Action::Prefill(1));
+        assert_eq!(shared.n_rejections(), 0);
+        assert_eq!(shared.n_deferrals(), 0);
+    }
+
+    #[test]
+    fn prefix_registry_discount_applies_to_queued_requests() {
+        use crate::kvcache::prefix::{ChainGeometry, SealedSlot};
+        let arena = BlockArena::shared(16, 512);
+        arena.set_capacity_blocks(Some(100));
+        let geom = ChainGeometry { sink: 4, segment: 64, local: 8 };
+        let reg = PrefixRegistry::shared(Arc::clone(&arena), geom, 4);
+        let adm = AdmissionConfig {
+            heads: 4,
+            tokens_per_block: 4,
+            headroom_frac: 0.2,
+            est_fudge: 1.5,
+            tiered: false,
+        };
+        let mut s = Scheduler::with_admission(
+            Batcher::new(&[1, 2, 4, 8], 4),
+            Arc::clone(&arena),
+            adm,
+        );
+        s.set_prefix_registry(Arc::clone(&reg));
+        let prompt: Vec<i32> = (0..400).collect();
+        s.submit(Request::new(1, prompt.clone(), 4), 0.0);
+        // nothing registered yet: the full estimate rejects... but the
+        // registry may gain the prefix while the request is queued, so
+        // defer/reject semantics must re-probe. Register first, then gate.
+        let links = reg.links(&prompt);
+        let &(covered, key) = links.last().unwrap();
+        assert_eq!(covered, 388);
+        assert!(reg.register(key, covered, vec![SealedSlot::default()]));
+        assert_eq!(s.next_action(), Action::Prefill(1), "registered prefix must discount");
+        assert_eq!(s.n_rejections(), 0);
+        // probing from the gate must not inflate serving hit counters
+        assert_eq!(reg.hits(), 0);
     }
 
     #[test]

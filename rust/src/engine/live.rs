@@ -4,10 +4,11 @@
 //! and latency comparison.
 
 use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, HeadTask};
-use crate::buffer::{ExecBuffer, WaveBuffer};
+use crate::buffer::{ExecBuffer, SharedBlockCache, WaveBuffer};
 use crate::config::{BufferConfig, CapacityConfig, ZoneConfig};
 use crate::coordinator::AdmissionConfig;
 use crate::index::{SelectScratch, WaveIndex};
+use crate::kvcache::prefix::{ChainGeometry, PrefixMatch, PrefixRegistry};
 use crate::kvcache::{AllocError, BlockArena, SpillPolicy, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
 use crate::runtime::tinylm::{TinyLm, WaveInputs};
@@ -55,6 +56,19 @@ pub struct LiveEngine {
     /// decode-step prefetch worker. `None` = single-tier (PR 2
     /// semantics exactly).
     spill_policy: Option<Arc<dyn SpillPolicy>>,
+    /// Cross-session prefix registry (DESIGN.md §2 "Prefix sharing &
+    /// CoW"): `Some` arms longest-prefix matching + sealing in
+    /// `prefill_for`. `None` = every session materializes its own
+    /// prefix (pre-sharing semantics exactly).
+    prefix: Option<Arc<PrefixRegistry>>,
+    /// Derive clustering seeds from prompt content instead of session
+    /// id (required for prefix sharing: two sessions with the same
+    /// prefix must cluster it identically; also settable alone to get a
+    /// sharing-comparable unshared baseline).
+    content_seeds: bool,
+    /// Cross-session shared GPU block caches, one per (layer, kv-head)
+    /// slot (created lazily when prefix sharing is armed).
+    shared_caches: Vec<Arc<SharedBlockCache>>,
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
 }
@@ -102,6 +116,9 @@ impl LiveEngine {
             assembler,
             states: HashMap::new(),
             spill_policy: None,
+            prefix: None,
+            content_seeds: false,
+            shared_caches: Vec::new(),
             metrics: Arc::new(Metrics::new()),
             scratch: SelectScratch::default(),
         })
@@ -130,6 +147,44 @@ impl LiveEngine {
     /// Whether cold-tier spill is armed.
     pub fn spill_enabled(&self) -> bool {
         self.spill_policy.is_some()
+    }
+
+    /// Arm cross-session prefix sharing: prefills match the longest
+    /// registered token-hash chain and check sealed blocks out as
+    /// shared, refcounted views instead of recomputing/re-clustering
+    /// them; unmatched prefills seal and register their own prefix.
+    /// Implies content-derived clustering seeds (sharing requires the
+    /// same tokens to cluster the same way in every session). Returns
+    /// the registry so the scheduler can discount admission footprints
+    /// (`Scheduler::set_prefix_registry`).
+    pub fn enable_prefix_sharing(&mut self, max_entries: usize) -> Arc<PrefixRegistry> {
+        self.content_seeds = true;
+        let reg =
+            PrefixRegistry::shared(Arc::clone(&self.arena), self.chain_geometry(), max_entries);
+        self.prefix = Some(Arc::clone(&reg));
+        reg
+    }
+
+    /// The armed prefix registry, if any.
+    pub fn prefix_registry(&self) -> Option<&Arc<PrefixRegistry>> {
+        self.prefix.as_ref()
+    }
+
+    /// Derive clustering seeds from prompt content instead of session
+    /// id. On its own (registry unarmed) this produces the unshared
+    /// baseline whose tokens are bit-comparable to a sharing-enabled
+    /// run of the same prompts.
+    pub fn set_content_seeds(&mut self, on: bool) {
+        self.content_seeds = on;
+    }
+
+    /// Drop every registered prefix, unpinning its blocks (storage
+    /// frees as the last attached session exits; immediately if none).
+    pub fn clear_prefix_cache(&mut self) {
+        if let Some(reg) = &self.prefix {
+            reg.clear();
+        }
+        self.publish_arena_gauges();
     }
 
     /// Demote cold clusters engine-wide (spill-policy order, sessions
@@ -257,17 +312,60 @@ impl LiveEngine {
         self.prefill_for(id, DEFAULT_TENANT, prompt)
     }
 
+    /// The chain geometry prefix hashing uses (mirrors this engine's
+    /// zone config so links align with build segments).
+    fn chain_geometry(&self) -> ChainGeometry {
+        ChainGeometry {
+            sink: self.zcfg.steady_sink,
+            segment: self.zcfg.build_segment,
+            local: self.zcfg.steady_local,
+        }
+    }
+
     /// Tenant-attributed prefill. If the arena refuses a KV block
     /// (capacity cap or tenant quota), every block the partial session
     /// checked out is returned and a typed error propagates — the engine
     /// never panics on exhaustion; the scheduler's admission gate is
     /// expected to keep this path cold.
+    ///
+    /// With prefix sharing armed ([`LiveEngine::enable_prefix_sharing`])
+    /// the prompt is matched against the registry first: the longest
+    /// registered prefix grafts as shared, refcounted blocks (no
+    /// re-clustering, no fresh checkouts — a prefix shared by N
+    /// sessions is resident once), and an unmatched prompt seals and
+    /// registers its own prefix for later sessions.
     pub fn prefill_for(&mut self, id: u64, tenant: TenantId, prompt: &[i32]) -> Result<i32> {
         let t0 = Instant::now();
         let (kc, vc, logits) = self.lm.prefill(prompt)?;
         // kc/vc: [L, 1, KVH, T, d]
         let (l_n, kvh, t, d) =
             (kc.shape()[0], kc.shape()[2], kc.shape()[3], kc.shape()[4]);
+        // Longest-prefix match (counts hits/misses). Content-derived
+        // seeds make the graft bit-identical to an unshared build.
+        let matched: Option<PrefixMatch> = match &self.prefix {
+            Some(reg) => {
+                // the registry is engine-owned, so slot counts always
+                // agree — but guard a mismatched entry into a plain
+                // build (and count it as a miss: nothing was served)
+                let m = reg
+                    .match_longest(prompt)
+                    .filter(|m| m.slots.len() == l_n * kvh);
+                match &m {
+                    Some(m) => {
+                        self.metrics.inc("prefix_hits", 1);
+                        self.metrics.inc("prefix_matched_tokens", m.covered as u64);
+                    }
+                    None => self.metrics.inc("prefix_misses", 1),
+                }
+                m
+            }
+            None => None,
+        };
+        let base_seed =
+            if self.content_seeds { self.chain_geometry().content_seed(prompt) } else { id };
+        // Blocks this build must newly materialize per head (the grafted
+        // prefix is already resident).
+        let t_build = t - matched.as_ref().map(|m| m.covered).unwrap_or(0);
         let mut indexes = Vec::with_capacity(l_n * kvh);
         let mut buffers = Vec::with_capacity(l_n * kvh);
         let mut k_full = Vec::new();
@@ -289,15 +387,16 @@ impl LiveEngine {
             for h in 0..kvh {
                 let keys = kc.row(&[layer, 0, h]);
                 let vals = vc.row(&[layer, 0, h]);
-                let seed = id ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1);
+                let seed = base_seed ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1);
                 // Tiered arena: make hot room for this head's build up
                 // front — full hot tier means "demote, then retry", not
                 // "refuse and defer".
                 if self.spill_enabled() {
                     if let Some(cap) = self.arena.capacity_blocks() {
                         let tpb = self.arena.tokens_per_block();
-                        let need =
-                            t.div_ceil(tpb) + t.div_ceil(self.zcfg.tokens_per_cluster) + 2;
+                        let need = t_build.div_ceil(tpb)
+                            + t_build.div_ceil(self.zcfg.tokens_per_cluster)
+                            + 2;
                         let headroom = cap.saturating_sub(self.arena.live_blocks());
                         if headroom < need {
                             self.make_room(need - headroom);
@@ -305,14 +404,27 @@ impl LiveEngine {
                     }
                 }
                 let idx = loop {
-                    match WaveIndex::try_build_in_for(
-                        &self.arena,
-                        tenant,
-                        self.zcfg.clone(),
-                        keys,
-                        vals,
-                        seed,
-                    ) {
+                    let built = match &matched {
+                        Some(m) => WaveIndex::try_build_grafted_in_for(
+                            &self.arena,
+                            tenant,
+                            self.zcfg.clone(),
+                            &m.slots[layer * kvh + h],
+                            m.covered,
+                            keys,
+                            vals,
+                            seed,
+                        ),
+                        None => WaveIndex::try_build_in_for(
+                            &self.arena,
+                            tenant,
+                            self.zcfg.clone(),
+                            keys,
+                            vals,
+                            seed,
+                        ),
+                    };
+                    match built {
                         Ok(mut idx) => {
                             if let Some(p) = &self.spill_policy {
                                 idx.set_spill_policy(Some(Arc::clone(p)));
@@ -325,7 +437,8 @@ impl LiveEngine {
                                 && self.make_room(64) > 0;
                             if !retry {
                                 // `indexes`/`buffers` drop here: the partial
-                                // session's blocks all return to the arena.
+                                // session's blocks all return to the arena
+                                // (and its shared references release).
                                 self.metrics.inc("prefill_alloc_failures", 1);
                                 self.publish_arena_gauges();
                                 return Err(anyhow!("prefill {id} (tenant {tenant}): {e}"));
@@ -334,16 +447,61 @@ impl LiveEngine {
                     }
                 };
                 let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
-                let buf = WaveBuffer::new(
+                let mut buf = WaveBuffer::new(
                     self.bcfg.clone(),
                     d,
                     idx.store().tokens_per_block(),
                     cap,
                     Arc::clone(&self.pool),
                 );
+                if self.prefix.is_some() {
+                    // one cross-session cache per head slot: a prefix
+                    // shared by N sessions occupies one GPU slot set.
+                    // Sized from the engine's max context bucket, not
+                    // this prompt — the cache outlives every session,
+                    // so the first arrival's length must not pin it.
+                    let slot_i = layer * kvh + h;
+                    if self.shared_caches.len() <= slot_i {
+                        let tpb = self.arena.tokens_per_block();
+                        let shared_cap = WaveBuffer::capacity_for(
+                            &self.bcfg,
+                            self.lm.buckets.attn_full_t,
+                            tpb,
+                        );
+                        self.shared_caches.push(Arc::new(SharedBlockCache::new(
+                            self.bcfg.policy,
+                            shared_cap,
+                            2 * tpb * d,
+                        )));
+                    }
+                    buf.set_shared_cache(Arc::clone(&self.shared_caches[slot_i]));
+                }
                 buf.register_index(&idx);
                 indexes.push(idx);
                 buffers.push(buf);
+            }
+        }
+        // Seal & register: an unmatched (or longer-than-matched) prefix
+        // becomes available to every later session. Sealing converts
+        // this session's prefix blocks into shared views in place — it
+        // keeps serving them.
+        if let Some(reg) = self.prefix.clone() {
+            let clustered =
+                indexes.first().map(|ix| ix.clustered_prefix_tokens()).unwrap_or(0);
+            let best = reg
+                .links(prompt)
+                .into_iter()
+                .filter(|&(covered, _)| covered <= clustered)
+                .next_back();
+            if let Some((covered, key)) = best {
+                let longer = matched.as_ref().map(|m| covered > m.covered).unwrap_or(true);
+                if longer && !reg.contains(key) {
+                    let slots: Vec<crate::kvcache::SealedSlot> =
+                        indexes.iter_mut().map(|ix| ix.seal_prefix(covered)).collect();
+                    if reg.register(key, covered, slots) {
+                        self.metrics.inc("prefix_registered", 1);
+                    }
+                }
             }
         }
         let first = TinyLm::greedy(&logits)[0];
@@ -378,6 +536,16 @@ impl LiveEngine {
         );
         self.metrics
             .set_gauge_max("arena_total_live_blocks_peak", self.arena.total_live_blocks() as u64);
+        // Prefix-sharing gauges (zero everywhere with sharing unarmed).
+        let shared = self.arena.shared_blocks_live() as u64;
+        let refs = self.arena.shared_session_refs() as u64;
+        self.metrics.set_gauge("shared_blocks_live", shared);
+        self.metrics.set_gauge("shared_block_refs", refs);
+        // dedup ratio as integer percent: N sessions sharing every
+        // shared block reads 100·N
+        self.metrics.set_ratio_gauge("dedup_ratio_pct", refs, shared);
+        self.metrics.set_gauge_max("shared_blocks_live_peak", shared);
+        self.metrics.set_gauge_max("shared_block_refs_peak", refs);
     }
 
     /// Cap the engine arena's live-block occupancy (`None` = unbounded).
@@ -836,6 +1004,72 @@ mod tests {
         let dir = default_artifacts_dir();
         let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
         assert!(eng.decode_step(&[42], 1).is_err());
+    }
+
+    #[test]
+    fn shared_prefix_prefill_dedups_and_decodes_identically() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        // smaller build segments so a 2048-token prompt has several
+        // sealable chain links
+        let zcfg = ZoneConfig {
+            retrieval_frac: 0.5,
+            estimation_frac: 1.0,
+            build_segment: 512,
+            update_segment: 256,
+            ..ZoneConfig::default()
+        };
+        let bcfg = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+        let prefix = prompt(1792, 11);
+        let mk_prompt = |i: u64| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(&prompt(256, 100 + i));
+            p
+        };
+        // unshared baseline with content seeds: bit-comparable clustering
+        let mut base = LiveEngine::with_config(&dir, AttnMode::Wave, zcfg.clone(), bcfg.clone())
+            .unwrap();
+        base.set_content_seeds(true);
+        let mut shared =
+            LiveEngine::with_config(&dir, AttnMode::Wave, zcfg, bcfg).unwrap();
+        shared.enable_prefix_sharing(8);
+        let n = 3u64;
+        for i in 0..n {
+            let p = mk_prompt(i);
+            let t_base = base.prefill(i, &p).unwrap();
+            let t_shared = shared.prefill(i, &p).unwrap();
+            assert_eq!(t_base, t_shared, "session {i}: grafted prefill changed the first token");
+        }
+        assert_eq!(shared.metrics.counter("prefix_hits"), n - 1);
+        assert!(shared.metrics.counter("prefix_matched_tokens") > 0);
+        assert!(shared.arena().shared_blocks_live() > 0);
+        // the shared arena holds ~one copy of the prefix; the baseline N
+        assert!(
+            shared.arena().live_blocks() < base.arena().live_blocks(),
+            "sharing must shrink the resident footprint ({} vs {})",
+            shared.arena().live_blocks(),
+            base.arena().live_blocks()
+        );
+        let refs = shared.arena().shared_session_refs();
+        let blocks = shared.arena().shared_blocks_live();
+        assert!(
+            refs >= (n as usize) * blocks,
+            "every live session must reference the shared prefix ({refs} refs, {blocks} blocks)"
+        );
+        // decode stays bit-identical to the unshared run
+        let ids: Vec<u64> = (0..n).collect();
+        for _ in 0..4 {
+            let tb = base.decode_step(&ids, 4).unwrap();
+            let ts = shared.decode_step(&ids, 4).unwrap();
+            assert_eq!(tb, ts, "shared-prefix decode diverged");
+        }
+        // teardown: sessions exit, the registry still pins the prefix
+        for i in 0..n {
+            shared.finish_session(i);
+        }
+        assert!(shared.arena().live_blocks() > 0, "registry keeps the prefix resident");
+        shared.clear_prefix_cache();
+        assert_eq!(shared.arena().live_blocks(), 0, "cleared prefix frees at refcount zero");
     }
 
     #[test]

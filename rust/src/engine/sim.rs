@@ -161,7 +161,10 @@ pub fn simulate_cluster(
     let mut router = Router::new(workers);
     let mut shards: Vec<Vec<RequestSpec>> = vec![Vec::new(); workers];
     for r in reqs {
-        shards[router.route()].push(r.clone());
+        // prefix affinity: requests sharing a template land on the
+        // worker already holding that prefix hot (hash-less requests
+        // fall back to least-loaded)
+        shards[router.route_with_prefix(r.prefix_hash)].push(r.clone());
     }
     let mut completed = 0;
     let mut makespan = 0.0f64;

@@ -16,6 +16,7 @@ pub use meta::MetaIndex;
 
 use crate::attention::{tripartite_attention, TripartiteInputs};
 use crate::config::ZoneConfig;
+use crate::kvcache::prefix::{SealedBlockMeta, SealedCluster, SealedSlot};
 use crate::kvcache::{
     AllocError, BlockArena, BlockRef, HeadStore, SpillCandidate, SpillPolicy, TenantId,
     DEFAULT_TENANT,
@@ -141,6 +142,39 @@ impl WaveIndex {
         vals: &[f32],
         seed: u64,
     ) -> Result<Self, AllocError> {
+        Self::build_with_graft(arena, tenant, cfg, None, keys, vals, seed)
+    }
+
+    /// Grafted build (DESIGN.md §2 "Prefix sharing & CoW"): the first
+    /// `covered` tokens come from a sealed prefix — their clusters
+    /// (centroids, value sums, positions) attach as shared, refcounted
+    /// block views with no recomputation and no fresh checkouts — and
+    /// the private tail clusters/pends exactly like a fresh build. With
+    /// the same content-derived `seed` the result is bit-identical to
+    /// an unshared build of the same tokens (property-tested in
+    /// `rust/tests/sharing.rs`); only block ids and residency differ.
+    pub fn try_build_grafted_in_for(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        sealed: &SealedSlot,
+        covered: usize,
+        keys: &[f32],
+        vals: &[f32],
+        seed: u64,
+    ) -> Result<Self, AllocError> {
+        Self::build_with_graft(arena, tenant, cfg, Some((sealed, covered)), keys, vals, seed)
+    }
+
+    fn build_with_graft(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        graft: Option<(&SealedSlot, usize)>,
+        keys: &[f32],
+        vals: &[f32],
+        seed: u64,
+    ) -> Result<Self, AllocError> {
         let d = arena.d();
         let n = keys.len() / d;
         assert_eq!(keys.len(), vals.len());
@@ -174,8 +208,34 @@ impl WaveIndex {
         let local = idx.cfg.steady_local.min(n - sink);
         let mid_end = n - local;
 
-        // Middle: segmented clustering.
+        // Sealed prefix: attach shared clusters instead of re-clustering.
         let mut start = sink;
+        if let Some((sealed, covered)) = graft {
+            assert!(covered >= sink && covered <= mid_end, "graft coverage out of range");
+            for sc in &sealed.clusters {
+                debug_assert!(
+                    sc.pos.iter().all(|&p| (p as usize) < covered),
+                    "sealed cluster outside its prefix"
+                );
+                let mut refs = Vec::with_capacity(sc.blocks.len());
+                for b in &sc.blocks {
+                    // On failure `idx` drops and releases every shared
+                    // reference already taken — no residue.
+                    let r = idx
+                        .store
+                        .attach_shared(b.id, b.len)
+                        .expect("sealed prefix block vanished from the arena");
+                    refs.push(r);
+                }
+                let id = idx.meta.push(&sc.centroid, &sc.vsum, sc.pos.clone());
+                debug_assert_eq!(id, idx.cluster_blocks.len());
+                idx.cluster_blocks.push(refs);
+                idx.access_epoch.push(AtomicU64::new(0));
+            }
+            start = covered;
+        }
+
+        // Middle: segmented clustering.
         while start < mid_end {
             let seg = (mid_end - start).min(idx.cfg.build_segment);
             // Avoid a tiny trailing segment: fold < half-segment remainders
@@ -200,6 +260,52 @@ impl WaveIndex {
         idx.pend_pos.extend(start as u32..n as u32);
         idx.n_seen = n;
         Ok(idx)
+    }
+
+    /// Seal every cluster lying entirely inside the first `covered`
+    /// tokens into shared, refcounted blocks and return the metadata a
+    /// grafting session needs ([`SealedSlot`]). This index keeps
+    /// serving the (now shared, read-only) blocks; already-shared
+    /// clusters — from an earlier graft — are re-described without
+    /// re-sealing. Clusters with any cold block stop the scan (sealing
+    /// is prefix-contiguous by construction).
+    pub fn seal_prefix(&mut self, covered: usize) -> SealedSlot {
+        let mut out = SealedSlot::default();
+        for c in 0..self.cluster_blocks.len() {
+            let pos = self.meta.cluster_tokens(c);
+            if pos.iter().any(|&p| p as usize >= covered) {
+                break;
+            }
+            let refs: Vec<BlockRef> = self.cluster_blocks[c].clone();
+            if refs.iter().any(|r| !self.store.is_hot(*r)) {
+                break;
+            }
+            let mut blocks = Vec::with_capacity(refs.len());
+            for r in refs {
+                let ok = self.store.seal_block(r);
+                debug_assert!(ok, "hot block must seal");
+                blocks.push(SealedBlockMeta { id: r.block, len: r.len });
+            }
+            out.clusters.push(SealedCluster {
+                centroid: self.meta.centroid(c).to_vec(),
+                vsum: self.meta.vsum_flat()[c * self.d..(c + 1) * self.d].to_vec(),
+                pos: pos.to_vec(),
+                blocks,
+            });
+        }
+        out
+    }
+
+    /// Tokens covered by committed clusters from position 0 (sink +
+    /// clustered segments; the pending tail starts here). This is the
+    /// ceiling on what [`WaveIndex::seal_prefix`] can seal.
+    pub fn clustered_prefix_tokens(&self) -> usize {
+        self.n_seen - self.pend_pos.len()
+    }
+
+    /// Shared (refcounted) blocks this index currently serves.
+    pub fn n_shared_blocks(&self) -> usize {
+        self.store.n_shared_blocks()
     }
 
     /// Cluster one segment (`pos[i]` is token i's context position) and

@@ -35,6 +35,22 @@
 //! tier only — the cold tier is the overflow the wave buffer's
 //! hierarchy exists for.
 //!
+//! Sharing (DESIGN.md §2 "Prefix sharing & CoW"): a hot block can be
+//! converted into a **shared** block ([`BlockArena::note_shared_for`]),
+//! after which any number of sessions hold refcounted read-only views
+//! of the same storage ([`BlockArena::share_block_for`]) and the prefix
+//! registry pins it resident ([`BlockArena::pin_shared`]). A shared
+//! block is charged **once**: one unit of `live_blocks`, billed to one
+//! tenant at a time (the first owner; the charge transfers to a
+//! surviving owner when the charged tenant's last reference exits).
+//! Storage returns to the free-list only when the refcount reaches
+//! zero, so a refcounted block is never freed while another owner holds
+//! it; shared blocks never demote (the spill path skips them). Writes
+//! to a shared block go through copy-on-write at the `HeadStore` layer
+//! (`unshare_for_write`): the writer checks out a fresh private block
+//! (new id — caches keyed by the old id keep serving the shared bytes)
+//! and releases its shared reference.
+//!
 //! Concurrency: allocation/reclaim take a short free-list lock (the
 //! capacity check happens under it, so concurrent allocators cannot
 //! both sneak past the cap); block *data* is only ever written between
@@ -42,7 +58,9 @@
 //! while that store is alive, so reads need no lock at all (the
 //! parallel head fan-out in `engine::assemble` relies on this). Tier
 //! moves go through the owning `HeadStore`'s `&mut` methods, so a
-//! block's residency never changes under a concurrent reader.
+//! block's residency never changes under a concurrent reader. Shared
+//! bookkeeping takes its own lock; it is never acquired while the
+//! free-list or tenant lock is held.
 
 use super::spill::SpillStore;
 use super::tokens_per_block;
@@ -107,6 +125,21 @@ struct TenantUsage {
     live_blocks: usize,
 }
 
+/// Refcount record of one shared block. `refs` counts every outstanding
+/// hold (session views + registry pins); `owners` tracks the session
+/// holders per tenant so the single live-block charge can transfer when
+/// the charged tenant's last session exits.
+struct ShareInfo {
+    /// Canonical storage handle; holders carry clones.
+    data: Arc<BlockData>,
+    /// Outstanding holds (sessions + pins). Free at zero.
+    refs: usize,
+    /// Session holders as (tenant, count) — small per-block multiset.
+    owners: Vec<(TenantId, usize)>,
+    /// Tenant currently billed the block's single live-block charge.
+    charged: TenantId,
+}
+
 /// Engine-wide slab of KV blocks with a free-list, byte accounting, an
 /// optional capacity cap and per-tenant quotas.
 pub struct BlockArena {
@@ -123,6 +156,9 @@ pub struct BlockArena {
     free_blocks: AtomicUsize,
     allocated_total: AtomicU64,
     reclaimed_total: AtomicU64,
+    /// Shared (refcounted) blocks keyed by engine-global id.
+    shared: Mutex<HashMap<u64, ShareInfo>>,
+    shared_freed_total: AtomicU64,
     /// Cold tier: spilled pages keyed by the same engine-global ids.
     spill: SpillStore,
     demoted_total: AtomicU64,
@@ -146,6 +182,8 @@ impl BlockArena {
             free_blocks: AtomicUsize::new(0),
             allocated_total: AtomicU64::new(0),
             reclaimed_total: AtomicU64::new(0),
+            shared: Mutex::new(HashMap::new()),
+            shared_freed_total: AtomicU64::new(0),
             spill: SpillStore::new(d, tpb),
             demoted_total: AtomicU64::new(0),
             promoted_total: AtomicU64::new(0),
@@ -286,6 +324,179 @@ impl BlockArena {
     /// Return default-tenant blocks to the free-list.
     pub fn reclaim<I: IntoIterator<Item = BlockData>>(&self, blocks: I) {
         self.reclaim_for(DEFAULT_TENANT, blocks)
+    }
+
+    /// Convert a live private block (already charged to `tenant`) into a
+    /// shared one: its storage moves behind a refcount and the caller
+    /// becomes the first holder (refs = 1). Occupancy does not change —
+    /// the block stays one unit of `live_blocks`, billed to `tenant`
+    /// until its last session reference exits.
+    pub fn note_shared_for(&self, tenant: TenantId, id: u64, data: BlockData) -> Arc<BlockData> {
+        debug_assert_eq!(data.keys.len(), self.tpb * self.d);
+        let arc = Arc::new(data);
+        let mut sh = self.shared.lock().unwrap();
+        let prev = sh.insert(
+            id,
+            ShareInfo {
+                data: Arc::clone(&arc),
+                refs: 1,
+                owners: vec![(tenant, 1)],
+                charged: tenant,
+            },
+        );
+        debug_assert!(prev.is_none(), "block {id} shared twice");
+        arc
+    }
+
+    /// Take one more session hold of a shared block on behalf of
+    /// `tenant` (no allocation, no capacity or quota charge — the block
+    /// is already resident and billed once). `None` if `id` is not a
+    /// shared block.
+    pub fn share_block_for(&self, tenant: TenantId, id: u64) -> Option<Arc<BlockData>> {
+        let mut sh = self.shared.lock().unwrap();
+        let info = sh.get_mut(&id)?;
+        info.refs += 1;
+        let had_owners = !info.owners.is_empty();
+        match info.owners.iter_mut().find(|(t, _)| *t == tenant) {
+            Some((_, n)) => *n += 1,
+            None => info.owners.push((tenant, 1)),
+        }
+        // A block held only by registry pins stays billed to its
+        // departed last owner (there is nobody else to bill); the first
+        // tenant to re-attach takes the charge over, so a departed
+        // donor is never billed for a prefix another tenant is serving.
+        if !had_owners && info.charged != tenant {
+            let mut tn = self.tenants.lock().unwrap();
+            let old = tn.entry(info.charged).or_default();
+            old.live_blocks = old.live_blocks.saturating_sub(1);
+            tn.entry(tenant).or_default().live_blocks += 1;
+            info.charged = tenant;
+        }
+        Some(Arc::clone(&info.data))
+    }
+
+    /// Take a tenant-less hold of a shared block (the prefix registry's
+    /// pin: keeps the block resident across session churn without
+    /// appearing in any tenant's occupancy). `false` if not shared.
+    pub fn pin_shared(&self, id: u64) -> bool {
+        let mut sh = self.shared.lock().unwrap();
+        match sh.get_mut(&id) {
+            Some(info) => {
+                info.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one hold taken by `share_block_for` (or the original
+    /// `note_shared_for` hold). The caller must drop its `Arc` clone
+    /// first. Transfers the live-block charge to a surviving owner when
+    /// the charged tenant's last session reference exits; frees the
+    /// storage (back to the free-list) only at refcount zero. Returns
+    /// whether the block was freed.
+    pub fn release_shared_for(&self, tenant: TenantId, id: u64) -> bool {
+        self.release_hold(id, Some(tenant))
+    }
+
+    /// Release a registry pin taken by `pin_shared`.
+    pub fn unpin_shared(&self, id: u64) -> bool {
+        self.release_hold(id, None)
+    }
+
+    fn release_hold(&self, id: u64, tenant: Option<TenantId>) -> bool {
+        let mut sh = self.shared.lock().unwrap();
+        let Some(info) = sh.get_mut(&id) else {
+            debug_assert!(false, "release of a non-shared block {id}");
+            return false;
+        };
+        debug_assert!(info.refs > 0);
+        info.refs -= 1;
+        if let Some(t) = tenant {
+            if let Some(p) = info.owners.iter().position(|(ot, _)| *ot == t) {
+                info.owners[p].1 -= 1;
+                if info.owners[p].1 == 0 {
+                    info.owners.remove(p);
+                }
+            } else {
+                debug_assert!(false, "tenant {t} released a hold it never took on {id}");
+            }
+            // Charge transfer: the billed tenant's last session reference
+            // left but other session owners remain — the block's single
+            // live-block charge moves to a surviving owner.
+            if t == info.charged
+                && !info.owners.iter().any(|(ot, _)| *ot == t)
+                && !info.owners.is_empty()
+            {
+                let new = info.owners[0].0;
+                let mut tn = self.tenants.lock().unwrap();
+                let old_u = tn.entry(info.charged).or_default();
+                old_u.live_blocks = old_u.live_blocks.saturating_sub(1);
+                tn.entry(new).or_default().live_blocks += 1;
+                info.charged = new;
+            }
+        }
+        if info.refs > 0 {
+            return false;
+        }
+        // Last hold gone: retire the id and recycle the storage.
+        let info = sh.remove(&id).unwrap();
+        drop(sh);
+        let charged = info.charged;
+        match Arc::try_unwrap(info.data) {
+            Ok(data) => {
+                let mut free = self.free.lock().unwrap();
+                free.push(data);
+                self.free_blocks.fetch_add(1, Ordering::Relaxed);
+                self.live_blocks.fetch_sub(1, Ordering::Relaxed);
+                self.reclaimed_total.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // a holder released before dropping its clone: the
+                // storage cannot be recycled, but the accounting must
+                // still retire the block
+                debug_assert!(false, "shared block {id} released while a clone is live");
+                self.live_blocks.fetch_sub(1, Ordering::Relaxed);
+                self.reclaimed_total.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.shared_freed_total.fetch_add(1, Ordering::Relaxed);
+        let mut tn = self.tenants.lock().unwrap();
+        let u = tn.entry(charged).or_default();
+        u.live_blocks = u.live_blocks.saturating_sub(1);
+        true
+    }
+
+    /// Whether `id` is currently a shared block.
+    pub fn is_shared(&self, id: u64) -> bool {
+        self.shared.lock().unwrap().contains_key(&id)
+    }
+
+    /// Outstanding holds of a shared block (0 if not shared).
+    pub fn shared_refcount(&self, id: u64) -> usize {
+        self.shared.lock().unwrap().get(&id).map(|i| i.refs).unwrap_or(0)
+    }
+
+    /// Shared blocks currently live (each counted once in `live_blocks`).
+    pub fn shared_blocks_live(&self) -> usize {
+        self.shared.lock().unwrap().len()
+    }
+
+    /// Total session references across all shared blocks (the dedup
+    /// numerator: N sessions sharing one block contribute N here and 1
+    /// to `shared_blocks_live`). Registry pins are excluded.
+    pub fn shared_session_refs(&self) -> usize {
+        self.shared
+            .lock()
+            .unwrap()
+            .values()
+            .map(|i| i.owners.iter().map(|(_, n)| *n).sum::<usize>())
+            .sum()
+    }
+
+    /// Shared blocks ever fully released (refcount reached zero).
+    pub fn shared_freed_total(&self) -> u64 {
+        self.shared_freed_total.load(Ordering::Relaxed)
     }
 
     /// The cold-tier spill store behind this arena's block ids.
@@ -604,6 +815,83 @@ mod tests {
         assert!(a.drop_cold(id));
         assert_eq!(a.cold_blocks(), 0);
         assert!(!a.drop_cold(id));
+        assert_eq!(a.live_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_block_charges_once_and_frees_at_refcount_zero() {
+        let a = BlockArena::new(4, 256);
+        let (id, data) = a.try_alloc_for(1).unwrap();
+        assert_eq!(a.tenant_live_blocks(1), 1);
+        // seal: tenant 1 stays charged, refcount 1
+        let h1 = a.note_shared_for(1, id, data);
+        assert!(a.is_shared(id));
+        assert_eq!(a.shared_refcount(id), 1);
+        assert_eq!((a.live_blocks(), a.tenant_live_blocks(1)), (1, 1));
+        // two more sessions + a registry pin: no new charge anywhere
+        let h2 = a.share_block_for(2, id).unwrap();
+        let h3 = a.share_block_for(2, id).unwrap();
+        assert!(a.pin_shared(id));
+        assert_eq!(a.shared_refcount(id), 4);
+        assert_eq!(a.shared_session_refs(), 3);
+        assert_eq!(a.shared_blocks_live(), 1);
+        assert_eq!(a.live_blocks(), 1, "a shared block is counted once");
+        assert_eq!(a.tenant_live_blocks(2), 0, "sharers are not charged");
+        // charged owner exits: the charge transfers to tenant 2
+        drop(h1);
+        assert!(!a.release_shared_for(1, id));
+        assert_eq!(a.tenant_live_blocks(1), 0);
+        assert_eq!(a.tenant_live_blocks(2), 1);
+        // remaining holds drain; storage recycles only at zero
+        drop(h2);
+        assert!(!a.release_shared_for(2, id));
+        drop(h3);
+        assert!(!a.release_shared_for(2, id));
+        assert_eq!(a.live_blocks(), 1, "registry pin keeps the block live");
+        assert!(a.unpin_shared(id));
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.free_blocks(), 1);
+        assert_eq!(a.tenant_live_blocks(2), 0);
+        assert!(!a.is_shared(id));
+        assert_eq!(a.shared_freed_total(), 1);
+    }
+
+    #[test]
+    fn reattach_after_pin_only_takes_the_charge_from_the_departed_owner() {
+        let a = BlockArena::new(4, 256);
+        let (id, data) = a.try_alloc_for(1).unwrap();
+        let h1 = a.note_shared_for(1, id, data);
+        assert!(a.pin_shared(id), "registry pin");
+        // donor tenant 1 fully exits; only the pin keeps the block — the
+        // departed tenant stays billed (nobody else to bill)
+        drop(h1);
+        a.release_shared_for(1, id);
+        assert_eq!((a.tenant_live_blocks(1), a.live_blocks()), (1, 1));
+        // tenant 2 attaches later: the charge must follow the live owner
+        let h2 = a.share_block_for(2, id).unwrap();
+        assert_eq!(a.tenant_live_blocks(1), 0, "departed donor must stop paying");
+        assert_eq!(a.tenant_live_blocks(2), 1);
+        drop(h2);
+        a.release_shared_for(2, id);
+        a.unpin_shared(id);
+        assert_eq!(a.live_blocks(), 0);
+        assert_eq!(a.tenant_live_blocks(2), 0);
+    }
+
+    #[test]
+    fn sharing_does_not_consume_capacity_or_quota() {
+        let a = BlockArena::new(4, 256);
+        a.set_capacity_blocks(Some(1));
+        a.set_tenant_quota(2, Some(0));
+        let (id, data) = a.try_alloc_for(1).unwrap();
+        let h1 = a.note_shared_for(1, id, data);
+        // arena at cap, tenant 2 at quota 0 — sharing still succeeds
+        let h2 = a.share_block_for(2, id).unwrap();
+        assert_eq!(a.live_blocks(), 1);
+        assert_eq!(a.tenant_live_blocks(2), 0);
+        drop((h1, h2));
+        a.release_shared_for(1, id);
+        a.release_shared_for(2, id);
         assert_eq!(a.live_blocks(), 0);
     }
 

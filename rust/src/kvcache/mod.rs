@@ -22,12 +22,21 @@
 //! total live KV can exceed the hot cap. `demote`/`promote` move blocks
 //! between tiers; a full hot tier now means "demote, then retry" before
 //! the scheduler's "defer".
+//!
+//! Blocks are also **shareable** (DESIGN.md §2 "Prefix sharing & CoW"):
+//! per-block refcounts with copy-on-write let N sessions serve one
+//! physical copy of an identical prompt prefix, and the
+//! [`prefix::PrefixRegistry`] maps token-hash chains to sealed block
+//! runs (plus their wave-index cluster metadata) so prefills check
+//! shared prefixes out instead of recomputing them.
 
 pub mod arena;
+pub mod prefix;
 pub mod spill;
 pub mod store;
 
-pub use arena::{AllocError, BlockArena, TenantId, DEFAULT_TENANT};
+pub use arena::{AllocError, BlockArena, BlockData, TenantId, DEFAULT_TENANT};
+pub use prefix::{ChainGeometry, PrefixMatch, PrefixRegistry, SealedSlot};
 pub use spill::{ColdestFirst, LargestColdFirst, SpillCandidate, SpillPolicy, SpillStore};
 pub use store::{BlockRef, HeadStore, KvStore};
 

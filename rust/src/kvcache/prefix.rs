@@ -1,0 +1,459 @@
+//! Prefix registry: cross-session dedup of shared prompt prefixes
+//! (DESIGN.md §2 "Prefix sharing & CoW").
+//!
+//! Identical prompt prefixes (system prompts, few-shot templates,
+//! shared documents) are the dominant KV redundancy in multi-user
+//! serving: every session re-materializes the same blocks and re-runs
+//! the same segmented clustering. The registry maps **token-hash
+//! chains** — one chained hash per block-aligned prefix segment (the
+//! sink tokens plus `k` full build segments) — to sealed block runs
+//! plus the wave-index cluster metadata (centroids, value sums, token
+//! positions) needed to graft them under a new session's index. A
+//! prefill that matches the longest registered chain checks the blocks
+//! out as shared, refcounted views ([`BlockArena::share_block_for`])
+//! instead of recomputing and re-clustering them; its private tail
+//! appends normally.
+//!
+//! Determinism contract: chain hashes cover *token ids*, so two prompts
+//! match only if the covered tokens are identical; K/V vectors of a
+//! causal model at those positions are then identical, and with
+//! content-derived clustering seeds ([`ChainGeometry::content_seed`])
+//! the donor's sealed clusters are bit-identical to what the matching
+//! session would have built itself — grafting changes placement, never
+//! results.
+//!
+//! Lifetime: registering an entry pins every sealed block
+//! ([`BlockArena::pin_shared`]) so the prefix survives session churn;
+//! evicting or clearing an entry unpins them, and the storage returns
+//! to the arena free-list once the last attached session exits
+//! (refcount zero). The registry never holds block bytes itself — the
+//! arena's canonical handle does.
+
+use super::arena::BlockArena;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a over a byte stream, seeded (chainable).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    if h == 0 {
+        h = 0xcbf29ce484222325;
+    }
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn hash_tokens(seed: u64, tokens: &[i32]) -> u64 {
+    let mut h = fnv1a(seed, b"tok");
+    for &t in tokens {
+        h = fnv1a(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// The block-aligned chain geometry: how a prompt is cut into hashable
+/// prefix segments. Must mirror the wave index's build segmentation
+/// (`ZoneConfig`: sink tokens stay out of clustering, the middle is
+/// clustered in `segment`-token chunks, the last `local` tokens pend)
+/// so a registered chain link always corresponds to whole sealed
+/// clusters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChainGeometry {
+    /// Steady-sink tokens (excluded from clustering, included in every
+    /// link's hash).
+    pub sink: usize,
+    /// Build-segment length in tokens (one chain link per full segment).
+    pub segment: usize,
+    /// Steady-local tokens at the end of the context (never sealed: a
+    /// link is graftable only when it leaves at least `local` tokens of
+    /// private tail).
+    pub local: usize,
+}
+
+impl ChainGeometry {
+    /// Geometry fingerprint folded into every hash so entries from a
+    /// different segmentation can never collide into a match.
+    fn base(&self) -> u64 {
+        let mut h = fnv1a(0, b"prefix-chain-v1");
+        h = fnv1a(h, &(self.sink as u64).to_le_bytes());
+        h = fnv1a(h, &(self.segment as u64).to_le_bytes());
+        h
+    }
+
+    /// Chain links of a prompt: `(covered_tokens, chain_hash)` pairs,
+    /// shortest first. Link `k` covers the sink plus the first `k` full
+    /// build segments.
+    pub fn links(&self, tokens: &[i32]) -> Vec<(usize, u64)> {
+        let mut out = Vec::new();
+        if tokens.len() < self.sink {
+            return out;
+        }
+        let mut h = hash_tokens(self.base(), &tokens[..self.sink]);
+        let mut covered = self.sink;
+        while covered + self.segment <= tokens.len() {
+            h = hash_tokens(h, &tokens[covered..covered + self.segment]);
+            covered += self.segment;
+            out.push((covered, h));
+        }
+        out
+    }
+
+    /// Content-derived clustering seed: a hash of the sink plus first
+    /// build segment (or the whole prompt when shorter). Prompts that
+    /// share their first segment — the precondition for sharing
+    /// anything — get the same seed, so the per-segment k-means of the
+    /// common region is bit-identical across sessions regardless of
+    /// session id.
+    pub fn content_seed(&self, tokens: &[i32]) -> u64 {
+        let n = tokens.len().min(self.sink + self.segment);
+        hash_tokens(self.base(), &tokens[..n])
+    }
+}
+
+/// One sealed block of a prefix run (data lives in the arena behind the
+/// refcount; the registry records only the id and valid length).
+#[derive(Clone, Copy, Debug)]
+pub struct SealedBlockMeta {
+    pub id: u64,
+    pub len: u16,
+}
+
+/// One sealed cluster: the wave-index metadata a grafting session needs
+/// (centroid, value sum, token positions) plus its block run.
+#[derive(Clone, Debug)]
+pub struct SealedCluster {
+    pub centroid: Vec<f32>,
+    pub vsum: Vec<f32>,
+    pub pos: Vec<u32>,
+    pub blocks: Vec<SealedBlockMeta>,
+}
+
+/// All sealed clusters of one (layer, kv-head) slot, in segment order.
+#[derive(Clone, Debug, Default)]
+pub struct SealedSlot {
+    pub clusters: Vec<SealedCluster>,
+}
+
+impl SealedSlot {
+    pub fn n_blocks(&self) -> usize {
+        self.clusters.iter().map(|c| c.blocks.len()).sum()
+    }
+}
+
+/// A successful registry match, ready to graft.
+#[derive(Clone)]
+pub struct PrefixMatch {
+    /// Chain hash the match resolved to.
+    pub key: u64,
+    /// Prompt tokens covered by the sealed prefix.
+    pub covered: usize,
+    /// Per-slot sealed clusters (`layers × kv_heads` entries).
+    pub slots: Arc<Vec<SealedSlot>>,
+}
+
+struct PrefixEntry {
+    covered: usize,
+    slots: Arc<Vec<SealedSlot>>,
+}
+
+struct RegState {
+    entries: HashMap<u64, PrefixEntry>,
+    /// Insertion order for FIFO eviction at `max_entries`.
+    order: VecDeque<u64>,
+}
+
+/// Cross-session prefix registry over one [`BlockArena`].
+pub struct PrefixRegistry {
+    arena: Arc<BlockArena>,
+    geom: ChainGeometry,
+    /// Registered entries capped at this count (0 disables storage:
+    /// probes always miss — the seeds-only configuration).
+    max_entries: usize,
+    state: Mutex<RegState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    matched_tokens: AtomicU64,
+}
+
+impl PrefixRegistry {
+    pub fn new(arena: Arc<BlockArena>, geom: ChainGeometry, max_entries: usize) -> PrefixRegistry {
+        PrefixRegistry {
+            arena,
+            geom,
+            max_entries,
+            state: Mutex::new(RegState { entries: HashMap::new(), order: VecDeque::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            matched_tokens: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shared(
+        arena: Arc<BlockArena>,
+        geom: ChainGeometry,
+        max_entries: usize,
+    ) -> Arc<PrefixRegistry> {
+        Arc::new(PrefixRegistry::new(arena, geom, max_entries))
+    }
+
+    pub fn geometry(&self) -> ChainGeometry {
+        self.geom
+    }
+
+    pub fn arena(&self) -> &Arc<BlockArena> {
+        &self.arena
+    }
+
+    /// Graftable chain links of a prompt: links whose coverage leaves at
+    /// least the steady-local tail private (a fresh build of this very
+    /// prompt would have clustered exactly those segments).
+    pub fn links(&self, tokens: &[i32]) -> Vec<(usize, u64)> {
+        let limit = tokens.len().saturating_sub(self.geom.local);
+        let mut links = self.geom.links(tokens);
+        links.retain(|&(covered, _)| covered <= limit);
+        links
+    }
+
+    /// The longest registered match for a prompt, with hit/miss
+    /// accounting (the serving path — the engine checks out the result).
+    pub fn match_longest(&self, tokens: &[i32]) -> Option<PrefixMatch> {
+        let links = self.links(tokens);
+        let st = self.state.lock().unwrap();
+        for &(covered, key) in links.iter().rev() {
+            if let Some(e) = st.entries.get(&key) {
+                debug_assert_eq!(e.covered, covered);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.matched_tokens.fetch_add(covered as u64, Ordering::Relaxed);
+                return Some(PrefixMatch { key, covered, slots: Arc::clone(&e.slots) });
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Tokens the longest registered match would cover, with NO
+    /// counter side effects (the scheduler's admission gate polls this
+    /// on every pass to discount a queued request's footprint).
+    pub fn matched_tokens_for(&self, tokens: &[i32]) -> usize {
+        self.matched_tokens_for_links(&self.links(tokens))
+    }
+
+    /// Probe pre-computed chain links (see [`PrefixRegistry::links`])
+    /// without re-hashing the prompt — the gate caches a queued
+    /// request's links once and re-probes only the registry map on
+    /// every pass (entries registered later still discount it). No
+    /// counter side effects.
+    pub fn matched_tokens_for_links(&self, links: &[(usize, u64)]) -> usize {
+        let st = self.state.lock().unwrap();
+        links
+            .iter()
+            .rev()
+            .find(|(_, key)| st.entries.contains_key(key))
+            .map(|&(covered, _)| covered)
+            .unwrap_or(0)
+    }
+
+    /// Whether a chain key is registered.
+    pub fn contains(&self, key: u64) -> bool {
+        self.state.lock().unwrap().entries.contains_key(&key)
+    }
+
+    /// Register a sealed prefix under its chain key, pinning every block
+    /// resident. Blocks must already be shared in the arena
+    /// (`HeadStore::seal_block`). Returns false (and pins nothing) if
+    /// the key is already registered or the registry is disabled; the
+    /// caller's sealed blocks then simply free when its last holder
+    /// exits. Evicts the oldest entry when over capacity.
+    pub fn register(&self, key: u64, covered: usize, slots: Vec<SealedSlot>) -> bool {
+        if self.max_entries == 0 {
+            return false;
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.entries.contains_key(&key) {
+            return false;
+        }
+        for slot in &slots {
+            for c in &slot.clusters {
+                for b in &c.blocks {
+                    let pinned = self.arena.pin_shared(b.id);
+                    debug_assert!(pinned, "registering an unsealed block {}", b.id);
+                }
+            }
+        }
+        st.entries.insert(key, PrefixEntry { covered, slots: Arc::new(slots) });
+        st.order.push_back(key);
+        while st.entries.len() > self.max_entries {
+            let oldest = st.order.pop_front().expect("order tracks entries");
+            if let Some(e) = st.entries.remove(&oldest) {
+                Self::unpin_entry(&self.arena, &e);
+            }
+        }
+        true
+    }
+
+    fn unpin_entry(arena: &BlockArena, e: &PrefixEntry) {
+        for slot in e.slots.iter() {
+            for c in &slot.clusters {
+                for b in &c.blocks {
+                    arena.unpin_shared(b.id);
+                }
+            }
+        }
+    }
+
+    /// Drop every entry, unpinning all sealed blocks (storage frees as
+    /// attached sessions exit; immediately if none are attached).
+    pub fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        for (_, e) in st.entries.drain() {
+            Self::unpin_entry(&self.arena, &e);
+        }
+        st.order.clear();
+    }
+
+    /// Registered prefixes.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocks pinned across all entries.
+    pub fn pinned_blocks(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.entries
+            .values()
+            .map(|e| e.slots.iter().map(|s| s.n_blocks()).sum::<usize>())
+            .sum()
+    }
+
+    /// Prefills that matched a registered prefix.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefills that found no registered prefix.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Prompt tokens served from sealed prefixes (cumulative).
+    pub fn matched_tokens(&self) -> u64 {
+        self.matched_tokens.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for PrefixRegistry {
+    fn drop(&mut self) {
+        self.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::TenantId;
+
+    fn geom() -> ChainGeometry {
+        ChainGeometry { sink: 4, segment: 16, local: 8 }
+    }
+
+    #[test]
+    fn links_are_segment_aligned_and_content_keyed() {
+        let g = geom();
+        let a: Vec<i32> = (0..60).collect();
+        let links = g.links(&a);
+        // sink 4 + segments at 20, 36, 52 (next would need 68 > 60)
+        assert_eq!(links.iter().map(|l| l.0).collect::<Vec<_>>(), vec![20, 36, 52]);
+        // same prefix, different tail: shared links match, later differ
+        let mut b = a.clone();
+        b[40] += 1;
+        let lb = g.links(&b);
+        assert_eq!(links[0], lb[0]);
+        assert_eq!(links[1], lb[1]);
+        assert_ne!(links[2].1, lb[2].1);
+        // different first token: nothing matches
+        let mut c = a.clone();
+        c[0] += 1;
+        assert_ne!(g.links(&c)[0].1, links[0].1);
+        // content seed agrees across prompts sharing the first segment
+        assert_eq!(g.content_seed(&a), g.content_seed(&b));
+        assert_ne!(g.content_seed(&a), g.content_seed(&c));
+    }
+
+    #[test]
+    fn registry_matches_longest_and_respects_local_tail() {
+        let arena = BlockArena::shared(4, 256);
+        let reg = PrefixRegistry::new(Arc::clone(&arena), geom(), 8);
+        let toks: Vec<i32> = (0..60).collect();
+        let links = reg.links(&toks);
+        // the 52-token link would leave only 8 tokens of tail — exactly
+        // `local`, still allowed; all three links are graftable
+        assert_eq!(links.len(), 3);
+        // register the first two links (no sealed blocks needed to match)
+        assert!(reg.register(links[0].1, links[0].0, vec![SealedSlot::default()]));
+        assert!(reg.register(links[1].1, links[1].0, vec![SealedSlot::default()]));
+        assert!(!reg.register(links[1].1, links[1].0, vec![]), "no double registration");
+        let m = reg.match_longest(&toks).expect("must match");
+        assert_eq!(m.covered, 36, "longest registered link wins");
+        assert_eq!(reg.hits(), 1);
+        assert_eq!(reg.matched_tokens(), 36);
+        assert_eq!(reg.matched_tokens_for(&toks), 36, "probe is side-effect free");
+        assert_eq!(reg.hits(), 1);
+        // a shorter prompt can only use links that keep its own local
+        // tail private: at 40 tokens the 36-token link is out of reach
+        let short = &toks[..40];
+        assert_eq!(reg.matched_tokens_for(short), 20);
+        assert!(reg.match_longest(&toks[..20]).is_none());
+        assert_eq!(reg.misses(), 1);
+    }
+
+    #[test]
+    fn eviction_and_clear_unpin_blocks() {
+        let arena = BlockArena::shared(4, 256);
+        let reg = PrefixRegistry::new(Arc::clone(&arena), geom(), 1);
+        // two sealed single-block prefixes
+        let mk_sealed = |tenant: TenantId| {
+            let (id, data) = arena.try_alloc_for(tenant).unwrap();
+            let arc = arena.note_shared_for(tenant, id, data);
+            // the "session" immediately exits: only the pin keeps it
+            drop(arc);
+            let slot = SealedSlot {
+                clusters: vec![SealedCluster {
+                    centroid: vec![0.0; 4],
+                    vsum: vec![0.0; 4],
+                    pos: vec![0],
+                    blocks: vec![SealedBlockMeta { id, len: 1 }],
+                }],
+            };
+            (id, slot)
+        };
+        let (id0, s0) = mk_sealed(1);
+        assert!(reg.register(10, 20, vec![s0]));
+        arena.release_shared_for(1, id0); // session hold gone; pin remains
+        assert_eq!(arena.live_blocks(), 1);
+        let (id1, s1) = mk_sealed(1);
+        assert!(reg.register(11, 20, vec![s1]));
+        arena.release_shared_for(1, id1);
+        // capacity 1: the older entry evicted, its block freed
+        assert_eq!(reg.len(), 1);
+        assert_eq!(arena.live_blocks(), 1);
+        assert!(!arena.is_shared(id0));
+        reg.clear();
+        assert_eq!(arena.live_blocks(), 0);
+        assert_eq!(reg.pinned_blocks(), 0);
+    }
+
+    #[test]
+    fn disabled_registry_never_stores() {
+        let arena = BlockArena::shared(4, 256);
+        let reg = PrefixRegistry::new(arena, geom(), 0);
+        assert!(!reg.register(1, 20, vec![]));
+        assert!(reg.match_longest(&(0..60).collect::<Vec<i32>>()).is_none());
+    }
+}

@@ -15,6 +15,16 @@
 //! [`HeadStore::demote_block`] / [`HeadStore::promote_block`] move one
 //! block between tiers.
 //!
+//! Sharing (DESIGN.md §2 "Prefix sharing & CoW"): a hot block can be
+//! **sealed** into a shared, refcounted view ([`HeadStore::seal_block`])
+//! and other handles can attach the same storage under the same
+//! engine-global id ([`HeadStore::attach_shared`]) without a fresh
+//! checkout — the prefix-dedup path. Shared blocks are read-only and
+//! never demote; a writer diverges through copy-on-write
+//! ([`HeadStore::unshare_for_write`]): a fresh private block (new id)
+//! takes a bit-identical copy and the shared reference is released, so
+//! a sharer's view can never observe the write.
+//!
 //! Every handle carries the [`TenantId`] it allocates on behalf of, so
 //! quota accounting follows the blocks from checkout to reclamation.
 
@@ -34,13 +44,30 @@ pub struct BlockRef {
     pub len: u16,
 }
 
+/// Hot storage of one owned block: private (exclusively owned by this
+/// handle, writable between alloc and publication) or shared (a
+/// refcounted read-only view of storage other handles may also hold).
+enum BlockPayload {
+    Hot(BlockData),
+    Shared(Arc<BlockData>),
+}
+
+impl BlockPayload {
+    fn data(&self) -> &BlockData {
+        match self {
+            BlockPayload::Hot(d) => d,
+            BlockPayload::Shared(a) => a,
+        }
+    }
+}
+
 /// One checked-out arena block plus its valid length. `data` is `None`
 /// while the block lives in the cold tier (its bytes sit in the arena's
 /// spill store under `id`).
 struct OwnedBlock {
     id: u64,
     len: u16,
-    data: Option<BlockData>,
+    data: Option<BlockPayload>,
 }
 
 /// Per-(layer, kv-head) handle over the shared arena.
@@ -133,13 +160,14 @@ impl HeadStore {
             let (id, mut data) = match self.arena.try_alloc_for(self.tenant) {
                 Ok(x) => x,
                 Err(e) => {
-                    // roll back this call's checkouts (all hot: they
-                    // were pushed by this very call)
+                    // roll back this call's checkouts (all private hot:
+                    // they were pushed by this very call)
                     self.arena.reclaim_for(
                         self.tenant,
-                        self.blocks
-                            .drain(start_blocks..)
-                            .map(|b| b.data.expect("freshly allocated blocks are hot")),
+                        self.blocks.drain(start_blocks..).map(|b| match b.data {
+                            Some(BlockPayload::Hot(d)) => d,
+                            _ => unreachable!("freshly allocated blocks are private hot"),
+                        }),
                     );
                     return Err(e);
                 }
@@ -148,7 +176,8 @@ impl HeadStore {
             data.vals[..take * d].copy_from_slice(&vals[off * d..(off + take) * d]);
             data.pos[..take].copy_from_slice(&pos[off..off + take]);
             let idx = self.blocks.len() as u32;
-            self.blocks.push(OwnedBlock { id, len: take as u16, data: Some(data) });
+            self.blocks
+                .push(OwnedBlock { id, len: take as u16, data: Some(BlockPayload::Hot(data)) });
             refs.push(BlockRef { block: id, idx, len: take as u16 });
             off += take;
         }
@@ -174,11 +203,18 @@ impl HeadStore {
             .data
             .as_ref()
             .expect("block is in the cold tier — promote it or use the copy accessors")
+            .data()
     }
 
-    /// Whether a block's data is resident in the hot tier.
+    /// Whether a block's data is resident in the hot tier (private or
+    /// shared — shared blocks are always hot).
     pub fn is_hot(&self, r: BlockRef) -> bool {
         self.owned(r).data.is_some()
+    }
+
+    /// Whether a block is a shared (refcounted, read-only) view.
+    pub fn is_shared(&self, r: BlockRef) -> bool {
+        matches!(self.owned(r).data, Some(BlockPayload::Shared(_)))
     }
 
     /// Key vectors of a hot block: `[len, d]` flat. Panics on a cold
@@ -200,13 +236,13 @@ impl HeadStore {
     /// Fallible key access: `None` when the block is cold.
     pub fn try_block_keys(&self, r: BlockRef) -> Option<&[f32]> {
         let b = self.owned(r);
-        b.data.as_ref().map(|d| &d.keys[..r.len as usize * self.arena.d()])
+        b.data.as_ref().map(|p| &p.data().keys[..r.len as usize * self.arena.d()])
     }
 
     /// Fallible value access: `None` when the block is cold.
     pub fn try_block_vals(&self, r: BlockRef) -> Option<&[f32]> {
         let b = self.owned(r);
-        b.data.as_ref().map(|d| &d.vals[..r.len as usize * self.arena.d()])
+        b.data.as_ref().map(|p| &p.data().vals[..r.len as usize * self.arena.d()])
     }
 
     /// Append a block's valid keys and values to `k_out` / `v_out`,
@@ -216,7 +252,8 @@ impl HeadStore {
     pub fn copy_block_kv(&self, r: BlockRef, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) -> bool {
         let n = r.len as usize * self.arena.d();
         match &self.owned(r).data {
-            Some(d) => {
+            Some(p) => {
+                let d = p.data();
                 k_out.extend_from_slice(&d.keys[..n]);
                 v_out.extend_from_slice(&d.vals[..n]);
                 true
@@ -230,16 +267,108 @@ impl HeadStore {
     }
 
     /// Demote one block into the cold tier. Returns false if it was
-    /// already cold.
+    /// already cold — or shared: a refcounted block is pinned hot while
+    /// any owner holds it (demoting one owner's view would stall every
+    /// sharer on the spill tier and break the charge-once accounting).
     pub fn demote_block(&mut self, r: BlockRef) -> bool {
         let b = &mut self.blocks[r.idx as usize];
         debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
         match b.data.take() {
-            Some(data) => {
+            Some(BlockPayload::Hot(data)) => {
                 self.arena.demote_for(self.tenant, b.id, data);
                 true
             }
+            Some(shared @ BlockPayload::Shared(_)) => {
+                b.data = Some(shared);
+                false
+            }
             None => false,
+        }
+    }
+
+    /// Seal one private hot block into a shared, refcounted view (this
+    /// handle keeps reading it; other handles may now
+    /// [`HeadStore::attach_shared`] it). Returns false if the block is
+    /// cold; a block that is already shared stays shared.
+    pub fn seal_block(&mut self, r: BlockRef) -> bool {
+        let b = &mut self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        match b.data.take() {
+            Some(BlockPayload::Hot(data)) => {
+                let arc = self.arena.note_shared_for(self.tenant, b.id, data);
+                b.data = Some(BlockPayload::Shared(arc));
+                true
+            }
+            Some(shared @ BlockPayload::Shared(_)) => {
+                b.data = Some(shared);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Attach a shared block (sealed by another handle) to this store:
+    /// the refcount rises, no storage is allocated, and no capacity or
+    /// quota charge is taken. Returns `None` if `id` is not currently a
+    /// shared block in the arena.
+    pub fn attach_shared(&mut self, id: u64, len: u16) -> Option<BlockRef> {
+        let arc = self.arena.share_block_for(self.tenant, id)?;
+        let idx = self.blocks.len() as u32;
+        self.blocks.push(OwnedBlock { id, len, data: Some(BlockPayload::Shared(arc)) });
+        Some(BlockRef { block: id, idx, len })
+    }
+
+    /// Copy-on-write divergence: replace this handle's view of a shared
+    /// block with a freshly checked-out private copy (bit-identical
+    /// bytes, NEW engine-global id — caches keyed by the old id keep
+    /// serving the shared content) and release the shared reference.
+    /// The returned ref is writable via the `_mut` accessors; other
+    /// owners' views are untouched. A private block returns its own ref
+    /// unchanged. Errors if the arena refuses the private checkout.
+    pub fn unshare_for_write(&mut self, r: BlockRef) -> Result<BlockRef, AllocError> {
+        let b = &self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        match &b.data {
+            Some(BlockPayload::Hot(_)) => return Ok(r),
+            Some(BlockPayload::Shared(_)) => {}
+            None => panic!("unshare_for_write on a cold block"),
+        }
+        let (new_id, mut data) = self.arena.try_alloc_for(self.tenant)?;
+        let b = &mut self.blocks[r.idx as usize];
+        let Some(BlockPayload::Shared(arc)) = b.data.take() else { unreachable!() };
+        data.keys.copy_from_slice(&arc.keys);
+        data.vals.copy_from_slice(&arc.vals);
+        data.pos.copy_from_slice(&arc.pos);
+        let old_id = b.id;
+        b.id = new_id;
+        b.data = Some(BlockPayload::Hot(data));
+        drop(arc);
+        self.arena.release_shared_for(self.tenant, old_id);
+        Ok(BlockRef { block: new_id, idx: r.idx, len: r.len })
+    }
+
+    /// Mutable key access to a private hot block (the CoW write path).
+    /// Panics on shared or cold blocks — call
+    /// [`HeadStore::unshare_for_write`] first.
+    pub fn block_keys_mut(&mut self, r: BlockRef) -> &mut [f32] {
+        let d = self.arena.d();
+        let b = &mut self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        match &mut b.data {
+            Some(BlockPayload::Hot(data)) => &mut data.keys[..r.len as usize * d],
+            _ => panic!("mutable access to a shared or cold block — unshare_for_write first"),
+        }
+    }
+
+    /// Mutable value access to a private hot block (see
+    /// [`HeadStore::block_keys_mut`]).
+    pub fn block_vals_mut(&mut self, r: BlockRef) -> &mut [f32] {
+        let d = self.arena.d();
+        let b = &mut self.blocks[r.idx as usize];
+        debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
+        match &mut b.data {
+            Some(BlockPayload::Hot(data)) => &mut data.vals[..r.len as usize * d],
+            _ => panic!("mutable access to a shared or cold block — unshare_for_write first"),
         }
     }
 
@@ -254,7 +383,7 @@ impl HeadStore {
             return Ok(None);
         }
         let (data, staged) = self.arena.try_promote_for(self.tenant, r.block)?;
-        self.blocks[r.idx as usize].data = Some(data);
+        self.blocks[r.idx as usize].data = Some(BlockPayload::Hot(data));
         Ok(Some(staged))
     }
 
@@ -312,17 +441,31 @@ impl HeadStore {
     pub fn n_cold_blocks(&self) -> usize {
         self.blocks.iter().filter(|b| b.data.is_none()).count()
     }
+
+    /// Blocks of this handle that are shared (refcounted) views.
+    pub fn n_shared_blocks(&self) -> usize {
+        self.blocks
+            .iter()
+            .filter(|b| matches!(b.data, Some(BlockPayload::Shared(_))))
+            .count()
+    }
 }
 
 impl Drop for HeadStore {
     fn drop(&mut self) {
-        // A finished session returns every hot block to the arena and
-        // drops its cold blocks in place — never promoting them first
-        // (the scheduler's reclamation path must not touch the hot cap).
+        // A finished session returns every private hot block to the
+        // arena, releases its shared references (storage frees only at
+        // refcount zero) and drops its cold blocks in place — never
+        // promoting them first (the scheduler's reclamation path must
+        // not touch the hot cap).
         let mut hot = Vec::new();
         for b in self.blocks.drain(..) {
             match b.data {
-                Some(data) => hot.push(data),
+                Some(BlockPayload::Hot(data)) => hot.push(data),
+                Some(BlockPayload::Shared(arc)) => {
+                    drop(arc);
+                    self.arena.release_shared_for(self.tenant, b.id);
+                }
                 None => {
                     self.arena.drop_cold(b.id);
                 }
@@ -570,6 +713,72 @@ mod tests {
         assert_eq!(arena.cold_blocks(), 0);
         // token accounting is tier-independent
         assert_eq!(hs.n_tokens(), 10);
+    }
+
+    #[test]
+    fn seal_attach_serves_identical_bytes_without_new_blocks() {
+        let d = 16; // tpb = 4 at 512-byte blocks
+        let arena = BlockArena::shared(d, 512);
+        let mut a = HeadStore::new_in_for(Arc::clone(&arena), 1);
+        let (k, v, p) = mk(7, d, 40);
+        let refs = a.alloc_cluster(&k, &v, &p);
+        assert_eq!(refs.len(), 2);
+        let live_before = arena.live_blocks();
+        for r in &refs {
+            assert!(a.seal_block(*r));
+            assert!(a.is_shared(*r));
+            assert!(a.is_hot(*r), "shared blocks stay hot");
+        }
+        // sealing twice is a no-op
+        assert!(a.seal_block(refs[0]));
+        // another tenant attaches the same storage: same ids, no alloc
+        let mut b = HeadStore::new_in_for(Arc::clone(&arena), 2);
+        let brefs: Vec<BlockRef> =
+            refs.iter().map(|r| b.attach_shared(r.block, r.len).unwrap()).collect();
+        assert_eq!(arena.live_blocks(), live_before, "attach allocates nothing");
+        assert_eq!(arena.tenant_live_blocks(2), 0, "sharers are not charged");
+        for (ra, rb) in refs.iter().zip(&brefs) {
+            assert_eq!(rb.block, ra.block);
+            assert_eq!(a.block_keys(*ra), b.block_keys(*rb));
+            assert_eq!(a.block_vals(*ra), b.block_vals(*rb));
+            assert_eq!(a.block_pos(*ra), b.block_pos(*rb));
+            assert!(!b.demote_block(*rb), "shared blocks never demote");
+        }
+        // sharer exits first: storage stays; sealer exits: refcount zero
+        drop(b);
+        assert_eq!(arena.live_blocks(), live_before);
+        drop(a);
+        assert_eq!(arena.live_blocks(), 0);
+        assert_eq!(arena.shared_blocks_live(), 0);
+    }
+
+    #[test]
+    fn cow_divergence_leaves_the_sharer_bit_identical() {
+        let d = 16;
+        let arena = BlockArena::shared(d, 512);
+        let mut a = HeadStore::new_in_for(Arc::clone(&arena), 1);
+        let (k, v, p) = mk(4, d, 41);
+        let r = a.alloc_cluster(&k, &v, &p)[0];
+        assert!(a.seal_block(r));
+        let mut b = HeadStore::new_in_for(Arc::clone(&arena), 2);
+        let rb = b.attach_shared(r.block, r.len).unwrap();
+        // B diverges: new id, tenant 2 now pays for its private copy
+        let rb2 = b.unshare_for_write(rb).unwrap();
+        assert_ne!(rb2.block, rb.block, "CoW must mint a fresh id");
+        assert_eq!(rb2.idx, rb.idx);
+        assert!(!b.is_shared(rb2));
+        assert_eq!(arena.tenant_live_blocks(2), 1);
+        assert_eq!(b.block_keys(rb2), a.block_keys(r), "copy starts bit-identical");
+        // writes through B cannot reach A's view
+        b.block_keys_mut(rb2).fill(9.5);
+        b.block_vals_mut(rb2)[0] = -3.25;
+        assert_eq!(a.block_keys(r), &k[..], "sharer's bytes must be untouched");
+        assert_eq!(a.block_vals(r), &v[..]);
+        // unsharing a private block is the identity
+        assert_eq!(b.unshare_for_write(rb2).unwrap(), rb2);
+        drop(b);
+        drop(a);
+        assert_eq!(arena.live_blocks(), 0);
     }
 
     #[test]

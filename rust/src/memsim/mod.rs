@@ -61,12 +61,20 @@ pub fn gpu_mem_bytes(
     mem
 }
 
-/// Host memory required, bytes.
+/// Host memory required, bytes. Cross-session prefix sharing stores
+/// the shared fraction once per batch instead of once per sequence
+/// (refcounted blocks, DESIGN.md §2 "Prefix sharing & CoW").
 pub fn cpu_mem_bytes(model: &ModelSpec, profile: &SystemProfile, ctx: usize, batch: usize) -> usize {
     if profile.kv_on_gpu {
         0
     } else {
-        model.kv_cache_bytes(ctx, batch)
+        let kv = model.kv_cache_bytes(ctx, batch);
+        if profile.shared_prefix_frac > 0.0 && batch > 1 {
+            let dedup = profile.shared_prefix_frac * (batch - 1) as f64 / batch as f64;
+            (kv as f64 * (1.0 - dedup)) as usize
+        } else {
+            kv
+        }
     }
 }
 
@@ -146,8 +154,13 @@ pub fn decode_step(
             // CUDA copy kernels minimize but cannot remove (§4.6).
             br.attn_gpu_s += 2.0 * attn_bytes / hw.gpu_bw;
         }
-        // PCIe fetch for the non-cached fraction of selected KV.
-        let fetch = attn_bytes * profile.pcie_fetch_frac * (1.0 - profile.hit_ratio);
+        // PCIe fetch for the non-cached fraction of selected KV. Shared
+        // prefix blocks are GPU-resident once per batch (cross-session
+        // cache), so their fetches are paid by one session, not all.
+        let fetch = attn_bytes
+            * profile.pcie_fetch_frac
+            * (1.0 - profile.hit_ratio)
+            * (1.0 - profile.shared_prefix_frac * (b - 1.0) / b.max(1.0));
         if fetch > 0.0 {
             br.pcie_s = fetch / hw.pcie_bw + model.n_layers as f64 * hw.pcie_latency_s;
         }
@@ -343,6 +356,32 @@ mod tests {
         let br = decode_step(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b);
         assert!(br.spill_s > 0.0);
         assert_eq!(decode_step(&m, &hw, &retroinfer(0.85), ctx, b).spill_s, 0.0);
+    }
+
+    #[test]
+    fn prefix_sharing_saves_memory_and_transfers() {
+        let (m, hw) = setup();
+        let ctx = 120 * 1024;
+        let b = 16;
+        // host footprint: 75% shared across 16 sequences ≈ 0.297 of dense
+        let dense = cpu_mem_bytes(&m, &retroinfer(0.85), ctx, b);
+        let deduped = cpu_mem_bytes(&m, &retroinfer_prefix(0.85, 0.75), ctx, b);
+        assert!(deduped < dense / 2, "dedup must shrink host KV: {deduped} vs {dense}");
+        assert_eq!(
+            cpu_mem_bytes(&m, &retroinfer_prefix(0.85, 0.75), ctx, 1),
+            cpu_mem_bytes(&m, &retroinfer(0.85), ctx, 1),
+            "a lone session has nothing to share"
+        );
+        // throughput: fewer PCIe fetches can only help, monotonically
+        let t0 = decode_throughput(&m, &hw, &retroinfer(0.85), ctx, b).unwrap();
+        let t1 = decode_throughput(&m, &hw, &retroinfer_prefix(0.85, 0.5), ctx, b).unwrap();
+        let t2 = decode_throughput(&m, &hw, &retroinfer_prefix(0.85, 0.9), ctx, b).unwrap();
+        assert!(t1 >= t0, "sharing cannot slow decode: {t1} vs {t0}");
+        assert!(t2 >= t1, "more sharing is monotonically no slower");
+        // the PCIe term visibly shrinks
+        let pf = decode_step(&m, &hw, &retroinfer(0.85), ctx, b).pcie_s;
+        let ps = decode_step(&m, &hw, &retroinfer_prefix(0.85, 0.9), ctx, b).pcie_s;
+        assert!(ps < pf, "shared-prefix fetch bytes must drop: {ps} vs {pf}");
     }
 
     #[test]

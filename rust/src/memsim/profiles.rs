@@ -29,6 +29,12 @@ pub struct SystemProfile {
     /// come from the cold spill tier (tiered arena: hot RAM tier capped
     /// below the working set). 0 = single-tier.
     pub spill_frac: f64,
+    /// Fraction of per-sequence KV bytes deduplicated across the batch
+    /// by cross-session prefix sharing (refcounted blocks + the shared
+    /// GPU prefix cache): those bytes are resident once per batch, and
+    /// their exact-attention fetches never cross PCIe again after the
+    /// first session faults them in. 0 = no sharing.
+    pub shared_prefix_frac: f64,
     /// GPU cache hit ratio on fetched bytes (measured; RetroInfer only).
     pub hit_ratio: f64,
     /// Fraction of context covered by the estimation zone (RetroInfer).
@@ -79,6 +85,7 @@ fn base(name: &'static str) -> SystemProfile {
         exact_fixed: 68,
         pcie_fetch_frac: 0.0,
         spill_frac: 0.0,
+        shared_prefix_frac: 0.0,
         hit_ratio: 0.0,
         est_frac: 0.0,
         cpu_attention: false,
@@ -183,6 +190,19 @@ pub fn retroinfer(hit_ratio: f64) -> SystemProfile {
 /// spill"; prefetch overlap is modeled by `overlap_transfers`).
 pub fn retroinfer_spilled(hit_ratio: f64, spill_frac: f64) -> SystemProfile {
     SystemProfile { name: "retroinfer-spill", spill_frac, ..retroinfer(hit_ratio) }
+}
+
+/// RetroInfer with cross-session prefix sharing: `shared_frac` of each
+/// sequence's KV is a template prefix deduplicated across the batch
+/// (DESIGN.md §2 "Prefix sharing & CoW") — resident once in host
+/// memory, served once from the shared GPU prefix cache instead of
+/// refetched per session.
+pub fn retroinfer_prefix(hit_ratio: f64, shared_frac: f64) -> SystemProfile {
+    SystemProfile {
+        name: "retroinfer-prefix",
+        shared_prefix_frac: shared_frac,
+        ..retroinfer(hit_ratio)
+    }
 }
 
 /// Figure 16 "Base": KV offloaded, no GPU cache, synchronous management.

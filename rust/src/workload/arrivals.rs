@@ -16,6 +16,11 @@ pub struct RequestSpec {
     pub output_tokens: usize,
     /// Issuing tenant (0 for single-tenant traces).
     pub tenant: TenantId,
+    /// Shared-prefix identity: requests with the same hash open with
+    /// the same prompt prefix (system prompt / few-shot template). The
+    /// router uses it for prefix affinity; the pressure harness for
+    /// modelled block sharing. `None` = no shared prefix.
+    pub prefix_hash: Option<u64>,
 }
 
 /// Open-loop Poisson arrivals at `rate` req/s for `n` requests.
@@ -31,7 +36,7 @@ pub fn poisson_arrivals(
     (0..n)
         .map(|_| {
             t += rng.exponential(rate);
-            RequestSpec { arrive_s: t, input_tokens, output_tokens, tenant: 0 }
+            RequestSpec { arrive_s: t, input_tokens, output_tokens, tenant: 0, prefix_hash: None }
         })
         .collect()
 }
@@ -53,6 +58,7 @@ pub fn closed_loop(
             input_tokens,
             output_tokens,
             tenant: 0,
+            prefix_hash: None,
         })
         .collect()
 }
@@ -80,6 +86,7 @@ pub fn multi_tenant_poisson(
                 input_tokens,
                 output_tokens,
                 tenant: t as TenantId,
+                prefix_hash: None,
             });
         }
     }
@@ -87,9 +94,52 @@ pub fn multi_tenant_poisson(
     all
 }
 
+/// Stamp every request in `reqs` with the same shared-prefix hash
+/// (one system prompt / template across the trace).
+pub fn stamp_shared_prefix(reqs: &mut [RequestSpec], prefix_hash: u64) {
+    for r in reqs.iter_mut() {
+        r.prefix_hash = Some(prefix_hash);
+    }
+}
+
+/// Open-loop Poisson arrivals over `n_prefixes` shared templates:
+/// request `i` draws its template (prefix hash) from a seeded stream,
+/// so the router's prefix-affinity and the pressure harness's
+/// block-sharing paths see a realistic template mix.
+pub fn shared_prefix_poisson(
+    rate: f64,
+    n: usize,
+    n_prefixes: usize,
+    input_tokens: usize,
+    output_tokens: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed ^ 0xA5A5_5A5A);
+    let mut reqs = poisson_arrivals(rate, n, input_tokens, output_tokens, seed);
+    for r in reqs.iter_mut() {
+        let g = rng.below(n_prefixes.max(1)) as u64;
+        r.prefix_hash = Some(0x70FF_1E00 ^ g.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    }
+    reqs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_prefix_traces_carry_hashes() {
+        let mut reqs = poisson_arrivals(5.0, 10, 64, 4, 2);
+        assert!(reqs.iter().all(|r| r.prefix_hash.is_none()));
+        stamp_shared_prefix(&mut reqs, 42);
+        assert!(reqs.iter().all(|r| r.prefix_hash == Some(42)));
+        let mix = shared_prefix_poisson(5.0, 40, 3, 64, 4, 7);
+        let distinct: std::collections::HashSet<u64> =
+            mix.iter().filter_map(|r| r.prefix_hash).collect();
+        assert!(!distinct.is_empty() && distinct.len() <= 3);
+        // deterministic across calls
+        assert_eq!(mix, shared_prefix_poisson(5.0, 40, 3, 64, 4, 7));
+    }
 
     #[test]
     fn poisson_mean_interarrival() {

@@ -13,7 +13,10 @@ pub mod arrivals;
 pub mod pressure;
 pub mod tasks;
 
-pub use arrivals::{closed_loop, multi_tenant_poisson, poisson_arrivals, RequestSpec};
+pub use arrivals::{
+    closed_loop, multi_tenant_poisson, poisson_arrivals, shared_prefix_poisson,
+    stamp_shared_prefix, RequestSpec,
+};
 pub use pressure::{run_memory_pressure, PressureConfig, PressureReport};
 pub use tasks::{Task, TaskKind};
 

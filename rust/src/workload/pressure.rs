@@ -28,11 +28,22 @@
 //! live blocks exceeded the hot cap while hot-resident blocks never did
 //! (`tests/spill.rs`).
 
+//! With [`PressureConfig::shared_prefix_tokens`] the driver additionally
+//! models cross-session prefix dedup: the first request of each
+//! `prefix_hash` allocates the prefix blocks, seals them into shared
+//! refcounted views and pins them (the modelled prefix registry); later
+//! requests of the same hash attach the same blocks instead of
+//! allocating, and their admission estimate is discounted by the shared
+//! tokens (`Request::prefix_tokens`). The report's shared-peak fields
+//! quantify the dedup; resident blocks stay ≤ cap even when the
+//! nominal (unshared) footprint would exceed it.
+
 use crate::coordinator::{Action, AdmissionConfig, Batcher, Request, Scheduler};
-use crate::kvcache::{BlockArena, KvStore, TenantId};
-use crate::workload::RequestSpec;
-use std::collections::{BTreeSet, HashMap};
+use crate::kvcache::{AllocError, BlockArena, BlockRef, HeadStore, KvStore, TenantId};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
+
+use crate::workload::RequestSpec;
 
 /// Geometry + budget of a pressure scenario.
 #[derive(Clone, Debug)]
@@ -56,6 +67,14 @@ pub struct PressureConfig {
     /// cold tier and retries — total live bytes may exceed the hot cap
     /// while hot-resident bytes never do.
     pub spill: bool,
+    /// Shared-prefix tokens per request (0 = off). Requests carrying a
+    /// `prefix_hash` share this many leading prompt tokens: the first
+    /// such request allocates + seals + pins them; later ones attach
+    /// the same blocks (refcounted, charged once) with a discounted
+    /// admission estimate. The donor of each hash should be serviceable
+    /// first (single-tenant traces, or one hash per tenant) — a
+    /// non-donor arriving before its donor simply becomes the donor.
+    pub shared_prefix_tokens: usize,
 }
 
 impl Default for PressureConfig {
@@ -70,6 +89,7 @@ impl Default for PressureConfig {
             headroom_frac: 0.25,
             max_batch: 4,
             spill: false,
+            shared_prefix_tokens: 0,
         }
     }
 }
@@ -116,31 +136,133 @@ pub struct PressureReport {
     /// Cold blocks left after the trace drained (must be 0: finished
     /// sessions drop their cold blocks).
     pub final_cold_blocks: usize,
+    /// Peak shared (refcounted) blocks live at once (prefix runs).
+    pub peak_shared_blocks: usize,
+    /// Peak session references across shared blocks at once (the dedup
+    /// numerator: N sessions × prefix blocks).
+    pub peak_shared_refs: usize,
+    /// Requests that became a prefix donor (allocated + sealed a run).
+    pub prefix_donors: usize,
+    /// Requests that attached an already-sealed prefix run.
+    pub prefix_attaches: usize,
+    /// Live blocks left after the trace drained and the modelled
+    /// registry unpinned its runs (must be 0: refcounts drained).
+    pub final_live_blocks: usize,
 }
 
-/// Blocks one head checks out for `tokens` of context, allocated as
-/// clusters of `2 * tpb - 1` tokens so partial tail blocks (clusters
-/// never share blocks) are part of the model.
-fn checkout_prompt(store: &mut KvStore, layers: usize, heads: usize, tokens: usize) -> bool {
-    let d = store.arena().d();
-    let tpb = store.arena().tokens_per_block();
+/// Check `tokens` of context starting at position `start` into one
+/// head, allocated as clusters of `2 * tpb - 1` tokens so partial tail
+/// blocks (clusters never share blocks) are part of the model. Returns
+/// the checked-out refs in order.
+fn checkout_span(
+    head: &mut HeadStore,
+    start: usize,
+    tokens: usize,
+) -> Result<Vec<BlockRef>, AllocError> {
+    let d = head.d();
+    let tpb = head.tokens_per_block();
     let cluster = (2 * tpb).saturating_sub(1).max(1);
+    let mut refs = Vec::new();
+    let mut off = 0usize;
+    while off < tokens {
+        let take = (tokens - off).min(cluster);
+        let keys = vec![0.0f32; take * d];
+        let vals = vec![0.0f32; take * d];
+        let pos: Vec<u32> = ((start + off) as u32..(start + off + take) as u32).collect();
+        refs.extend(head.try_alloc_cluster(&keys, &vals, &pos)?);
+        off += take;
+    }
+    Ok(refs)
+}
+
+/// Blocks every head checks out for `tokens` of context from `start`.
+fn checkout_prompt(
+    store: &mut KvStore,
+    layers: usize,
+    heads: usize,
+    start: usize,
+    tokens: usize,
+) -> bool {
     for l in 0..layers {
         for h in 0..heads {
-            let mut off = 0usize;
-            while off < tokens {
-                let take = (tokens - off).min(cluster);
-                let keys = vec![0.0f32; take * d];
-                let vals = vec![0.0f32; take * d];
-                let pos: Vec<u32> = (off as u32..(off + take) as u32).collect();
-                if store.head_mut(l, h).try_alloc_cluster(&keys, &vals, &pos).is_err() {
-                    return false;
-                }
-                off += take;
+            if checkout_span(store.head_mut(l, h), start, tokens).is_err() {
+                return false;
             }
         }
     }
     true
+}
+
+/// The modelled prefix registry of a pressure run: sealed block runs
+/// per prefix hash, kept resident by arena pins.
+#[derive(Default)]
+struct ModelRegistry {
+    /// prefix hash → per-(layer, head) slot list of (block id, len).
+    sealed: HashMap<u64, Vec<Vec<(u64, u16)>>>,
+    pinned: Vec<u64>,
+}
+
+impl ModelRegistry {
+    /// Serve a session's shared prefix: attach the sealed run when one
+    /// exists, otherwise allocate it here and become the donor (seal +
+    /// pin). Returns `Some(donated)` on success, `None` on a refused
+    /// checkout (the caller rolls the whole store back).
+    fn checkout_shared(
+        &mut self,
+        store: &mut KvStore,
+        arena: &BlockArena,
+        layers: usize,
+        heads: usize,
+        hash: u64,
+        tokens: usize,
+    ) -> Option<bool> {
+        if let Some(run) = self.sealed.get(&hash) {
+            for l in 0..layers {
+                for h in 0..heads {
+                    for &(id, len) in &run[l * heads + h] {
+                        store.head_mut(l, h).attach_shared(id, len)?;
+                    }
+                }
+            }
+            return Some(false);
+        }
+        // donor: allocate the prefix privately, then seal + pin it
+        let mut refs: Vec<Vec<BlockRef>> = Vec::with_capacity(layers * heads);
+        for l in 0..layers {
+            for h in 0..heads {
+                match checkout_span(store.head_mut(l, h), 0, tokens) {
+                    Ok(r) => refs.push(r),
+                    Err(_) => return None,
+                }
+            }
+        }
+        let mut run = Vec::with_capacity(layers * heads);
+        for l in 0..layers {
+            for h in 0..heads {
+                let head = store.head_mut(l, h);
+                let slot_refs = &refs[l * heads + h];
+                let mut v = Vec::with_capacity(slot_refs.len());
+                for r in slot_refs {
+                    let ok = head.seal_block(*r);
+                    debug_assert!(ok);
+                    let pinned = arena.pin_shared(r.block);
+                    debug_assert!(pinned);
+                    self.pinned.push(r.block);
+                    v.push((r.block, r.len));
+                }
+                run.push(v);
+            }
+        }
+        self.sealed.insert(hash, run);
+        Some(true)
+    }
+
+    fn unpin_all(&mut self, arena: &BlockArena) {
+        for id in self.pinned.drain(..) {
+            arena.unpin_shared(id);
+        }
+        self.sealed.clear();
+    }
 }
 
 /// Demote hot blocks from live stores (session id order, oldest blocks
@@ -184,18 +306,31 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
     );
     // The whole trace queues up-front: pressure comes from aggregate
     // footprint, not wall-clock pacing (admit_s keeps arrival order).
+    // With prefix sharing, every request after the first of its hash
+    // carries the admission discount (its shared tokens are already —
+    // or will be, by its donor — resident and charged elsewhere).
+    let mut req_hash: HashMap<u64, u64> = HashMap::new();
+    let mut donors_seen: HashSet<u64> = HashSet::new();
     for (i, r) in trace.iter().enumerate() {
-        sched.submit(
-            Request::new(i as u64, vec![1; r.input_tokens], r.output_tokens.max(1))
-                .with_tenant(r.tenant),
-            r.arrive_s,
-        );
+        let mut req = Request::new(i as u64, vec![1; r.input_tokens], r.output_tokens.max(1))
+            .with_tenant(r.tenant);
+        if cfg.shared_prefix_tokens > 0 {
+            if let Some(h) = r.prefix_hash {
+                req_hash.insert(i as u64, h);
+                if !donors_seen.insert(h) {
+                    req = req
+                        .with_prefix_tokens(cfg.shared_prefix_tokens.min(r.input_tokens));
+                }
+            }
+        }
+        sched.submit(req, r.arrive_s);
     }
 
     let cap_bytes = cfg.capacity_blocks * arena.block_bytes();
     let mut rep = PressureReport::default();
     let mut stores: HashMap<u64, KvStore> = HashMap::new();
     let mut decoded: HashMap<u64, usize> = HashMap::new();
+    let mut registry = ModelRegistry::default();
     let mut guard = 0usize;
     while !sched.all_done() {
         guard += 1;
@@ -212,6 +347,11 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                     let s = sched.session(id).unwrap();
                     (s.req.tenant, s.req.prompt.len())
                 };
+                let hash = req_hash.get(&id).copied();
+                let share_tok = match hash {
+                    Some(_) => cfg.shared_prefix_tokens.min(prompt_len),
+                    None => 0,
+                };
                 // generous footprint estimate: dense packing plus one
                 // tail block per (2·tpb − 1)-token cluster
                 let est = cfg.layers * cfg.kv_heads * prompt_len.div_ceil(tpb) * 2;
@@ -223,13 +363,42 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                         cfg.layers,
                         cfg.kv_heads,
                     );
-                    if checkout_prompt(&mut st, cfg.layers, cfg.kv_heads, prompt_len) {
-                        stores.insert(id, st);
-                        decoded.insert(id, 0);
-                        served = true;
-                        break;
+                    // shared prefix first (attach or donate), then the
+                    // private tail
+                    let shared_ok = match (share_tok, hash) {
+                        (0, _) | (_, None) => Some(false),
+                        (tok, Some(h)) => registry.checkout_shared(
+                            &mut st,
+                            &arena,
+                            cfg.layers,
+                            cfg.kv_heads,
+                            h,
+                            tok,
+                        ),
+                    };
+                    if let Some(donated) = shared_ok {
+                        if checkout_prompt(
+                            &mut st,
+                            cfg.layers,
+                            cfg.kv_heads,
+                            share_tok,
+                            prompt_len - share_tok,
+                        ) {
+                            if share_tok > 0 {
+                                if donated {
+                                    rep.prefix_donors += 1;
+                                } else {
+                                    rep.prefix_attaches += 1;
+                                }
+                            }
+                            stores.insert(id, st);
+                            decoded.insert(id, 0);
+                            served = true;
+                            break;
+                        }
                     }
-                    // the partial store drops here (rollback)
+                    // the partial store drops here (rollback; shared
+                    // attaches release their refcounts)
                     drop(st);
                     if !cfg.spill {
                         break;
@@ -333,6 +502,8 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         rep.peak_resident_bytes = rep.peak_resident_bytes.max(resident);
         rep.peak_cold_blocks = rep.peak_cold_blocks.max(cold);
         rep.peak_total_live_blocks = rep.peak_total_live_blocks.max(live + cold);
+        rep.peak_shared_blocks = rep.peak_shared_blocks.max(arena.shared_blocks_live());
+        rep.peak_shared_refs = rep.peak_shared_refs.max(arena.shared_session_refs());
         if live > cfg.capacity_blocks || resident > cap_bytes {
             rep.capacity_violations += 1;
         }
@@ -357,6 +528,10 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
     }
     rep.drained = true;
     rep.final_cold_blocks = arena.cold_blocks();
+    // the modelled registry releases its pins: with every session gone,
+    // shared refcounts drain to zero and the arena empties
+    registry.unpin_all(&arena);
+    rep.final_live_blocks = arena.live_blocks();
     rep.deferrals = sched.n_deferrals();
     rep.rejected = sched.n_rejections() as usize;
     rep.completed = sched

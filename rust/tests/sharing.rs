@@ -1,0 +1,511 @@
+//! Cross-session prefix-sharing invariants (DESIGN.md §2 "Prefix
+//! sharing & CoW", §6):
+//!
+//! - refcounted reclaim never double-frees or leaks — an alloc / seal /
+//!   share / pin / release fuzz tracks an oracle and the arena's
+//!   counters must agree at every step;
+//! - CoW divergence leaves every other owner's bytes bit-identical;
+//! - grafted index builds are bit-identical to unshared builds of the
+//!   same tokens (same content-derived seed) — sharing changes
+//!   placement, never results;
+//! - a shared-prefix `workload::pressure` run keeps resident ≤ cap
+//!   while N sessions share one prefix whose unshared footprint would
+//!   blow past it, and per-tenant quotas still bound private footprint
+//!   (the charge-once / transfer-on-exit rule).
+
+use retroinfer::config::ZoneConfig;
+use retroinfer::index::{SelectScratch, WaveIndex};
+use retroinfer::kvcache::{BlockArena, BlockData, HeadStore, TenantId};
+use retroinfer::prop_assert;
+use retroinfer::prop_assert_eq;
+use retroinfer::util::prop::check;
+use retroinfer::util::rng::Rng;
+use retroinfer::workload::{
+    run_memory_pressure, shared_prefix_poisson, stamp_shared_prefix, PressureConfig,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Oracle record of one shared block in the fuzz.
+struct SharedModel {
+    id: u64,
+    /// Outstanding session holds per tenant (the Arc clones live here).
+    holds: Vec<(TenantId, Arc<BlockData>)>,
+    pins: usize,
+}
+
+/// Alloc/share/drop fuzz against an oracle: the arena's live/free/
+/// tenant counters must match a reference model under any interleaving
+/// of private allocs, seals, shares, pins, releases and unpins — no
+/// double-free (refcount math never goes negative), no leak (everything
+/// drains to zero at the end).
+#[test]
+fn prop_refcounted_reclaim_matches_oracle() {
+    check("shared-refcount-oracle", 12, |rng| {
+        let d = 8;
+        let arena = BlockArena::shared(d, 256); // tpb = 2
+        let n_tenants = 1 + rng.below(3) as TenantId;
+        // oracle state
+        let mut privates: Vec<(TenantId, u64, BlockData)> = Vec::new();
+        let mut shared: Vec<SharedModel> = Vec::new();
+        for _ in 0..400 {
+            match rng.below(6) {
+                // private alloc
+                0 | 1 => {
+                    let t = rng.below(n_tenants as usize) as TenantId;
+                    let (id, data) = arena.try_alloc_for(t).unwrap();
+                    privates.push((t, id, data));
+                }
+                // seal a private block into a shared one
+                2 => {
+                    if privates.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(privates.len());
+                    let (t, id, data) = privates.swap_remove(i);
+                    let arc = arena.note_shared_for(t, id, data);
+                    shared.push(SharedModel { id, holds: vec![(t, arc)], pins: 0 });
+                }
+                // take another session hold of a shared block
+                3 => {
+                    if shared.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(shared.len());
+                    let t = rng.below(n_tenants as usize) as TenantId;
+                    let arc = arena.share_block_for(t, shared[i].id).unwrap();
+                    shared[i].holds.push((t, arc));
+                }
+                // pin / unpin (the registry's tenant-less hold)
+                4 => {
+                    if shared.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(shared.len());
+                    if shared[i].pins > 0 && rng.below(2) == 0 {
+                        shared[i].pins -= 1;
+                        let freed = arena.unpin_shared(shared[i].id);
+                        if freed {
+                            prop_assert!(shared[i].holds.is_empty(), "freed with holds");
+                            shared.swap_remove(i);
+                        }
+                    } else {
+                        prop_assert!(arena.pin_shared(shared[i].id));
+                        shared[i].pins += 1;
+                    }
+                }
+                // release: a private reclaim or one shared hold
+                _ => {
+                    if !privates.is_empty() && (shared.is_empty() || rng.below(2) == 0) {
+                        let i = rng.below(privates.len());
+                        let (t, _, data) = privates.swap_remove(i);
+                        arena.reclaim_for(t, [data]);
+                    } else if !shared.is_empty() {
+                        let i = rng.below(shared.len());
+                        if shared[i].holds.is_empty() {
+                            continue;
+                        }
+                        let j = rng.below(shared[i].holds.len());
+                        let (t, arc) = shared[i].holds.swap_remove(j);
+                        drop(arc);
+                        let freed = arena.release_shared_for(t, shared[i].id);
+                        if freed {
+                            prop_assert!(
+                                shared[i].holds.is_empty() && shared[i].pins == 0,
+                                "freed while holds/pins remain"
+                            );
+                            shared.swap_remove(i);
+                        } else {
+                            prop_assert!(
+                                !shared[i].holds.is_empty() || shared[i].pins > 0,
+                                "not freed at refcount zero"
+                            );
+                        }
+                    }
+                }
+            }
+            // arena counters vs oracle, every step
+            let oracle_live = privates.len() + shared.len();
+            prop_assert_eq!(arena.live_blocks(), oracle_live);
+            prop_assert_eq!(arena.shared_blocks_live(), shared.len());
+            let oracle_refs: usize = shared.iter().map(|s| s.holds.len()).sum();
+            prop_assert_eq!(arena.shared_session_refs(), oracle_refs);
+            for s in &shared {
+                prop_assert_eq!(arena.shared_refcount(s.id), s.holds.len() + s.pins);
+            }
+            // per-tenant: privates owned + exactly one charge per shared
+            // block, billed to some tenant that held it (or last did)
+            let mut min_by_tenant: HashMap<TenantId, usize> = HashMap::new();
+            for (t, _, _) in &privates {
+                *min_by_tenant.entry(*t).or_insert(0) += 1;
+            }
+            let total_tenant: usize =
+                (0..n_tenants).map(|t| arena.tenant_live_blocks(t)).sum();
+            prop_assert_eq!(total_tenant, oracle_live);
+            for t in 0..n_tenants {
+                let have = arena.tenant_live_blocks(t);
+                let need = min_by_tenant.get(&t).copied().unwrap_or(0);
+                prop_assert!(
+                    have >= need,
+                    "tenant {} charged {} < its {} private blocks",
+                    t,
+                    have,
+                    need
+                );
+            }
+        }
+        // drain everything: no leak survives
+        for (t, _, data) in privates.drain(..) {
+            arena.reclaim_for(t, [data]);
+        }
+        for mut s in shared.drain(..) {
+            for (t, arc) in s.holds.drain(..) {
+                drop(arc);
+                arena.release_shared_for(t, s.id);
+            }
+            for _ in 0..s.pins {
+                arena.unpin_shared(s.id);
+            }
+        }
+        prop_assert_eq!(arena.live_blocks(), 0);
+        prop_assert_eq!(arena.shared_blocks_live(), 0);
+        prop_assert_eq!(arena.allocated_total(), arena.reclaimed_total());
+        for t in 0..n_tenants {
+            prop_assert_eq!(arena.tenant_live_blocks(t), 0);
+        }
+        Ok(())
+    });
+}
+
+/// CoW divergence: random writers fork shared blocks and scribble;
+/// every other owner's view must stay bit-identical to the original.
+#[test]
+fn prop_cow_never_mutates_a_sharers_view() {
+    check("cow-divergence", 10, |rng| {
+        let d = 8;
+        let arena = BlockArena::shared(d, 256); // tpb = 2
+        let n = 2 + rng.below(6); // tokens in the sealed cluster
+        let keys = rng.normal_vec(n * d);
+        let vals = rng.normal_vec(n * d);
+        let pos: Vec<u32> = (0..n as u32).collect();
+        let mut donor = HeadStore::new_in_for(Arc::clone(&arena), 0);
+        let refs = donor.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+        for r in &refs {
+            prop_assert!(donor.seal_block(*r));
+        }
+        // several sharers attach; a random subset diverge and scribble
+        let mut sharers: Vec<(HeadStore, Vec<retroinfer::kvcache::BlockRef>)> = Vec::new();
+        for t in 1..=3u32 {
+            let mut hs = HeadStore::new_in_for(Arc::clone(&arena), t);
+            let atts: Vec<_> = refs
+                .iter()
+                .map(|r| hs.attach_shared(r.block, r.len).unwrap())
+                .collect();
+            sharers.push((hs, atts));
+        }
+        for (hs, atts) in sharers.iter_mut() {
+            for i in 0..atts.len() {
+                if rng.below(2) == 0 {
+                    let forked = hs.unshare_for_write(atts[i]).unwrap();
+                    prop_assert!(forked.block != atts[i].block, "CoW reuses an id");
+                    hs.block_keys_mut(forked).fill(1e9);
+                    hs.block_vals_mut(forked).fill(-1e9);
+                    atts[i] = forked;
+                }
+            }
+        }
+        // the donor's bytes — and every non-diverged sharer's — are intact
+        let mut off = 0usize;
+        for r in &refs {
+            let span = r.len as usize * d;
+            prop_assert_eq!(donor.block_keys(*r), &keys[off..off + span]);
+            prop_assert_eq!(donor.block_vals(*r), &vals[off..off + span]);
+            off += span;
+        }
+        for (hs, atts) in &sharers {
+            let mut off = 0usize;
+            for (r, orig) in atts.iter().zip(&refs) {
+                let span = orig.len as usize * d;
+                if r.block == orig.block {
+                    prop_assert_eq!(hs.block_keys(*r), &keys[off..off + span]);
+                } else {
+                    prop_assert!(hs.block_keys(*r).iter().all(|&x| x == 1e9));
+                }
+                off += span;
+            }
+        }
+        drop(sharers);
+        drop(donor);
+        prop_assert_eq!(arena.live_blocks(), 0);
+        Ok(())
+    });
+}
+
+fn small_zone() -> ZoneConfig {
+    ZoneConfig {
+        steady_sink: 4,
+        steady_local: 16,
+        tokens_per_cluster: 8,
+        build_segment: 128,
+        update_segment: 32,
+        kmeans_iters: 4,
+        ..ZoneConfig::default()
+    }
+}
+
+/// Grafted builds are bit-identical to unshared builds of the same
+/// tokens: meta (centroids, vsum, sizes), steady zone, and attention
+/// output all match exactly — including for a LONGER prompt grafting a
+/// shorter prompt's sealed prefix, the cross-session case.
+#[test]
+fn grafted_build_is_bit_identical_to_unshared() {
+    let d = 16;
+    let cfg = small_zone();
+    let mut rng = Rng::new(77);
+    let prefix_n = 4 + 2 * 128; // sink + two full segments
+    let keys_p = rng.normal_vec(prefix_n * d);
+    let vals_p = rng.normal_vec(prefix_n * d);
+    // donor prompt: prefix + its own tail
+    let (mut keys_a, mut vals_a) = (keys_p.clone(), vals_p.clone());
+    keys_a.extend(rng.normal_vec(64 * d));
+    vals_a.extend(rng.normal_vec(64 * d));
+    // a longer second prompt sharing the prefix, different tail
+    let (mut keys_b, mut vals_b) = (keys_p.clone(), vals_p.clone());
+    keys_b.extend(rng.normal_vec(200 * d));
+    vals_b.extend(rng.normal_vec(200 * d));
+
+    let arena = BlockArena::shared(d, 512);
+    let seed = 0xC0117E47; // "content-derived": equal across sessions
+    let mut donor =
+        WaveIndex::try_build_in_for(&arena, 0, cfg.clone(), &keys_a, &vals_a, seed).unwrap();
+    let covered = prefix_n; // both full segments committed
+    assert!(donor.clustered_prefix_tokens() >= covered);
+    let sealed = donor.seal_prefix(covered);
+    assert!(!sealed.clusters.is_empty());
+    for c in &sealed.clusters {
+        for b in &c.blocks {
+            assert!(arena.pin_shared(b.id));
+        }
+    }
+
+    // session B: grafted vs unshared build of the same longer prompt
+    let grafted = WaveIndex::try_build_grafted_in_for(
+        &arena, 1, cfg.clone(), &sealed, covered, &keys_b, &vals_b, seed,
+    )
+    .unwrap();
+    let fresh =
+        WaveIndex::try_build_in_for(&arena, 2, cfg.clone(), &keys_b, &vals_b, seed).unwrap();
+    assert_eq!(grafted.meta().m(), fresh.meta().m());
+    assert_eq!(grafted.meta().centroids_flat(), fresh.meta().centroids_flat());
+    assert_eq!(grafted.meta().vsum_flat(), fresh.meta().vsum_flat());
+    assert_eq!(grafted.meta().counts(), fresh.meta().counts());
+    for c in 0..grafted.meta().m() {
+        assert_eq!(grafted.meta().cluster_tokens(c), fresh.meta().cluster_tokens(c));
+    }
+    assert_eq!(grafted.steady_kv(), fresh.steady_kv());
+    assert_eq!(grafted.n_seen(), fresh.n_seen());
+    assert!(grafted.n_shared_blocks() > 0, "the prefix must be shared, not copied");
+    // same selection, bitwise-equal attention output
+    let mut sc = SelectScratch::default();
+    for qseed in 0..4u64 {
+        let q = Rng::new(1000 + qseed).normal_vec(d);
+        let sel_g = grafted.select(&q, &mut sc);
+        let sel_f = fresh.select(&q, &mut sc);
+        assert_eq!(sel_g, sel_f, "identical meta must select identically");
+        let mut out_g = vec![0.0f32; d];
+        let mut out_f = vec![0.0f32; d];
+        grafted.attend(&q, &sel_g, &mut out_g);
+        fresh.attend(&q, &sel_f, &mut out_f);
+        assert_eq!(out_g, out_f, "grafted attention must be bit-identical");
+    }
+    // dedup accounting: the grafted session added no blocks for the prefix
+    let shared = arena.shared_blocks_live();
+    assert!(shared > 0);
+    assert_eq!(arena.shared_session_refs(), 2 * shared, "donor + grafted session");
+    drop(grafted);
+    drop(fresh);
+    drop(donor);
+    assert_eq!(arena.shared_blocks_live(), shared, "pins keep the prefix");
+    for c in &sealed.clusters {
+        for b in &c.blocks {
+            arena.unpin_shared(b.id);
+        }
+    }
+    assert_eq!(arena.live_blocks(), 0);
+}
+
+/// Appending to a grafted index never touches the shared prefix: new
+/// tokens cluster into fresh private blocks, and the donor's view stays
+/// bit-identical throughout.
+#[test]
+fn appends_after_graft_leave_the_shared_prefix_untouched() {
+    let d = 16;
+    let cfg = small_zone();
+    let mut rng = Rng::new(99);
+    let n = 4 + 128 + 40;
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let arena = BlockArena::shared(d, 512);
+    let mut donor = WaveIndex::try_build_in_for(&arena, 0, cfg.clone(), &keys, &vals, 5).unwrap();
+    let covered = 4 + 128;
+    let sealed = donor.seal_prefix(covered);
+    assert!(!sealed.clusters.is_empty());
+    // snapshot the donor's view of every sealed block
+    let snapshot = |idx: &WaveIndex| -> Vec<(u64, Vec<f32>, Vec<f32>)> {
+        let mut out = Vec::new();
+        for c in 0..idx.meta().m() {
+            for r in idx.cluster_blocks(c as u32) {
+                if idx.store().is_shared(*r) {
+                    out.push((
+                        r.block,
+                        idx.store().block_keys(*r).to_vec(),
+                        idx.store().block_vals(*r).to_vec(),
+                    ));
+                }
+            }
+        }
+        out
+    };
+    let before = snapshot(&donor);
+    assert!(!before.is_empty());
+    let mut grafted = WaveIndex::try_build_grafted_in_for(
+        &arena, 1, cfg.clone(), &sealed, covered, &keys, &vals, 5,
+    )
+    .unwrap();
+    let shared_before = grafted.n_shared_blocks();
+    // push enough tokens through the grafted index to trip re-clustering
+    for i in 0..(cfg.steady_local + cfg.update_segment + 4) {
+        let k = Rng::new(500 + i as u64).normal_vec(d);
+        let v = Rng::new(900 + i as u64).normal_vec(d);
+        grafted.try_append(&k, &v).unwrap();
+    }
+    assert!(grafted.n_updates() >= 1, "appends must re-cluster");
+    assert_eq!(
+        grafted.n_shared_blocks(),
+        shared_before,
+        "appends must not fork or drop shared prefix blocks"
+    );
+    assert_eq!(grafted.meta().n_tokens() + grafted.steady_tokens(), grafted.n_seen());
+    // the donor's sealed bytes are bit-identical after the sharer's life
+    assert_eq!(snapshot(&donor), before, "appends leaked into the shared prefix");
+    drop(grafted);
+    assert_eq!(snapshot(&donor), before);
+}
+
+/// Charge-once tenant accounting: quotas bound a tenant's PRIVATE
+/// footprint; attached shared blocks bill the first owner and transfer
+/// when it exits.
+#[test]
+fn quota_bounds_private_footprint_not_shared_attachments() {
+    let d = 16; // tpb = 4 at 512-byte blocks
+    let arena = BlockArena::shared(d, 512);
+    let mut rng = Rng::new(3);
+    let keys = rng.normal_vec(12 * d);
+    let vals = rng.normal_vec(12 * d);
+    let pos: Vec<u32> = (0..12).collect();
+    // tenant 1 donates a 3-block prefix
+    let mut donor = HeadStore::new_in_for(Arc::clone(&arena), 1);
+    let refs = donor.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+    assert_eq!(refs.len(), 3);
+    for r in &refs {
+        assert!(donor.seal_block(*r));
+    }
+    assert_eq!(arena.tenant_live_blocks(1), 3);
+    // tenant 2 (quota 2) attaches all 3 shared blocks for free...
+    arena.set_tenant_quota(2, Some(2));
+    let mut b = HeadStore::new_in_for(Arc::clone(&arena), 2);
+    for r in &refs {
+        b.attach_shared(r.block, r.len).unwrap();
+    }
+    assert_eq!(arena.tenant_live_blocks(2), 0, "sharers are not charged");
+    // ...and can still fill its whole private quota
+    let (k1, v1, p1) = (rng.normal_vec(4 * d), rng.normal_vec(4 * d), (0..4).collect::<Vec<u32>>());
+    b.try_alloc_cluster(&k1, &v1, &p1).unwrap();
+    b.try_alloc_cluster(&k1, &v1, &p1).unwrap();
+    assert_eq!(arena.tenant_live_blocks(2), 2);
+    // the quota still bounds private growth exactly
+    assert!(b.try_alloc_cluster(&k1, &v1, &p1).is_err());
+    // donor exits: the 3 shared charges transfer to tenant 2 (the only
+    // surviving owner) — occupancy may exceed quota, allocation may not
+    drop(donor);
+    assert_eq!(arena.tenant_live_blocks(1), 0);
+    assert_eq!(arena.tenant_live_blocks(2), 5);
+    assert!(b.try_alloc_cluster(&k1, &v1, &p1).is_err(), "quota still gates allocs");
+    drop(b);
+    assert_eq!(arena.live_blocks(), 0);
+    assert_eq!(arena.tenant_live_blocks(2), 0);
+}
+
+/// Shared-prefix pressure run: N sessions share one prefix whose
+/// UNSHARED aggregate footprint exceeds the arena cap — with sharing
+/// the run completes with resident ≤ cap at every step, and the peak
+/// dedup ratio reflects the concurrent sharers.
+#[test]
+fn shared_prefix_pressure_keeps_resident_under_cap() {
+    let cfg = PressureConfig {
+        capacity_blocks: 420,
+        shared_prefix_tokens: 96,
+        max_batch: 4,
+        ..PressureConfig::default()
+    };
+    // geometry: d=16, block 512 B -> tpb=4; 2 layers × 2 heads.
+    // per-session UNSHARED prompt footprint: 4 heads × (120 tokens in
+    // 7-token clusters -> ~18×2=... ) ≈ 4 × 35 = 140 blocks; 8 sessions
+    // nominal ≈ 1120 blocks ≫ 420 cap. Shared: one 96-token prefix run
+    // (~4 × 28 = 112 blocks) + 8 × tail (~4 × 7 = 28) ≈ 336 < cap.
+    let mut trace = retroinfer::workload::poisson_arrivals(50.0, 8, 120, 6, 9);
+    stamp_shared_prefix(&mut trace, 0xFACE);
+    let rep = run_memory_pressure(&cfg, &trace);
+    assert!(rep.drained, "shared-prefix run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "resident exceeded the cap: {rep:?}");
+    assert_eq!(rep.prefill_failures, 0, "admission admitted an unservable prefill");
+    assert_eq!(rep.append_failures, 0);
+    assert_eq!(rep.completed + rep.rejected, trace.len());
+    assert_eq!(rep.rejected, 0, "sharing must make every request servable");
+    assert_eq!(rep.prefix_donors, 1, "exactly one donor seals the prefix");
+    assert_eq!(rep.prefix_attaches, trace.len() - 1);
+    assert!(rep.peak_shared_blocks > 0);
+    // at peak, multiple sessions reference every shared block at once
+    assert!(
+        rep.peak_shared_refs >= 2 * rep.peak_shared_blocks,
+        "dedup ratio < 2x at peak: {rep:?}"
+    );
+    assert_eq!(rep.final_live_blocks, 0, "refcounts must drain to zero");
+    // the same trace WITHOUT sharing cannot fit concurrently: the
+    // nominal footprint above the cap forces the gate to defer
+    let unshared_cfg = PressureConfig { shared_prefix_tokens: 0, ..cfg.clone() };
+    let rep_unshared = run_memory_pressure(&unshared_cfg, &trace);
+    assert!(rep_unshared.drained);
+    assert!(
+        rep_unshared.deferrals > 0,
+        "cap sized to stress the unshared run ({rep_unshared:?})"
+    );
+    assert!(
+        rep.peak_live_blocks <= rep_unshared.peak_live_blocks.max(cfg.capacity_blocks),
+        "sharing cannot raise the peak"
+    );
+}
+
+/// Multi-template mix through the router-facing trace generator, at
+/// nightly scale (several prefixes, more sessions).
+#[test]
+#[ignore]
+fn shared_prefix_pressure_sweep() {
+    for seed in 0..4u64 {
+        let cfg = PressureConfig {
+            capacity_blocks: 700,
+            shared_prefix_tokens: 64,
+            max_batch: 8,
+            ..PressureConfig::default()
+        };
+        let trace = shared_prefix_poisson(40.0, 24, 3, 100, 6, seed);
+        let rep = run_memory_pressure(&cfg, &trace);
+        assert!(rep.drained, "seed {seed}: {rep:?}");
+        assert_eq!(rep.capacity_violations, 0, "seed {seed}: {rep:?}");
+        assert_eq!(rep.quota_violations, 0, "seed {seed}: {rep:?}");
+        assert_eq!(rep.completed + rep.rejected, trace.len(), "seed {seed}: {rep:?}");
+        assert!(rep.prefix_donors >= 1 && rep.prefix_donors <= 3, "seed {seed}: {rep:?}");
+        assert!(rep.peak_shared_refs >= rep.peak_shared_blocks, "seed {seed}: {rep:?}");
+        assert_eq!(rep.final_live_blocks, 0, "seed {seed}: {rep:?}");
+    }
+}

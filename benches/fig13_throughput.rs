@@ -6,7 +6,7 @@
 //!     cargo bench --bench fig13_throughput
 
 use retroinfer::baselines::{Retro, SparseSystem};
-use retroinfer::config::{HardwareSpec, ModelSpec};
+use retroinfer::config::{HardwareSpec, ModelSpec, SpillCodec};
 use retroinfer::memsim::{self, profiles};
 use retroinfer::util::bench::{quick_mode, Table};
 use retroinfer::workload::tasks::{generate, TaskKind};
@@ -105,39 +105,66 @@ fn capped_admission_report() {
 /// Serve the same overcommitted trace with the cold spill tier enabled
 /// (ROADMAP: CPU-tier spill): the hot cap binds at every step while the
 /// total live footprint exceeds it — the spill-forcing config the
-/// EXPERIMENTS.md tiered-arena table is fed by.
-fn spill_pressure_report() {
+/// EXPERIMENTS.md tiered-arena table is fed by. Runs twice, with the
+/// Exact and the int8 spill codec, reports logical vs physical cold
+/// bytes, and returns the MEASURED physical/logical ratio of the int8
+/// run (the fig13 `retroinfer-spill-comp` row is fed by it).
+fn spill_pressure_report() -> f64 {
     let n_per_tenant = if quick_mode() { 3 } else { 6 };
     let trace = multi_tenant_poisson(&[4.0, 2.0], n_per_tenant, 120, 8, 13);
-    let cfg = PressureConfig {
-        capacity_blocks: 256,
-        tenant_quota_blocks: None,
-        spill: true,
-        ..PressureConfig::default()
-    };
-    let rep = run_memory_pressure(&cfg, &trace);
-    println!(
-        "# tiered arena under spill: {} reqs, hot cap={} blocks -> completed={} \
-         demoted={} promoted={} peak_hot={} peak_total={} blocks (cold peak {})",
-        trace.len(),
-        cfg.capacity_blocks,
-        rep.completed,
-        rep.demotions,
-        rep.promotions,
-        rep.peak_live_blocks,
-        rep.peak_total_live_blocks,
-        rep.peak_cold_blocks,
-    );
-    assert!(rep.drained, "spill run deadlocked: {rep:?}");
-    assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap");
-    assert_eq!(rep.deferrals, 0, "tiered admission must never defer");
-    assert_eq!(rep.completed, trace.len(), "requests lost under spill");
-    assert!(rep.demotions > 0, "config sized to force spill");
-    assert!(
-        rep.peak_total_live_blocks > cfg.capacity_blocks,
-        "total live must exceed the hot tier for the report to mean anything"
-    );
-    assert_eq!(rep.final_cold_blocks, 0, "cold blocks must die with their sessions");
+    let mut codec_ratio = 1.0f64;
+    for codec in [SpillCodec::Exact, SpillCodec::Int8] {
+        let cfg = PressureConfig {
+            capacity_blocks: 256,
+            tenant_quota_blocks: None,
+            spill: true,
+            spill_codec: codec,
+            ..PressureConfig::default()
+        };
+        let rep = run_memory_pressure(&cfg, &trace);
+        let ratio =
+            rep.peak_cold_physical_bytes as f64 / rep.peak_cold_logical_bytes.max(1) as f64;
+        println!(
+            "# tiered arena under spill [{} codec]: {} reqs, hot cap={} blocks -> \
+             completed={} demoted={} promoted={} peak_hot={} peak_total={} blocks \
+             (cold peak {}; cold bytes logical={} physical={} ratio={:.2} \
+             compressed_pages_peak={})",
+            codec.name(),
+            trace.len(),
+            cfg.capacity_blocks,
+            rep.completed,
+            rep.demotions,
+            rep.promotions,
+            rep.peak_live_blocks,
+            rep.peak_total_live_blocks,
+            rep.peak_cold_blocks,
+            rep.peak_cold_logical_bytes,
+            rep.peak_cold_physical_bytes,
+            ratio,
+            rep.peak_compressed_blocks,
+        );
+        assert!(rep.drained, "spill run deadlocked: {rep:?}");
+        assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap");
+        assert_eq!(rep.deferrals, 0, "tiered admission must never defer");
+        assert_eq!(rep.completed, trace.len(), "requests lost under spill");
+        assert!(rep.demotions > 0, "config sized to force spill");
+        assert!(
+            rep.peak_total_live_blocks > cfg.capacity_blocks,
+            "total live must exceed the hot tier for the report to mean anything"
+        );
+        assert_eq!(rep.final_cold_blocks, 0, "cold blocks must die with their sessions");
+        if codec.is_lossy() {
+            assert!(rep.peak_compressed_blocks > 0, "lossy codec never applied: {rep:?}");
+            assert!(
+                2 * rep.peak_cold_physical_bytes <= rep.peak_cold_logical_bytes,
+                "int8 must at least halve cold bytes: {rep:?}"
+            );
+            codec_ratio = ratio;
+        } else {
+            assert_eq!(rep.peak_compressed_blocks, 0, "exact run stored lossy pages");
+        }
+    }
+    codec_ratio
 }
 
 /// Serve a shared-prefix trace through the real refcounted arena
@@ -187,7 +214,8 @@ fn main() {
     println!("# measured wave-buffer hit ratio (real trace replay): {hit:.3}");
     println!("# paper reports 0.79-0.94 across tasks at 5% cache");
     capped_admission_report();
-    spill_pressure_report();
+    let codec_ratio = spill_pressure_report();
+    println!("# measured int8 spill-codec ratio (physical/logical): {codec_ratio:.2}");
     shared_prefix_report();
     println!();
 
@@ -210,6 +238,10 @@ fn main() {
             // tiered arena: 30% of uncached fetches climb from the cold
             // spill tier first (hot RAM tier capped below the working set)
             profiles::retroinfer_spilled(hit, 0.3),
+            // same tiered arena with the int8 spill codec: cold pages
+            // cross the spill channel at the MEASURED physical/logical
+            // ratio from the pressure replay above
+            profiles::retroinfer_spilled_compressed(hit, 0.3, codec_ratio),
             // cross-session prefix sharing: half of each sequence's KV
             // is a template prefix resident once per batch (refcounted
             // blocks + shared GPU prefix cache)

@@ -26,7 +26,7 @@
 //! Flags: --requests N (default 4)  --prompt-len L (2048)  --max-new M (24)
 //!        --tenants T (2)  --capacity-blocks C (0 = auto: 60% of peak)
 
-use retroinfer::config::{BufferConfig, CapacityConfig, ZoneConfig};
+use retroinfer::config::{BufferConfig, CapacityConfig, SpillCodec, ZoneConfig};
 use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
 use retroinfer::engine::{live::structured_prompt, AttnMode, LiveEngine};
 use retroinfer::kvcache::ColdestFirst;
@@ -46,6 +46,9 @@ struct ServeStats {
     demoted: u64,
     promoted: u64,
     cold_hits: u64,
+    spill_logical_peak: usize,
+    spill_physical_peak: usize,
+    compressed_peak: usize,
 }
 
 fn serve(
@@ -55,11 +58,15 @@ fn serve(
     tenants: usize,
     capacity_blocks: Option<usize>,
     spill: bool,
+    codec: SpillCodec,
 ) -> anyhow::Result<ServeStats> {
     let dir = default_artifacts_dir();
     let mut eng = LiveEngine::new(&dir, mode)?;
     if spill {
         eng.enable_spill(Arc::new(ColdestFirst));
+        // permissive accuracy floor: only the steady-zone rules gate
+        // lossy placement (the codec choice carries the experiment)
+        eng.set_spill_codec(codec, 0.0);
     }
     let mut sched = match capacity_blocks {
         Some(cap) if !spill => {
@@ -84,6 +91,7 @@ fn serve(
         sched.submit(Request::new(id as u64, p.clone(), max_new).with_tenant(tenant), 0.0);
     }
     let t0 = Instant::now();
+    let (mut spill_log_peak, mut spill_phys_peak, mut comp_peak) = (0usize, 0usize, 0usize);
     while !sched.all_done() {
         match sched.next_action() {
             Action::Prefill(id) => {
@@ -120,6 +128,9 @@ fn serve(
                 eng.arena().resident_bytes()
             );
         }
+        spill_log_peak = spill_log_peak.max(eng.arena().spill().logical_bytes());
+        spill_phys_peak = spill_phys_peak.max(eng.arena().spill().physical_bytes());
+        comp_peak = comp_peak.max(eng.arena().spill().compressed_blocks());
         // Finished sessions hand their KV blocks back to the arena.
         for fid in sched.take_finished() {
             eng.finish_session(fid);
@@ -155,6 +166,9 @@ fn serve(
         demoted: eng.arena().demoted_total(),
         promoted: eng.arena().promoted_total(),
         cold_hits: eng.metrics.counter("cold_hit_blocks"),
+        spill_logical_peak: spill_log_peak,
+        spill_physical_peak: spill_phys_peak,
+        compressed_peak: comp_peak,
     })
 }
 
@@ -280,10 +294,10 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<Vec<i32>> =
         (0..n_requests).map(|i| structured_prompt(prompt_len, 100 + i as u64)).collect();
 
-    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None, false)?;
+    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None, false, SpillCodec::Exact)?;
     println!("full attention : wall={:.2}s decode={:.1} tok/s", full.wall_s, full.decode_tps);
 
-    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None, false)?;
+    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None, false, SpillCodec::Exact)?;
     println!(
         "wave attention : wall={:.2}s decode={:.1} tok/s hit_ratio={:.3} peak_arena={} blocks",
         wave.wall_s, wave.decode_tps, wave.hit_ratio, wave.peak_live_blocks
@@ -299,7 +313,8 @@ fn main() -> anyhow::Result<()> {
     } else {
         (peak * 3 / 5).max(2 * peak / n_requests.max(1)).max(1)
     };
-    let capped = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap), false)?;
+    let capped =
+        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap), false, SpillCodec::Exact)?;
     println!(
         "wave (capped)  : wall={:.2}s cap={cap} blocks peak={} blocks deferral_events={}",
         capped.wall_s, capped.peak_live_blocks, capped.deferrals
@@ -324,7 +339,8 @@ fn main() -> anyhow::Result<()> {
     // No admission gate: a full hot tier demotes-then-retries, so
     // nothing can defer forever.
     let hot_cap = (peak * 2 / 5).max(peak / n_requests.max(1) + 8).max(1);
-    let tiered = serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true)?;
+    let tiered =
+        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true, SpillCodec::Exact)?;
     println!(
         "wave (tiered)  : wall={:.2}s hot_cap={hot_cap} blocks demoted={} promoted={} \
          cold_hit_blocks={} deferral_events={}",
@@ -340,6 +356,35 @@ fn main() -> anyhow::Result<()> {
     // bit-identical to the single-tier run
     for (id, toks) in &wave.out {
         assert_eq!(toks, &tiered.out[id], "tiered serve changed request {id}'s tokens");
+    }
+
+    // Tiered re-run with the int8 spill codec (DESIGN.md §2 "Spill
+    // codecs"): the estimation head clears interior clusters for lossy
+    // cold storage, so the cold tier's physical footprint drops to at
+    // most half its logical size while every request still completes.
+    let comp =
+        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true, SpillCodec::Int8)?;
+    let comp_ratio =
+        comp.spill_physical_peak as f64 / comp.spill_logical_peak.max(1) as f64;
+    println!(
+        "wave (tiered, int8): wall={:.2}s hot_cap={hot_cap} blocks demoted={} \
+         cold bytes logical={} physical={} ratio={comp_ratio:.2} compressed_pages_peak={}",
+        comp.wall_s,
+        comp.demoted,
+        comp.spill_logical_peak,
+        comp.spill_physical_peak,
+        comp.compressed_peak,
+    );
+    assert_eq!(comp.deferrals, 0, "tiered serving must never defer");
+    assert_eq!(comp.out.len(), n_requests, "compressed tiered serve dropped requests");
+    if n_requests > 1 {
+        assert!(comp.compressed_peak > 0, "int8 codec never applied under spill");
+        assert!(
+            2 * comp.spill_physical_peak <= comp.spill_logical_peak,
+            "int8 must at least halve cold bytes: physical {} vs logical {}",
+            comp.spill_physical_peak,
+            comp.spill_logical_peak
+        );
     }
 
     // Shared-prefix pass: N sessions over one 1792-token template plus a

@@ -129,6 +129,46 @@ impl CachePolicy {
     }
 }
 
+/// Cold-tier spill codec selection (DESIGN.md §2 "Spill codecs"). Maps
+/// 1:1 onto the per-page codec tags in `kvcache::spill`; `Exact` is the
+/// default and keeps tiered serving bit-identical to a single-tier run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpillCodec {
+    /// Bit-exact passthrough (lossless, 1.0× ratio).
+    Exact,
+    /// Group-wise int8 angle quantization (norms exact, ~0.47× at d=16).
+    Int8,
+    /// Group-wise int4 angle quantization (norms exact, ~0.35× at d=16).
+    Int4,
+    /// Low-rank K projection, V and positions exact (~0.75× at d=16).
+    LowRankK,
+}
+
+impl SpillCodec {
+    pub fn parse(s: &str) -> Option<SpillCodec> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "none" => Some(SpillCodec::Exact),
+            "int8" | "int8-angle" => Some(SpillCodec::Int8),
+            "int4" | "int4-angle" => Some(SpillCodec::Int4),
+            "lowrank" | "lowrank-k" => Some(SpillCodec::LowRankK),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillCodec::Exact => "exact",
+            SpillCodec::Int8 => "int8",
+            SpillCodec::Int4 => "int4",
+            SpillCodec::LowRankK => "lowrank",
+        }
+    }
+
+    pub fn is_lossy(&self) -> bool {
+        *self != SpillCodec::Exact
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +199,15 @@ mod tests {
             assert_eq!(CachePolicy::parse(p.name()), Some(p));
         }
         assert_eq!(CachePolicy::parse("arc"), None);
+    }
+
+    #[test]
+    fn spill_codec_parse_roundtrip() {
+        for c in [SpillCodec::Exact, SpillCodec::Int8, SpillCodec::Int4, SpillCodec::LowRankK] {
+            assert_eq!(SpillCodec::parse(c.name()), Some(c));
+        }
+        assert_eq!(SpillCodec::parse("zstd"), None);
+        assert!(!SpillCodec::Exact.is_lossy());
+        assert!(SpillCodec::Int8.is_lossy());
     }
 }

@@ -5,11 +5,11 @@
 
 use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, HeadTask};
 use crate::buffer::{ExecBuffer, SharedBlockCache, WaveBuffer};
-use crate::config::{BufferConfig, CapacityConfig, ZoneConfig};
+use crate::config::{BufferConfig, CapacityConfig, SpillCodec, ZoneConfig};
 use crate::coordinator::AdmissionConfig;
 use crate::index::{SelectScratch, WaveIndex};
 use crate::kvcache::prefix::{ChainGeometry, PrefixMatch, PrefixRegistry};
-use crate::kvcache::{AllocError, BlockArena, SpillPolicy, TenantId, DEFAULT_TENANT};
+use crate::kvcache::{AllocError, BlockArena, CodecTag, SpillPolicy, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
 use crate::runtime::tinylm::{TinyLm, WaveInputs};
 use crate::tensor::Tensor;
@@ -69,6 +69,17 @@ pub struct LiveEngine {
     /// Cross-session shared GPU block caches, one per (layer, kv-head)
     /// slot (created lazily when prefix sharing is armed).
     shared_caches: Vec<Arc<SharedBlockCache>>,
+    /// Engine-level byte budget for the shared caches, split evenly
+    /// across all (layer, kv-head) slots. `None` = size each slot from
+    /// the engine's max context bucket (the pre-budget sizing).
+    shared_cache_budget: Option<usize>,
+    /// Cold-tier spill codec (DESIGN.md §2 "Spill codecs"): applied by
+    /// the spill store to lossy-eligible pages only. `Exact` keeps
+    /// tiered serving bit-identical.
+    spill_codec: SpillCodec,
+    /// Accuracy bound handed to every session index (mean member-key
+    /// cosine a cluster must clear before its pages may go lossy).
+    lossy_cos_floor: f32,
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
 }
@@ -119,6 +130,9 @@ impl LiveEngine {
             prefix: None,
             content_seeds: false,
             shared_caches: Vec::new(),
+            shared_cache_budget: None,
+            spill_codec: SpillCodec::Exact,
+            lossy_cos_floor: 1.0,
             metrics: Arc::new(Metrics::new()),
             scratch: SelectScratch::default(),
         })
@@ -147,6 +161,37 @@ impl LiveEngine {
     /// Whether cold-tier spill is armed.
     pub fn spill_enabled(&self) -> bool {
         self.spill_policy.is_some()
+    }
+
+    /// Select the cold-tier spill codec and the accuracy bound for
+    /// lossy placement. The codec compresses only pages the wave
+    /// index's estimation head cleared (`lossy_ok`); everything else —
+    /// and everything when `codec` is `Exact` — round-trips
+    /// bit-identically. Applies to already-live sessions and to every
+    /// session built afterwards; pages already cold keep the codec they
+    /// were written with.
+    pub fn set_spill_codec(&mut self, codec: SpillCodec, lossy_cos_floor: f32) {
+        self.spill_codec = codec;
+        // a lossless codec forbids lossy placement outright (floor 1.0),
+        // so exact-codec runs never pay the eligibility scan at demote
+        self.lossy_cos_floor = if codec.is_lossy() { lossy_cos_floor } else { 1.0 };
+        let tag = match codec {
+            SpillCodec::Exact => CodecTag::Exact,
+            SpillCodec::Int8 => CodecTag::Int8Angle,
+            SpillCodec::Int4 => CodecTag::Int4Angle,
+            SpillCodec::LowRankK => CodecTag::LowRankK,
+        };
+        self.arena.spill().set_codec(tag);
+        for st in self.states.values_mut() {
+            for idx in st.indexes.iter_mut() {
+                idx.set_lossy_cos_floor(self.lossy_cos_floor);
+            }
+        }
+    }
+
+    /// The configured cold-tier spill codec.
+    pub fn spill_codec(&self) -> SpillCodec {
+        self.spill_codec
     }
 
     /// Arm cross-session prefix sharing: prefills match the longest
@@ -429,6 +474,7 @@ impl LiveEngine {
                             if let Some(p) = &self.spill_policy {
                                 idx.set_spill_policy(Some(Arc::clone(p)));
                             }
+                            idx.set_lossy_cos_floor(self.lossy_cos_floor);
                             break idx;
                         }
                         Err(e) => {
@@ -457,20 +503,16 @@ impl LiveEngine {
                 if self.prefix.is_some() {
                     // one cross-session cache per head slot: a prefix
                     // shared by N sessions occupies one GPU slot set.
-                    // Sized from the engine's max context bucket, not
-                    // this prompt — the cache outlives every session,
-                    // so the first arrival's length must not pin it.
+                    // Sized from the engine-level byte budget (or the
+                    // max context bucket without one), never from this
+                    // prompt — the cache outlives every session, so the
+                    // first arrival's length must not pin it.
                     let slot_i = layer * kvh + h;
                     if self.shared_caches.len() <= slot_i {
                         let tpb = self.arena.tokens_per_block();
-                        let shared_cap = WaveBuffer::capacity_for(
-                            &self.bcfg,
-                            self.lm.buckets.attn_full_t,
-                            tpb,
-                        );
                         self.shared_caches.push(Arc::new(SharedBlockCache::new(
                             self.bcfg.policy,
-                            shared_cap,
+                            self.shared_slot_capacity(),
                             2 * tpb * d,
                         )));
                     }
@@ -534,6 +576,18 @@ impl LiveEngine {
             self.arena.promoted_staged_total(),
             self.arena.promoted_total(),
         );
+        // Spill-codec gauges (with the Exact codec: compressed = 0 and
+        // physical = logical + page headers).
+        let spill = self.arena.spill();
+        self.metrics.set_gauge("spill_compressed_blocks", spill.compressed_blocks() as u64);
+        self.metrics.set_gauge("spill_logical_bytes", spill.logical_bytes() as u64);
+        self.metrics.set_gauge("spill_physical_bytes", spill.physical_bytes() as u64);
+        // achieved compression as integer percent (100 = incompressible)
+        self.metrics.set_ratio_gauge(
+            "spill_compression_pct",
+            spill.physical_bytes() as u64,
+            spill.logical_bytes() as u64,
+        );
         self.metrics
             .set_gauge_max("arena_total_live_blocks_peak", self.arena.total_live_blocks() as u64);
         // Prefix-sharing gauges (zero everywhere with sharing unarmed).
@@ -546,6 +600,29 @@ impl LiveEngine {
         self.metrics.set_ratio_gauge("dedup_ratio_pct", refs, shared);
         self.metrics.set_gauge_max("shared_blocks_live_peak", shared);
         self.metrics.set_gauge_max("shared_block_refs_peak", refs);
+    }
+
+    /// Set the engine-level byte budget for the cross-session shared
+    /// GPU block caches (split evenly across every (layer, kv-head)
+    /// slot). `None` restores max-context-bucket sizing. Applies to
+    /// slots created after the call — set it before the first prefill.
+    pub fn set_shared_cache_budget_bytes(&mut self, budget: Option<usize>) {
+        self.shared_cache_budget = budget;
+    }
+
+    /// Blocks one shared-cache slot may hold under the current sizing
+    /// rule.
+    fn shared_slot_capacity(&self) -> usize {
+        let tpb = self.arena.tokens_per_block();
+        match self.shared_cache_budget {
+            Some(budget) => shared_slot_capacity_for(
+                budget,
+                self.lm.cfg.n_layers * self.lm.cfg.kv_heads,
+                tpb,
+                self.lm.cfg.d_head,
+            ),
+            None => WaveBuffer::capacity_for(&self.bcfg, self.lm.buckets.attn_full_t, tpb),
+        }
     }
 
     /// Cap the engine arena's live-block occupancy (`None` = unbounded).
@@ -902,6 +979,15 @@ impl LiveEngine {
     }
 }
 
+/// Per-slot [`SharedBlockCache`] capacity (in blocks) under an
+/// engine-level byte budget split evenly across `slots` (layer,
+/// kv-head) slots; a cached block stores K and V halves as f32. Always
+/// at least 1 so an armed cache is never a no-op.
+pub fn shared_slot_capacity_for(budget_bytes: usize, slots: usize, tpb: usize, d: usize) -> usize {
+    let block_bytes = 2 * tpb * d * 4;
+    (budget_bytes / slots.max(1) / block_bytes.max(1)).max(1)
+}
+
 /// Region-structured synthetic prompt: each 256-token region draws from
 /// its own 16-symbol alphabet, giving the topical locality of real text
 /// (used by tests, examples and benches).
@@ -931,6 +1017,16 @@ mod tests {
     /// random tokens have no structure for ANY retrieval index to exploit).
     fn prompt(n: usize, seed: u64) -> Vec<i32> {
         structured_prompt(n, seed)
+    }
+
+    #[test]
+    fn shared_cache_budget_sizing_is_even_and_nonzero() {
+        // 1 MiB over 8 slots, 2 KB cached blocks (tpb 8, d 32, f32)
+        assert_eq!(shared_slot_capacity_for(1 << 20, 8, 8, 32), 64);
+        // a budget smaller than one block still arms the cache
+        assert_eq!(shared_slot_capacity_for(100, 8, 8, 32), 1);
+        // degenerate slot count is guarded, not a divide-by-zero
+        assert_eq!(shared_slot_capacity_for(1 << 20, 0, 8, 32), 512);
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub struct WaveIndex {
     /// full hot tier demotes this head's coldest clusters first
     /// (ArenaFull means "demote, then retry" before "defer").
     spill_policy: Option<Arc<dyn SpillPolicy>>,
+    /// Accuracy bound for lossy cold storage: a cluster may be stored
+    /// through a lossy spill codec only if the mean cosine of its
+    /// member keys to its centroid is at least this floor (tight
+    /// clusters ⇒ the estimation head's error bound absorbs the
+    /// quantization noise). 1.0 disables lossy placement entirely.
+    lossy_cos_floor: f32,
 }
 
 impl WaveIndex {
@@ -197,6 +203,7 @@ impl WaveIndex {
             access_epoch: Vec::new(),
             recent: Mutex::new(Vec::new()),
             spill_policy: None,
+            lossy_cos_floor: 0.5,
         };
         // Sink tokens stay out of the index (position-based steady zone).
         let sink = idx.cfg.steady_sink.min(n);
@@ -516,17 +523,92 @@ impl WaveIndex {
         self.cluster_blocks[c as usize].iter().filter(|r| self.store.is_hot(**r)).count()
     }
 
-    /// Demote every hot block of cluster `c` into the cold tier;
-    /// returns how many blocks were demoted.
+    /// Demote every hot block of cluster `c` into the cold tier with
+    /// the exact codec (bit-identical round-trip); returns how many
+    /// blocks were demoted.
     pub fn demote_cluster(&mut self, c: u32) -> usize {
+        self.demote_cluster_with(c, false)
+    }
+
+    /// Demote every hot block of cluster `c`, marking its pages
+    /// lossy-eligible when the estimation head cleared the cluster
+    /// (`lossy_ok` — see [`WaveIndex::cluster_lossy_ok`]). The spill
+    /// store applies its configured codec only to eligible pages.
+    pub fn demote_cluster_with(&mut self, c: u32, lossy_ok: bool) -> usize {
         let refs: Vec<BlockRef> = self.cluster_blocks[c as usize].clone();
         let mut n = 0;
         for r in refs {
-            if self.store.demote_block(r) {
+            if self.store.demote_block_with(r, lossy_ok) {
                 n += 1;
             }
         }
         n
+    }
+
+    /// Set the accuracy bound for lossy cold placement (mean member-key
+    /// cosine to centroid a cluster must clear; 1.0 forbids lossy
+    /// storage outright).
+    pub fn set_lossy_cos_floor(&mut self, floor: f32) {
+        self.lossy_cos_floor = floor;
+    }
+
+    /// Whether the estimation head clears cluster `c` for lossy cold
+    /// storage. Two rules, both required:
+    ///
+    /// * positional — no token of the cluster may sit in the steady
+    ///   zone: sink positions (`< steady_sink`) and the trailing local
+    ///   window (`>= n_seen - steady_local`) are always stored exact
+    ///   (they are attended every step, so quantization noise there is
+    ///   unamortized);
+    /// * dispersion — the mean cosine of member keys to the cluster
+    ///   centroid must reach `lossy_cos_floor`: the estimator's Eq. 3
+    ///   error bound tightens with intra-cluster coherence, so only
+    ///   tight clusters can absorb direction-quantization noise inside
+    ///   the bound.
+    ///
+    /// Conservative on any degenerate input (empty cluster, zero-norm
+    /// centroid or keys): not cleared ⇒ stored exact.
+    pub fn cluster_lossy_ok(&self, c: u32) -> bool {
+        if self.lossy_cos_floor >= 1.0 {
+            return false;
+        }
+        let pos = self.meta.cluster_tokens(c as usize);
+        if pos.is_empty() {
+            return false;
+        }
+        let min = *pos.iter().min().unwrap() as usize;
+        let max = *pos.iter().max().unwrap() as usize;
+        if min < self.cfg.steady_sink || max + self.cfg.steady_local >= self.n_seen {
+            return false;
+        }
+        let cent = self.meta.centroid(c as usize);
+        let cn = cent.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if !(cn > 0.0) {
+            return false;
+        }
+        let (mut keys, mut vals) = (Vec::new(), Vec::new());
+        for r in &self.cluster_blocks[c as usize] {
+            // reads through the spill tier for already-cold members (a
+            // partially promoted cluster must not regress to exact on
+            // re-demotion); the bool only reports hot vs cold
+            self.store.copy_block_kv(*r, &mut keys, &mut vals);
+        }
+        let d = self.d;
+        let n = keys.len() / d;
+        if n == 0 {
+            return false;
+        }
+        let mut mean_cos = 0.0f32;
+        for t in 0..n {
+            let k = &keys[t * d..(t + 1) * d];
+            let dot: f32 = k.iter().zip(cent).map(|(a, b)| a * b).sum();
+            let kn = k.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if kn > 0.0 {
+                mean_cos += dot / (kn * cn);
+            }
+        }
+        mean_cos /= n as f32;
+        mean_cos >= self.lossy_cos_floor
     }
 
     /// Promote every cold block of cluster `c` back into the hot tier.
@@ -573,6 +655,7 @@ impl WaveIndex {
                 cluster: c as u32,
                 last_access: self.access_epoch[c].load(Ordering::Relaxed),
                 hot_blocks: hot,
+                lossy_ok: self.cluster_lossy_ok(c as u32),
             });
         }
         policy.order(&mut cands);
@@ -582,7 +665,7 @@ impl WaveIndex {
             if freed >= need_blocks {
                 break;
             }
-            let n = self.demote_cluster(cand.cluster);
+            let n = self.demote_cluster_with(cand.cluster, cand.lossy_ok);
             if n > 0 {
                 freed += n;
                 demoted.push(cand.cluster);
@@ -828,6 +911,32 @@ mod tests {
             seen[p as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn lossy_clearance_respects_zone_rules_and_floor() {
+        let d = 16;
+        let (k, v) = mk_ctx(512, d, 1);
+        let mut idx = WaveIndex::build(small_cfg(), d, 1024, &k, &v, 7);
+        let m = idx.meta().m();
+        assert!(m > 0);
+        // permissive floor: interior clusters clear (build keeps every
+        // cluster outside the steady zones, so the zone rules pass)
+        idx.set_lossy_cos_floor(0.0);
+        assert!((0..m).any(|c| idx.cluster_lossy_ok(c as u32)));
+        // positional rule, trailing window: widening `steady_local`
+        // until it swallows the clustered span pulls every cluster back
+        // to exact storage regardless of the floor
+        idx.cfg.steady_local = idx.n_seen;
+        assert!((0..m).all(|c| !idx.cluster_lossy_ok(c as u32)));
+        idx.cfg.steady_local = small_cfg().steady_local;
+        // positional rule, sink: same with the sink boundary
+        idx.cfg.steady_sink = idx.n_seen;
+        assert!((0..m).all(|c| !idx.cluster_lossy_ok(c as u32)));
+        idx.cfg.steady_sink = small_cfg().steady_sink;
+        // an unreachable floor forbids lossy outright again
+        idx.set_lossy_cos_floor(1.0);
+        assert!((0..m).all(|c| !idx.cluster_lossy_ok(c as u32)));
     }
 
     #[test]

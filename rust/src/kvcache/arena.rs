@@ -510,8 +510,15 @@ impl BlockArena {
     /// footprint never grows. Panics if the id is already cold (a block
     /// must never be in two tiers).
     pub fn demote_for(&self, tenant: TenantId, id: u64, data: BlockData) {
+        self.demote_for_with(tenant, id, data, false)
+    }
+
+    /// [`BlockArena::demote_for`] with an accuracy-bound bit: when the
+    /// caller cleared this block for lossy storage, the spill store's
+    /// configured codec compresses the page (exact otherwise).
+    pub fn demote_for_with(&self, tenant: TenantId, id: u64, data: BlockData, lossy_ok: bool) {
         debug_assert_eq!(data.keys.len(), self.tpb * self.d);
-        self.spill.write(id, &data);
+        self.spill.write_with(id, &data, lossy_ok);
         let mut free = self.free.lock().unwrap();
         free.push(data);
         self.free_blocks.fetch_add(1, Ordering::Relaxed);

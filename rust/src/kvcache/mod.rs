@@ -37,7 +37,10 @@ pub mod store;
 
 pub use arena::{AllocError, BlockArena, BlockData, TenantId, DEFAULT_TENANT};
 pub use prefix::{ChainGeometry, PrefixMatch, PrefixRegistry, SealedSlot};
-pub use spill::{ColdestFirst, LargestColdFirst, SpillCandidate, SpillPolicy, SpillStore};
+pub use spill::{
+    CodecTag, ColdestFirst, ExactCodec, Int4AngleCodec, Int8AngleCodec, LargestColdFirst,
+    LowRankKCodec, PageCodec, SpillCandidate, SpillPolicy, SpillStore,
+};
 pub use store::{BlockRef, HeadStore, KvStore};
 
 /// Tokens that fit in one physical block of `block_bytes`, given the head

@@ -30,7 +30,7 @@
 //! arena's canonical handle does.
 
 use super::arena::BlockArena;
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -157,12 +157,20 @@ pub struct PrefixMatch {
 struct PrefixEntry {
     covered: usize,
     slots: Arc<Vec<SealedSlot>>,
+    /// Prefills this entry served (eviction weight: hot templates
+    /// survive cold churn).
+    hits: u64,
+    /// Registry tick of the last hit (or registration), the LRU
+    /// tiebreak among equally-hit entries.
+    last_use: u64,
 }
 
 struct RegState {
     entries: HashMap<u64, PrefixEntry>,
-    /// Insertion order for FIFO eviction at `max_entries`.
-    order: VecDeque<u64>,
+    /// Monotone use counter stamping `last_use` (hit-weighted LRU
+    /// eviction at `max_entries`: victim = least hits, then least
+    /// recently used).
+    tick: u64,
 }
 
 /// Cross-session prefix registry over one [`BlockArena`].
@@ -184,7 +192,7 @@ impl PrefixRegistry {
             arena,
             geom,
             max_entries,
-            state: Mutex::new(RegState { entries: HashMap::new(), order: VecDeque::new() }),
+            state: Mutex::new(RegState { entries: HashMap::new(), tick: 0 }),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             matched_tokens: AtomicU64::new(0),
@@ -221,13 +229,19 @@ impl PrefixRegistry {
     /// accounting (the serving path — the engine checks out the result).
     pub fn match_longest(&self, tokens: &[i32]) -> Option<PrefixMatch> {
         let links = self.links(tokens);
-        let st = self.state.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
         for &(covered, key) in links.iter().rev() {
-            if let Some(e) = st.entries.get(&key) {
+            if st.entries.contains_key(&key) {
+                st.tick += 1;
+                let tick = st.tick;
+                let e = st.entries.get_mut(&key).expect("checked above");
                 debug_assert_eq!(e.covered, covered);
+                e.hits += 1;
+                e.last_use = tick;
+                let slots = Arc::clone(&e.slots);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 self.matched_tokens.fetch_add(covered as u64, Ordering::Relaxed);
-                return Some(PrefixMatch { key, covered, slots: Arc::clone(&e.slots) });
+                return Some(PrefixMatch { key, covered, slots });
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
@@ -266,7 +280,9 @@ impl PrefixRegistry {
     /// (`HeadStore::seal_block`). Returns false (and pins nothing) if
     /// the key is already registered or the registry is disabled; the
     /// caller's sealed blocks then simply free when its last holder
-    /// exits. Evicts the oldest entry when over capacity.
+    /// exits. Over capacity, evicts the least-hit entry (ties broken by
+    /// least-recent use, then key): hot templates survive a churn of
+    /// one-shot prefixes that plain FIFO would let push them out.
     pub fn register(&self, key: u64, covered: usize, slots: Vec<SealedSlot>) -> bool {
         if self.max_entries == 0 {
             return false;
@@ -283,13 +299,19 @@ impl PrefixRegistry {
                 }
             }
         }
-        st.entries.insert(key, PrefixEntry { covered, slots: Arc::new(slots) });
-        st.order.push_back(key);
+        st.tick += 1;
+        let tick = st.tick;
+        st.entries
+            .insert(key, PrefixEntry { covered, slots: Arc::new(slots), hits: 0, last_use: tick });
         while st.entries.len() > self.max_entries {
-            let oldest = st.order.pop_front().expect("order tracks entries");
-            if let Some(e) = st.entries.remove(&oldest) {
-                Self::unpin_entry(&self.arena, &e);
-            }
+            let victim = st
+                .entries
+                .iter()
+                .min_by_key(|(k, e)| (e.hits, e.last_use, **k))
+                .map(|(k, _)| *k)
+                .expect("non-empty while over capacity");
+            let e = st.entries.remove(&victim).expect("victim came from this map");
+            Self::unpin_entry(&self.arena, &e);
         }
         true
     }
@@ -311,7 +333,6 @@ impl PrefixRegistry {
         for (_, e) in st.entries.drain() {
             Self::unpin_entry(&self.arena, &e);
         }
-        st.order.clear();
     }
 
     /// Registered prefixes.
@@ -447,6 +468,35 @@ mod tests {
         reg.clear();
         assert_eq!(arena.live_blocks(), 0);
         assert_eq!(reg.pinned_blocks(), 0);
+    }
+
+    #[test]
+    fn hot_templates_survive_cold_churn() {
+        let arena = BlockArena::shared(4, 256);
+        let g = geom();
+        let reg = PrefixRegistry::new(arena, g, 2);
+        // a "hot template" prompt, registered then hit repeatedly
+        let hot: Vec<i32> = (0..32).collect();
+        let hot_link = reg.links(&hot)[0];
+        assert!(reg.register(hot_link.1, hot_link.0, vec![SealedSlot::default()]));
+        for _ in 0..3 {
+            assert!(reg.match_longest(&hot).is_some());
+        }
+        // churn: a stream of one-shot prefixes, each registered once and
+        // never matched again — under FIFO the hot template would be the
+        // oldest entry and die on the second registration
+        for i in 0..8 {
+            let cold: Vec<i32> = (100 + 32 * i..100 + 32 * i + 32).collect();
+            let link = reg.links(&cold)[0];
+            assert!(reg.register(link.1, link.0, vec![SealedSlot::default()]));
+            assert!(reg.len() <= 2);
+            assert!(
+                reg.contains(hot_link.1),
+                "hit-weighted eviction must keep the hot template (round {i})"
+            );
+        }
+        // the template is still servable after all the churn
+        assert!(reg.match_longest(&hot).is_some());
     }
 
     #[test]

@@ -8,10 +8,29 @@
 //!
 //! Pages are keyed by the same engine-global block ids the hot tier
 //! uses, so mapping tables and block caches never re-key when a block
-//! changes tier. Serialization is little-endian per element and
-//! round-trips every f32 bit pattern exactly (`tests/spill.rs` asserts
-//! demote→promote bit-identity), which is what lets a tiered replay
-//! emit tokens bit-identical to a single-tier run.
+//! changes tier. Every page carries a little-endian header (codec tag +
+//! physical payload length), and the payload is produced by a pluggable
+//! [`PageCodec`] (DESIGN.md §2 "Spill codecs"):
+//!
+//! - [`CodecTag::Exact`] (the default) serializes f32/u32 LE per element
+//!   and round-trips every f32 bit pattern exactly (`tests/spill.rs`
+//!   asserts demote→promote bit-identity), which is what lets a tiered
+//!   replay emit tokens bit-identical to a single-tier run.
+//! - [`CodecTag::Int8Angle`] / [`CodecTag::Int4Angle`] quantize in the
+//!   angle domain: each K/V vector keeps its norm as an exact f32 and
+//!   quantizes only the direction, group-wise with a per-group
+//!   scale/zero-point (SPHERICAL-KV-style rate allocation: magnitudes
+//!   dominate attention logits, so they stay exact).
+//! - [`CodecTag::LowRankK`] projects only the K half onto a fixed
+//!   orthonormal rank-`d/2` basis (low-rank K-projection); V and
+//!   positions stay exact.
+//!
+//! Lossy codecs are only ever applied when the caller passes
+//! `lossy_ok = true` ([`SpillStore::write_with`]) — the wave index's
+//! estimation head makes that call per cluster, and sink/steady-local
+//! tokens are always stored exact. Decoding dispatches on the per-page
+//! tag, so a store holding a mix of codecs round-trips every page
+//! through the same `peek`/`stage`/`take` paths.
 //!
 //! Concurrency: all state sits behind internal locks, so spilled pages
 //! can be written, staged (async prefetch) and read from `&self` — the
@@ -23,11 +42,446 @@
 
 use super::arena::BlockData;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Bytes of the per-page LE header: `[tag u8][reserved u8][tokens u16]
+/// [payload_len u32]`.
+pub const PAGE_HEADER_BYTES: usize = 8;
+
+/// Quantization group width (elements sharing one scale/zero-point).
+const ANGLE_GROUP: usize = 16;
+
+/// Per-page codec identifier, stored in the page header so mixed-codec
+/// stores round-trip (the write-time codec choice never needs to be
+/// remembered anywhere else).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CodecTag {
+    /// Bit-exact LE passthrough (the default; lossless).
+    Exact = 0,
+    /// Group-wise int8 direction quantization, exact per-vector norms.
+    Int8Angle = 1,
+    /// Group-wise int4 direction quantization, exact per-vector norms.
+    Int4Angle = 2,
+    /// K projected onto a fixed orthonormal rank-d/2 basis; V/pos exact.
+    LowRankK = 3,
+}
+
+impl CodecTag {
+    pub fn from_u8(t: u8) -> Option<CodecTag> {
+        match t {
+            0 => Some(CodecTag::Exact),
+            1 => Some(CodecTag::Int8Angle),
+            2 => Some(CodecTag::Int4Angle),
+            3 => Some(CodecTag::LowRankK),
+            _ => None,
+        }
+    }
+
+    pub fn is_lossy(self) -> bool {
+        self != CodecTag::Exact
+    }
+}
+
+/// A per-page spill codec. Implementations are stateless statics
+/// (dispatched by [`codec_for`]); geometry comes in per call so one
+/// instance serves every store.
+pub trait PageCodec: Send + Sync {
+    fn tag(&self) -> CodecTag;
+    fn name(&self) -> &'static str;
+    /// Worst-case payload bytes for a `(tpb, d)` page. A codec whose
+    /// worst case exceeds the exact payload is skipped (the store falls
+    /// back to `Exact`) so compressed payloads always fit their page.
+    fn max_payload_bytes(&self, tpb: usize, d: usize) -> usize;
+    /// Encode a full block into `out`; returns the payload length.
+    fn encode(&self, data: &BlockData, tpb: usize, d: usize, out: &mut [u8]) -> usize;
+    /// Decode a payload produced by `encode` back into a full block.
+    fn decode(&self, payload: &[u8], tpb: usize, d: usize, out: &mut BlockData);
+}
+
+/// Uncompressed payload bytes of one `(tpb, d)` page: K + V halves as
+/// f32 LE plus positions as u32 LE. This is the page's *logical* size
+/// regardless of which codec wrote it.
+pub fn raw_payload_bytes(tpb: usize, d: usize) -> usize {
+    2 * tpb * d * 4 + tpb * 4
+}
+
+// ---------------------------------------------------------------------
+// Exact passthrough
+// ---------------------------------------------------------------------
+
+/// Bit-exact LE serialization (the PR 3 page format, now as a codec).
+pub struct ExactCodec;
+
+impl PageCodec for ExactCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Exact
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn max_payload_bytes(&self, tpb: usize, d: usize) -> usize {
+        raw_payload_bytes(tpb, d)
+    }
+
+    fn encode(&self, data: &BlockData, tpb: usize, d: usize, out: &mut [u8]) -> usize {
+        let len = raw_payload_bytes(tpb, d);
+        debug_assert!(out.len() >= len);
+        let mut off = 0;
+        for x in data.keys.iter().chain(data.vals.iter()) {
+            out[off..off + 4].copy_from_slice(&x.to_le_bytes());
+            off += 4;
+        }
+        for p in &data.pos {
+            out[off..off + 4].copy_from_slice(&p.to_le_bytes());
+            off += 4;
+        }
+        len
+    }
+
+    fn decode(&self, payload: &[u8], tpb: usize, d: usize, out: &mut BlockData) {
+        let half = tpb * d;
+        debug_assert_eq!(payload.len(), raw_payload_bytes(tpb, d));
+        let mut off = 0;
+        for i in 0..half {
+            out.keys[i] = f32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        for i in 0..half {
+            out.vals[i] = f32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        for i in 0..tpb {
+            out.pos[i] = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Angle-domain group quantizers (int8 / int4)
+// ---------------------------------------------------------------------
+
+fn angle_groups(d: usize) -> usize {
+    d.div_ceil(ANGLE_GROUP)
+}
+
+/// Encoded bytes of one angle-quantized vector: exact norm (f32) +
+/// per-group (zero-point f32, scale f32) + `code_bytes` of codes.
+fn angle_vec_bytes(d: usize, code_bytes: usize) -> usize {
+    4 + 8 * angle_groups(d) + code_bytes
+}
+
+/// Quantize one vector's direction group-wise at `levels` quantization
+/// steps, appending `[norm][lo, scale]*groups` then the raw (unpacked)
+/// codes to `codes`. The norm is stored exact; only the unit direction
+/// is quantized (angle-domain: attention logits scale with the norm, so
+/// it gets full precision).
+fn encode_angle_vec(x: &[f32], levels: u32, header: &mut Vec<u8>, codes: &mut Vec<u8>) {
+    let norm = x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32;
+    header.extend_from_slice(&norm.to_le_bytes());
+    let inv = if norm.is_finite() && norm > 0.0 { 1.0 / norm } else { 0.0 };
+    for g in x.chunks(ANGLE_GROUP) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for v in g {
+            let u = v * inv;
+            let u = if u.is_finite() { u } else { 0.0 };
+            lo = lo.min(u);
+            hi = hi.max(u);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            lo = 0.0;
+            hi = 0.0;
+        }
+        let scale = if hi > lo { (hi - lo) / (levels - 1) as f32 } else { 0.0 };
+        header.extend_from_slice(&lo.to_le_bytes());
+        header.extend_from_slice(&scale.to_le_bytes());
+        for v in g {
+            let u = v * inv;
+            let u = if u.is_finite() { u } else { 0.0 };
+            let q = if scale > 0.0 {
+                (((u - lo) / scale).round() as i64).clamp(0, (levels - 1) as i64) as u8
+            } else {
+                0
+            };
+            codes.push(q);
+        }
+    }
+}
+
+/// Inverse of [`encode_angle_vec`] given the unpacked codes.
+fn decode_angle_vec(norm: f32, groups: &[u8], codes: &[u8], out: &mut [f32]) {
+    for (gi, g) in out.chunks_mut(ANGLE_GROUP).enumerate() {
+        let lo = f32::from_le_bytes(groups[gi * 8..gi * 8 + 4].try_into().unwrap());
+        let scale = f32::from_le_bytes(groups[gi * 8 + 4..gi * 8 + 8].try_into().unwrap());
+        for (j, v) in g.iter_mut().enumerate() {
+            let q = codes[gi * ANGLE_GROUP + j] as f32;
+            *v = norm * (lo + q * scale);
+        }
+    }
+}
+
+fn angle_encode_page(
+    data: &BlockData,
+    tpb: usize,
+    d: usize,
+    levels: u32,
+    pack4: bool,
+    out: &mut [u8],
+) -> usize {
+    let mut buf: Vec<u8> = Vec::with_capacity(out.len());
+    let mut codes: Vec<u8> = Vec::with_capacity(d);
+    for half in [&data.keys, &data.vals] {
+        for t in 0..tpb {
+            codes.clear();
+            encode_angle_vec(&half[t * d..(t + 1) * d], levels, &mut buf, &mut codes);
+            if pack4 {
+                for pair in codes.chunks(2) {
+                    let hi = pair.get(1).copied().unwrap_or(0);
+                    buf.push((pair[0] & 0x0f) | (hi << 4));
+                }
+            } else {
+                buf.extend_from_slice(&codes);
+            }
+        }
+    }
+    for p in &data.pos {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+    out[..buf.len()].copy_from_slice(&buf);
+    buf.len()
+}
+
+fn angle_decode_page(
+    payload: &[u8],
+    tpb: usize,
+    d: usize,
+    pack4: bool,
+    out: &mut BlockData,
+) {
+    let groups = angle_groups(d);
+    let code_bytes = if pack4 { d.div_ceil(2) } else { d };
+    let vec_bytes = angle_vec_bytes(d, code_bytes);
+    let mut codes: Vec<u8> = vec![0; groups * ANGLE_GROUP];
+    let mut off = 0;
+    for hi in 0..2 {
+        for t in 0..tpb {
+            let norm = f32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            let gstart = off + 4;
+            let cstart = gstart + 8 * groups;
+            if pack4 {
+                for (j, c) in codes.iter_mut().enumerate().take(d) {
+                    let b = payload[cstart + j / 2];
+                    *c = if j % 2 == 0 { b & 0x0f } else { b >> 4 };
+                }
+            } else {
+                codes[..d].copy_from_slice(&payload[cstart..cstart + d]);
+            }
+            let half = if hi == 0 { &mut out.keys } else { &mut out.vals };
+            decode_angle_vec(
+                norm,
+                &payload[gstart..gstart + 8 * groups],
+                &codes,
+                &mut half[t * d..(t + 1) * d],
+            );
+            off += vec_bytes;
+        }
+    }
+    for i in 0..tpb {
+        out.pos[i] = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+        off += 4;
+    }
+}
+
+/// Group-wise int8 angle quantizer: exact norms, 256-level directions.
+pub struct Int8AngleCodec;
+
+impl PageCodec for Int8AngleCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Int8Angle
+    }
+
+    fn name(&self) -> &'static str {
+        "int8-angle"
+    }
+
+    fn max_payload_bytes(&self, tpb: usize, d: usize) -> usize {
+        2 * tpb * angle_vec_bytes(d, d) + tpb * 4
+    }
+
+    fn encode(&self, data: &BlockData, tpb: usize, d: usize, out: &mut [u8]) -> usize {
+        angle_encode_page(data, tpb, d, 256, false, out)
+    }
+
+    fn decode(&self, payload: &[u8], tpb: usize, d: usize, out: &mut BlockData) {
+        angle_decode_page(payload, tpb, d, false, out)
+    }
+}
+
+/// Group-wise int4 angle quantizer: exact norms, 16-level directions,
+/// two codes per byte.
+pub struct Int4AngleCodec;
+
+impl PageCodec for Int4AngleCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Int4Angle
+    }
+
+    fn name(&self) -> &'static str {
+        "int4-angle"
+    }
+
+    fn max_payload_bytes(&self, tpb: usize, d: usize) -> usize {
+        2 * tpb * angle_vec_bytes(d, d.div_ceil(2)) + tpb * 4
+    }
+
+    fn encode(&self, data: &BlockData, tpb: usize, d: usize, out: &mut [u8]) -> usize {
+        angle_encode_page(data, tpb, d, 16, true, out)
+    }
+
+    fn decode(&self, payload: &[u8], tpb: usize, d: usize, out: &mut BlockData) {
+        angle_decode_page(payload, tpb, d, true, out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Low-rank K projection
+// ---------------------------------------------------------------------
+
+fn lowrank_rank(d: usize) -> usize {
+    (d / 2).max(1)
+}
+
+/// The fixed orthonormal `[r, d]` projection basis for head dim `d`,
+/// derived deterministically (seeded Gram-Schmidt) and cached — every
+/// store and every session projects through the same basis, so pages
+/// decode identically wherever they were encoded.
+fn lowrank_basis(d: usize) -> Arc<Vec<f32>> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Vec<f32>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(b) = cache.lock().unwrap().get(&d) {
+        return Arc::clone(b);
+    }
+    let r = lowrank_rank(d);
+    let mut rng = crate::util::rng::Rng::new(0x4c52_4b42 ^ d as u64);
+    let mut basis: Vec<f32> = Vec::with_capacity(r * d);
+    while basis.len() < r * d {
+        let mut v = rng.normal_vec(d);
+        for p in 0..basis.len() / d {
+            let row = &basis[p * d..(p + 1) * d];
+            let dot: f32 = v.iter().zip(row).map(|(a, b)| a * b).sum();
+            for (vi, ri) in v.iter_mut().zip(row) {
+                *vi -= dot * ri;
+            }
+        }
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if n > 1e-3 {
+            for vi in &mut v {
+                *vi /= n;
+            }
+            basis.extend_from_slice(&v);
+        }
+    }
+    let b = Arc::new(basis);
+    cache.lock().unwrap().entry(d).or_insert_with(|| Arc::clone(&b));
+    b
+}
+
+/// Low-rank K-projection codec: K vectors stored as rank-`d/2`
+/// coefficients in a fixed orthonormal basis (Efficient-Low-Rank-
+/// Attention-style); V and positions stay bit-exact.
+pub struct LowRankKCodec;
+
+impl PageCodec for LowRankKCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::LowRankK
+    }
+
+    fn name(&self) -> &'static str {
+        "lowrank-k"
+    }
+
+    fn max_payload_bytes(&self, tpb: usize, d: usize) -> usize {
+        tpb * lowrank_rank(d) * 4 + tpb * d * 4 + tpb * 4
+    }
+
+    fn encode(&self, data: &BlockData, tpb: usize, d: usize, out: &mut [u8]) -> usize {
+        let r = lowrank_rank(d);
+        let basis = lowrank_basis(d);
+        let mut off = 0;
+        for t in 0..tpb {
+            let x = &data.keys[t * d..(t + 1) * d];
+            for j in 0..r {
+                let row = &basis[j * d..(j + 1) * d];
+                let c: f32 = x.iter().zip(row).map(|(a, b)| a * b).sum();
+                out[off..off + 4].copy_from_slice(&c.to_le_bytes());
+                off += 4;
+            }
+        }
+        for v in &data.vals {
+            out[off..off + 4].copy_from_slice(&v.to_le_bytes());
+            off += 4;
+        }
+        for p in &data.pos {
+            out[off..off + 4].copy_from_slice(&p.to_le_bytes());
+            off += 4;
+        }
+        off
+    }
+
+    fn decode(&self, payload: &[u8], tpb: usize, d: usize, out: &mut BlockData) {
+        let r = lowrank_rank(d);
+        let basis = lowrank_basis(d);
+        let mut off = 0;
+        for t in 0..tpb {
+            let x = &mut out.keys[t * d..(t + 1) * d];
+            x.fill(0.0);
+            for j in 0..r {
+                let c = f32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+                off += 4;
+                let row = &basis[j * d..(j + 1) * d];
+                for (xi, ri) in x.iter_mut().zip(row) {
+                    *xi += c * ri;
+                }
+            }
+        }
+        for i in 0..tpb * d {
+            out.vals[i] = f32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+        for i in 0..tpb {
+            out.pos[i] = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+            off += 4;
+        }
+    }
+}
+
+/// The static codec instance for a tag.
+pub fn codec_for(tag: CodecTag) -> &'static dyn PageCodec {
+    static EXACT: ExactCodec = ExactCodec;
+    static INT8: Int8AngleCodec = Int8AngleCodec;
+    static INT4: Int4AngleCodec = Int4AngleCodec;
+    static LOWRANK: LowRankKCodec = LowRankKCodec;
+    match tag {
+        CodecTag::Exact => &EXACT,
+        CodecTag::Int8Angle => &INT8,
+        CodecTag::Int4Angle => &INT4,
+        CodecTag::LowRankK => &LOWRANK,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The page store
+// ---------------------------------------------------------------------
 
 /// The simulated page file: a flat byte heap carved into fixed-size
 /// pages (the mmap stand-in), an id → page index, and a free page list.
+/// Compressed payloads occupy a prefix of their page, so the free list
+/// and page recycling are codec-oblivious; the header records how many
+/// payload bytes are physically meaningful.
 struct SpillFile {
     data: Vec<u8>,
     index: HashMap<u64, u32>,
@@ -38,9 +492,14 @@ struct SpillFile {
 pub struct SpillStore {
     d: usize,
     tpb: usize,
-    /// Serialized bytes of one page: K + V halves as f32 LE, positions
-    /// as u32 LE.
+    /// Full page stride: header + worst-case (exact) payload.
     page_bytes: usize,
+    /// Uncompressed payload bytes per page (the logical size).
+    raw_bytes: usize,
+    /// Configured codec tag for lossy-eligible writes (`write_with`
+    /// with `lossy_ok = true`); exact-required writes always use
+    /// [`CodecTag::Exact`] regardless.
+    codec: AtomicU8,
     file: Mutex<SpillFile>,
     /// Async-prefetch staging area: pages read ahead of promotion by
     /// pool jobs, consumed (without a second file read) when the block
@@ -51,14 +510,21 @@ pub struct SpillStore {
     dropped_total: AtomicU64,
     staged_total: AtomicU64,
     staged_hits: AtomicU64,
+    /// Physical bytes (header + encoded payload) of resident cold pages.
+    physical_bytes: AtomicU64,
+    /// Resident cold pages written with a lossy codec.
+    compressed_blocks: AtomicU64,
 }
 
 impl SpillStore {
     pub fn new(d: usize, tpb: usize) -> SpillStore {
+        let raw = raw_payload_bytes(tpb, d);
         SpillStore {
             d,
             tpb,
-            page_bytes: 2 * tpb * d * 4 + tpb * 4,
+            page_bytes: PAGE_HEADER_BYTES + raw,
+            raw_bytes: raw,
+            codec: AtomicU8::new(CodecTag::Exact as u8),
             file: Mutex::new(SpillFile {
                 data: Vec::new(),
                 index: HashMap::new(),
@@ -70,49 +536,63 @@ impl SpillStore {
             dropped_total: AtomicU64::new(0),
             staged_total: AtomicU64::new(0),
             staged_hits: AtomicU64::new(0),
+            physical_bytes: AtomicU64::new(0),
+            compressed_blocks: AtomicU64::new(0),
         }
     }
 
-    /// Serialized size of one cold page in bytes.
+    /// Serialized size of one cold page in bytes (header + exact
+    /// payload: the per-page *capacity*, not what a compressed page
+    /// physically uses — see [`SpillStore::physical_bytes`]).
     pub fn page_bytes(&self) -> usize {
         self.page_bytes
     }
 
-    fn serialize_into(&self, data: &BlockData, out: &mut [u8]) {
-        debug_assert_eq!(out.len(), self.page_bytes);
-        let mut off = 0;
-        for x in data.keys.iter().chain(data.vals.iter()) {
-            out[off..off + 4].copy_from_slice(&x.to_le_bytes());
-            off += 4;
-        }
-        for p in &data.pos {
-            out[off..off + 4].copy_from_slice(&p.to_le_bytes());
-            off += 4;
-        }
+    /// Select the codec used for lossy-eligible writes. Pages already
+    /// resident keep the codec they were written with (the per-page tag
+    /// dispatches decoding), so switching mid-run is safe.
+    pub fn set_codec(&self, tag: CodecTag) {
+        self.codec.store(tag as u8, Ordering::Relaxed);
     }
 
-    fn deserialize_into(&self, page: &[u8], out: &mut BlockData) {
-        debug_assert_eq!(page.len(), self.page_bytes);
-        debug_assert_eq!(out.keys.len(), self.tpb * self.d);
-        let half = self.tpb * self.d;
-        let mut off = 0;
-        for i in 0..half {
-            out.keys[i] = f32::from_le_bytes(page[off..off + 4].try_into().unwrap());
-            off += 4;
-        }
-        for i in 0..half {
-            out.vals[i] = f32::from_le_bytes(page[off..off + 4].try_into().unwrap());
-            off += 4;
-        }
-        for i in 0..self.tpb {
-            out.pos[i] = u32::from_le_bytes(page[off..off + 4].try_into().unwrap());
-            off += 4;
-        }
+    /// The codec applied when a write is lossy-eligible.
+    pub fn codec_tag(&self) -> CodecTag {
+        CodecTag::from_u8(self.codec.load(Ordering::Relaxed)).unwrap_or(CodecTag::Exact)
     }
 
-    /// Write (demote) one block's data into a cold page. Panics if the
-    /// id is already cold — a block must never be in two tiers.
+    fn read_header(page: &[u8]) -> (CodecTag, usize) {
+        let tag = CodecTag::from_u8(page[0]).expect("corrupt spill page header");
+        let plen = u32::from_le_bytes(page[4..8].try_into().unwrap()) as usize;
+        (tag, plen)
+    }
+
+    fn decode_page(&self, page: &[u8], out: &mut BlockData) {
+        let (tag, plen) = Self::read_header(page);
+        codec_for(tag).decode(
+            &page[PAGE_HEADER_BYTES..PAGE_HEADER_BYTES + plen],
+            self.tpb,
+            self.d,
+            out,
+        );
+    }
+
+    /// Write (demote) one block's data into a cold page with the exact
+    /// codec — bit-identical round-trip guaranteed. Panics if the id is
+    /// already cold: a block must never be in two tiers.
     pub fn write(&self, id: u64, data: &BlockData) {
+        self.write_with(id, data, false);
+    }
+
+    /// Write (demote) one block's data into a cold page. With
+    /// `lossy_ok` the configured codec is applied (falling back to
+    /// exact when its worst case would not fit the page); without it
+    /// the page is always exact — the caller's accuracy bound, not the
+    /// store, decides whether lossy storage is acceptable.
+    pub fn write_with(&self, id: u64, data: &BlockData, lossy_ok: bool) {
+        let mut tag = if lossy_ok { self.codec_tag() } else { CodecTag::Exact };
+        if codec_for(tag).max_payload_bytes(self.tpb, self.d) > self.raw_bytes {
+            tag = CodecTag::Exact;
+        }
         let mut f = self.file.lock().unwrap();
         assert!(!f.index.contains_key(&id), "block {id} already in the cold tier");
         let page = match f.free.pop() {
@@ -125,16 +605,44 @@ impl SpillStore {
         };
         let start = page as usize * self.page_bytes;
         let pb = self.page_bytes;
-        // split the borrow: serialize into the page slice in place
+        // split the borrow: encode into the page slice in place
         let slice = &mut f.data[start..start + pb];
-        self.serialize_into(data, slice);
+        let plen =
+            codec_for(tag).encode(data, self.tpb, self.d, &mut slice[PAGE_HEADER_BYTES..]);
+        debug_assert!(plen <= self.raw_bytes);
+        slice[0] = tag as u8;
+        slice[1] = 0;
+        slice[2..4].copy_from_slice(&(self.tpb as u16).to_le_bytes());
+        slice[4..8].copy_from_slice(&(plen as u32).to_le_bytes());
         f.index.insert(id, page);
         self.writes_total.fetch_add(1, Ordering::Relaxed);
+        self.physical_bytes.fetch_add((PAGE_HEADER_BYTES + plen) as u64, Ordering::Relaxed);
+        if tag.is_lossy() {
+            self.compressed_blocks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Account a page's removal (caller holds the file lock and has
+    /// already read the page's header).
+    fn retire_page(&self, tag: CodecTag, plen: usize) {
+        self.physical_bytes.fetch_sub((PAGE_HEADER_BYTES + plen) as u64, Ordering::Relaxed);
+        if tag.is_lossy() {
+            self.compressed_blocks.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 
     /// Whether `id` currently lives in the cold tier.
     pub fn contains(&self, id: u64) -> bool {
         self.file.lock().unwrap().index.contains_key(&id)
+    }
+
+    /// The codec tag of a resident cold page (None if `id` is not
+    /// cold). Test/report introspection for the accuracy-bound rule.
+    pub fn page_tag(&self, id: u64) -> Option<CodecTag> {
+        let f = self.file.lock().unwrap();
+        let &page = f.index.get(&id)?;
+        let start = page as usize * self.page_bytes;
+        Some(Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]).0)
     }
 
     /// Copy a cold page into `out` without changing residency (the
@@ -146,15 +654,16 @@ impl SpillStore {
             return false;
         };
         let start = page as usize * self.page_bytes;
-        self.deserialize_into(&f.data[start..start + self.page_bytes], out);
+        self.decode_page(&f.data[start..start + self.page_bytes], out);
         self.reads_total.fetch_add(1, Ordering::Relaxed);
         true
     }
 
     /// Append the first `n_elems` key and value f32s of a cold page
-    /// directly to `k_out` / `v_out` (no intermediate allocation — the
-    /// cold-read data path of execution-buffer assembly). Residency is
-    /// unchanged. Returns false if `id` is not cold.
+    /// directly to `k_out` / `v_out` (the cold-read data path of
+    /// execution-buffer assembly). Exact pages stream straight from the
+    /// page bytes; compressed pages decode through their codec first.
+    /// Residency is unchanged. Returns false if `id` is not cold.
     pub fn peek_kv_into(
         &self,
         id: u64,
@@ -169,16 +678,25 @@ impl SpillStore {
         let half = self.tpb * self.d;
         debug_assert!(n_elems <= half);
         let start = page as usize * self.page_bytes;
-        k_out.reserve(n_elems);
-        v_out.reserve(n_elems);
-        for i in 0..n_elems {
-            let off = start + 4 * i;
-            k_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
-        }
-        let vstart = start + 4 * half;
-        for i in 0..n_elems {
-            let off = vstart + 4 * i;
-            v_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
+        let (tag, _plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
+        if tag == CodecTag::Exact {
+            let base = start + PAGE_HEADER_BYTES;
+            k_out.reserve(n_elems);
+            v_out.reserve(n_elems);
+            for i in 0..n_elems {
+                let off = base + 4 * i;
+                k_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
+            }
+            let vstart = base + 4 * half;
+            for i in 0..n_elems {
+                let off = vstart + 4 * i;
+                v_out.push(f32::from_le_bytes(f.data[off..off + 4].try_into().unwrap()));
+            }
+        } else {
+            let mut tmp = BlockData::zeroed(self.tpb, self.d);
+            self.decode_page(&f.data[start..start + self.page_bytes], &mut tmp);
+            k_out.extend_from_slice(&tmp.keys[..n_elems]);
+            v_out.extend_from_slice(&tmp.vals[..n_elems]);
         }
         self.reads_total.fetch_add(1, Ordering::Relaxed);
         true
@@ -195,7 +713,7 @@ impl SpillStore {
         };
         let mut data = BlockData::zeroed(self.tpb, self.d);
         let start = page as usize * self.page_bytes;
-        self.deserialize_into(&f.data[start..start + self.page_bytes], &mut data);
+        self.decode_page(&f.data[start..start + self.page_bytes], &mut data);
         self.reads_total.fetch_add(1, Ordering::Relaxed);
         self.staged_total.fetch_add(1, Ordering::Relaxed);
         // lock order: file → staged (held file lock keeps the page from
@@ -213,6 +731,9 @@ impl SpillStore {
         let mut f = self.file.lock().unwrap();
         let page = f.index.remove(&id)?;
         f.free.push(page);
+        let start = page as usize * self.page_bytes;
+        let (tag, plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
+        self.retire_page(tag, plen);
         let staged = self.staged.lock().unwrap().remove(&id);
         match staged {
             Some(data) => {
@@ -223,8 +744,7 @@ impl SpillStore {
                 Some(true)
             }
             None => {
-                let start = page as usize * self.page_bytes;
-                self.deserialize_into(&f.data[start..start + self.page_bytes], out);
+                self.decode_page(&f.data[start..start + self.page_bytes], out);
                 self.reads_total.fetch_add(1, Ordering::Relaxed);
                 Some(false)
             }
@@ -240,6 +760,9 @@ impl SpillStore {
             return false;
         };
         f.free.push(page);
+        let start = page as usize * self.page_bytes;
+        let (tag, plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
+        self.retire_page(tag, plen);
         self.staged.lock().unwrap().remove(&id);
         self.dropped_total.fetch_add(1, Ordering::Relaxed);
         true
@@ -250,9 +773,28 @@ impl SpillStore {
         self.file.lock().unwrap().index.len()
     }
 
-    /// Bytes of cold pages currently holding blocks.
+    /// Bytes of cold pages currently holding blocks (page-stride
+    /// capacity — the tier's reserved footprint).
     pub fn cold_bytes(&self) -> usize {
         self.cold_blocks() * self.page_bytes
+    }
+
+    /// Uncompressed (logical) payload bytes of resident cold blocks —
+    /// what the cold tier would hold with every page exact.
+    pub fn logical_bytes(&self) -> usize {
+        self.cold_blocks() * self.raw_bytes
+    }
+
+    /// Physical bytes (header + encoded payload) of resident cold
+    /// blocks — what actually crosses the spill channel. The achieved
+    /// compression ratio is `physical_bytes / logical_bytes`.
+    pub fn physical_bytes(&self) -> usize {
+        self.physical_bytes.load(Ordering::Relaxed) as usize
+    }
+
+    /// Resident cold blocks stored with a lossy codec.
+    pub fn compressed_blocks(&self) -> usize {
+        self.compressed_blocks.load(Ordering::Relaxed) as usize
     }
 
     /// Total bytes of the backing "file" (live + recycled pages — the
@@ -285,7 +827,8 @@ impl SpillStore {
 
 /// One cluster's spill-relevant metadata, fed to a [`SpillPolicy`] by
 /// `WaveIndex::demote_until` (the wave index owns the access epochs the
-/// policy ranks by).
+/// policy ranks by and the estimation-head error bound behind
+/// `lossy_ok`).
 #[derive(Clone, Copy, Debug)]
 pub struct SpillCandidate {
     pub cluster: u32,
@@ -293,6 +836,12 @@ pub struct SpillCandidate {
     pub last_access: u64,
     /// Hot blocks the cluster currently holds (what demotion frees).
     pub hot_blocks: usize,
+    /// Whether the wave index's estimation head cleared this cluster
+    /// for lossy storage: its tokens sit outside the sink/steady-local
+    /// zones and its keys are tight enough around the centroid that the
+    /// estimator's error bound absorbs quantization noise. Clusters
+    /// with `lossy_ok = false` are always stored exact.
+    pub lossy_ok: bool,
 }
 
 /// Pluggable victim ordering for demotion. Implementations sort the
@@ -350,12 +899,32 @@ mod tests {
         b
     }
 
+    /// Finite, well-scaled data (what lossy codecs are actually fed).
+    fn gaussian(tpb: usize, d: usize, seed: u64) -> BlockData {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut b = BlockData::zeroed(tpb, d);
+        for x in b.keys.iter_mut().chain(b.vals.iter_mut()) {
+            *x = 2.0 * rng.normal_f32();
+        }
+        for (i, p) in b.pos.iter_mut().enumerate() {
+            *p = i as u32;
+        }
+        b
+    }
+
     fn bits(b: &BlockData) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
         (
             b.keys.iter().map(|x| x.to_bits()).collect(),
             b.vals.iter().map(|x| x.to_bits()).collect(),
             b.pos.clone(),
         )
+    }
+
+    fn cos(a: &[f32], b: &[f32]) -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        dot / (na * nb).max(1e-12)
     }
 
     #[test]
@@ -368,11 +937,162 @@ mod tests {
         assert!(s.contains(9));
         assert_eq!(s.cold_blocks(), 1);
         assert_eq!(s.cold_bytes(), s.page_bytes());
+        assert_eq!(s.page_tag(9), Some(CodecTag::Exact));
         let mut out = BlockData::zeroed(4, 8);
         assert_eq!(s.take_into(9, &mut out), Some(false));
         assert_eq!(bits(&out), want);
         assert_eq!(s.cold_blocks(), 0);
+        assert_eq!(s.physical_bytes(), 0);
         assert!(s.take_into(9, &mut out).is_none());
+    }
+
+    #[test]
+    fn exact_stays_exact_even_with_a_lossy_codec_configured() {
+        let s = SpillStore::new(8, 4);
+        s.set_codec(CodecTag::Int8Angle);
+        let b = filled(4, 8, 0x0000_0001); // denormals
+        let want = bits(&b);
+        // plain write and write_with(lossy_ok = false) both stay exact
+        s.write(1, &b);
+        s.write_with(2, &b, false);
+        assert_eq!(s.page_tag(1), Some(CodecTag::Exact));
+        assert_eq!(s.page_tag(2), Some(CodecTag::Exact));
+        assert_eq!(s.compressed_blocks(), 0);
+        for id in [1, 2] {
+            let mut out = BlockData::zeroed(4, 8);
+            assert!(s.peek_into(id, &mut out));
+            assert_eq!(bits(&out), want);
+        }
+    }
+
+    #[test]
+    fn int8_angle_preserves_norms_and_directions() {
+        let (tpb, d) = (4, 16);
+        let b = gaussian(tpb, d, 7);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int8Angle);
+        s.write_with(1, &b, true);
+        assert_eq!(s.page_tag(1), Some(CodecTag::Int8Angle));
+        assert_eq!(s.compressed_blocks(), 1);
+        let mut out = BlockData::zeroed(tpb, d);
+        assert!(s.peek_into(1, &mut out));
+        assert_eq!(out.pos, b.pos, "positions must stay exact");
+        for t in 0..tpb {
+            for (orig, dec) in [(&b.keys, &out.keys), (&b.vals, &out.vals)] {
+                let x = &orig[t * d..(t + 1) * d];
+                let y = &dec[t * d..(t + 1) * d];
+                let c = cos(x, y);
+                assert!(c > 0.999, "int8 direction drifted: cos = {c}");
+                let nx: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let ny: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+                assert!((nx - ny).abs() <= 0.02 * nx.max(1e-6), "norm drifted: {nx} vs {ny}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_angle_decodes_within_loose_bounds() {
+        let (tpb, d) = (4, 16);
+        let b = gaussian(tpb, d, 11);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int4Angle);
+        s.write_with(1, &b, true);
+        assert_eq!(s.page_tag(1), Some(CodecTag::Int4Angle));
+        let mut out = BlockData::zeroed(tpb, d);
+        assert!(s.peek_into(1, &mut out));
+        assert_eq!(out.pos, b.pos);
+        for t in 0..tpb {
+            let c = cos(&b.keys[t * d..(t + 1) * d], &out.keys[t * d..(t + 1) * d]);
+            assert!(c > 0.95, "int4 direction drifted: cos = {c}");
+        }
+        // int4 pages are smaller than int8 pages
+        let s8 = SpillStore::new(d, tpb);
+        s8.set_codec(CodecTag::Int8Angle);
+        s8.write_with(1, &b, true);
+        assert!(s.physical_bytes() < s8.physical_bytes());
+    }
+
+    #[test]
+    fn lowrank_k_keeps_values_and_positions_exact() {
+        let (tpb, d) = (4, 16);
+        let b = gaussian(tpb, d, 13);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::LowRankK);
+        s.write_with(1, &b, true);
+        assert_eq!(s.page_tag(1), Some(CodecTag::LowRankK));
+        let mut out = BlockData::zeroed(tpb, d);
+        assert!(s.peek_into(1, &mut out));
+        let want = bits(&b);
+        assert_eq!(out.vals.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), want.1);
+        assert_eq!(out.pos, b.pos);
+        // decoded K is the basis projection: finite and norm-bounded
+        for (orig, dec) in b.keys.iter().zip(&out.keys) {
+            assert!(dec.is_finite());
+            assert!(dec.abs() <= orig.abs() + 20.0);
+        }
+        assert!(s.physical_bytes() < s.logical_bytes());
+    }
+
+    #[test]
+    fn mixed_codec_store_round_trips_every_page() {
+        let (tpb, d) = (4, 16);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int8Angle);
+        let exact = filled(tpb, d, 0x7fc0_0001);
+        let lossy = gaussian(tpb, d, 3);
+        s.write_with(10, &exact, false);
+        s.write_with(11, &lossy, true);
+        s.set_codec(CodecTag::Int4Angle);
+        s.write_with(12, &lossy, true);
+        assert_eq!(s.page_tag(10), Some(CodecTag::Exact));
+        assert_eq!(s.page_tag(11), Some(CodecTag::Int8Angle));
+        assert_eq!(s.page_tag(12), Some(CodecTag::Int4Angle));
+        assert_eq!(s.compressed_blocks(), 2);
+        assert!(s.physical_bytes() < 3 * (s.page_bytes() - PAGE_HEADER_BYTES));
+        // every page decodes through its own tag, whatever is configured
+        let mut out = BlockData::zeroed(tpb, d);
+        assert_eq!(s.take_into(10, &mut out), Some(false));
+        assert_eq!(bits(&out), bits(&exact), "exact page must stay bit-exact");
+        for id in [11, 12] {
+            assert_eq!(s.take_into(id, &mut out), Some(false));
+            assert!(out.keys.iter().all(|x| x.is_finite()));
+            assert_eq!(out.pos, lossy.pos);
+        }
+        assert_eq!(s.compressed_blocks(), 0);
+        assert_eq!(s.physical_bytes(), 0);
+    }
+
+    #[test]
+    fn int8_halves_physical_bytes_vs_logical() {
+        let (tpb, d) = (4, 16);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int8Angle);
+        for id in 0..8u64 {
+            s.write_with(id, &gaussian(tpb, d, id), true);
+        }
+        assert_eq!(s.compressed_blocks(), 8);
+        assert!(
+            2 * s.physical_bytes() <= s.logical_bytes(),
+            "int8 must at least halve the spill bytes: {} vs {}",
+            s.physical_bytes(),
+            s.logical_bytes()
+        );
+    }
+
+    #[test]
+    fn codec_falls_back_to_exact_when_it_cannot_fit() {
+        // d=2: the angle header (norm + group scale/zp) exceeds the raw
+        // vector bytes, so the quantizer cannot fit the page
+        let (tpb, d) = (4, 2);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int8Angle);
+        let b = filled(tpb, d, 0x7f80_0000); // includes inf bits
+        let want = bits(&b);
+        s.write_with(1, &b, true);
+        assert_eq!(s.page_tag(1), Some(CodecTag::Exact), "oversized codec must fall back");
+        let mut out = BlockData::zeroed(tpb, d);
+        assert_eq!(s.take_into(1, &mut out), Some(false));
+        assert_eq!(bits(&out), want);
     }
 
     #[test]
@@ -426,6 +1146,28 @@ mod tests {
     }
 
     #[test]
+    fn compressed_pages_read_back_through_kv_prefix_path() {
+        let (tpb, d) = (4, 16);
+        let s = SpillStore::new(d, tpb);
+        s.set_codec(CodecTag::Int8Angle);
+        let b = gaussian(tpb, d, 5);
+        s.write_with(1, &b, true);
+        let mut full = BlockData::zeroed(tpb, d);
+        assert!(s.peek_into(1, &mut full));
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        assert!(s.peek_kv_into(1, 2 * d, &mut k, &mut v));
+        assert_eq!(
+            k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            full.keys[..2 * d].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "kv-prefix read must match the full decode"
+        );
+        assert_eq!(
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            full.vals[..2 * d].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     #[should_panic(expected = "already in the cold tier")]
     fn double_demote_panics() {
         let s = SpillStore::new(4, 4);
@@ -439,6 +1181,7 @@ mod tests {
             cluster,
             last_access,
             hot_blocks,
+            lossy_ok: false,
         };
         let base = vec![mk(0, 5, 2), mk(1, 1, 1), mk(2, 1, 4), mk(3, 9, 8)];
         let mut c = base.clone();

@@ -266,16 +266,24 @@ impl HeadStore {
         }
     }
 
-    /// Demote one block into the cold tier. Returns false if it was
-    /// already cold — or shared: a refcounted block is pinned hot while
-    /// any owner holds it (demoting one owner's view would stall every
-    /// sharer on the spill tier and break the charge-once accounting).
+    /// Demote one block into the cold tier with the exact codec
+    /// (bit-identical round-trip). Returns false if it was already cold
+    /// — or shared: a refcounted block is pinned hot while any owner
+    /// holds it (demoting one owner's view would stall every sharer on
+    /// the spill tier and break the charge-once accounting).
     pub fn demote_block(&mut self, r: BlockRef) -> bool {
+        self.demote_block_with(r, false)
+    }
+
+    /// Demote one block, marking its cold page lossy-eligible when the
+    /// caller's accuracy bound allows (`lossy_ok` — the spill store
+    /// applies its configured codec only to eligible pages).
+    pub fn demote_block_with(&mut self, r: BlockRef, lossy_ok: bool) -> bool {
         let b = &mut self.blocks[r.idx as usize];
         debug_assert_eq!(b.id, r.block, "BlockRef from a different store");
         match b.data.take() {
             Some(BlockPayload::Hot(data)) => {
-                self.arena.demote_for(self.tenant, b.id, data);
+                self.arena.demote_for_with(self.tenant, b.id, data, lossy_ok);
                 true
             }
             Some(shared @ BlockPayload::Shared(_)) => {
@@ -390,6 +398,13 @@ impl HeadStore {
     /// Demote up to `n` hot blocks, oldest first; returns how many were
     /// demoted (the driver-level spill path for modelled workloads).
     pub fn demote_oldest(&mut self, n: usize) -> usize {
+        self.demote_oldest_with(n, false)
+    }
+
+    /// [`HeadStore::demote_oldest`] with an explicit lossy-eligibility
+    /// bit for every demoted page (pressure-harness drivers that model
+    /// the accuracy bound at the trace level rather than per cluster).
+    pub fn demote_oldest_with(&mut self, n: usize, lossy_ok: bool) -> usize {
         let mut done = 0;
         for i in 0..self.blocks.len() {
             if done >= n {
@@ -402,7 +417,7 @@ impl HeadStore {
             if !hot {
                 continue;
             }
-            if self.demote_block(BlockRef { block: id, idx: i as u32, len }) {
+            if self.demote_block_with(BlockRef { block: id, idx: i as u32, len }, lossy_ok) {
                 done += 1;
             }
         }
@@ -534,12 +549,18 @@ impl KvStore {
     /// Demote up to `n` hot blocks across heads (head order, oldest
     /// blocks first); returns how many were demoted.
     pub fn demote_blocks(&mut self, n: usize) -> usize {
+        self.demote_blocks_with(n, false)
+    }
+
+    /// [`KvStore::demote_blocks`] with an explicit lossy-eligibility bit
+    /// applied to every demoted page.
+    pub fn demote_blocks_with(&mut self, n: usize, lossy_ok: bool) -> usize {
         let mut done = 0;
         for s in self.stores.iter_mut() {
             if done >= n {
                 break;
             }
-            done += s.demote_oldest(n - done);
+            done += s.demote_oldest_with(n - done, lossy_ok);
         }
         done
     }

@@ -166,9 +166,11 @@ pub fn decode_step(
         }
         // Tiered arena: part of the uncached fetches first climb from
         // the cold spill tier into hot RAM (fig13/fig14 account for the
-        // new tier through this term).
+        // new tier through this term). A lossy spill codec moves only
+        // `spill_codec_ratio` of the logical bytes over the channel —
+        // compression as an effective-bandwidth multiplier.
         if fetch > 0.0 && profile.spill_frac > 0.0 {
-            br.spill_s = fetch * profile.spill_frac / hw.spill_bw;
+            br.spill_s = fetch * profile.spill_frac * profile.spill_codec_ratio / hw.spill_bw;
         }
     }
 
@@ -356,6 +358,36 @@ mod tests {
         let br = decode_step(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b);
         assert!(br.spill_s > 0.0);
         assert_eq!(decode_step(&m, &hw, &retroinfer(0.85), ctx, b).spill_s, 0.0);
+    }
+
+    #[test]
+    fn spill_codec_scales_effective_bandwidth() {
+        let (m, hw) = setup();
+        let ctx = 1 << 20;
+        let b = 4;
+        // the spill term scales linearly with the physical/logical ratio
+        let s_exact = decode_step(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b).spill_s;
+        let s_int8 =
+            decode_step(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 0.47), ctx, b).spill_s;
+        let s_int4 =
+            decode_step(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 0.35), ctx, b).spill_s;
+        assert!((s_int8 / s_exact - 0.47).abs() < 1e-9, "{s_int8} vs {s_exact}");
+        assert!(s_int4 < s_int8, "a smaller ratio moves fewer bytes");
+        // throughput is monotone in the ratio: compression never hurts
+        let t_exact = decode_throughput(&m, &hw, &retroinfer_spilled(0.85, 0.9), ctx, b).unwrap();
+        let t_int8 =
+            decode_throughput(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 0.47), ctx, b)
+                .unwrap();
+        let t_int4 =
+            decode_throughput(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 0.35), ctx, b)
+                .unwrap();
+        assert!(t_int8 >= t_exact, "compression cannot slow the channel: {t_int8} vs {t_exact}");
+        assert!(t_int4 >= t_int8, "monotone in ratio: {t_int4} vs {t_int8}");
+        // an incompressible codec (ratio 1.0) is exactly the uncompressed row
+        let t_unit =
+            decode_throughput(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 1.0), ctx, b)
+                .unwrap();
+        assert_eq!(t_unit, t_exact);
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct SystemProfile {
     /// come from the cold spill tier (tiered arena: hot RAM tier capped
     /// below the working set). 0 = single-tier.
     pub spill_frac: f64,
+    /// Physical/logical byte ratio of cold pages under the configured
+    /// spill codec (DESIGN.md §2 "Spill codecs"): compressed pages move
+    /// proportionally fewer bytes over the spill channel, scaling its
+    /// effective bandwidth by 1/ratio. 1.0 = exact (incompressible).
+    pub spill_codec_ratio: f64,
     /// Fraction of per-sequence KV bytes deduplicated across the batch
     /// by cross-session prefix sharing (refcounted blocks + the shared
     /// GPU prefix cache): those bytes are resident once per batch, and
@@ -85,6 +90,7 @@ fn base(name: &'static str) -> SystemProfile {
         exact_fixed: 68,
         pcie_fetch_frac: 0.0,
         spill_frac: 0.0,
+        spill_codec_ratio: 1.0,
         shared_prefix_frac: 0.0,
         hit_ratio: 0.0,
         est_frac: 0.0,
@@ -192,6 +198,23 @@ pub fn retroinfer_spilled(hit_ratio: f64, spill_frac: f64) -> SystemProfile {
     SystemProfile { name: "retroinfer-spill", spill_frac, ..retroinfer(hit_ratio) }
 }
 
+/// RetroInfer over a tiered arena with a lossy spill codec on the cold
+/// pages: the same spilled fraction crosses the spill channel at
+/// `codec_ratio` (physical/logical) of its logical size, so effective
+/// spill bandwidth scales by `1/codec_ratio` (≈0.47 for int8 angle
+/// quantization at d=16 — the fig13 measured cell).
+pub fn retroinfer_spilled_compressed(
+    hit_ratio: f64,
+    spill_frac: f64,
+    codec_ratio: f64,
+) -> SystemProfile {
+    SystemProfile {
+        name: "retroinfer-spill-comp",
+        spill_codec_ratio: codec_ratio,
+        ..retroinfer_spilled(hit_ratio, spill_frac)
+    }
+}
+
 /// RetroInfer with cross-session prefix sharing: `shared_frac` of each
 /// sequence's KV is a template prefix deduplicated across the batch
 /// (DESIGN.md §2 "Prefix sharing & CoW") — resident once in host
@@ -259,6 +282,19 @@ mod tests {
         let p = retroinfer(0.85);
         assert!(!p.kv_on_gpu);
         assert!(p.gpu_cache_frac + p.meta_frac < 0.15);
+    }
+
+    #[test]
+    fn compressed_spill_profile_inherits_and_scales() {
+        let p = retroinfer_spilled_compressed(0.85, 0.3, 0.47);
+        assert_eq!(p.name, "retroinfer-spill-comp");
+        assert_eq!(p.spill_frac, 0.3);
+        assert_eq!(p.spill_codec_ratio, 0.47);
+        // everything else matches the uncompressed spill profile
+        let u = retroinfer_spilled(0.85, 0.3);
+        assert_eq!(u.spill_codec_ratio, 1.0);
+        assert_eq!(p.hit_ratio, u.hit_ratio);
+        assert_eq!(p.pcie_fetch_frac, u.pcie_fetch_frac);
     }
 
     #[test]

@@ -38,8 +38,9 @@
 //! quantify the dedup; resident blocks stay ≤ cap even when the
 //! nominal (unshared) footprint would exceed it.
 
+use crate::config::SpillCodec;
 use crate::coordinator::{Action, AdmissionConfig, Batcher, Request, Scheduler};
-use crate::kvcache::{AllocError, BlockArena, BlockRef, HeadStore, KvStore, TenantId};
+use crate::kvcache::{AllocError, BlockArena, BlockRef, CodecTag, HeadStore, KvStore, TenantId};
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
 
@@ -67,6 +68,12 @@ pub struct PressureConfig {
     /// cold tier and retries — total live bytes may exceed the hot cap
     /// while hot-resident bytes never do.
     pub spill: bool,
+    /// Spill codec applied to demoted pages (spill runs). The harness
+    /// drives zero-filled KV, so lossy eligibility is decided at the
+    /// trace level: every demoted page is lossy-eligible when the codec
+    /// is lossy (DESIGN.md §2 "Spill codecs"); the report's
+    /// logical/physical cold-byte peaks quantify the achieved ratio.
+    pub spill_codec: SpillCodec,
     /// Shared-prefix tokens per request (0 = off). Requests carrying a
     /// `prefix_hash` share this many leading prompt tokens: the first
     /// such request allocates + seals + pins them; later ones attach
@@ -89,6 +96,7 @@ impl Default for PressureConfig {
             headroom_frac: 0.25,
             max_batch: 4,
             spill: false,
+            spill_codec: SpillCodec::Exact,
             shared_prefix_tokens: 0,
         }
     }
@@ -133,6 +141,15 @@ pub struct PressureReport {
     pub peak_total_live_blocks: usize,
     /// Peak cold-tier residency in blocks.
     pub peak_cold_blocks: usize,
+    /// Peak uncompressed (logical) bytes of resident cold pages.
+    pub peak_cold_logical_bytes: usize,
+    /// Peak encoded (physical) bytes of resident cold pages — with a
+    /// lossy codec this is what actually crosses the spill channel
+    /// (`peak_cold_physical_bytes / peak_cold_logical_bytes` ≈ the
+    /// achieved compression ratio).
+    pub peak_cold_physical_bytes: usize,
+    /// Peak resident cold pages stored with a lossy codec.
+    pub peak_compressed_blocks: usize,
     /// Cold blocks left after the trace drained (must be 0: finished
     /// sessions drop their cold blocks).
     pub final_cold_blocks: usize,
@@ -268,7 +285,11 @@ impl ModelRegistry {
 /// Demote hot blocks from live stores (session id order, oldest blocks
 /// first) until `need` were freed or nothing remains; the driver-level
 /// "demote, then retry" path of a spill-enabled run.
-fn demote_from_stores(stores: &mut HashMap<u64, KvStore>, need: usize) -> usize {
+fn demote_from_stores(
+    stores: &mut HashMap<u64, KvStore>,
+    need: usize,
+    lossy_ok: bool,
+) -> usize {
     let mut ids: Vec<u64> = stores.keys().copied().collect();
     ids.sort_unstable();
     let mut freed = 0;
@@ -276,7 +297,7 @@ fn demote_from_stores(stores: &mut HashMap<u64, KvStore>, need: usize) -> usize 
         if freed >= need {
             break;
         }
-        freed += stores.get_mut(&id).unwrap().demote_blocks(need - freed);
+        freed += stores.get_mut(&id).unwrap().demote_blocks_with(need - freed, lossy_ok);
     }
     freed
 }
@@ -285,6 +306,14 @@ fn demote_from_stores(stores: &mut HashMap<u64, KvStore>, need: usize) -> usize 
 pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> PressureReport {
     let arena = BlockArena::shared(cfg.d, cfg.block_bytes);
     arena.set_capacity_blocks(Some(cfg.capacity_blocks));
+    arena.spill().set_codec(match cfg.spill_codec {
+        SpillCodec::Exact => CodecTag::Exact,
+        SpillCodec::Int8 => CodecTag::Int8Angle,
+        SpillCodec::Int4 => CodecTag::Int4Angle,
+        SpillCodec::LowRankK => CodecTag::LowRankK,
+    });
+    // zero-filled KV: the accuracy bound degenerates to the codec choice
+    let lossy_ok = cfg.spill && cfg.spill_codec.is_lossy();
     let tenants: BTreeSet<TenantId> = trace.iter().map(|r| r.tenant).collect();
     if let Some(q) = cfg.tenant_quota_blocks {
         for &t in &tenants {
@@ -405,7 +434,7 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                     }
                     // full hot tier means demote-then-retry, not defer:
                     // spill the oldest live blocks and rebuild
-                    let freed = demote_from_stores(&mut stores, est);
+                    let freed = demote_from_stores(&mut stores, est, lossy_ok);
                     rep.demotions += freed;
                     if freed == 0 {
                         break;
@@ -439,7 +468,7 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                             let got = stores.get_mut(&id).unwrap().promote_blocks(2);
                             rep.promotions += got;
                             if got < 2 {
-                                let freed = demote_from_stores(&mut stores, 4);
+                                let freed = demote_from_stores(&mut stores, 4, lossy_ok);
                                 rep.demotions += freed;
                                 if freed > 0 {
                                     let more =
@@ -482,7 +511,7 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                             rep.append_failures += still.len();
                             break;
                         }
-                        let freed = demote_from_stores(&mut stores, 2 * still.len());
+                        let freed = demote_from_stores(&mut stores, 2 * still.len(), lossy_ok);
                         rep.demotions += freed;
                         if freed == 0 {
                             rep.append_failures += still.len();
@@ -501,6 +530,12 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         rep.peak_live_blocks = rep.peak_live_blocks.max(live);
         rep.peak_resident_bytes = rep.peak_resident_bytes.max(resident);
         rep.peak_cold_blocks = rep.peak_cold_blocks.max(cold);
+        rep.peak_cold_logical_bytes =
+            rep.peak_cold_logical_bytes.max(arena.spill().logical_bytes());
+        rep.peak_cold_physical_bytes =
+            rep.peak_cold_physical_bytes.max(arena.spill().physical_bytes());
+        rep.peak_compressed_blocks =
+            rep.peak_compressed_blocks.max(arena.spill().compressed_blocks());
         rep.peak_total_live_blocks = rep.peak_total_live_blocks.max(live + cold);
         rep.peak_shared_blocks = rep.peak_shared_blocks.max(arena.shared_blocks_live());
         rep.peak_shared_refs = rep.peak_shared_refs.max(arena.shared_session_refs());

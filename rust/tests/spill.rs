@@ -19,7 +19,9 @@ use retroinfer::buffer::{BlockHome, ExecBuffer, MappingTable, WaveBuffer};
 use retroinfer::config::{BufferConfig, ZoneConfig};
 use retroinfer::index::{SelectScratch, WaveIndex};
 use retroinfer::kvcache::arena::BlockData;
-use retroinfer::kvcache::{BlockArena, BlockRef, ColdestFirst, HeadStore, DEFAULT_TENANT};
+use retroinfer::kvcache::{
+    BlockArena, BlockRef, CodecTag, ColdestFirst, HeadStore, DEFAULT_TENANT,
+};
 use retroinfer::prop_assert;
 use retroinfer::prop_assert_eq;
 use retroinfer::util::prop::check;
@@ -354,6 +356,239 @@ fn prop_spilled_pressure_invariants_across_seeds() {
         prop_assert!(rep.peak_live_blocks <= cfg.capacity_blocks, "hot cap broken");
         Ok(())
     });
+}
+
+/// Spill-codec tentpole (DESIGN.md §2 "Spill codecs"), part 1: the
+/// Exact codec is a bit-identical passthrough for EVERY f32 bit
+/// pattern — NaN payloads, denormals, negative zero, infinities — even
+/// when a lossy codec is configured store-wide, because the default
+/// demote path is never lossy-eligible. Pages must carry the Exact tag.
+#[test]
+fn prop_exact_pages_roundtrip_all_bit_patterns_under_lossy_config() {
+    check("spill-exact-under-lossy-config", 8, |rng| {
+        let d = 8;
+        let arena = BlockArena::shared(d, 256); // tpb = 4
+        arena.spill().set_codec(CodecTag::Int8Angle);
+        let mut hs = HeadStore::new_in(Arc::clone(&arena));
+        let n = 9 + rng.below(40);
+        let keys: Vec<f32> =
+            (0..n * d).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let vals: Vec<f32> =
+            (0..n * d).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        let pos: Vec<u32> = (0..n as u32).collect();
+        let refs = hs.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+        let snap: Vec<(Vec<u32>, Vec<u32>)> = refs
+            .iter()
+            .map(|r| {
+                (
+                    hs.block_keys(*r).iter().map(|x| x.to_bits()).collect(),
+                    hs.block_vals(*r).iter().map(|x| x.to_bits()).collect(),
+                )
+            })
+            .collect();
+        for r in &refs {
+            prop_assert!(hs.demote_block(*r)); // not lossy-eligible
+        }
+        for r in &refs {
+            prop_assert_eq!(arena.spill().page_tag(r.block), Some(CodecTag::Exact));
+        }
+        prop_assert_eq!(arena.spill().compressed_blocks(), 0);
+        prop_assert_eq!(
+            arena.spill().physical_bytes(),
+            refs.len() * arena.spill().page_bytes()
+        );
+        let mut order: Vec<usize> = (0..refs.len()).collect();
+        rng.shuffle(&mut order);
+        for &i in &order {
+            prop_assert!(hs.promote_block(refs[i]).unwrap().is_some());
+        }
+        for (r, want) in refs.iter().zip(&snap) {
+            let got_k: Vec<u32> = hs.block_keys(*r).iter().map(|x| x.to_bits()).collect();
+            let got_v: Vec<u32> = hs.block_vals(*r).iter().map(|x| x.to_bits()).collect();
+            prop_assert!(got_k == want.0, "keys changed bits under a configured lossy codec");
+            prop_assert!(got_v == want.1, "vals changed bits under a configured lossy codec");
+        }
+        Ok(())
+    });
+}
+
+/// Spill-codec tentpole, part 2: lossy codecs hold a configured
+/// attention-mass recall floor on the shared topic fixture
+/// (`tests/integration.rs`): scoring on pages decoded from int8/int4
+/// cold storage selects a top-`budget` set that carries nearly all the
+/// true softmax mass of the ideal top-`budget` set.
+#[test]
+fn lossy_codecs_hold_attention_mass_recall_floor() {
+    use retroinfer::attention::attention_weights;
+    use retroinfer::tensor::dot;
+
+    let d = 16;
+    let n = 512;
+    let budget = 64;
+    for (tag, floor) in [(CodecTag::Int8Angle, 0.95f64), (CodecTag::Int4Angle, 0.75f64)] {
+        let mut rng = Rng::new(42);
+        let dirs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(d)).collect();
+        let mut keys = Vec::with_capacity(n * d);
+        for i in 0..n {
+            let t = &dirs[i % 8]; // topics interleave token-by-token
+            for j in 0..d {
+                keys.push(2.0 * t[j] + 0.3 * rng.normal_f32());
+            }
+        }
+        let vals = rng.normal_vec(n * d);
+        let arena = BlockArena::shared(d, 512); // tpb = 4
+        arena.spill().set_codec(tag);
+        let mut hs = HeadStore::new_in(Arc::clone(&arena));
+        let pos: Vec<u32> = (0..n as u32).collect();
+        let refs = hs.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+        let ref_pos: Vec<Vec<u32>> = refs.iter().map(|r| hs.block_pos(*r).to_vec()).collect();
+        for r in &refs {
+            assert!(hs.demote_block_with(*r, true)); // lossy-eligible
+        }
+        assert_eq!(arena.spill().compressed_blocks(), refs.len(), "{tag:?} not applied");
+        assert!(arena.spill().physical_bytes() < arena.spill().logical_bytes());
+        // decoded keys, scattered back into position order
+        let mut dec = vec![0.0f32; n * d];
+        for (r, ps) in refs.iter().zip(&ref_pos) {
+            let (mut k, mut v) = (Vec::new(), Vec::new());
+            assert!(!hs.copy_block_kv(*r, &mut k, &mut v), "block must read cold");
+            for (t, &p) in ps.iter().enumerate() {
+                let p = p as usize;
+                dec[p * d..(p + 1) * d].copy_from_slice(&k[t * d..(t + 1) * d]);
+            }
+        }
+        let top = |scores: &[f32]| -> Vec<usize> {
+            let mut ix: Vec<usize> = (0..n).collect();
+            ix.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+            ix.truncate(budget);
+            ix
+        };
+        let mut worst = 1.0f64;
+        for t in 0..8 {
+            let q: Vec<f32> = dirs[t].iter().map(|x| 1.5 * x).collect();
+            let w = attention_weights(&q, &keys, d);
+            let score = |ks: &[f32]| -> Vec<f32> {
+                (0..n).map(|i| dot(&q, &ks[i * d..(i + 1) * d])).collect()
+            };
+            let ideal: f64 = top(&score(&keys)).iter().map(|&p| w[p] as f64).sum();
+            let got: f64 = top(&score(&dec)).iter().map(|&p| w[p] as f64).sum();
+            assert!(ideal > 0.0);
+            worst = worst.min(got / ideal);
+        }
+        assert!(worst >= floor, "{tag:?}: worst recall {worst:.4} < floor {floor}");
+    }
+}
+
+/// Spill-codec tentpole, part 3: accuracy-bounded placement. The
+/// steady zone can never be stored lossy, at two independent layers:
+/// structurally, no cluster ever holds a sink token or a token inside
+/// the trailing local window (steady-zone KV lives outside the block
+/// store and is never spilled at all); and at the eligibility rule,
+/// clusters are cleared for lossy storage only when they avoid both
+/// zones — including the cluster sitting flush against the window
+/// boundary. Demoting through the policy path then applies the codec
+/// exactly to the cleared clusters. (The rule's refusal branches are
+/// unreachable from public flows and unit-tested in `index::tests`.)
+#[test]
+fn steady_zone_is_never_stored_lossy_and_interior_clusters_compress() {
+    let d = 16;
+    // sink 4 + one 248-token segment + 16 pending local tokens = 268:
+    // the last cluster ends at position 251, flush against the window
+    // (251 + 16 == 267 == n_seen - 1) — the tightest legal placement.
+    let n = 268;
+    let mut rng = Rng::new(42);
+    let dirs: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(d)).collect();
+    let mut k = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let t = &dirs[i % 8];
+        for j in 0..d {
+            k.push(2.0 * t[j] + 0.3 * rng.normal_f32());
+        }
+    }
+    let v = rng.normal_vec(n * d);
+    let zone = small_zone();
+    let mut idx = WaveIndex::build(zone.clone(), d, 1024, &k, &v, 7);
+    idx.arena().spill().set_codec(CodecTag::Int8Angle);
+    idx.set_lossy_cos_floor(0.0); // permissive: only the zone rules gate
+    let m = idx.meta().m();
+    assert!(m > 2, "fixture must produce several clusters");
+    // eligibility is decided while the member keys are still hot
+    let eligible: Vec<bool> = (0..m).map(|c| idx.cluster_lossy_ok(c as u32)).collect();
+    let mut tail_max = 0usize;
+    for c in 0..m {
+        let pos = idx.meta().cluster_tokens(c);
+        assert!(
+            pos.iter().all(|&p| (p as usize) >= zone.steady_sink),
+            "sink token leaked into cluster {c}"
+        );
+        let max = *pos.iter().max().unwrap() as usize;
+        assert!(
+            max + zone.steady_local < idx.n_seen(),
+            "cluster {c} reaches into the trailing local window"
+        );
+        tail_max = tail_max.max(max);
+    }
+    // the clustered span really ends flush against the local window,
+    // and the boundary cluster still clears (strict `<` in the rule)
+    assert_eq!(tail_max + zone.steady_local, idx.n_seen() - 1);
+    let total_hot: usize = (0..m).map(|c| idx.cluster_hot_blocks(c as u32)).sum();
+    let (freed, _) = idx.demote_until(&ColdestFirst, total_hot);
+    assert_eq!(freed, total_hot, "everything demotable must spill");
+    let mut lossy_seen = false;
+    for c in 0..m {
+        let tags: Vec<CodecTag> = idx
+            .cluster_blocks(c as u32)
+            .iter()
+            .filter_map(|r| idx.arena().spill().page_tag(r.block))
+            .collect();
+        assert!(!tags.is_empty(), "cluster {c} left no cold pages");
+        if eligible[c] {
+            assert!(
+                tags.iter().all(|t| *t == CodecTag::Int8Angle),
+                "cleared cluster {c} missed the codec: {tags:?}"
+            );
+            lossy_seen = true;
+        } else {
+            assert!(
+                tags.iter().all(|t| *t == CodecTag::Exact),
+                "uncleared cluster {c} stored lossy: {tags:?}"
+            );
+        }
+    }
+    assert!(lossy_seen, "no interior cluster exercised the lossy path");
+    // the steady zone never even reached the spill tier: sink + local
+    // tokens are still served from the index, not from cold pages
+    assert!(idx.steady_tokens() >= zone.steady_sink + zone.steady_local);
+}
+
+/// The pressure driver reports the achieved compression: with the int8
+/// codec on an overcommitted tiered run, peak physical cold bytes stay
+/// at or below half the peak logical bytes, and the hot-cap / drain
+/// invariants are unchanged from the exact-codec run.
+#[test]
+fn spilled_pressure_run_compresses_cold_bytes_with_int8() {
+    use retroinfer::config::SpillCodec;
+    let cfg = PressureConfig {
+        capacity_blocks: 256,
+        tenant_quota_blocks: None,
+        spill: true,
+        spill_codec: SpillCodec::Int8,
+        ..PressureConfig::default()
+    };
+    let trace = multi_tenant_poisson(&[4.0, 2.0, 1.0], 4, 112, 8, 11);
+    let rep = run_memory_pressure(&cfg, &trace);
+    assert!(rep.drained, "tiered run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap: {rep:?}");
+    assert_eq!(rep.completed, trace.len(), "requests lost under spill: {rep:?}");
+    assert!(rep.demotions > 0 && rep.peak_cold_blocks > 0, "no cold traffic: {rep:?}");
+    assert!(rep.peak_compressed_blocks > 0, "int8 codec never applied: {rep:?}");
+    assert!(
+        rep.peak_cold_physical_bytes * 2 <= rep.peak_cold_logical_bytes,
+        "int8 must at least halve cold bytes: physical {} vs logical {}",
+        rep.peak_cold_physical_bytes,
+        rep.peak_cold_logical_bytes
+    );
+    assert_eq!(rep.final_cold_blocks, 0, "finished sessions must drop cold blocks: {rep:?}");
 }
 
 /// Nightly-scale sweep (CI `spill-pressure` job runs it via

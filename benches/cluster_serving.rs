@@ -1,0 +1,155 @@
+//! Cluster serving: modelled vs measured (DESIGN.md §2 "Cluster serving
+//! & migration", paper §4.5 modularity).
+//!
+//! Two views of the same workload, compared field-for-field:
+//!
+//! * **modelled** — `simulate_cluster_detailed`: the analytic load model
+//!   (roofline step times, no gate dynamics) whose aggregation bugs this
+//!   report regression-guards (`inf × 0` NaN, zero-output underflow).
+//! * **measured** — `run_cluster_pressure`: the real `Router`, real
+//!   per-worker admission gates and real arena accounting driving the
+//!   modelled KV footprint, including work stealing and failure
+//!   injection the analytic model cannot express.
+//!
+//!     cargo bench --bench cluster_serving
+
+use retroinfer::config::{HardwareSpec, ModelSpec};
+use retroinfer::engine::simulate_cluster_detailed;
+use retroinfer::memsim::profiles;
+use retroinfer::util::bench::{quick_mode, Table};
+use retroinfer::workload::{
+    closed_loop, run_cluster_pressure, ClusterPressureConfig, PressureConfig,
+};
+
+fn node() -> PressureConfig {
+    PressureConfig {
+        // gate estimate for 512 in / 64 out is 864 blocks (4 heads ×
+        // 144 × 1.5 fudge); usable = 0.75 × cap, so 2048 admits ~2
+        // concurrent sessions per worker and defers the rest
+        capacity_blocks: 2048,
+        ..PressureConfig::default()
+    }
+}
+
+fn main() {
+    let model = ModelSpec::llama3_8b();
+    let hw = HardwareSpec::a100();
+    let n_req = if quick_mode() { 12 } else { 24 };
+    // block-scale requests both views can serve: 512 in / 64 out
+    let reqs = closed_loop(8, n_req, 512, 64);
+
+    println!("## modelled vs measured cluster scaling ({n_req} requests, 512 in / 64 out)");
+    let mut table = Table::new(&[
+        "workers",
+        "model_req/s",
+        "model_p99_s",
+        "meas_rounds",
+        "meas_steals",
+        "meas_defers",
+        "completed",
+    ]);
+    let mut rounds_1 = 0usize;
+    let mut rounds_4 = 0usize;
+    let mut model_rps_1 = 0.0;
+    let mut model_rps_4 = 0.0;
+    for workers in [1usize, 2, 4] {
+        let modelled = simulate_cluster_detailed(
+            &model,
+            &hw,
+            &profiles::retroinfer(0.85),
+            &reqs,
+            4,
+            workers,
+        );
+        let agg = &modelled.aggregate;
+        assert!(!agg.oom);
+        assert_eq!(agg.completed, n_req, "model must complete all at {workers} workers");
+        // the satellite fixes under regression: aggregation stays NaN-free
+        assert!(agg.mean_latency_s.is_finite() && agg.p99_latency_s.is_finite());
+        assert!(!agg.req_per_s.is_nan());
+
+        let cfg = ClusterPressureConfig {
+            workers,
+            node: node(),
+            steal: true,
+            kill_worker: None,
+            kill_at_step: 0,
+        };
+        let meas = run_cluster_pressure(&cfg, &reqs);
+        assert!(meas.drained, "measured cluster deadlocked: {meas:?}");
+        assert_eq!(meas.completed, n_req, "measured must complete all: {meas:?}");
+        assert_eq!(meas.capacity_violations, 0, "{meas:?}");
+
+        if workers == 1 {
+            rounds_1 = meas.steps;
+            model_rps_1 = agg.req_per_s;
+        }
+        if workers == 4 {
+            rounds_4 = meas.steps;
+            model_rps_4 = agg.req_per_s;
+        }
+        table.row(vec![
+            workers.to_string(),
+            format!("{:.4}", agg.req_per_s),
+            format!("{:.2}", agg.p99_latency_s),
+            meas.steps.to_string(),
+            meas.steals.to_string(),
+            meas.deferrals.to_string(),
+            format!("{}/{}", meas.completed, n_req),
+        ]);
+    }
+    table.print();
+    // both views must agree on the §4.5 claim: more replicas, more
+    // throughput (model: req/s up; measured: coordinator rounds down)
+    assert!(
+        model_rps_4 > model_rps_1,
+        "model stopped scaling: {model_rps_1:.4} -> {model_rps_4:.4}"
+    );
+    assert!(
+        rounds_4 < rounds_1,
+        "measured coordinator stopped scaling: {rounds_1} -> {rounds_4} rounds"
+    );
+    println!(
+        "\nagreement: modelled {:.2}x req/s, measured {:.2}x fewer rounds at 4 workers",
+        model_rps_4 / model_rps_1,
+        rounds_1 as f64 / rounds_4 as f64
+    );
+
+    println!("\n## failure injection: kill worker 1 of 3 mid-run ({n_req} requests)");
+    let mut ftable = Table::new(&[
+        "kill_step",
+        "recovered",
+        "mid_decode",
+        "steals",
+        "completed",
+        "leaked_blocks",
+    ]);
+    for kill_step in [4usize, 16, 64] {
+        let cfg = ClusterPressureConfig {
+            workers: 3,
+            node: node(),
+            steal: true,
+            kill_worker: Some(1),
+            kill_at_step: kill_step,
+        };
+        let rep = run_cluster_pressure(&cfg, &reqs);
+        assert!(rep.drained, "kill at {kill_step} deadlocked: {rep:?}");
+        assert_eq!(
+            rep.completed + rep.rejected,
+            n_req,
+            "kill at {kill_step} lost requests: {rep:?}"
+        );
+        assert_eq!(rep.leaked_blocks, 0, "dead worker leaked blocks: {rep:?}");
+        assert_eq!(rep.capacity_violations, 0, "{rep:?}");
+        ftable.row(vec![
+            kill_step.to_string(),
+            rep.recovered.to_string(),
+            rep.restarted_mid_decode.to_string(),
+            rep.steals.to_string(),
+            format!("{}/{}", rep.completed, n_req),
+            rep.leaked_blocks.to_string(),
+        ]);
+    }
+    ftable.print();
+    println!("\nshape check OK: every killed worker's session completed on survivors");
+}

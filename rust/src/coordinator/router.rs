@@ -18,8 +18,14 @@ pub struct Router {
     rr: usize,
     /// prefix hash → worker currently holding that prefix hot.
     prefix_home: HashMap<u64, usize>,
+    /// Workers marked failed ([`Router::mark_down`]): never routed to,
+    /// never a steal target, and prefixes homed there re-home on their
+    /// next sighting.
+    down: Vec<bool>,
     affinity_hits: u64,
     affinity_misses: u64,
+    steals: u64,
+    rehomed_on_failure: u64,
 }
 
 impl Router {
@@ -29,8 +35,11 @@ impl Router {
             loads: vec![0; workers],
             rr: 0,
             prefix_home: HashMap::new(),
+            down: vec![false; workers],
             affinity_hits: 0,
             affinity_misses: 0,
+            steals: 0,
+            rehomed_on_failure: 0,
         }
     }
 
@@ -38,18 +47,98 @@ impl Router {
         self.loads.len()
     }
 
+    /// Live (not-failed) workers.
+    pub fn live_workers(&self) -> usize {
+        self.down.iter().filter(|&&d| !d).count()
+    }
+
+    pub fn is_down(&self, worker: usize) -> bool {
+        self.down[worker]
+    }
+
+    /// Mark a worker failed: it stops receiving routes and steal
+    /// offers, its load is zeroed (its in-flight requests are lost and
+    /// must be re-homed by the caller), and every prefix homed on it
+    /// re-homes to a live worker at its next sighting. Panics if this
+    /// would down the last live worker.
+    pub fn mark_down(&mut self, worker: usize) {
+        assert!(
+            self.down.iter().enumerate().any(|(w, &d)| w != worker && !d),
+            "cannot mark the last live worker down"
+        );
+        self.down[worker] = true;
+        self.loads[worker] = 0;
+        // Evict the failed worker's homes eagerly so `prefix_home`
+        // never reports a dead worker.
+        let dead: Vec<u64> = self
+            .prefix_home
+            .iter()
+            .filter(|&(_, &w)| w == worker)
+            .map(|(&p, _)| p)
+            .collect();
+        self.rehomed_on_failure += dead.len() as u64;
+        for p in dead {
+            self.prefix_home.remove(&p);
+        }
+    }
+
+    /// Return a previously-failed worker to service (fresh, empty).
+    pub fn mark_up(&mut self, worker: usize) {
+        self.down[worker] = false;
+        self.loads[worker] = 0;
+    }
+
     fn least_loaded(&mut self) -> usize {
-        let min = *self.loads.iter().min().unwrap();
+        let min = *self
+            .loads
+            .iter()
+            .zip(&self.down)
+            .filter(|(_, &d)| !d)
+            .map(|(l, _)| l)
+            .min()
+            .expect("at least one live worker");
         // round-robin among the least-loaded
         let n = self.loads.len();
         for off in 0..n {
             let w = (self.rr + off) % n;
-            if self.loads[w] == min {
+            if !self.down[w] && self.loads[w] == min {
                 self.rr = (w + 1) % n;
                 return w;
             }
         }
         unreachable!()
+    }
+
+    /// The least-loaded live worker other than `from` — where a
+    /// deferred request on `from` should be offered (work stealing), or
+    /// where a failed replica's session should recover. `None` when no
+    /// other live worker exists. Does not bump loads; call
+    /// [`Router::note_stolen`] once the target accepts.
+    pub fn steal_target(&self, from: usize) -> Option<usize> {
+        (0..self.loads.len())
+            .filter(|&w| w != from && !self.down[w])
+            .min_by_key(|&w| (self.loads[w], w))
+    }
+
+    /// Account a request moved from `from` to `to` (steal or failure
+    /// re-home): the load follows the request.
+    pub fn note_stolen(&mut self, from: usize, to: usize) {
+        if !self.down[from] {
+            self.loads[from] = self.loads[from].saturating_sub(1);
+        }
+        self.loads[to] += 1;
+        self.steals += 1;
+    }
+
+    /// Requests moved off their routed worker (steals + failure
+    /// re-homes accounted through [`Router::note_stolen`]).
+    pub fn steals(&self) -> u64 {
+        self.steals
+    }
+
+    /// Prefix homes evicted because their worker failed.
+    pub fn rehomed_on_failure(&self) -> u64 {
+        self.rehomed_on_failure
     }
 
     /// Route one request; returns the worker index.
@@ -70,8 +159,15 @@ impl Router {
             return w;
         };
         if let Some(&home) = self.prefix_home.get(&p) {
-            let min = *self.loads.iter().min().unwrap();
-            if self.loads[home] <= min + self.loads.len() {
+            let min = *self
+                .loads
+                .iter()
+                .zip(&self.down)
+                .filter(|(_, &d)| !d)
+                .map(|(l, _)| l)
+                .min()
+                .expect("at least one live worker");
+            if !self.down[home] && self.loads[home] <= min + self.loads.len() {
                 self.affinity_hits += 1;
                 self.loads[home] += 1;
                 return home;
@@ -161,6 +257,62 @@ mod tests {
         let w2 = r.route_with_prefix(None);
         assert_ne!(w2, w0);
         assert_ne!(w2, w1);
+    }
+
+    #[test]
+    fn downed_worker_never_routed_and_prefixes_rehome() {
+        let mut r = Router::new(3);
+        let w0 = r.route_with_prefix(Some(7));
+        r.mark_down(w0);
+        assert!(r.is_down(w0));
+        assert_eq!(r.live_workers(), 2);
+        assert_eq!(r.prefix_home(7), None, "failed home must be evicted");
+        assert_eq!(r.rehomed_on_failure(), 1);
+        for _ in 0..6 {
+            let w = r.route_with_prefix(Some(7));
+            assert_ne!(w, w0, "routed to a failed worker");
+        }
+        // the prefix has a new (live) home
+        let home = r.prefix_home(7).expect("rehomed");
+        assert_ne!(home, w0);
+        // recovery: the worker returns empty and is routable again
+        r.mark_up(w0);
+        assert_eq!(r.load(w0), 0);
+        assert!((0..12).any(|_| r.route() == w0));
+    }
+
+    #[test]
+    fn steal_target_is_least_loaded_live_peer() {
+        let mut r = Router::new(3);
+        // load worker 0 heavily, worker 2 lightly
+        for _ in 0..4 {
+            let w = r.route();
+            let _ = w;
+        }
+        // loads now ~[2,1,1]; steal from 0 goes to 1 (tie → lowest id)
+        let t = r.steal_target(0).unwrap();
+        assert_ne!(t, 0);
+        let before_from = r.load(0);
+        let before_to = r.load(t);
+        r.note_stolen(0, t);
+        assert_eq!(r.load(0), before_from - 1);
+        assert_eq!(r.load(t), before_to + 1);
+        assert_eq!(r.steals(), 1);
+        // a downed peer is never a steal target
+        r.mark_down(t);
+        let t2 = r.steal_target(0).unwrap();
+        assert_ne!(t2, t);
+        // no live peer → no target
+        r.mark_down(t2);
+        assert_eq!(r.steal_target(0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "last live worker")]
+    fn cannot_down_the_last_live_worker() {
+        let mut r = Router::new(2);
+        r.mark_down(0);
+        r.mark_down(1);
     }
 
     #[test]

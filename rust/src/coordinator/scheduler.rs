@@ -220,8 +220,14 @@ impl Scheduler {
         // mid-decode on QuotaExceeded), minus the tokens a registered
         // shared prefix already keeps resident (charged once, to the
         // prefix's first owner — not to this session)
+        // Clamp on both arms: a registry whose chain geometry rounds up
+        // (or a stale link set) can report more matched tokens than this
+        // prompt holds, and `prompt.len() - shared` would underflow into
+        // a huge estimate → spurious Reject.
         let shared = match (&self.prefix, &s.prefix_links) {
-            (Some(reg), Some(links)) => reg.matched_tokens_for_links(links),
+            (Some(reg), Some(links)) => {
+                reg.matched_tokens_for_links(links).min(s.req.prompt.len())
+            }
             _ => s.req.prefix_tokens.min(s.req.prompt.len()),
         };
         let est = adm.estimate_blocks(s.req.prompt.len() - shared + s.req.max_new);
@@ -295,6 +301,111 @@ impl Scheduler {
             None if blocked => Action::Defer,
             None => Action::Idle,
         }
+    }
+
+    /// Pop one queued request whose admission gate currently defers and
+    /// hand it (with its session state) to the caller — the work-steal
+    /// donor side: instead of spinning on [`Action::Defer`], the cluster
+    /// coordinator offers the blocked head-of-queue to the least-loaded
+    /// replica. Only `Phase::Queued` requests are stealable (an admitted
+    /// prefill's KV already lives on this replica — moving it is
+    /// migration, not stealing). Returns `None` when no queue head is
+    /// gate-blocked.
+    pub fn steal_deferred(&mut self) -> Option<Request> {
+        let nt = self.queues.len();
+        for k in 0..nt {
+            let qi = (self.rr + k) % nt;
+            let Some(&id) = self.queues[qi].1.front() else {
+                continue;
+            };
+            if matches!(self.gate(id), Gate::Defer) {
+                self.queues[qi].1.pop_front();
+                let s = self.sessions.remove(&id).expect("queued session exists");
+                debug_assert_eq!(s.phase, Phase::Queued);
+                return Some(s.req);
+            }
+        }
+        None
+    }
+
+    /// Remove a session from this scheduler entirely (any phase),
+    /// returning its state — the bookkeeping half of live migration
+    /// (the KV half moves through `LiveEngine::export_session`) and of
+    /// failure recovery (the coordinator re-homes a dead replica's
+    /// sessions from exactly this state). The id leaves the tenant
+    /// queue, the decode buffer, and the pending-finished events.
+    pub fn take_session(&mut self, id: u64) -> Option<Session> {
+        let s = self.sessions.remove(&id)?;
+        for (_, q) in self.queues.iter_mut() {
+            if let Some(p) = q.iter().position(|&x| x == id) {
+                q.remove(p);
+                break;
+            }
+        }
+        self.leave_decode(id);
+        self.finished.retain(|&x| x != id);
+        Some(s)
+    }
+
+    /// Re-adopt a session taken from another scheduler (migration
+    /// target side): it enters the decode buffer if mid-decode, the
+    /// tenant queue if still queued. `Done` sessions are recorded and
+    /// immediately reported finished.
+    pub fn adopt_session(&mut self, mut s: Session, now_s: f64) {
+        let id = s.req.id;
+        debug_assert!(!self.sessions.contains_key(&id), "adopting a duplicate session");
+        if s.admit_s.is_nan() {
+            s.admit_s = now_s;
+        }
+        let phase = s.phase;
+        let tenant = s.req.tenant;
+        self.sessions.insert(id, s);
+        match phase {
+            Phase::Queued => match self.queues.iter_mut().find(|(t, _)| *t == tenant) {
+                Some((_, q)) => q.push_back(id),
+                None => {
+                    let mut q = VecDeque::new();
+                    q.push_back(id);
+                    self.queues.push((tenant, q));
+                }
+            },
+            Phase::Decode => self.enter_decode(id),
+            Phase::Prefill => {
+                // an in-flight prefill cannot migrate; the caller
+                // re-queues it (its KV will rebuild on this replica)
+                self.sessions.get_mut(&id).unwrap().phase = Phase::Queued;
+                match self.queues.iter_mut().find(|(t, _)| *t == tenant) {
+                    Some((_, q)) => q.push_back(id),
+                    None => {
+                        let mut q = VecDeque::new();
+                        q.push_back(id);
+                        self.queues.push((tenant, q));
+                    }
+                }
+            }
+            Phase::Done => self.finished.push(id),
+        }
+    }
+
+    /// Remove and return every not-yet-finished session — the failure
+    /// path: a dead replica's scheduler is drained and its sessions
+    /// re-homed on survivors. Queues and the decode buffer empty;
+    /// finished sessions stay behind for their final accounting.
+    pub fn drain_unfinished(&mut self) -> Vec<Session> {
+        let ids: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.phase != Phase::Done)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            if let Some(s) = self.take_session(id) {
+                out.push(s);
+            }
+        }
+        out.sort_by_key(|s| s.req.id);
+        out
     }
 
     /// Mark prefill complete (first token produced).
@@ -583,6 +694,49 @@ mod tests {
         assert_eq!(s.n_rejections(), 0);
         // probing from the gate must not inflate serving hit counters
         assert_eq!(reg.hits(), 0);
+    }
+
+    #[test]
+    fn registry_discount_clamped_to_prompt_len() {
+        // Regression: the registry arm of the gate subtracted the
+        // matched-token count without clamping it to the prompt length.
+        // A link set carrying more coverage than this prompt holds (a
+        // stale or over-covering chain) made
+        // `prompt.len() - shared` underflow to a huge estimate and the
+        // gate returned a spurious Reject. Clamped, the request admits.
+        use crate::kvcache::prefix::{ChainGeometry, SealedSlot};
+        let arena = BlockArena::shared(16, 512);
+        arena.set_capacity_blocks(Some(100));
+        let geom = ChainGeometry { sink: 4, segment: 64, local: 8 };
+        let reg = PrefixRegistry::shared(Arc::clone(&arena), geom, 4);
+        let adm = AdmissionConfig {
+            heads: 4,
+            tokens_per_block: 4,
+            headroom_frac: 0.2,
+            est_fudge: 1.5,
+            tiered: false,
+        };
+        let mut s = Scheduler::with_admission(
+            Batcher::new(&[1, 2, 4, 8], 4),
+            Arc::clone(&arena),
+            adm,
+        );
+        s.set_prefix_registry(Arc::clone(&reg));
+        // Register the chain of a LONGER prompt sharing this content.
+        let long: Vec<i32> = (0..600).collect();
+        let links = reg.links(&long);
+        let &(covered, key) = links.last().unwrap();
+        assert!(reg.register(key, covered, vec![SealedSlot::default()]));
+        // Boundary: shared == prompt.len() exactly must also admit
+        // (estimate reduces to max_new alone, no underflow at 0).
+        let prompt: Vec<i32> = (0..400).collect();
+        s.submit(Request::new(1, prompt, 4), 0.0);
+        // Force the over-covering link set onto the queued session, as a
+        // stale cache would: its matched tokens exceed the prompt length.
+        s.session_mut(1).unwrap().prefix_links = Some(links);
+        assert!(reg.matched_tokens_for_links(s.session(1).unwrap().prefix_links.as_ref().unwrap()) > 400);
+        assert_eq!(s.next_action(), Action::Prefill(1), "clamped discount must admit");
+        assert_eq!(s.n_rejections(), 0, "underflowed estimate caused a spurious reject");
     }
 
     #[test]

@@ -1,0 +1,555 @@
+//! Cluster serving: N real [`LiveEngine`] replicas behind the
+//! [`Router`]/[`Scheduler`] coordinator (DESIGN.md §2 "Cluster serving &
+//! migration"). Each replica owns its engine, KV arena and scheduler;
+//! the coordinator owns only routing state — the paper's §4.5 modularity
+//! argument made concrete: no KV ever needs to be consistent across
+//! replicas, so the cross-replica protocol reduces to three verbs:
+//!
+//! * **steal** — a replica whose admission gate defers its head-of-queue
+//!   offers the request (still `Queued`, so no KV has materialized) to
+//!   the least-loaded live peer instead of spinning on `Action::Defer`.
+//! * **migrate** — a mid-decode session serializes through
+//!   [`LiveEngine::export_session`] (spill-page block format + wave-index
+//!   metadata) and resumes bit-identically on the target replica.
+//! * **recover** — a killed replica loses its engine (all KV state); the
+//!   coordinator still owns its scheduler, so the lost sessions re-prefill
+//!   idempotently on survivors and teacher-force replay their
+//!   already-generated tokens (decode is deterministic, so the replay
+//!   reconstructs the exact KV the dead replica held).
+
+use super::live::LiveEngine;
+use crate::config::CapacityConfig;
+use crate::coordinator::{Action, Batcher, Phase, Request, Router, Scheduler};
+use crate::kvcache::DEFAULT_TENANT;
+use crate::util::stats::Sample;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Geometry and policy of a replica cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub replicas: usize,
+    /// Decode batch buckets per replica.
+    pub buckets: Vec<usize>,
+    /// Decode-pool admission cap per replica.
+    pub max_batch: usize,
+    /// Virtual seconds one coordinator round advances (latency
+    /// accounting only — real compute time is whatever PJRT takes).
+    pub dt_s: f64,
+    /// Offer gate-deferred requests to the least-loaded live peer.
+    pub steal: bool,
+    /// Per-replica arena budget; arms the single-tier admission gate
+    /// (stealing needs a gate that can defer). `None` = unbounded,
+    /// admit-everything replicas.
+    pub capacity: Option<CapacityConfig>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 2,
+            buckets: vec![1, 2, 4, 8],
+            max_batch: 8,
+            dt_s: 0.05,
+            steal: true,
+            capacity: None,
+        }
+    }
+}
+
+/// One replica: a live engine plus the scheduler that owns its sessions.
+struct Replica {
+    engine: LiveEngine,
+    sched: Scheduler,
+}
+
+/// Terminal record of a request (kept by the coordinator so a replica's
+/// death cannot lose completed work).
+#[derive(Clone, Debug)]
+struct DoneRec {
+    tokens: Vec<i32>,
+    arrive_s: f64,
+    first_token_s: f64,
+    done_s: f64,
+    rejected: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+struct ClusterStats {
+    steals: u64,
+    migrations: u64,
+    migrated_bytes: u64,
+    failures: u64,
+    recovered_sessions: u64,
+    replayed_tokens: u64,
+    replay_divergence: u64,
+    prefill_failures: u64,
+}
+
+/// What a measured cluster run observed — the shape of
+/// [`super::sim::LoadReport`], so modelled and measured cluster behaviour
+/// compare field-for-field (EXPERIMENTS.md "Cluster serving").
+#[derive(Clone, Debug)]
+pub struct ClusterRunReport {
+    pub replicas: usize,
+    pub n_requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    /// Virtual makespan (rounds × `dt_s`).
+    pub makespan_s: f64,
+    pub req_per_s: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Mean time-to-first-token over completed requests (infinite when
+    /// nothing completed — never NaN).
+    pub mean_ttft_s: f64,
+    pub steals: u64,
+    pub migrations: u64,
+    pub migrated_bytes: u64,
+    pub failures: u64,
+    pub recovered_sessions: u64,
+    pub replayed_tokens: u64,
+    /// Replayed tokens that disagreed with the dead replica's record
+    /// (must be 0: decode is deterministic).
+    pub replay_divergence: u64,
+    pub prefill_failures: u64,
+}
+
+/// A sharded serving cluster over real engines.
+pub struct ClusterEngine {
+    replicas: Vec<Option<Replica>>,
+    router: Router,
+    /// session id → replica currently serving it.
+    home: HashMap<u64, usize>,
+    done: HashMap<u64, DoneRec>,
+    now_s: f64,
+    dt_s: f64,
+    steal: bool,
+    n_requests: usize,
+    stats: ClusterStats,
+}
+
+impl ClusterEngine {
+    /// Build `cfg.replicas` live engines from `artifacts_dir` (Wave
+    /// mode), each with its own arena, scheduler and — when
+    /// `cfg.capacity` is set — admission gate.
+    pub fn new(artifacts_dir: &str, cfg: &ClusterConfig) -> Result<ClusterEngine> {
+        assert!(cfg.replicas > 0, "a cluster needs at least one replica");
+        let mut replicas = Vec::with_capacity(cfg.replicas);
+        for _ in 0..cfg.replicas {
+            let engine = LiveEngine::new(artifacts_dir, super::live::AttnMode::Wave)?;
+            let batcher = Batcher::new(&cfg.buckets, cfg.max_batch);
+            let sched = match &cfg.capacity {
+                Some(cap) => {
+                    engine.apply_capacity(cap, &[DEFAULT_TENANT]);
+                    Scheduler::with_admission(
+                        batcher,
+                        std::sync::Arc::clone(engine.arena()),
+                        engine.admission_config(cap),
+                    )
+                }
+                None => Scheduler::new(batcher),
+            };
+            replicas.push(Some(Replica { engine, sched }));
+        }
+        Ok(ClusterEngine {
+            router: Router::new(cfg.replicas),
+            replicas,
+            home: HashMap::new(),
+            done: HashMap::new(),
+            now_s: 0.0,
+            dt_s: cfg.dt_s,
+            steal: cfg.steal,
+            n_requests: 0,
+            stats: ClusterStats::default(),
+        })
+    }
+
+    /// Route one request to a replica (least-loaded live). Returns the
+    /// replica index it homed on.
+    pub fn submit(&mut self, req: Request) -> usize {
+        let w = self.router.route_with_prefix(None);
+        let id = req.id;
+        self.replicas[w]
+            .as_mut()
+            .expect("router never routes to a downed replica")
+            .sched
+            .submit(req, self.now_s);
+        self.home.insert(id, w);
+        self.n_requests += 1;
+        w
+    }
+
+    /// The replica currently serving `id` (none once finished or lost).
+    pub fn home_of(&self, id: u64) -> Option<usize> {
+        self.home.get(&id).copied()
+    }
+
+    /// Live (not-killed) replicas.
+    pub fn n_live(&self) -> usize {
+        self.router.live_workers()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// A completed session's generated tokens.
+    pub fn output(&self, id: u64) -> Option<&[i32]> {
+        self.done.get(&id).map(|r| r.tokens.as_slice())
+    }
+
+    /// Every live replica's scheduler has drained.
+    pub fn is_done(&self) -> bool {
+        self.replicas.iter().flatten().all(|rep| rep.sched.all_done())
+    }
+
+    fn record_done(done: &mut HashMap<u64, DoneRec>, sched: &Scheduler, id: u64) {
+        if let Some(s) = sched.session(id) {
+            done.insert(
+                id,
+                DoneRec {
+                    tokens: s.generated.clone(),
+                    arrive_s: s.req.arrive_s,
+                    first_token_s: s.first_token_s,
+                    done_s: s.done_s,
+                    rejected: s.rejected,
+                },
+            );
+        }
+    }
+
+    /// One coordinator round: every live replica takes its next
+    /// scheduler action (one prefill or one decode batch), gate-deferred
+    /// heads are offered to peers, and finished sessions reclaim their
+    /// KV. Returns whether any replica did work.
+    pub fn step(&mut self) -> Result<bool> {
+        self.now_s += self.dt_s;
+        let n = self.replicas.len();
+        let mut worked = false;
+        for r in 0..n {
+            if self.replicas[r].is_none() {
+                continue;
+            }
+            let action = self.replicas[r].as_mut().unwrap().sched.next_action();
+            match action {
+                Action::Prefill(id) => {
+                    worked = true;
+                    let (tenant, prompt) = {
+                        let s = self.replicas[r].as_ref().unwrap().sched.session(id).unwrap();
+                        (s.req.tenant, s.req.prompt.clone())
+                    };
+                    let res = self.replicas[r]
+                        .as_mut()
+                        .unwrap()
+                        .engine
+                        .prefill_for(id, tenant, &prompt);
+                    match res {
+                        Ok(first) => self.replicas[r]
+                            .as_mut()
+                            .unwrap()
+                            .sched
+                            .prefill_done(id, first, self.now_s),
+                        Err(_) => {
+                            // the gate admitted what the engine refused
+                            // (estimate too tight): fail the request
+                            // instead of deadlocking the queue
+                            self.stats.prefill_failures += 1;
+                            if let Some(s) =
+                                self.replicas[r].as_mut().unwrap().sched.take_session(id)
+                            {
+                                self.done.insert(
+                                    id,
+                                    DoneRec {
+                                        tokens: s.generated.clone(),
+                                        arrive_s: s.req.arrive_s,
+                                        first_token_s: f64::NAN,
+                                        done_s: self.now_s,
+                                        rejected: true,
+                                    },
+                                );
+                            }
+                            self.router.complete(r);
+                            self.home.remove(&id);
+                        }
+                    }
+                }
+                Action::DecodeBatch(ids, bucket) => {
+                    worked = true;
+                    let out = self.replicas[r]
+                        .as_mut()
+                        .unwrap()
+                        .engine
+                        .decode_step(&ids, bucket)?;
+                    let rep = self.replicas[r].as_mut().unwrap();
+                    for (i, id) in ids.iter().enumerate() {
+                        rep.sched.token_decoded(*id, out[i], self.now_s);
+                    }
+                }
+                Action::Defer | Action::Idle => {}
+            }
+            // donor side of work stealing, checked every round: a busy
+            // replica decodes instead of returning `Defer`, so the
+            // gate-blocked head is probed directly (`steal_deferred`
+            // pops it only if the gate defers it right now — it has no
+            // KV yet, so moving it is a bookkeeping edit). Load-gated so
+            // a request only moves where it reduces imbalance, which
+            // also stops steal ping-pong between two full replicas.
+            if self.steal {
+                if let Some(t) = self.router.steal_target(r) {
+                    if self.router.load(t) + 1 < self.router.load(r) {
+                        if let Some(req) =
+                            self.replicas[r].as_mut().unwrap().sched.steal_deferred()
+                        {
+                            let id = req.id;
+                            self.replicas[t].as_mut().unwrap().sched.submit(req, self.now_s);
+                            self.router.note_stolen(r, t);
+                            self.home.insert(id, t);
+                            self.stats.steals += 1;
+                        }
+                    }
+                }
+            }
+            // reclamation: finished sessions return their KV blocks and
+            // free a router slot (this is what re-admits deferred work)
+            let fin = self.replicas[r].as_mut().unwrap().sched.take_finished();
+            for id in fin {
+                Self::record_done(
+                    &mut self.done,
+                    &self.replicas[r].as_ref().unwrap().sched,
+                    id,
+                );
+                self.replicas[r].as_mut().unwrap().engine.finish_session(id);
+                self.router.complete(r);
+                self.home.remove(&id);
+            }
+        }
+        Ok(worked)
+    }
+
+    /// Drive rounds until every live scheduler drains (or `max_rounds`).
+    pub fn run_until_done(&mut self, max_rounds: usize) -> Result<ClusterRunReport> {
+        for _ in 0..max_rounds {
+            if self.is_done() {
+                return Ok(self.report());
+            }
+            self.step()?;
+        }
+        if self.is_done() {
+            Ok(self.report())
+        } else {
+            Err(anyhow!("cluster did not quiesce in {max_rounds} rounds"))
+        }
+    }
+
+    /// Live-migrate session `id` to replica `to`: bookkeeping moves
+    /// through `Scheduler::take_session`/`adopt_session`, KV moves
+    /// through the serialized snapshot (a `Queued` session has no KV and
+    /// moves for free). Returns the snapshot bytes that crossed the
+    /// migration channel. The import lands before the source releases
+    /// anything, so a failed migration leaves the session serving where
+    /// it was.
+    pub fn migrate_session(&mut self, id: u64, to: usize) -> Result<usize> {
+        let from = self
+            .home
+            .get(&id)
+            .copied()
+            .ok_or_else(|| anyhow!("session {id} is not live on any replica"))?;
+        if from == to {
+            return Ok(0);
+        }
+        if to >= self.replicas.len() || self.replicas[to].is_none() {
+            return Err(anyhow!("target replica {to} is not live"));
+        }
+        let phase = self.replicas[from]
+            .as_ref()
+            .unwrap()
+            .sched
+            .session(id)
+            .map(|s| s.phase)
+            .ok_or_else(|| anyhow!("session {id} missing from its home scheduler"))?;
+        let moved = match phase {
+            Phase::Queued => 0,
+            Phase::Decode => {
+                let (snap, tenant) = {
+                    let rep = self.replicas[from].as_ref().unwrap();
+                    let snap = rep
+                        .engine
+                        .export_session(id)
+                        .ok_or_else(|| anyhow!("session {id} has no engine state"))?;
+                    (snap, rep.sched.session(id).unwrap().req.tenant)
+                };
+                let bytes = snap.payload_bytes();
+                self.replicas[to]
+                    .as_mut()
+                    .unwrap()
+                    .engine
+                    .import_session(id, tenant, &snap)?;
+                self.replicas[from].as_mut().unwrap().engine.finish_session(id);
+                bytes
+            }
+            Phase::Prefill | Phase::Done => {
+                return Err(anyhow!("session {id} cannot migrate in phase {phase:?}"))
+            }
+        };
+        let s = self.replicas[from]
+            .as_mut()
+            .unwrap()
+            .sched
+            .take_session(id)
+            .expect("session present");
+        self.replicas[to].as_mut().unwrap().sched.adopt_session(s, self.now_s);
+        self.router.note_stolen(from, to);
+        self.home.insert(id, to);
+        self.stats.migrations += 1;
+        self.stats.migrated_bytes += moved as u64;
+        Ok(moved)
+    }
+
+    /// Kill replica `victim` mid-service: its engine (all KV state)
+    /// drops on the floor, and every unfinished session re-homes to a
+    /// survivor — `Queued` sessions simply requeue; mid-decode sessions
+    /// re-prefill from their prompt and teacher-force replay their
+    /// already-generated tokens, reconstructing the lost KV exactly
+    /// (decode is deterministic). Idempotent per session: a survivor
+    /// that cannot hold the re-prefill right now restarts the session
+    /// from its queue instead, and the regenerated tokens are identical.
+    /// Returns how many sessions were recovered.
+    pub fn kill_replica(&mut self, victim: usize) -> Result<usize> {
+        if victim >= self.replicas.len() || self.replicas[victim].is_none() {
+            return Err(anyhow!("replica {victim} is not live"));
+        }
+        if self.router.live_workers() <= 1 {
+            return Err(anyhow!("cannot kill the last live replica"));
+        }
+        let mut dead = self.replicas[victim].take().unwrap();
+        // finished-but-undrained events survive the failure: the
+        // coordinator records them before the scheduler drops
+        for id in dead.sched.take_finished() {
+            Self::record_done(&mut self.done, &dead.sched, id);
+            self.home.remove(&id);
+        }
+        self.router.mark_down(victim);
+        self.stats.failures += 1;
+        let lost = dead.sched.drain_unfinished();
+        drop(dead); // the engine — and every KV block it held — dies here
+        let mut recovered = 0usize;
+        for mut s in lost {
+            let id = s.req.id;
+            let target = self
+                .router
+                .steal_target(victim)
+                .expect("a live replica exists (checked above)");
+            match s.phase {
+                Phase::Decode => {
+                    let tr = self.replicas[target].as_mut().unwrap();
+                    match tr.engine.prefill_for(id, s.req.tenant, &s.req.prompt) {
+                        Ok(first) => {
+                            if first != s.generated[0] {
+                                self.stats.replay_divergence += 1;
+                            }
+                            for w in s.generated.windows(2) {
+                                tr.engine.force_token(id, w[0]);
+                                let t = tr.engine.decode_step(&[id], 1)?[0];
+                                if t != w[1] {
+                                    self.stats.replay_divergence += 1;
+                                }
+                                self.stats.replayed_tokens += 1;
+                            }
+                            // the next scheduled decode consumes exactly
+                            // the token the dead replica was about to
+                            tr.engine.force_token(id, *s.generated.last().unwrap());
+                            tr.sched.adopt_session(s, self.now_s);
+                        }
+                        Err(_) => {
+                            // survivor is full right now: restart from
+                            // the queue — deterministic decode makes the
+                            // regenerated tokens identical
+                            s.generated.clear();
+                            s.phase = Phase::Queued;
+                            s.first_token_s = f64::NAN;
+                            tr.sched.adopt_session(s, self.now_s);
+                        }
+                    }
+                }
+                _ => {
+                    // Queued (or in-flight Prefill, which adopt requeues):
+                    // no KV existed, nothing to reconstruct
+                    self.replicas[target]
+                        .as_mut()
+                        .unwrap()
+                        .sched
+                        .adopt_session(s, self.now_s);
+                }
+            }
+            self.router.note_stolen(victim, target);
+            self.home.insert(id, target);
+            self.stats.recovered_sessions += 1;
+            recovered += 1;
+        }
+        Ok(recovered)
+    }
+
+    /// The measured report (callable mid-run; makespan is rounds so far).
+    pub fn report(&self) -> ClusterRunReport {
+        let mut lat = Sample::new();
+        let mut ttft = Sample::new();
+        let mut completed = 0usize;
+        let mut rejected = 0usize;
+        for rec in self.done.values() {
+            if rec.rejected {
+                rejected += 1;
+                continue;
+            }
+            completed += 1;
+            lat.add(rec.done_s - rec.arrive_s);
+            if rec.first_token_s.is_finite() {
+                ttft.add(rec.first_token_s - rec.arrive_s);
+            }
+        }
+        // the simulate_cluster convention (and its NaN regression): no
+        // completions → infinite latencies, never `inf × 0`
+        let (mean, p99) = if completed > 0 {
+            (lat.mean(), lat.percentile(99.0))
+        } else {
+            (f64::INFINITY, f64::INFINITY)
+        };
+        let mean_ttft = if ttft.is_empty() { f64::INFINITY } else { ttft.mean() };
+        ClusterRunReport {
+            replicas: self.replicas.len(),
+            n_requests: self.n_requests,
+            completed,
+            rejected,
+            makespan_s: self.now_s,
+            req_per_s: completed as f64 / self.now_s.max(1e-9),
+            mean_latency_s: mean,
+            p99_latency_s: p99,
+            mean_ttft_s: mean_ttft,
+            steals: self.stats.steals,
+            migrations: self.stats.migrations,
+            migrated_bytes: self.stats.migrated_bytes,
+            failures: self.stats.failures,
+            recovered_sessions: self.stats.recovered_sessions,
+            replayed_tokens: self.stats.replayed_tokens,
+            replay_divergence: self.stats.replay_divergence,
+            prefill_failures: self.stats.prefill_failures,
+        }
+    }
+}
+
+impl ClusterRunReport {
+    /// Sanity predicate the failure-injection tests assert: every
+    /// latency/throughput field is a number (the cluster-sim NaN bugs
+    /// this PR fixed must not reappear in the measured path).
+    pub fn finite_or_empty(&self) -> bool {
+        let lat_ok = if self.completed > 0 {
+            self.mean_latency_s.is_finite() && self.p99_latency_s.is_finite()
+        } else {
+            self.mean_latency_s.is_infinite() && self.p99_latency_s.is_infinite()
+        };
+        lat_ok
+            && !self.mean_ttft_s.is_nan()
+            && !self.req_per_s.is_nan()
+            && !self.makespan_s.is_nan()
+    }
+}

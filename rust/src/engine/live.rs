@@ -7,7 +7,7 @@ use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, 
 use crate::buffer::{ExecBuffer, SharedBlockCache, WaveBuffer};
 use crate::config::{BufferConfig, CapacityConfig, SpillCodec, ZoneConfig};
 use crate::coordinator::AdmissionConfig;
-use crate::index::{SelectScratch, WaveIndex};
+use crate::index::{SelectScratch, SnapshotError, WaveIndex};
 use crate::kvcache::prefix::{ChainGeometry, PrefixMatch, PrefixRegistry};
 use crate::kvcache::{AllocError, BlockArena, CodecTag, SpillPolicy, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
@@ -977,6 +977,176 @@ impl LiveEngine {
             st.last_token = token;
         }
     }
+
+    /// Serialize a session's complete KV + index state for live
+    /// migration (DESIGN.md §2 "Cluster serving & migration"): each
+    /// (layer, kv-head) slot's wave index exports its clusters through
+    /// the bit-exact spill page format plus its metadata (centroids,
+    /// vsums, positions, seed), so an [`LiveEngine::import_session`] on
+    /// another replica resumes bit-identically. Derived perf-only state
+    /// (wave-buffer cache residency, access epochs, hot/cold placement)
+    /// is deliberately absent — it rebuilds cold on the target and never
+    /// affects token bits. The source session stays live; migration
+    /// callers pair this with [`LiveEngine::finish_session`].
+    pub fn export_session(&self, id: u64) -> Option<SessionSnapshot> {
+        let st = self.states.get(&id)?;
+        let snap = SessionSnapshot {
+            len: st.len,
+            last_token: st.last_token,
+            indexes: st.indexes.iter().map(|ix| ix.export_state()).collect(),
+            k_full: st.k_full.clone(),
+            v_full: st.v_full.clone(),
+        };
+        self.metrics.inc("sessions_exported", 1);
+        self.metrics.inc("migration_bytes_out", snap.payload_bytes() as u64);
+        Some(snap)
+    }
+
+    /// Rebuild a migrated session on this replica from its snapshot.
+    /// The wave indexes re-pack into this engine's block geometry (the
+    /// source's block size may differ); wave buffers start cold. A
+    /// failed import (corrupt stream, geometry mismatch, arena refusal)
+    /// leaves this engine unchanged — every block the partial rebuild
+    /// checked out is returned.
+    pub fn import_session(
+        &mut self,
+        id: u64,
+        tenant: TenantId,
+        snap: &SessionSnapshot,
+    ) -> Result<()> {
+        if self.states.contains_key(&id) {
+            return Err(anyhow!("import {id}: session already live on this replica"));
+        }
+        let (l_n, kvh, d) =
+            (self.lm.cfg.n_layers, self.lm.cfg.kv_heads, self.lm.cfg.d_head);
+        match self.mode {
+            AttnMode::Wave => {
+                if snap.indexes.len() != l_n * kvh {
+                    return Err(anyhow!(
+                        "import {id}: snapshot has {} index slots, engine needs {}",
+                        snap.indexes.len(),
+                        l_n * kvh
+                    ));
+                }
+            }
+            AttnMode::Full => {
+                let t_cap = self.lm.buckets.attn_full_t;
+                if snap.k_full.len() != l_n
+                    || snap.v_full.len() != l_n
+                    || snap.k_full.iter().any(|l| l.len() != kvh * t_cap * d)
+                    || snap.v_full.iter().any(|l| l.len() != kvh * t_cap * d)
+                {
+                    return Err(anyhow!(
+                        "import {id}: full-cache snapshot does not match engine geometry"
+                    ));
+                }
+            }
+        }
+        let mut indexes = Vec::with_capacity(snap.indexes.len());
+        let mut buffers = Vec::with_capacity(snap.indexes.len());
+        if self.mode == AttnMode::Wave {
+            for (slot_i, bytes) in snap.indexes.iter().enumerate() {
+                let idx = loop {
+                    match WaveIndex::import_state(
+                        &self.arena,
+                        tenant,
+                        self.zcfg.clone(),
+                        bytes,
+                    ) {
+                        Ok(mut idx) => {
+                            if let Some(p) = &self.spill_policy {
+                                idx.set_spill_policy(Some(Arc::clone(p)));
+                            }
+                            idx.set_lossy_cos_floor(self.lossy_cos_floor);
+                            break idx;
+                        }
+                        Err(e) => {
+                            // mirror prefill: a full hot tier on a tiered
+                            // arena means demote-then-retry, not refusal
+                            let retry = matches!(
+                                e,
+                                SnapshotError::Alloc(AllocError::ArenaFull { .. })
+                            ) && self.spill_enabled()
+                                && self.make_room(64) > 0;
+                            if !retry {
+                                // `indexes`/`buffers` drop here: the
+                                // partial import's blocks all return
+                                self.metrics.inc("import_failures", 1);
+                                self.publish_arena_gauges();
+                                return Err(anyhow!(
+                                    "import {id} (tenant {tenant}) slot {slot_i}: {e}"
+                                ));
+                            }
+                        }
+                    }
+                };
+                let tpb = idx.store().tokens_per_block();
+                let cap = WaveBuffer::capacity_for(&self.bcfg, snap.len, tpb);
+                let mut buf =
+                    WaveBuffer::new(self.bcfg.clone(), d, tpb, cap, Arc::clone(&self.pool));
+                if self.prefix.is_some() {
+                    if self.shared_caches.len() <= slot_i {
+                        let atpb = self.arena.tokens_per_block();
+                        self.shared_caches.push(Arc::new(SharedBlockCache::new(
+                            self.bcfg.policy,
+                            self.shared_slot_capacity(),
+                            2 * atpb * d,
+                        )));
+                    }
+                    buf.set_shared_cache(Arc::clone(&self.shared_caches[slot_i]));
+                }
+                buf.register_index(&idx);
+                indexes.push(idx);
+                buffers.push(buf);
+            }
+        }
+        self.states.insert(
+            id,
+            SessionState {
+                indexes,
+                buffers,
+                k_full: snap.k_full.clone(),
+                v_full: snap.v_full.clone(),
+                len: snap.len,
+                last_token: snap.last_token,
+            },
+        );
+        self.metrics.inc("sessions_imported", 1);
+        self.metrics.inc("migration_bytes_in", snap.payload_bytes() as u64);
+        self.publish_arena_gauges();
+        Ok(())
+    }
+}
+
+/// A session's serialized live state ([`LiveEngine::export_session`]):
+/// everything token-bit-relevant — per-slot wave-index snapshot streams
+/// (clusters through the spill page format, centroids/vsums/positions,
+/// clustering seed), the context length, and the pending next token.
+/// Full-attention sessions carry their padded caches instead.
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    /// Context length (prompt + generated so far).
+    pub len: usize,
+    /// The token the next decode step will consume.
+    pub last_token: i32,
+    /// Per-(layer, kv-head) wave-index snapshot streams (Wave mode).
+    pub indexes: Vec<Vec<u8>>,
+    /// Per-layer padded `[KVH, T, d]` caches (Full mode).
+    pub k_full: Vec<Vec<f32>>,
+    pub v_full: Vec<Vec<f32>>,
+}
+
+impl SessionSnapshot {
+    /// Bytes this snapshot moves across the migration channel.
+    pub fn payload_bytes(&self) -> usize {
+        self.indexes.iter().map(|b| b.len()).sum::<usize>()
+            + self
+                .k_full
+                .iter()
+                .chain(self.v_full.iter())
+                .map(|v| v.len() * 4)
+                .sum::<usize>()
+    }
 }
 
 /// Per-slot [`SharedBlockCache`] capacity (in blocks) under an
@@ -1166,6 +1336,51 @@ mod tests {
         assert!(shared.arena().live_blocks() > 0, "registry keeps the prefix resident");
         shared.clear_prefix_cache();
         assert_eq!(shared.arena().live_blocks(), 0, "cleared prefix frees at refcount zero");
+    }
+
+    #[test]
+    fn migrated_session_resumes_bit_identically() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        let p = prompt(2048, 21);
+        // a: uninterrupted reference run; b: source replica; c: target
+        let mut a = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let mut b = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let mut c = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let t0a = a.prefill(1, &p).unwrap();
+        let t0b = b.prefill(1, &p).unwrap();
+        assert_eq!(t0a, t0b, "identical prefills must agree");
+        for _ in 0..3 {
+            let ta = a.decode_step(&[1], 1).unwrap()[0];
+            let tb = b.decode_step(&[1], 1).unwrap()[0];
+            assert_eq!(ta, tb, "pre-migration decode diverged");
+        }
+        // migrate b's session to c mid-generation
+        let snap = b.export_session(1).expect("live session exports");
+        assert!(snap.payload_bytes() > 0);
+        assert_eq!(b.export_session(99).map(|s| s.len), None, "unknown id");
+        b.finish_session(1);
+        assert_eq!(b.arena().live_blocks(), 0, "source released every block");
+        c.import_session(1, DEFAULT_TENANT, &snap).unwrap();
+        assert_eq!(c.session_len(1), Some(2051));
+        assert!(c.arena().live_blocks() > 0);
+        // the migrated session's remaining tokens are bit-identical to
+        // the unmigrated run — the tentpole's headline invariant
+        for step in 0..5 {
+            let ta = a.decode_step(&[1], 1).unwrap()[0];
+            let tc = c.decode_step(&[1], 1).unwrap()[0];
+            assert_eq!(ta, tc, "migrated session diverged at step {step}");
+        }
+        // a second import of the same id must refuse, not clobber
+        assert!(c.import_session(1, DEFAULT_TENANT, &snap).is_err());
+        // geometry mismatch refuses and leaks nothing
+        let mut bad = snap.clone();
+        bad.indexes.pop();
+        let before = b.arena().live_blocks();
+        assert!(b.import_session(2, DEFAULT_TENANT, &bad).is_err());
+        assert_eq!(b.arena().live_blocks(), before, "failed import must roll back");
+        c.finish_session(1);
+        assert_eq!(c.arena().live_blocks(), 0);
     }
 
     #[test]

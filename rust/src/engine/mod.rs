@@ -4,9 +4,11 @@
 //! load simulator for paper-scale end-to-end experiments (Figure 17).
 
 pub mod assemble;
+pub mod cluster;
 pub mod live;
 pub mod sim;
 
 pub use assemble::{AssembleShape, BatchAssembler, HeadTask};
-pub use live::{AttnMode, LiveEngine};
-pub use sim::{simulate_cluster, simulate_load, LoadReport};
+pub use cluster::{ClusterConfig, ClusterEngine, ClusterRunReport};
+pub use live::{AttnMode, LiveEngine, SessionSnapshot};
+pub use sim::{simulate_cluster, simulate_cluster_detailed, simulate_load, ClusterReport, LoadReport};

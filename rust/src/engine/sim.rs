@@ -68,22 +68,45 @@ pub fn simulate_load(
     // largest per-request context (prevents admit/shed livelock).
     let max_batch = max_batch.min(memsim::max_batch(model, hw, profile, ctx_max)).max(1);
 
+    // Closed-loop entries (`arrive_s == inf`) release in trace order as
+    // capacity frees up; finite arrivals admit whenever their time has
+    // come, even when queued *behind* a closed-loop entry in the trace
+    // (a mixed trace must not strand its open-loop tail).
+    let mut admitted = vec![false; reqs.len()];
+    let mut released = 0usize; // closed-loop entries released so far
+
     loop {
-        // Admit open-loop arrivals that have happened.
-        while next < reqs.len() && reqs[next].arrive_s <= now {
-            if reqs[next].arrive_s.is_finite() {
-                queue.push((next, reqs[next].arrive_s));
-                next += 1;
-            } else {
+        // Admit open-loop arrivals that have happened, scanning past
+        // closed-loop entries instead of stopping at the first one.
+        for (ri, r) in reqs.iter().enumerate().skip(next) {
+            if !r.arrive_s.is_finite() {
+                continue;
+            }
+            if r.arrive_s > now {
                 break;
             }
+            if !admitted[ri] {
+                admitted[ri] = true;
+                queue.push((ri, r.arrive_s));
+            }
         }
-        // Release closed-loop requests when there is capacity.
-        while next < reqs.len()
-            && reqs[next].arrive_s.is_infinite()
-            && active.len() + queue.len() < max_batch
-        {
-            queue.push((next, now));
+        // Release closed-loop requests (in trace order) when there is
+        // capacity.
+        while active.len() + queue.len() < max_batch {
+            let Some(ri) = reqs
+                .iter()
+                .enumerate()
+                .skip(released)
+                .find(|(ri, r)| r.arrive_s.is_infinite() && !admitted[*ri])
+                .map(|(ri, _)| ri)
+            else {
+                break;
+            };
+            admitted[ri] = true;
+            released = ri + 1;
+            queue.push((ri, now));
+        }
+        while next < reqs.len() && admitted[next] {
             next += 1;
         }
 
@@ -103,10 +126,18 @@ pub fn simulate_load(
             let cf = if is_retro { cluster_flops(r.input_tokens) } else { 0.0 };
             let offload = is_retro || profile.cpu_attention;
             now += memsim::prefill_latency(model, hw, r.input_tokens, cf, offload);
-            active.push((
-                ri,
-                Active { arrive_s: arr, ctx: r.input_tokens, remaining: r.output_tokens },
-            ));
+            if r.output_tokens == 0 {
+                // Prefill-only request (embedding/scoring-style): it is
+                // done the moment prefill lands. Entering the decode
+                // pool would underflow `remaining -= 1`.
+                lat.add(now - arr);
+                completed += 1;
+            } else {
+                active.push((
+                    ri,
+                    Active { arrive_s: arr, ctx: r.input_tokens, remaining: r.output_tokens },
+                ));
+            }
             continue;
         }
 
@@ -145,6 +176,15 @@ pub fn simulate_load(
     }
 }
 
+/// A cluster run broken out per shard: the aggregate plus each worker's
+/// own [`LoadReport`] (so an OOM shard is attributable instead of
+/// silently poisoning the aggregate).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub aggregate: LoadReport,
+    pub shards: Vec<LoadReport>,
+}
+
 /// Multi-GPU serving (paper §4.5): requests are routed across `workers`
 /// independent replicas by the least-loaded [`Router`]; each worker runs
 /// its own wave index/buffer (no cross-worker coordination — the paper's
@@ -157,6 +197,18 @@ pub fn simulate_cluster(
     max_batch_per_worker: usize,
     workers: usize,
 ) -> LoadReport {
+    simulate_cluster_detailed(model, hw, profile, reqs, max_batch_per_worker, workers).aggregate
+}
+
+/// Like [`simulate_cluster`], but also returns every shard's own report.
+pub fn simulate_cluster_detailed(
+    model: &ModelSpec,
+    hw: &HardwareSpec,
+    profile: &SystemProfile,
+    reqs: &[RequestSpec],
+    max_batch_per_worker: usize,
+    workers: usize,
+) -> ClusterReport {
     use crate::coordinator::Router;
     let mut router = Router::new(workers);
     let mut shards: Vec<Vec<RequestSpec>> = vec![Vec::new(); workers];
@@ -169,8 +221,10 @@ pub fn simulate_cluster(
     let mut completed = 0;
     let mut makespan = 0.0f64;
     let mut lat_sum = 0.0;
+    let mut lat_weight = 0usize;
     let mut p99 = 0.0f64;
     let mut oom = false;
+    let mut shard_reports = Vec::new();
     for shard in &shards {
         if shard.is_empty() {
             continue;
@@ -179,19 +233,31 @@ pub fn simulate_cluster(
         oom |= rep.oom;
         completed += rep.completed;
         makespan = makespan.max(rep.makespan_s);
-        lat_sum += rep.mean_latency_s * rep.completed as f64;
-        p99 = p99.max(rep.p99_latency_s);
+        // Weight each shard's mean by its completions, skipping shards
+        // that completed nothing: an OOM shard reports
+        // `mean_latency_s == inf` with `completed == 0`, and
+        // `inf × 0 = NaN` would poison the aggregate. Such shards are
+        // still visible through `oom` and their own entry in `shards`.
+        if rep.completed > 0 && rep.mean_latency_s.is_finite() {
+            lat_sum += rep.mean_latency_s * rep.completed as f64;
+            lat_weight += rep.completed;
+        }
+        if rep.p99_latency_s.is_finite() {
+            p99 = p99.max(rep.p99_latency_s);
+        }
+        shard_reports.push(rep);
     }
-    LoadReport {
+    let aggregate = LoadReport {
         name: format!("{}x{}", profile.name, workers),
         n_requests: reqs.len(),
         completed,
         makespan_s: makespan,
         req_per_s: completed as f64 / makespan.max(1e-9),
-        mean_latency_s: if completed > 0 { lat_sum / completed as f64 } else { f64::INFINITY },
-        p99_latency_s: p99,
+        mean_latency_s: if lat_weight > 0 { lat_sum / lat_weight as f64 } else { f64::INFINITY },
+        p99_latency_s: if lat_weight > 0 { p99 } else { f64::INFINITY },
         oom,
-    }
+    };
+    ClusterReport { aggregate, shards: shard_reports }
 }
 
 #[cfg(test)]
@@ -266,5 +332,76 @@ mod tests {
         let rep = simulate_load(&m, &hw, &profiles::full(), &reqs, 4);
         assert!(rep.oom);
         assert_eq!(rep.completed, 0);
+    }
+
+    #[test]
+    fn cluster_mean_survives_oom_shard() {
+        // Regression: a shard whose every request is infeasible reports
+        // `mean_latency_s == inf` with `completed == 0`; the aggregate
+        // used to compute `inf × 0 = NaN`. Build a trace where one
+        // prefix-affinity group is infeasibly long so exactly one shard
+        // OOMs while the others complete.
+        let (m, hw) = setup();
+        let mut reqs = closed_loop(8, 8, 32 * 1024, 128);
+        // Pin the infeasible requests to one worker via prefix affinity.
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.prefix_hash = Some(if i < 2 { 0xBAD } else { 0x60 + (i as u64 % 3) });
+            if i < 2 {
+                r.input_tokens = 1 << 20; // cannot fit on any worker
+            }
+        }
+        let det = simulate_cluster_detailed(&m, &hw, &profiles::full(), &reqs, 4, 4);
+        let rep = &det.aggregate;
+        assert!(rep.oom, "the infeasible shard must surface as oom");
+        assert!(det.shards.iter().any(|s| s.oom && s.completed == 0));
+        assert!(rep.completed > 0 && rep.completed < reqs.len());
+        assert!(
+            rep.mean_latency_s.is_finite() && !rep.mean_latency_s.is_nan(),
+            "aggregate mean poisoned: {}",
+            rep.mean_latency_s
+        );
+        assert!(rep.p99_latency_s.is_finite());
+    }
+
+    #[test]
+    fn prefill_only_requests_complete_without_underflow() {
+        // Regression: `output_tokens == 0` entered the decode pool and
+        // underflowed `remaining -= 1` (panic in debug, wrap + hang in
+        // release). Such requests must complete at prefill time.
+        let (m, hw) = setup();
+        let reqs = poisson_arrivals(0.5, 6, 16 * 1024, 0, 3);
+        let rep = simulate_load(&m, &hw, &profiles::retroinfer(0.85), &reqs, 4);
+        assert!(!rep.oom);
+        assert_eq!(rep.completed, 6);
+        assert!(rep.mean_latency_s.is_finite() && rep.mean_latency_s > 0.0);
+        // Mixed trace: prefill-only alongside normal decode requests.
+        let mut mixed = poisson_arrivals(0.5, 6, 16 * 1024, 32, 4);
+        for r in mixed.iter_mut().skip(3) {
+            r.output_tokens = 0;
+        }
+        let rep = simulate_load(&m, &hw, &profiles::retroinfer(0.85), &mixed, 4);
+        assert_eq!(rep.completed, 6);
+    }
+
+    #[test]
+    fn open_loop_arrival_behind_closed_loop_entry_is_admitted() {
+        // Regression: the arrival scan `break`ed at the first
+        // `arrive_s == inf` entry, so a finite arrival sequenced after a
+        // closed-loop entry in the trace was never admitted and the
+        // simulation either dropped it or spun. Mixed traces must
+        // complete every request.
+        let (m, hw) = setup();
+        let mut reqs = closed_loop(2, 6, 32 * 1024, 64); // 2 at t=0, 4 at inf
+        reqs.push(RequestSpec {
+            arrive_s: 1.0,
+            input_tokens: 32 * 1024,
+            output_tokens: 64,
+            tenant: 0,
+            prefix_hash: None,
+        });
+        let rep = simulate_load(&m, &hw, &profiles::retroinfer(0.85), &reqs, 4);
+        assert!(!rep.oom);
+        assert_eq!(rep.completed, 7, "open-loop tail request stranded");
+        assert!(rep.mean_latency_s.is_finite());
     }
 }

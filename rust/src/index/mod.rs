@@ -18,8 +18,8 @@ use crate::attention::{tripartite_attention, TripartiteInputs};
 use crate::config::ZoneConfig;
 use crate::kvcache::prefix::{SealedBlockMeta, SealedCluster, SealedSlot};
 use crate::kvcache::{
-    AllocError, BlockArena, BlockRef, HeadStore, SpillCandidate, SpillPolicy, TenantId,
-    DEFAULT_TENANT,
+    append_snapshot_page, read_snapshot_page, AllocError, BlockArena, BlockData, BlockRef,
+    HeadStore, SpillCandidate, SpillPolicy, TenantId, DEFAULT_TENANT,
 };
 use crate::tensor::dot;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -46,6 +46,90 @@ impl ZoneSelection {
 pub struct SelectScratch {
     scores: Vec<f32>,
     order: Vec<u32>,
+}
+
+/// Why a wave-index state snapshot could not be imported.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The byte stream is truncated, mis-framed, or internally
+    /// inconsistent.
+    Corrupt(&'static str),
+    /// The snapshot's geometry does not match the target arena/config.
+    Geometry { field: &'static str, want: usize, got: usize },
+    /// The target arena refused a KV block mid-rebuild (every block the
+    /// partial import checked out has been returned).
+    Alloc(AllocError),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Corrupt(what) => write!(f, "corrupt snapshot: {what}"),
+            SnapshotError::Geometry { field, want, got } => {
+                write!(f, "snapshot geometry mismatch: {field} = {got}, target wants {want}")
+            }
+            SnapshotError::Alloc(e) => write!(f, "snapshot rebuild refused a block: {e:?}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<AllocError> for SnapshotError {
+    fn from(e: AllocError) -> Self {
+        SnapshotError::Alloc(e)
+    }
+}
+
+/// `b"WIDX"` — first four bytes of every wave-index state snapshot.
+const SNAPSHOT_MAGIC: u32 = u32::from_le_bytes(*b"WIDX");
+const SNAPSHOT_VERSION: u32 = 1;
+
+/// Bounds-checked LE reader over a snapshot byte stream.
+struct SnapCursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> SnapCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        let end = self
+            .off
+            .checked_add(n)
+            .ok_or(SnapshotError::Corrupt("offset overflow"))?;
+        if end > self.buf.len() {
+            return Err(SnapshotError::Corrupt("truncated stream"));
+        }
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, SnapshotError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, SnapshotError> {
+        let raw = self.take(n.checked_mul(4).ok_or(SnapshotError::Corrupt("length overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, SnapshotError> {
+        let raw = self.take(n.checked_mul(4).ok_or(SnapshotError::Corrupt("length overflow"))?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
 }
 
 /// Tokens a partially-failed segment clustering could not place, handed
@@ -301,6 +385,190 @@ impl WaveIndex {
             });
         }
         out
+    }
+
+    /// Serialize this index's full logical state — cluster metadata
+    /// (centroid, value sum, token positions, lossy clearance), every
+    /// cluster's KV through the bit-exact snapshot page format
+    /// (cold/compressed blocks read back through their codec first),
+    /// sink and pending KV, and the clustering identity
+    /// (`seed`/`n_seen`/`n_updates`) — into an LE byte stream that
+    /// [`WaveIndex::import_state`] rebuilds on another replica. Derived
+    /// state is deliberately absent: wave-buffer cache contents, access
+    /// epochs, and hot/cold residency affect performance, never token
+    /// bits, so the target starts them fresh. The `ZoneConfig` is also
+    /// not carried — replicas of one deployment share it, and the seed
+    /// is what keeps future segment re-clusterings bit-identical.
+    pub fn export_state(&self) -> Vec<u8> {
+        let d = self.d;
+        let tpb = self.store.tokens_per_block();
+        let m = self.cluster_blocks.len();
+        let mut out = Vec::new();
+        out.extend_from_slice(&SNAPSHOT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+        out.extend_from_slice(&(tpb as u32).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.n_seen as u64).to_le_bytes());
+        out.extend_from_slice(&(self.n_updates as u64).to_le_bytes());
+        out.extend_from_slice(&self.lossy_cos_floor.to_le_bytes());
+        out.extend_from_slice(&(m as u32).to_le_bytes());
+        out.extend_from_slice(&(self.sink_pos.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.pend_pos.len() as u32).to_le_bytes());
+        let (mut bk, mut bv) = (Vec::new(), Vec::new());
+        for c in 0..m {
+            let pos = self.meta.cluster_tokens(c);
+            out.extend_from_slice(&(pos.len() as u32).to_le_bytes());
+            out.push(self.cluster_lossy_ok(c as u32) as u8);
+            for x in self.meta.centroid(c) {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for x in &self.meta.vsum_flat()[c * d..(c + 1) * d] {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            for p in pos {
+                out.extend_from_slice(&p.to_le_bytes());
+            }
+            let refs = &self.cluster_blocks[c];
+            out.extend_from_slice(&(refs.len() as u32).to_le_bytes());
+            let mut tok = 0usize;
+            for r in refs {
+                bk.clear();
+                bv.clear();
+                self.store.copy_block_kv(*r, &mut bk, &mut bv);
+                let len = r.len as usize;
+                debug_assert_eq!(bk.len(), len * d);
+                let mut data = BlockData::zeroed(tpb, d);
+                data.keys[..len * d].copy_from_slice(&bk);
+                data.vals[..len * d].copy_from_slice(&bv);
+                data.pos[..len].copy_from_slice(&pos[tok..tok + len]);
+                append_snapshot_page(&data, len, tpb, d, &mut out);
+                tok += len;
+            }
+            debug_assert_eq!(tok, pos.len(), "cluster blocks out of step with meta");
+        }
+        for x in self.sink_keys.iter().chain(&self.sink_vals) {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for p in &self.sink_pos {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        for x in self.pend_keys.iter().chain(&self.pend_vals) {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for p in &self.pend_pos {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out
+    }
+
+    /// Rebuild an index from an [`WaveIndex::export_state`] stream,
+    /// checking fresh KV blocks out of `arena` on behalf of `tenant`.
+    /// Cluster ids, token partition, centroids, value sums, and every
+    /// f32 bit of KV match the source exactly; only block ids and tier
+    /// residency differ (every imported block starts hot and private).
+    /// The source and target block strides may differ — pages re-pack
+    /// into the target's geometry. Fails soft on corrupt bytes, a head
+    /// dimension mismatch, or an arena refusal; a failed import leaves
+    /// the arena unchanged.
+    pub fn import_state(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        bytes: &[u8],
+    ) -> Result<WaveIndex, SnapshotError> {
+        let mut cur = SnapCursor { buf: bytes, off: 0 };
+        if cur.u32()? != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::Corrupt("bad magic"));
+        }
+        if cur.u32()? != SNAPSHOT_VERSION {
+            return Err(SnapshotError::Corrupt("unknown snapshot version"));
+        }
+        let d = cur.u32()? as usize;
+        if d != arena.d() {
+            return Err(SnapshotError::Geometry { field: "d", want: arena.d(), got: d });
+        }
+        let src_tpb = cur.u32()? as usize;
+        if src_tpb == 0 {
+            return Err(SnapshotError::Corrupt("zero block stride"));
+        }
+        let seed = cur.u64()?;
+        let n_seen = cur.u64()? as usize;
+        let n_updates = cur.u64()? as usize;
+        let lossy_cos_floor = cur.f32()?;
+        let m = cur.u32()? as usize;
+        let sink_len = cur.u32()? as usize;
+        let pend_len = cur.u32()? as usize;
+        let mut idx = WaveIndex {
+            cfg,
+            d,
+            store: HeadStore::new_in_for(Arc::clone(arena), tenant),
+            meta: MetaIndex::new(d),
+            cluster_blocks: Vec::new(),
+            sink_keys: Vec::new(),
+            sink_vals: Vec::new(),
+            sink_pos: Vec::new(),
+            pend_keys: Vec::new(),
+            pend_vals: Vec::new(),
+            pend_pos: Vec::new(),
+            n_seen: 0,
+            n_updates: 0,
+            seed,
+            epoch: AtomicU64::new(0),
+            access_epoch: Vec::new(),
+            recent: Mutex::new(Vec::new()),
+            spill_policy: None,
+            lossy_cos_floor,
+        };
+        let mut page = BlockData::zeroed(src_tpb, d);
+        let (mut ck, mut cv) = (Vec::new(), Vec::new());
+        for _ in 0..m {
+            let n_tok = cur.u32()? as usize;
+            let _flags = cur.u8()?;
+            let centroid = cur.f32_vec(d)?;
+            let vsum = cur.f32_vec(d)?;
+            let pos = cur.u32_vec(n_tok)?;
+            let n_pages = cur.u32()? as usize;
+            ck.clear();
+            cv.clear();
+            let mut tok = 0usize;
+            for _ in 0..n_pages {
+                let (valid, next) = read_snapshot_page(bytes, cur.off, src_tpb, d, &mut page)
+                    .ok_or(SnapshotError::Corrupt("bad snapshot page"))?;
+                cur.off = next;
+                if tok + valid > n_tok {
+                    return Err(SnapshotError::Corrupt("cluster pages overflow token count"));
+                }
+                ck.extend_from_slice(&page.keys[..valid * d]);
+                cv.extend_from_slice(&page.vals[..valid * d]);
+                if page.pos[..valid] != pos[tok..tok + valid] {
+                    return Err(SnapshotError::Corrupt("page positions disagree with meta"));
+                }
+                tok += valid;
+            }
+            if tok != n_tok {
+                return Err(SnapshotError::Corrupt("cluster token count mismatch"));
+            }
+            // On failure `idx` drops here and its HeadStore returns
+            // every block already checked out — no residue.
+            let refs = idx.store.try_alloc_cluster(&ck, &cv, &pos)?;
+            let id = idx.meta.push(&centroid, &vsum, pos);
+            debug_assert_eq!(id, idx.cluster_blocks.len());
+            idx.cluster_blocks.push(refs);
+            idx.access_epoch.push(AtomicU64::new(0));
+        }
+        idx.sink_keys = cur.f32_vec(sink_len * d)?;
+        idx.sink_vals = cur.f32_vec(sink_len * d)?;
+        idx.sink_pos = cur.u32_vec(sink_len)?;
+        idx.pend_keys = cur.f32_vec(pend_len * d)?;
+        idx.pend_vals = cur.f32_vec(pend_len * d)?;
+        idx.pend_pos = cur.u32_vec(pend_len)?;
+        if cur.off != bytes.len() {
+            return Err(SnapshotError::Corrupt("trailing bytes"));
+        }
+        idx.n_seen = n_seen;
+        idx.n_updates = n_updates;
+        Ok(idx)
     }
 
     /// Tokens covered by committed clusters from position 0 (sink +
@@ -1121,6 +1389,129 @@ mod tests {
         let mut full = vec![0.0; d];
         full_attention(&q, &k, &v, d, &mut full);
         assert!(cosine(&out, &full) > 0.999);
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn cluster_kv(idx: &WaveIndex, c: usize) -> (Vec<f32>, Vec<f32>) {
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        for r in idx.cluster_blocks(c as u32) {
+            idx.store().copy_block_kv(*r, &mut k, &mut v);
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn export_import_roundtrips_bit_exact() {
+        let d = 16;
+        let (k, v) = mk_ctx(512, d, 44);
+        let arena = BlockArena::shared(d, 1024); // tpb = 8
+        let mut idx = WaveIndex::try_build_in_for(&arena, 1, small_cfg(), &k, &v, 77).unwrap();
+        // decode-time appends so pend and n_updates are non-trivial
+        let mut rng = Rng::new(45);
+        for _ in 0..56 {
+            let key = rng.normal_vec(d);
+            let val = rng.normal_vec(d);
+            idx.append(&key, &val);
+        }
+        assert!(idx.n_updates() >= 1);
+        // demote one cluster so export must read through the spill tier
+        assert!(idx.demote_cluster(0) > 0);
+        let snap = idx.export_state();
+        // DIFFERENT block stride on the target: pages re-pack
+        let arena2 = BlockArena::shared(d, 512); // tpb = 4
+        let got = WaveIndex::import_state(&arena2, 2, small_cfg(), &snap).unwrap();
+        assert_eq!(got.meta().m(), idx.meta().m());
+        assert_eq!(got.n_seen(), idx.n_seen());
+        assert_eq!(got.n_updates(), idx.n_updates());
+        assert_eq!(got.steady_tokens(), idx.steady_tokens());
+        for c in 0..idx.meta().m() {
+            assert_eq!(got.meta().cluster_tokens(c), idx.meta().cluster_tokens(c));
+            assert_eq!(bits(got.meta().centroid(c)), bits(idx.meta().centroid(c)));
+            let (k1, v1) = cluster_kv(&idx, c);
+            let (k2, v2) = cluster_kv(&got, c);
+            assert_eq!(bits(&k2), bits(&k1), "cluster {c} keys drifted");
+            assert_eq!(bits(&v2), bits(&v1), "cluster {c} vals drifted");
+        }
+        let (sk1, sv1) = idx.steady_kv();
+        let (sk2, sv2) = got.steady_kv();
+        assert_eq!(bits(&sk2), bits(&sk1));
+        assert_eq!(bits(&sv2), bits(&sv1));
+        // same query ⇒ same selection, bit-identical attention output
+        let q = Rng::new(46).normal_vec(d);
+        let (mut s1, mut s2) = (SelectScratch::default(), SelectScratch::default());
+        let sel1 = idx.select(&q, &mut s1);
+        let sel2 = got.select(&q, &mut s2);
+        assert_eq!(sel1, sel2);
+        let (mut o1, mut o2) = (vec![0.0; d], vec![0.0; d]);
+        idx.attend(&q, &sel1, &mut o1);
+        got.attend(&q, &sel2, &mut o2);
+        assert_eq!(bits(&o1), bits(&o2), "attention must be bit-identical after import");
+        // the clustering seed survives: identical future appends
+        // re-cluster identically on both sides
+        let (mut a, mut b) = (idx, got);
+        let mut rng = Rng::new(47);
+        for _ in 0..64 {
+            let key = rng.normal_vec(d);
+            let val = rng.normal_vec(d);
+            a.append(&key, &val);
+            b.append(&key, &val);
+        }
+        assert_eq!(a.meta().m(), b.meta().m());
+        let last = a.meta().m() - 1;
+        assert_eq!(bits(b.meta().centroid(last)), bits(a.meta().centroid(last)));
+        assert_eq!(b.meta().cluster_tokens(last), a.meta().cluster_tokens(last));
+    }
+
+    #[test]
+    fn import_rejects_corrupt_and_mismatched_snapshots() {
+        let d = 16;
+        let (k, v) = mk_ctx(256, d, 50);
+        let idx = WaveIndex::build(small_cfg(), d, 1024, &k, &v, 9);
+        let snap = idx.export_state();
+        let ok_arena = BlockArena::shared(d, 512);
+        // head-dimension mismatch
+        let bad_d = BlockArena::shared(8, 512);
+        assert!(matches!(
+            WaveIndex::import_state(&bad_d, 0, small_cfg(), &snap),
+            Err(SnapshotError::Geometry { field: "d", .. })
+        ));
+        // truncation anywhere fails soft
+        assert!(matches!(
+            WaveIndex::import_state(&ok_arena, 0, small_cfg(), &snap[..snap.len() - 1]),
+            Err(SnapshotError::Corrupt(_))
+        ));
+        assert!(matches!(
+            WaveIndex::import_state(&ok_arena, 0, small_cfg(), &snap[..10]),
+            Err(SnapshotError::Corrupt(_))
+        ));
+        // trailing garbage is rejected, not ignored
+        let mut long = snap.clone();
+        long.push(0);
+        assert!(matches!(
+            WaveIndex::import_state(&ok_arena, 0, small_cfg(), &long),
+            Err(SnapshotError::Corrupt("trailing bytes"))
+        ));
+        // bad magic
+        let mut bad_magic = snap.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(matches!(
+            WaveIndex::import_state(&ok_arena, 0, small_cfg(), &bad_magic),
+            Err(SnapshotError::Corrupt("bad magic"))
+        ));
+        // a capped target arena refuses mid-rebuild and leaves no residue
+        let capped = BlockArena::shared(d, 512);
+        capped.set_capacity_blocks(Some(2));
+        assert!(matches!(
+            WaveIndex::import_state(&capped, 3, small_cfg(), &snap),
+            Err(SnapshotError::Alloc(_))
+        ));
+        assert_eq!(capped.live_blocks(), 0, "failed import must return every block");
+        assert_eq!(capped.tenant_live_blocks(3), 0);
+        // the pristine snapshot still imports fine afterwards
+        assert!(WaveIndex::import_state(&ok_arena, 0, small_cfg(), &snap).is_ok());
     }
 
     #[test]

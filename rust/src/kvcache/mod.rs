@@ -38,8 +38,9 @@ pub mod store;
 pub use arena::{AllocError, BlockArena, BlockData, TenantId, DEFAULT_TENANT};
 pub use prefix::{ChainGeometry, PrefixMatch, PrefixRegistry, SealedSlot};
 pub use spill::{
-    CodecTag, ColdestFirst, ExactCodec, Int4AngleCodec, Int8AngleCodec, LargestColdFirst,
-    LowRankKCodec, PageCodec, SpillCandidate, SpillPolicy, SpillStore,
+    append_snapshot_page, read_snapshot_page, CodecTag, ColdestFirst, ExactCodec,
+    Int4AngleCodec, Int8AngleCodec, LargestColdFirst, LowRankKCodec, PageCodec,
+    SpillCandidate, SpillPolicy, SpillStore,
 };
 pub use store::{BlockRef, HeadStore, KvStore};
 

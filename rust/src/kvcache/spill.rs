@@ -459,6 +459,67 @@ impl PageCodec for LowRankKCodec {
     }
 }
 
+// ---------------------------------------------------------------------
+// Session-snapshot pages
+// ---------------------------------------------------------------------
+
+/// Append one block as a self-describing snapshot page to a byte
+/// stream: the same LE `[tag][reserved][tokens u16][payload_len u32]`
+/// header the cold tier writes, followed by an [`ExactCodec`] payload.
+/// Snapshot pages are the unit of live session migration
+/// (`LiveEngine::export_session`): always exact — whatever codec the
+/// source's cold tier used, the migrated replica must rebuild the very
+/// bits the source would have attended over, so re-encoding lossily
+/// here would double-quantize. `tokens` records how many leading
+/// positions of the (always full-stride) block are meaningful.
+pub fn append_snapshot_page(
+    data: &BlockData,
+    tokens: usize,
+    tpb: usize,
+    d: usize,
+    out: &mut Vec<u8>,
+) {
+    debug_assert!(tokens <= tpb && tokens <= u16::MAX as usize);
+    let raw = raw_payload_bytes(tpb, d);
+    let start = out.len();
+    out.resize(start + PAGE_HEADER_BYTES + raw, 0);
+    let page = &mut out[start..];
+    let plen = ExactCodec.encode(data, tpb, d, &mut page[PAGE_HEADER_BYTES..]);
+    debug_assert_eq!(plen, raw);
+    page[0] = CodecTag::Exact as u8;
+    page[1] = 0;
+    page[2..4].copy_from_slice(&(tokens as u16).to_le_bytes());
+    page[4..8].copy_from_slice(&(plen as u32).to_le_bytes());
+}
+
+/// Decode one snapshot page from `buf` at byte offset `off` into `out`.
+/// Dispatches on the page's own tag (like every cold read), so a future
+/// compressed snapshot format reads through the same path. Returns
+/// `(valid_tokens, next_offset)`, or `None` on a truncated page, an
+/// unknown tag, or a token count exceeding the block stride — the
+/// caller treats that as a corrupt snapshot, not a panic.
+pub fn read_snapshot_page(
+    buf: &[u8],
+    off: usize,
+    tpb: usize,
+    d: usize,
+    out: &mut BlockData,
+) -> Option<(usize, usize)> {
+    let body = off.checked_add(PAGE_HEADER_BYTES)?;
+    if buf.len() < body {
+        return None;
+    }
+    let tag = CodecTag::from_u8(buf[off])?;
+    let tokens = u16::from_le_bytes(buf[off + 2..off + 4].try_into().unwrap()) as usize;
+    let plen = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap()) as usize;
+    let end = body.checked_add(plen)?;
+    if buf.len() < end || tokens > tpb || plen > raw_payload_bytes(tpb, d) {
+        return None;
+    }
+    codec_for(tag).decode(&buf[body..end], tpb, d, out);
+    Some((tokens, end))
+}
+
 /// The static codec instance for a tag.
 pub fn codec_for(tag: CodecTag) -> &'static dyn PageCodec {
     static EXACT: ExactCodec = ExactCodec;
@@ -1165,6 +1226,40 @@ mod tests {
             v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             full.vals[..2 * d].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn snapshot_pages_roundtrip_every_bit_pattern() {
+        let (tpb, d) = (4, 8);
+        // NaN payload, inf exponent, denormals — the page must carry
+        // every f32 bit pattern unchanged
+        let blocks = [
+            filled(tpb, d, 0x7fc0_0001),
+            filled(tpb, d, 0x7f80_0000),
+            filled(tpb, d, 0x0000_0001),
+        ];
+        let mut stream = Vec::new();
+        for (i, b) in blocks.iter().enumerate() {
+            append_snapshot_page(b, tpb - i.min(tpb - 1), tpb, d, &mut stream);
+        }
+        assert_eq!(
+            stream.len(),
+            blocks.len() * (PAGE_HEADER_BYTES + raw_payload_bytes(tpb, d))
+        );
+        let mut off = 0;
+        let mut out = BlockData::zeroed(tpb, d);
+        for (i, b) in blocks.iter().enumerate() {
+            let (tokens, next) =
+                read_snapshot_page(&stream, off, tpb, d, &mut out).expect("valid page");
+            assert_eq!(tokens, tpb - i.min(tpb - 1));
+            assert_eq!(bits(&out), bits(b));
+            off = next;
+        }
+        assert_eq!(off, stream.len());
+        // truncated stream and bad offsets fail soft, never panic
+        assert!(read_snapshot_page(&stream, off, tpb, d, &mut out).is_none());
+        assert!(read_snapshot_page(&stream[..5], 0, tpb, d, &mut out).is_none());
+        assert!(read_snapshot_page(&stream, usize::MAX - 2, tpb, d, &mut out).is_none());
     }
 
     #[test]

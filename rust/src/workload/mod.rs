@@ -17,7 +17,10 @@ pub use arrivals::{
     closed_loop, multi_tenant_poisson, poisson_arrivals, shared_prefix_poisson,
     stamp_shared_prefix, RequestSpec,
 };
-pub use pressure::{run_memory_pressure, PressureConfig, PressureReport};
+pub use pressure::{
+    run_cluster_pressure, run_memory_pressure, ClusterPressureConfig, ClusterPressureReport,
+    PressureConfig, PressureReport,
+};
 pub use tasks::{Task, TaskKind};
 
 use crate::util::rng::Rng;

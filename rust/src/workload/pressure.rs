@@ -39,7 +39,7 @@
 //! nominal (unshared) footprint would exceed it.
 
 use crate::config::SpillCodec;
-use crate::coordinator::{Action, AdmissionConfig, Batcher, Request, Scheduler};
+use crate::coordinator::{Action, AdmissionConfig, Batcher, Phase, Request, Router, Scheduler};
 use crate::kvcache::{AllocError, BlockArena, BlockRef, CodecTag, HeadStore, KvStore, TenantId};
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
@@ -573,5 +573,300 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
         .sessions()
         .filter(|s| !s.rejected && s.generated.len() >= s.req.max_new)
         .count();
+    rep
+}
+
+/// Geometry + fault plan of a modelled cluster-pressure scenario: N
+/// workers, each a full [`PressureConfig`]-style node (own arena, own
+/// admission gate), behind the real [`Router`]. Exercises the three
+/// cluster verbs without model artifacts, so the failure-injection
+/// invariants run in tier-1 CI: **steal** (a gate-deferred head moves to
+/// the least-loaded live peer), **recover** (a killed worker's sessions
+/// restart on survivors from their queue — in the modelled world KV is
+/// zero-filled, so recovery degenerates to requeue-and-re-prefill), and
+/// per-worker capacity isolation (one worker's overload never breaches
+/// another's cap).
+#[derive(Clone, Debug)]
+pub struct ClusterPressureConfig {
+    pub workers: usize,
+    /// Per-worker node geometry/budget. `spill` and
+    /// `shared_prefix_tokens` are single-node features and must be off
+    /// here (the cluster model needs the single-tier gate so deferral —
+    /// and therefore stealing — can happen).
+    pub node: PressureConfig,
+    /// Offer gate-deferred heads to the least-loaded live peer.
+    pub steal: bool,
+    /// Kill this worker after `kill_at_step` scheduler rounds.
+    pub kill_worker: Option<usize>,
+    pub kill_at_step: usize,
+}
+
+impl Default for ClusterPressureConfig {
+    fn default() -> Self {
+        ClusterPressureConfig {
+            workers: 2,
+            node: PressureConfig::default(),
+            steal: true,
+            kill_worker: None,
+            kill_at_step: 0,
+        }
+    }
+}
+
+/// What a cluster-pressure run observed.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterPressureReport {
+    /// Requests that finished with their full token budget (survivors +
+    /// the killed worker's already-finished sessions).
+    pub completed: usize,
+    /// Requests some gate rejected outright.
+    pub rejected: usize,
+    /// Requests moved off their routed worker (steals + failure
+    /// re-homes), from the router's own counter.
+    pub steals: u64,
+    /// Gate-blocked head-of-queue observations summed over workers.
+    pub deferrals: u64,
+    /// Sessions re-homed off the killed worker.
+    pub recovered: usize,
+    /// Of those, sessions that were mid-decode (lost KV, restarted).
+    pub restarted_mid_decode: usize,
+    /// Steps where any worker's live blocks exceeded its own cap (must
+    /// be zero — per-worker isolation).
+    pub capacity_violations: usize,
+    /// Prefill checkouts an arena refused after admission let them
+    /// through (must be zero).
+    pub prefill_failures: usize,
+    /// Blocks still live on the killed worker's arena after its stores
+    /// dropped (must be zero — failure leaks nothing).
+    pub leaked_blocks: usize,
+    pub peak_live_blocks_per_worker: Vec<usize>,
+    pub completed_per_worker: Vec<usize>,
+    /// Coordinator rounds the run took.
+    pub steps: usize,
+    /// False only if the guard tripped before the trace drained.
+    pub drained: bool,
+}
+
+/// One modelled worker: private arena + gate + stores.
+struct ModelWorker {
+    arena: Arc<BlockArena>,
+    sched: Scheduler,
+    stores: HashMap<u64, KvStore>,
+    decoded: HashMap<u64, usize>,
+}
+
+fn model_worker(node: &PressureConfig) -> ModelWorker {
+    let arena = BlockArena::shared(node.d, node.block_bytes);
+    arena.set_capacity_blocks(Some(node.capacity_blocks));
+    let adm = AdmissionConfig {
+        heads: node.layers * node.kv_heads,
+        tokens_per_block: arena.tokens_per_block(),
+        headroom_frac: node.headroom_frac,
+        est_fudge: 1.5,
+        tiered: false,
+    };
+    let sched = Scheduler::with_admission(
+        Batcher::new(&[1, 2, 4, 8], node.max_batch),
+        Arc::clone(&arena),
+        adm,
+    );
+    ModelWorker {
+        arena,
+        sched,
+        stores: HashMap::new(),
+        decoded: HashMap::new(),
+    }
+}
+
+/// Run one seeded cluster-pressure scenario to completion (or guard).
+/// The trace is routed up-front (least-loaded), then the coordinator
+/// rounds every live worker through the same prefill/decode footprint
+/// model as [`run_memory_pressure`], stealing deferred heads and — when
+/// the fault plan says so — killing a worker mid-run and re-homing its
+/// unfinished sessions to survivors.
+pub fn run_cluster_pressure(
+    cfg: &ClusterPressureConfig,
+    trace: &[RequestSpec],
+) -> ClusterPressureReport {
+    assert!(cfg.workers > 0);
+    assert!(
+        !cfg.node.spill && cfg.node.shared_prefix_tokens == 0,
+        "cluster pressure models the single-tier gate only"
+    );
+    let node = &cfg.node;
+    let tpb_ref = crate::kvcache::tokens_per_block(node.block_bytes, node.d, 4);
+    let mut workers: Vec<Option<ModelWorker>> =
+        (0..cfg.workers).map(|_| Some(model_worker(node))).collect();
+    let mut router = Router::new(cfg.workers);
+    let mut rep = ClusterPressureReport {
+        peak_live_blocks_per_worker: vec![0; cfg.workers],
+        completed_per_worker: vec![0; cfg.workers],
+        ..Default::default()
+    };
+    for (i, r) in trace.iter().enumerate() {
+        let w = router.route_with_prefix(None);
+        let req = Request::new(i as u64, vec![1; r.input_tokens], r.output_tokens.max(1))
+            .with_tenant(r.tenant);
+        workers[w].as_mut().unwrap().sched.submit(req, r.arrive_s);
+    }
+
+    let mut killed_deferrals = 0u64;
+    let mut killed_rejected = 0usize;
+    let mut guard = 0usize;
+    loop {
+        let all_done = workers.iter().flatten().all(|w| w.sched.all_done());
+        if all_done {
+            break;
+        }
+        guard += 1;
+        if guard > 200_000 {
+            rep.drained = false;
+            rep.deferrals = killed_deferrals
+                + workers.iter().flatten().map(|w| w.sched.n_deferrals()).sum::<u64>();
+            return rep;
+        }
+        rep.steps += 1;
+        let now = rep.steps as f64 * 1e-3;
+
+        // fault plan: the worker dies, its arena must drain, and its
+        // unfinished sessions re-home to survivors
+        if Some(rep.steps) == cfg.kill_worker.map(|_| cfg.kill_at_step) {
+            let victim = cfg.kill_worker.unwrap();
+            if let Some(mut dead) = workers[victim].take() {
+                for fid in dead.sched.take_finished() {
+                    if let Some(s) = dead.sched.session(fid) {
+                        if !s.rejected && s.generated.len() >= s.req.max_new {
+                            rep.completed += 1;
+                            rep.completed_per_worker[victim] += 1;
+                        }
+                    }
+                }
+                router.mark_down(victim);
+                killed_deferrals += dead.sched.n_deferrals();
+                killed_rejected += dead.sched.n_rejections() as usize;
+                // the KV dies with the worker: dropping the stores must
+                // return every block to its (now unreachable) arena
+                dead.stores.clear();
+                dead.decoded.clear();
+                rep.leaked_blocks = dead.arena.live_blocks();
+                for mut s in dead.sched.drain_unfinished() {
+                    let target = router
+                        .steal_target(victim)
+                        .expect("survivors exist (mark_down enforces it)");
+                    if s.phase == Phase::Decode {
+                        rep.restarted_mid_decode += 1;
+                    }
+                    // restart from the queue: the modelled KV carries no
+                    // token state, so requeue-and-re-prefill is the whole
+                    // recovery story here (the live path additionally
+                    // replays generated tokens — tests/cluster.rs)
+                    s.generated.clear();
+                    s.phase = Phase::Queued;
+                    s.first_token_s = f64::NAN;
+                    workers[target].as_mut().unwrap().sched.adopt_session(s, now);
+                    router.note_stolen(victim, target);
+                    rep.recovered += 1;
+                }
+            }
+        }
+
+        for w in 0..cfg.workers {
+            if workers[w].is_none() {
+                continue;
+            }
+            let action = workers[w].as_mut().unwrap().sched.next_action();
+            match action {
+                Action::Prefill(id) => {
+                    let mw = workers[w].as_mut().unwrap();
+                    let (tenant, prompt_len) = {
+                        let s = mw.sched.session(id).unwrap();
+                        (s.req.tenant, s.req.prompt.len())
+                    };
+                    let mut st =
+                        KvStore::new_in_for(Arc::clone(&mw.arena), tenant, node.layers, node.kv_heads);
+                    if checkout_prompt(&mut st, node.layers, node.kv_heads, 0, prompt_len) {
+                        mw.stores.insert(id, st);
+                        mw.decoded.insert(id, 0);
+                    } else {
+                        rep.prefill_failures += 1;
+                    }
+                    mw.sched.prefill_done(id, 0, now);
+                }
+                Action::DecodeBatch(ids, _bucket) => {
+                    let mw = workers[w].as_mut().unwrap();
+                    for id in ids {
+                        mw.sched.token_decoded(id, 1, now);
+                        let n = mw.decoded.entry(id).or_insert(0);
+                        *n += 1;
+                        if *n % tpb_ref != 0 || !mw.stores.contains_key(&id) {
+                            continue;
+                        }
+                        let keys = vec![0.0f32; tpb_ref * node.d];
+                        let vals = vec![0.0f32; tpb_ref * node.d];
+                        let pos: Vec<u32> = (0..tpb_ref as u32).collect();
+                        let st = mw.stores.get_mut(&id).unwrap();
+                        for l in 0..node.layers {
+                            for h in 0..node.kv_heads {
+                                // headroom should make growth infallible;
+                                // a refusal is a prefill-style failure
+                                if st
+                                    .head_mut(l, h)
+                                    .try_alloc_cluster(&keys, &vals, &pos)
+                                    .is_err()
+                                {
+                                    rep.prefill_failures += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+                Action::Defer | Action::Idle => {}
+            }
+            // donor check every round: a busy worker decodes instead of
+            // returning `Defer`, so the gate-blocked head is probed
+            // directly. Load-gated: a request only moves where it
+            // reduces imbalance (also stops ping-pong between two full
+            // workers).
+            if cfg.steal {
+                if let Some(t) = router.steal_target(w) {
+                    if router.load(t) + 1 < router.load(w) {
+                        if let Some(req) = workers[w].as_mut().unwrap().sched.steal_deferred()
+                        {
+                            workers[t].as_mut().unwrap().sched.submit(req, now);
+                            router.note_stolen(w, t);
+                        }
+                    }
+                }
+            }
+            // sample the per-worker isolation invariant, then reclaim
+            let mw = workers[w].as_mut().unwrap();
+            let live = mw.arena.live_blocks();
+            rep.peak_live_blocks_per_worker[w] = rep.peak_live_blocks_per_worker[w].max(live);
+            if live > node.capacity_blocks {
+                rep.capacity_violations += 1;
+            }
+            for fid in mw.sched.take_finished() {
+                if let Some(s) = mw.sched.session(fid) {
+                    if !s.rejected && s.generated.len() >= s.req.max_new {
+                        rep.completed += 1;
+                        rep.completed_per_worker[w] += 1;
+                    }
+                }
+                mw.stores.remove(&fid);
+                mw.decoded.remove(&fid);
+                router.complete(w);
+            }
+        }
+    }
+    rep.drained = true;
+    rep.steals = router.steals();
+    rep.deferrals = killed_deferrals
+        + workers.iter().flatten().map(|w| w.sched.n_deferrals()).sum::<u64>();
+    rep.rejected = killed_rejected
+        + workers
+            .iter()
+            .flatten()
+            .map(|w| w.sched.n_rejections() as usize)
+            .sum::<usize>();
     rep
 }

@@ -1,0 +1,218 @@
+//! Cluster serving, work stealing, live migration and failure recovery
+//! (DESIGN.md §2 "Cluster serving & migration").
+//!
+//! Two layers, mirroring the admission/spill suites:
+//!
+//! * **Modelled** (tier-1, no artifacts): `workload::run_cluster_pressure`
+//!   drives N per-worker admission gates + arenas behind the real
+//!   `Router` with the modelled KV footprint — proves the coordinator
+//!   invariants (stealing drains skewed load, a killed worker's sessions
+//!   all complete on survivors, per-worker caps never breached, failure
+//!   leaks no blocks) without model artifacts.
+//! * **Live** (gated on artifacts + PJRT): `engine::ClusterEngine` runs
+//!   real `LiveEngine` replicas — proves the bit-level claims: a migrated
+//!   session's remaining tokens are bit-identical to an unmigrated run,
+//!   and a killed replica's sessions recover via deterministic re-prefill
+//!   + teacher-forced replay with zero divergence.
+
+use retroinfer::coordinator::Request;
+use retroinfer::engine::live::structured_prompt;
+use retroinfer::engine::{AttnMode, ClusterConfig, ClusterEngine, LiveEngine};
+use retroinfer::kvcache::DEFAULT_TENANT;
+use retroinfer::runtime::default_artifacts_dir;
+use retroinfer::workload::{
+    run_cluster_pressure, ClusterPressureConfig, PressureConfig, RequestSpec,
+};
+
+fn spec(input_tokens: usize, output_tokens: usize) -> RequestSpec {
+    RequestSpec {
+        arrive_s: 0.0,
+        input_tokens,
+        output_tokens,
+        tenant: DEFAULT_TENANT,
+        prefix_hash: None,
+    }
+}
+
+/// Big requests land on worker 0, small ones on worker 1 (least-loaded
+/// routing balances counts, not footprints), so worker 0's gate defers
+/// while worker 1 idles — exactly the skew stealing exists for.
+fn skewed_trace() -> Vec<RequestSpec> {
+    let mut trace = Vec::new();
+    for _ in 0..8 {
+        trace.push(spec(112, 8)); // ~128 blocks resident at d=16/512B
+        trace.push(spec(8, 4)); // ~8 blocks
+    }
+    trace
+}
+
+fn two_worker_cfg(steal: bool) -> ClusterPressureConfig {
+    ClusterPressureConfig {
+        workers: 2,
+        node: PressureConfig {
+            capacity_blocks: 256, // two big requests fill a worker
+            ..PressureConfig::default()
+        },
+        steal,
+        kill_worker: None,
+        kill_at_step: 0,
+    }
+}
+
+#[test]
+fn modelled_cluster_steals_skewed_load_and_drains() {
+    let cfg = two_worker_cfg(true);
+    let trace = skewed_trace();
+    let rep = run_cluster_pressure(&cfg, &trace);
+    assert!(rep.drained, "cluster deadlocked: {rep:?}");
+    assert_eq!(rep.completed, trace.len(), "requests lost: {rep:?}");
+    assert_eq!(rep.rejected, 0, "workload sized to fit per-request: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "per-worker cap breached: {rep:?}");
+    assert_eq!(rep.prefill_failures, 0, "gate admitted an unservable prefill: {rep:?}");
+    // the skew genuinely bit, and stealing genuinely moved work
+    assert!(rep.deferrals > 0, "worker 0 never deferred: {rep:?}");
+    assert!(rep.steals > 0, "no deferred head was stolen: {rep:?}");
+    assert!(
+        rep.completed_per_worker.iter().all(|&c| c > 0),
+        "stealing should spread completions over both workers: {rep:?}"
+    );
+}
+
+#[test]
+fn modelled_cluster_drains_without_stealing_too() {
+    // stealing is a latency optimisation, not a liveness requirement:
+    // with it off, deferred heads wait for local reclamation instead
+    let cfg = two_worker_cfg(false);
+    let trace = skewed_trace();
+    let rep = run_cluster_pressure(&cfg, &trace);
+    assert!(rep.drained, "no-steal cluster deadlocked: {rep:?}");
+    assert_eq!(rep.completed, trace.len(), "requests lost: {rep:?}");
+    assert_eq!(rep.steals, 0, "steal=false must not move work: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "{rep:?}");
+}
+
+#[test]
+fn modelled_cluster_kill_recovers_every_session_on_survivors() {
+    let cfg = ClusterPressureConfig {
+        workers: 3,
+        node: PressureConfig {
+            capacity_blocks: 512,
+            ..PressureConfig::default()
+        },
+        steal: true,
+        kill_worker: Some(1),
+        kill_at_step: 8,
+    };
+    let trace: Vec<RequestSpec> = (0..12).map(|_| spec(64, 16)).collect();
+    let rep = run_cluster_pressure(&cfg, &trace);
+    assert!(rep.drained, "cluster deadlocked after the kill: {rep:?}");
+    assert_eq!(
+        rep.completed + rep.rejected,
+        trace.len(),
+        "the failure lost requests: {rep:?}"
+    );
+    assert_eq!(rep.rejected, 0, "workload sized to fit per-request: {rep:?}");
+    assert!(rep.recovered > 0, "kill_at_step=8 should catch sessions in flight: {rep:?}");
+    assert_eq!(rep.leaked_blocks, 0, "dead worker's arena failed to drain: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "recovery breached a survivor's cap: {rep:?}");
+    assert_eq!(rep.prefill_failures, 0, "{rep:?}");
+    // re-homes are accounted through the router's steal counter
+    assert!(rep.steals >= rep.recovered as u64, "{rep:?}");
+}
+
+// ---------------------------------------------------------------------
+// Live-path tests: real engines, bit-level claims.
+// ---------------------------------------------------------------------
+
+/// The uninterrupted run every cluster scenario must reproduce
+/// bit-exactly: one solo engine, same session id (the clustering seed),
+/// greedy free-running decode.
+fn reference_tokens(dir: &str, id: u64, p: &[i32], max_new: usize) -> Vec<i32> {
+    let mut eng = LiveEngine::new(dir, AttnMode::Wave).unwrap();
+    let mut toks = vec![eng.prefill_for(id, DEFAULT_TENANT, p).unwrap()];
+    while toks.len() < max_new {
+        toks.push(eng.decode_step(&[id], 1).unwrap()[0]);
+    }
+    toks
+}
+
+#[test]
+fn migrated_session_finishes_bit_identical_to_unmigrated_run() {
+    retroinfer::require_live_path!();
+    let dir = default_artifacts_dir();
+    let p = structured_prompt(2048, 31);
+    let max_new = 12usize;
+    let want = reference_tokens(&dir, 1, &p, max_new);
+
+    let mut cluster = ClusterEngine::new(&dir, &ClusterConfig::default()).unwrap();
+    let w0 = cluster.submit(Request::new(1, p.clone(), max_new));
+    // round 1 prefills, rounds 2..5 decode: 5 tokens before migration
+    for _ in 0..5 {
+        cluster.step().unwrap();
+    }
+    let to = 1 - w0;
+    let bytes = cluster.migrate_session(1, to).unwrap();
+    assert!(bytes > 0, "a mid-decode session must serialize real state");
+    assert_eq!(cluster.home_of(1), Some(to));
+    let rep = cluster.run_until_done(10_000).unwrap();
+    assert_eq!(
+        cluster.output(1).unwrap(),
+        &want[..],
+        "migration changed the token stream"
+    );
+    assert_eq!(rep.migrations, 1);
+    assert!(rep.migrated_bytes as usize >= bytes);
+    assert_eq!(rep.completed, 1);
+    assert!(rep.finite_or_empty(), "report grew a NaN: {rep:?}");
+}
+
+#[test]
+fn killed_replica_sessions_replay_bit_identical_on_survivor() {
+    retroinfer::require_live_path!();
+    let dir = default_artifacts_dir();
+    let p1 = structured_prompt(2048, 32);
+    let p2 = structured_prompt(2048, 33);
+    let max_new = 10usize;
+    let want1 = reference_tokens(&dir, 1, &p1, max_new);
+    let want2 = reference_tokens(&dir, 2, &p2, max_new);
+
+    let mut cluster = ClusterEngine::new(&dir, &ClusterConfig::default()).unwrap();
+    let w1 = cluster.submit(Request::new(1, p1, max_new));
+    let w2 = cluster.submit(Request::new(2, p2, max_new));
+    assert_ne!(w1, w2, "least-loaded routing shards the two sessions");
+    // both mid-decode (1 prefill + 3 decode rounds) when the axe falls
+    for _ in 0..4 {
+        cluster.step().unwrap();
+    }
+    let recovered = cluster.kill_replica(w1).unwrap();
+    assert_eq!(recovered, 1, "the killed replica held exactly one session");
+    assert_eq!(cluster.n_live(), 1);
+    assert_eq!(cluster.home_of(1), Some(w2), "session re-homed to the survivor");
+
+    let rep = cluster.run_until_done(10_000).unwrap();
+    assert_eq!(cluster.output(1).unwrap(), &want1[..], "recovered session diverged");
+    assert_eq!(cluster.output(2).unwrap(), &want2[..], "undisturbed session diverged");
+    assert_eq!(rep.completed, 2);
+    assert_eq!(rep.failures, 1);
+    assert_eq!(rep.recovered_sessions, 1);
+    assert!(rep.replayed_tokens > 0, "mid-decode recovery must replay tokens");
+    assert_eq!(
+        rep.replay_divergence, 0,
+        "teacher-forced replay must reproduce the lost KV exactly: {rep:?}"
+    );
+    assert!(rep.finite_or_empty(), "report grew a NaN: {rep:?}");
+}
+
+#[test]
+fn kill_guards_reject_bad_victims() {
+    retroinfer::require_live_path!();
+    let dir = default_artifacts_dir();
+    let mut cluster = ClusterEngine::new(&dir, &ClusterConfig::default()).unwrap();
+    assert!(cluster.kill_replica(7).is_err(), "out-of-range victim");
+    cluster.kill_replica(0).unwrap();
+    assert!(cluster.kill_replica(0).is_err(), "already dead");
+    assert!(
+        cluster.kill_replica(1).is_err(),
+        "the last live replica must refuse to die"
+    );
+}

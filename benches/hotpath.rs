@@ -4,12 +4,17 @@
 //!
 //!     cargo bench --bench hotpath
 
-use retroinfer::attention::{tripartite_attention, TripartiteInputs};
+use retroinfer::attention::{
+    tripartite_attention, tripartite_attention_in, MergeScratch, TripartiteInputs,
+};
+use retroinfer::buffer::cache::BlockCache;
 use retroinfer::buffer::{ExecBuffer, WaveBuffer};
 use retroinfer::config::{BufferConfig, CachePolicy, ZoneConfig};
-use retroinfer::buffer::cache::BlockCache;
 use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
-use retroinfer::index::{spherical_kmeans, SelectScratch, WaveIndex};
+use retroinfer::index::{
+    spherical_kmeans, spherical_kmeans_pooled, DecodeScratch, SelectScratch, WaveIndex,
+};
+use retroinfer::kernels::{self, Backend};
 use retroinfer::kvcache::BlockArena;
 use retroinfer::metrics::Metrics;
 use retroinfer::runtime::tinylm::WaveInputs;
@@ -17,6 +22,21 @@ use retroinfer::util::bench::{bench, print_result, quick_mode};
 use retroinfer::util::rng::Rng;
 use retroinfer::util::threadpool::ThreadPool;
 use std::sync::Arc;
+
+/// Print a grep-able scalar-vs-SIMD summary row; under `RI_ASSERT_SIMD=1`
+/// a SIMD path slower than scalar is a failure (counted by the caller
+/// and turned into a nonzero exit).
+fn simd_row(name: &str, scalar_ns: f64, simd_ns: f64, fails: &mut usize) {
+    let ratio = scalar_ns / simd_ns;
+    println!(
+        "# simd-speedup {name}: {ratio:.2}x (scalar {scalar_ns:.0} ns, simd {simd_ns:.0} ns)"
+    );
+    let assert_on = std::env::var("RI_ASSERT_SIMD").ok().as_deref() == Some("1");
+    if assert_on && ratio < 1.0 {
+        println!("# FAIL: simd slower than scalar on {name} ({ratio:.2}x)");
+        *fails += 1;
+    }
+}
 
 fn main() {
     let budget = if quick_mode() { 120.0 } else { 400.0 };
@@ -180,6 +200,94 @@ fn main() {
         tripartite_attention(&q, &inp, &mut out);
     }));
 
+    // --- kernel backends: scalar vs SIMD in one process -------------------
+    // The `#`-prefixed summary rows are what CI's bench-smoke job greps;
+    // RI_ASSERT_SIMD=1 turns "SIMD slower than scalar" into a failure.
+    {
+        let mut fails = 0usize;
+        let mut rngk = Rng::new(77);
+        match Backend::simd() {
+            None => println!("# simd-speedup: no SIMD backend on this machine (scalar only)"),
+            Some(simd) => {
+                // centroid scoring: the select phase's inner GEMM
+                for &dd in &[64usize, 128] {
+                    let mm = 2048;
+                    let cents = rngk.normal_vec(mm * dd);
+                    let qq = rngk.normal_vec(dd);
+                    let mut scores = vec![0.0f32; mm];
+                    let rs = bench(&format!("matvec m={mm} d={dd} scalar"), 20, budget, || {
+                        Backend::Scalar.matvec_nt(&qq, &cents, dd, &mut scores);
+                        std::hint::black_box(scores[0]);
+                    });
+                    print_result(&rs);
+                    let rv = bench(&format!("matvec m={mm} d={dd} simd"), 20, budget, || {
+                        simd.matvec_nt(&qq, &cents, dd, &mut scores);
+                        std::hint::black_box(scores[0]);
+                    });
+                    print_result(&rv);
+                    let label = format!("centroid-scoring m={mm} d={dd}");
+                    simd_row(&label, rs.mean_ns, rv.mean_ns, &mut fails);
+                }
+                // GQA group-max scoring (G=4)
+                {
+                    let (mm, dd, g) = (2048usize, 64usize, 4usize);
+                    let cents = rngk.normal_vec(mm * dd);
+                    let qs = rngk.normal_vec(g * dd);
+                    let mut scores = vec![0.0f32; mm];
+                    let rs = bench("group_max m=2048 d=64 G=4 scalar", 20, budget, || {
+                        Backend::Scalar.group_max_scores(&qs, g, &cents, dd, &mut scores);
+                        std::hint::black_box(scores[0]);
+                    });
+                    print_result(&rs);
+                    let rv = bench("group_max m=2048 d=64 G=4 simd", 20, budget, || {
+                        simd.group_max_scores(&qs, g, &cents, dd, &mut scores);
+                        std::hint::black_box(scores[0]);
+                    });
+                    print_result(&rv);
+                    let label = "group-max-scoring m=2048 d=64 G=4";
+                    simd_row(label, rs.mean_ns, rv.mean_ns, &mut fails);
+                }
+                // fused tripartite merge (same inputs, explicit backend)
+                {
+                    let mut scratch = MergeScratch::default();
+                    let mut om = vec![0.0f32; d];
+                    let rs = bench("tripartite merge scalar", 20, budget, || {
+                        tripartite_attention_in(Backend::Scalar, &q, &inp, &mut scratch, &mut om);
+                        std::hint::black_box(om[0]);
+                    });
+                    print_result(&rs);
+                    let rv = bench("tripartite merge simd", 20, budget, || {
+                        tripartite_attention_in(simd, &q, &inp, &mut scratch, &mut om);
+                        std::hint::black_box(om[0]);
+                    });
+                    print_result(&rv);
+                    simd_row("tripartite-merge 512ex+est", rs.mean_ns, rv.mean_ns, &mut fails);
+                }
+            }
+        }
+        // End-to-end decode-step core (select + exec-buffer assemble +
+        // tripartite merge) under the PINNED backend: CI runs this bench
+        // twice (RETRO_KERNELS=scalar / =simd) and compares the rows.
+        {
+            let mut sc2 = SelectScratch::default();
+            let mut ds = DecodeScratch::default();
+            let mut eb2 = ExecBuffer::new(d);
+            let mut om = vec![0.0f32; d];
+            let name =
+                format!("decode-step select+assemble+merge [{}]", kernels::active().name());
+            print_result(&bench(&name, 20, budget, || {
+                let sel = idx.select_into(&q, r, e, &mut sc2);
+                std::hint::black_box(wb.assemble(&idx, sel, &mut eb2));
+                idx.attend_with(&q, sel, &mut ds, &mut om);
+                std::hint::black_box(om[0]);
+            }));
+        }
+        if fails > 0 {
+            println!("# bench-smoke: {fails} SIMD regression(s)");
+            std::process::exit(1);
+        }
+    }
+
     // --- live PJRT step components -------------------------------------------
     {
         use retroinfer::runtime::tinylm::{TinyLm, WaveInputs};
@@ -220,5 +328,11 @@ fn main() {
     let seg_keys = &keys[..8192 * d];
     print_result(&bench("kmeans 8K segment (10 iters)", 1, budget * 2.0, || {
         std::hint::black_box(spherical_kmeans(seg_keys, d, 512, 10, true, 3));
+    }));
+    // pooled assignment fan-out (same result bit-for-bit: partition-invariant
+    // GEMM tiles); only the assignment phase parallelizes
+    let kpool = ThreadPool::new(4);
+    print_result(&bench("kmeans 8K segment (10 iters, pool=4)", 1, budget * 2.0, || {
+        std::hint::black_box(spherical_kmeans_pooled(seg_keys, d, 512, 10, true, 3, Some(&kpool)));
     }));
 }

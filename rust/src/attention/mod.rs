@@ -8,7 +8,16 @@
 
 pub mod sparsity;
 
+use crate::kernels::{self, Backend, ExpAxpy};
 use crate::tensor::{axpy, dot};
+
+/// Reusable score buffers for the two-pass merge. One per decode task;
+/// steady-state reuse keeps the hot path allocation-free.
+#[derive(Default)]
+pub struct MergeScratch {
+    ex: Vec<f32>,
+    est: Vec<f32>,
+}
 
 /// Numerically-stable softmax over `scores` in place; returns the
 /// normalizing denominator in max-shifted space.
@@ -29,18 +38,47 @@ pub fn softmax_inplace(scores: &mut [f32]) -> f32 {
 /// Full attention for one query against a [T, d] key/value set.
 /// `q` is unscaled (scaling by 1/sqrt(d) applied here).
 pub fn full_attention(q: &[f32], keys: &[f32], vals: &[f32], d: usize, out: &mut [f32]) {
-    let t = keys.len() / d;
+    let mut scratch = MergeScratch::default();
+    full_attention_with(q, keys, vals, d, &mut scratch, out)
+}
+
+/// `full_attention` reusing caller scratch (alloc-free after warmup).
+pub fn full_attention_with(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    d: usize,
+    scratch: &mut MergeScratch,
+    out: &mut [f32],
+) {
+    full_attention_in(kernels::active(), q, keys, vals, d, scratch, out)
+}
+
+/// `full_attention` on an explicit backend (benches compare scalar vs
+/// SIMD in one process; everything else goes through the pinned
+/// `kernels::active()` via [`full_attention_with`]).
+pub fn full_attention_in(
+    bk: Backend,
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    d: usize,
+    scratch: &mut MergeScratch,
+    out: &mut [f32],
+) {
     debug_assert_eq!(keys.len(), vals.len());
     debug_assert_eq!(out.len(), d);
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = vec![0.0f32; t];
-    for i in 0..t {
-        scores[i] = dot(q, &keys[i * d..(i + 1) * d]) * scale;
-    }
-    softmax_inplace(&mut scores);
+    let m = bk.score_rows(q, keys, d, scale, &mut scratch.ex);
     out.iter_mut().for_each(|o| *o = 0.0);
-    for i in 0..t {
-        axpy(scores[i], &vals[i * d..(i + 1) * d], out);
+    if !m.is_finite() {
+        return; // no tokens, or scores overflowed: emit zeros like the merge
+    }
+    let denom =
+        bk.exp_axpy_rows(&ExpAxpy { scores: &scratch.ex, max: m, rows: vals, d }, out);
+    let inv = (1.0 / denom.max(1e-30)) as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
     }
 }
 
@@ -100,42 +138,52 @@ pub struct TripartiteInputs<'a> {
 ///   exact tokens:      exp(q.k)                -> value v
 ///   estimated cluster: s_j * exp(q.C_j) (denom), exp(q.C_j) * VS_j (num)
 pub fn tripartite_attention(q: &[f32], inp: &TripartiteInputs, out: &mut [f32]) {
+    let mut scratch = MergeScratch::default();
+    tripartite_attention_with(q, inp, &mut scratch, out)
+}
+
+/// `tripartite_attention` reusing caller scratch (the decode hot path:
+/// alloc-free after warmup).
+pub fn tripartite_attention_with(
+    q: &[f32],
+    inp: &TripartiteInputs,
+    scratch: &mut MergeScratch,
+    out: &mut [f32],
+) {
+    tripartite_attention_in(kernels::active(), q, inp, scratch, out)
+}
+
+/// `tripartite_attention` on an explicit backend.
+///
+/// Fused two-pass merge: pass 1 scores both zones and tracks the shared
+/// max; pass 2 does the exp + weighted-axpy accumulate with an f64
+/// denominator, exact zone first then estimation zone, in index order —
+/// the fixed reduction order both backends commit to.
+pub fn tripartite_attention_in(
+    bk: Backend,
+    q: &[f32],
+    inp: &TripartiteInputs,
+    scratch: &mut MergeScratch,
+    out: &mut [f32],
+) {
     let d = inp.d;
     debug_assert_eq!(out.len(), d);
     let scale = 1.0 / (d as f32).sqrt();
 
     // pass 1: max for stability across both parts
-    let mut m = f32::NEG_INFINITY;
-    let mut ex_scores = Vec::with_capacity(inp.exact.len());
-    for &i in inp.exact {
-        let s = dot(q, &inp.keys[i * d..(i + 1) * d]) * scale;
-        ex_scores.push(s);
-        m = m.max(s);
-    }
-    let mut est_scores = Vec::with_capacity(inp.estimated.len());
-    for &c in inp.estimated {
-        let s = dot(q, &inp.centroids[c * d..(c + 1) * d]) * scale;
-        est_scores.push(s);
-        m = m.max(s);
-    }
+    let m_ex = bk.score_indexed(q, inp.keys, d, scale, inp.exact, &mut scratch.ex);
+    let m_est = bk.score_indexed(q, inp.centroids, d, scale, inp.estimated, &mut scratch.est);
+    let m = m_ex.max(m_est);
+    out.iter_mut().for_each(|o| *o = 0.0);
     if !m.is_finite() {
-        out.iter_mut().for_each(|o| *o = 0.0);
         return;
     }
 
     // pass 2: accumulate
-    let mut denom = 0.0f64;
-    out.iter_mut().for_each(|o| *o = 0.0);
-    for (s, &i) in ex_scores.iter().zip(inp.exact) {
-        let p = (s - m).exp();
-        denom += p as f64;
-        axpy(p, &inp.vals[i * d..(i + 1) * d], out);
-    }
-    for (s, &c) in est_scores.iter().zip(inp.estimated) {
-        let p = (s - m).exp();
-        denom += (p * inp.sizes[c]) as f64;
-        axpy(p, &inp.vsum[c * d..(c + 1) * d], out);
-    }
+    let ex = ExpAxpy { scores: &scratch.ex, max: m, rows: inp.vals, d };
+    let mut denom = bk.exp_axpy(&ex, inp.exact, None, out);
+    let est = ExpAxpy { scores: &scratch.est, max: m, rows: inp.vsum, d };
+    denom += bk.exp_axpy(&est, inp.estimated, Some(inp.sizes), out);
     let inv = (1.0 / denom.max(1e-30)) as f32;
     for o in out.iter_mut() {
         *o *= inv;

@@ -5,7 +5,7 @@
 use super::{DecodeStats, SparseSystem};
 use crate::buffer::{ExecBuffer, WaveBuffer};
 use crate::config::{BufferConfig, ZoneConfig};
-use crate::index::{SelectScratch, WaveIndex};
+use crate::index::{DecodeScratch, SelectScratch, WaveIndex};
 use crate::util::threadpool::ThreadPool;
 use std::sync::Arc;
 
@@ -14,6 +14,7 @@ pub struct Retro {
     buffer: Option<WaveBuffer>,
     exec: ExecBuffer,
     scratch: SelectScratch,
+    attend: DecodeScratch,
 }
 
 impl Retro {
@@ -44,13 +45,25 @@ impl Retro {
         let pool = Arc::new(ThreadPool::new(bcfg.cpu_threads.max(1)));
         let buffer = WaveBuffer::new(bcfg, d, index.store().tokens_per_block(), cap, pool);
         buffer.register_index(&index);
-        Retro { index, buffer: Some(buffer), exec: ExecBuffer::new(d), scratch: SelectScratch::default() }
+        Retro {
+            index,
+            buffer: Some(buffer),
+            exec: ExecBuffer::new(d),
+            scratch: SelectScratch::default(),
+            attend: DecodeScratch::default(),
+        }
     }
 
     /// Index-only variant (no buffer accounting), for accuracy sweeps.
     pub fn index_only(zcfg: ZoneConfig, keys: &[f32], vals: &[f32], d: usize, seed: u64) -> Self {
         let index = WaveIndex::build(zcfg, d, 2048, keys, vals, seed);
-        Retro { index, buffer: None, exec: ExecBuffer::new(d), scratch: SelectScratch::default() }
+        Retro {
+            index,
+            buffer: None,
+            exec: ExecBuffer::new(d),
+            scratch: SelectScratch::default(),
+            attend: DecodeScratch::default(),
+        }
     }
 
     pub fn index(&self) -> &WaveIndex {
@@ -77,11 +90,13 @@ impl SparseSystem for Retro {
         let tpc = self.index.cfg().tokens_per_cluster;
         let r = (budget / tpc.max(1)).min(m).max(if m > 0 { 1 } else { 0 });
         let e = self.index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
-        let sel = self.index.select_with(q, r, e, &mut self.scratch);
+        // Selection and attention run through the reusable scratches:
+        // steady-state decode allocates nothing here.
+        let sel = self.index.select_into(q, r, e, &mut self.scratch);
         let d = self.index.d();
 
         let (pcie, hbm) = if let Some(buf) = &self.buffer {
-            let st = buf.assemble(&self.index, &sel, &mut self.exec);
+            let st = buf.assemble(&self.index, sel, &mut self.exec);
             (st.pcie_bytes, st.g2g_bytes)
         } else {
             // no cache: every retrieved block crosses PCIe
@@ -92,9 +107,9 @@ impl SparseSystem for Retro {
                 .sum();
             (bytes, 2 * self.index.steady_tokens() * d * 4)
         };
-        self.index.attend(q, &sel, out);
+        self.index.attend_with(q, sel, &mut self.attend, out);
         DecodeStats {
-            exact_positions: self.index.exact_positions(&sel),
+            exact_positions: self.index.exact_positions(sel),
             pcie_bytes: pcie,
             hbm_bytes: hbm,
             // centroid scoring scans the meta index

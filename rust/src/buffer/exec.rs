@@ -63,6 +63,12 @@ pub struct AccessStats {
     pub pcie_bytes: usize,
     /// Bytes read from the spill tier (cold-hit stalls).
     pub spill_bytes: usize,
+    /// Wall time of the zone-selection phase (centroid scoring + top-k),
+    /// in nanoseconds — the "select" row of the decode phase report.
+    pub select_ns: u64,
+    /// Wall time of the gather/pack phase (execution-buffer assembly +
+    /// WaveInputs copy-out), in nanoseconds.
+    pub gather_ns: u64,
 }
 
 impl AccessStats {
@@ -84,6 +90,8 @@ impl AccessStats {
         self.g2g_bytes += o.g2g_bytes;
         self.pcie_bytes += o.pcie_bytes;
         self.spill_bytes += o.spill_bytes;
+        self.select_ns += o.select_ns;
+        self.gather_ns += o.gather_ns;
     }
 }
 
@@ -120,6 +128,8 @@ mod tests {
             g2g_bytes: 5,
             pcie_bytes: 6,
             spill_bytes: 7,
+            select_ns: 8,
+            gather_ns: 9,
         };
         let b = a;
         a.add(&b);
@@ -127,5 +137,7 @@ mod tests {
         assert_eq!(a.cold_blocks, 8);
         assert_eq!(a.pcie_bytes, 12);
         assert_eq!(a.spill_bytes, 14);
+        assert_eq!(a.select_ns, 16);
+        assert_eq!(a.gather_ns, 18);
     }
 }

@@ -143,6 +143,90 @@ impl BufferStats {
 struct Inner {
     cache: BlockCache,
     mapping: MappingTable,
+    /// Reusable gather/update capture buffers: taken at assembly start
+    /// under the gather lock, returned cleared once the cache update has
+    /// run, so a steady-state (all-hit) assembly allocates nothing. With
+    /// `async_update` on, an in-flight update job owns the scratch and a
+    /// concurrent assembly falls back to a fresh one — correctness never
+    /// depends on the reuse.
+    scr: UpdateScratch,
+}
+
+/// Capture buffers shared between the gather pass and the (possibly
+/// asynchronous) cache-update pass.
+#[derive(Default)]
+struct UpdateScratch {
+    hit_keys: Vec<u64>,
+    shared_hit_keys: Vec<u64>,
+    /// (arena block id, padded slot image) for private-cache admission.
+    missed: Vec<(u64, Vec<f32>)>,
+    /// (arena block id, keys, vals) for shared-cache admission.
+    missed_shared: Vec<(u64, Vec<f32>, Vec<f32>)>,
+}
+
+impl UpdateScratch {
+    fn is_empty(&self) -> bool {
+        self.hit_keys.is_empty()
+            && self.shared_hit_keys.is_empty()
+            && self.missed.is_empty()
+            && self.missed_shared.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.hit_keys.clear();
+        self.shared_hit_keys.clear();
+        self.missed.clear();
+        self.missed_shared.clear();
+    }
+}
+
+/// The decoupled cache-update pass (paper §4.3): policy touches for
+/// hits, admission for misses — private cache under `inner`'s lock,
+/// shared prefix blocks under the cross-session cache's own lock. Runs
+/// inline or as a pool job; either way the scratch is cleared and handed
+/// back to `inner` for the next assembly.
+fn apply_cache_update(
+    inner: &Mutex<Inner>,
+    stats: &BufferStats,
+    shared: Option<&SharedBlockCache>,
+    mut scr: UpdateScratch,
+) {
+    {
+        let mut g = inner.lock().unwrap();
+        for &k in &scr.hit_keys {
+            g.cache.touch(k);
+        }
+        for (block, data) in scr.missed.drain(..) {
+            // a block demoted to the cold tier between the assembly
+            // snapshot and this update must not re-enter the GPU cache
+            // (cold blocks hold no slots)
+            if g.mapping.home(block) == Some(BlockHome::Cold) {
+                continue;
+            }
+            let (slot, evicted) = g.cache.admit(block);
+            if slot != u32::MAX {
+                g.cache.slot_data_mut(slot).copy_from_slice(&data);
+                g.mapping.set_cached(block, slot);
+            }
+            if let Some(old) = evicted {
+                g.mapping.set_evicted(old);
+                stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    if let Some(sc) = shared {
+        for &k in &scr.shared_hit_keys {
+            sc.touch(k);
+        }
+        // shared blocks never demote while refs are held, so no tier
+        // re-check is needed before admission
+        for (block, bk, bv) in scr.missed_shared.drain(..) {
+            sc.admit_copy(block, &bk, &bv);
+        }
+    }
+    stats.async_updates.fetch_add(1, Ordering::Relaxed);
+    scr.clear();
+    inner.lock().unwrap().scr = scr;
 }
 
 /// Per-head wave buffer.
@@ -173,6 +257,7 @@ impl WaveBuffer {
             inner: Arc::new(Mutex::new(Inner {
                 cache: BlockCache::new(cfg.policy, capacity, slot_elems),
                 mapping: MappingTable::new(),
+                scr: UpdateScratch::default(),
             })),
             cfg,
             d,
@@ -220,23 +305,26 @@ impl WaveBuffer {
         let mut st = AccessStats::default();
         eb.clear();
 
-        // Source 1: steady zone (GPU->GPU).
-        let (sk, sv) = index.steady_kv();
-        st.steady_tokens = sk.len() / d;
-        st.g2g_bytes += 2 * sk.len() * 4;
-        eb.push(&sk, &sv);
+        // Source 1: steady zone (GPU->GPU), pushed straight from the
+        // index's sink/pending slices (no intermediate Vec).
+        let (sk, sv) = index.sink_kv();
+        let (pk, pv) = index.pend_kv();
+        st.steady_tokens = (sk.len() + pk.len()) / d;
+        st.g2g_bytes += 2 * (sk.len() + pk.len()) * 4;
+        eb.push(sk, sv);
+        eb.push(pk, pv);
 
         // Sources 2 & 3: retrieval-zone clusters via the mapping table.
-        let mut hit_keys: Vec<u64> = Vec::new();
-        let mut shared_hit_keys: Vec<u64> = Vec::new();
-        // (arena block id, data) captured for asynchronous admission —
-        // the paper's "copy from the execution buffer" (blue arrow,
-        // Fig. 9). Shared (refcounted prefix) blocks admit to the
-        // cross-session cache instead of this session's private one.
-        let mut missed: Vec<(u64, Vec<f32>)> = Vec::new();
-        let mut missed_shared: Vec<(u64, Vec<f32>, Vec<f32>)> = Vec::new();
+        // Hit keys and miss payloads are captured into the reusable
+        // update scratch — the paper's "copy from the execution buffer"
+        // (blue arrow, Fig. 9). Shared (refcounted prefix) blocks admit
+        // to the cross-session cache instead of this session's private
+        // one.
+        let mut scr;
         {
-            let inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock().unwrap();
+            scr = std::mem::take(&mut inner.scr);
+            let inner = &*inner;
             for &c in &sel.retrieval {
                 let desc = inner.mapping.lookup(c);
                 for (i, b) in desc.blocks.iter().enumerate() {
@@ -254,7 +342,7 @@ impl WaveBuffer {
                         eb.push(&data[..n], &data[half..half + n]);
                         st.hit_blocks += 1;
                         st.g2g_bytes += nbytes;
-                        hit_keys.push(b.block);
+                        scr.hit_keys.push(b.block);
                     } else if is_shared
                         && self.cfg.gpu_cache_enabled
                         && self
@@ -268,7 +356,7 @@ impl WaveBuffer {
                         st.hit_blocks += 1;
                         st.shared_hit_blocks += 1;
                         st.g2g_bytes += nbytes;
-                        shared_hit_keys.push(b.block);
+                        scr.shared_hit_keys.push(b.block);
                     } else if let (Some(bk), Some(bv)) =
                         (index.store().try_block_keys(*b), index.store().try_block_vals(*b))
                     {
@@ -277,13 +365,13 @@ impl WaveBuffer {
                         st.miss_blocks += 1;
                         st.pcie_bytes += nbytes;
                         if self.cfg.gpu_cache_enabled && is_shared {
-                            missed_shared.push((b.block, bk.to_vec(), bv.to_vec()));
+                            scr.missed_shared.push((b.block, bk.to_vec(), bv.to_vec()));
                         } else if self.cfg.gpu_cache_enabled {
                             let mut data = vec![0.0f32; 2 * self.tokens_per_block * d];
                             data[..bk.len()].copy_from_slice(bk);
                             let half = self.tokens_per_block * d;
                             data[half..half + bv.len()].copy_from_slice(bv);
-                            missed.push((b.block, data));
+                            scr.missed.push((b.block, data));
                         }
                     } else {
                         // Cold-hit stall: the block is neither GPU-cached
@@ -313,57 +401,21 @@ impl WaveBuffer {
 
         // Cache update: policy touches for hits, admission for misses.
         // Shared prefix blocks go to the cross-session cache under its
-        // own lock; the rest to this session's private cache.
-        if self.cfg.gpu_cache_enabled
-            && (!hit_keys.is_empty()
-                || !missed.is_empty()
-                || !shared_hit_keys.is_empty()
-                || !missed_shared.is_empty())
-        {
-            let inner = Arc::clone(&self.inner);
-            let stats = Arc::clone(&self.stats);
-            let shared = self.shared.clone();
-            let update = move || {
-                {
-                    let mut g = inner.lock().unwrap();
-                    for k in hit_keys {
-                        g.cache.touch(k);
-                    }
-                    for (block, data) in missed {
-                        // a block demoted to the cold tier between the
-                        // assembly snapshot and this update must not
-                        // re-enter the GPU cache (cold blocks hold no slots)
-                        if g.mapping.home(block) == Some(BlockHome::Cold) {
-                            continue;
-                        }
-                        let (slot, evicted) = g.cache.admit(block);
-                        if slot != u32::MAX {
-                            g.cache.slot_data_mut(slot).copy_from_slice(&data);
-                            g.mapping.set_cached(block, slot);
-                        }
-                        if let Some(old) = evicted {
-                            g.mapping.set_evicted(old);
-                            stats.evictions.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                }
-                if let Some(sc) = shared {
-                    for k in shared_hit_keys {
-                        sc.touch(k);
-                    }
-                    // shared blocks never demote while refs are held, so
-                    // no tier re-check is needed before admission
-                    for (block, bk, bv) in missed_shared {
-                        sc.admit_copy(block, &bk, &bv);
-                    }
-                }
-                stats.async_updates.fetch_add(1, Ordering::Relaxed);
-            };
+        // own lock; the rest to this session's private cache. The update
+        // returns the scratch to `inner` for the next assembly.
+        if self.cfg.gpu_cache_enabled && !scr.is_empty() {
             if self.cfg.async_update {
-                self.pool.submit(update);
+                let inner = Arc::clone(&self.inner);
+                let stats = Arc::clone(&self.stats);
+                let shared = self.shared.clone();
+                self.pool
+                    .submit(move || apply_cache_update(&inner, &stats, shared.as_deref(), scr));
             } else {
-                update();
+                apply_cache_update(&self.inner, &self.stats, self.shared.as_deref(), scr);
             }
+        } else {
+            scr.clear();
+            self.inner.lock().unwrap().scr = scr;
         }
         st
     }

@@ -15,7 +15,8 @@ use crate::buffer::{AccessStats, ExecBuffer, WaveBuffer};
 use crate::index::{SelectScratch, WaveIndex};
 use crate::runtime::tinylm::WaveInputs;
 use crate::util::threadpool::ThreadPool;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
 
 /// Geometry of one assembly: execution-buffer capacity, estimation-slot
 /// capacity, head dim and GQA group size.
@@ -75,18 +76,22 @@ pub fn assemble_head(
     // query head (short contexts under-provision fractional budgets).
     let r = index.cfg().retrieval_clusters(m).max(2 * group).min(m);
     let e = index.cfg().estimation_clusters(m).min(m.saturating_sub(r));
-    let mut sel = index.select_group_with(qg, group, r, e, scratch);
-    // Trim retrieval so steady + retrieved tokens fit the Ne buffer.
+    let t_select = Instant::now();
+    let sel = index.select_group_into(qg, group, r, e, scratch);
+    // Trim retrieval in place so steady + retrieved tokens fit the Ne
+    // buffer (write-index compaction: no allocation, order preserved).
     let mut budget = ne.saturating_sub(index.steady_tokens());
-    let mut kept = Vec::with_capacity(sel.retrieval.len());
-    for &c in &sel.retrieval {
+    let mut w = 0;
+    for i in 0..sel.retrieval.len() {
+        let c = sel.retrieval[i];
         let sz = index.meta().cluster_tokens(c as usize).len();
         if sz <= budget {
             budget -= sz;
-            kept.push(c);
+            sel.retrieval[w] = c;
+            w += 1;
         }
     }
-    sel.retrieval = kept;
+    sel.retrieval.truncate(w);
     sel.estimation.truncate(m_cap);
 
     // Record the selection for the spill machinery: access epochs feed
@@ -94,11 +99,13 @@ pub fn assemble_head(
     // is what the engine prefetches from the cold tier for the next
     // step — the estimation zone is the estimator's shortlist of what
     // retrieval will want as the query drifts.
-    index.note_selection(&sel);
+    index.note_selection(sel);
+    let select_ns = t_select.elapsed().as_nanos() as u64;
 
     // Execution buffer via the wave buffer (steady + hits + misses +
     // cold-hit stalls).
-    let stats = task.buffer.assemble(index, &sel, eb);
+    let t_gather = Instant::now();
+    let mut stats = task.buffer.assemble(index, sel, eb);
 
     let n_tok = eb.n_tokens().min(ne);
     out.kx[..n_tok * d].copy_from_slice(&eb.keys[..n_tok * d]);
@@ -114,6 +121,8 @@ pub fn assemble_head(
         out.csize[s] = index.meta().counts()[c];
         out.emask[s] = 1.0;
     }
+    stats.select_ns = select_ns;
+    stats.gather_ns = t_gather.elapsed().as_nanos() as u64;
     stats
 }
 
@@ -173,25 +182,33 @@ impl WavePtrs {
     }
 }
 
+/// The recycled per-task state of one `(row, head)` assembly slot:
+/// select scratch, execution buffer, and the slot's last stats (read
+/// back by `assemble_into` after the scope joins, so the hot path never
+/// touches a shared aggregate lock).
+#[derive(Default)]
+struct TaskSlot {
+    scratch: SelectScratch,
+    eb: ExecBuffer,
+    stats: AccessStats,
+}
+
 /// Batch assembler: fans the per-(row, head) assemblies of one decode
-/// step across the engine thread pool, with recycled per-task
-/// [`SelectScratch`] / [`ExecBuffer`] instances so the hot path stays
-/// allocation-light.
+/// step across the engine thread pool. Each flat task index owns a
+/// dedicated [`TaskSlot`] (scratch + exec buffer + stats), so steady-
+/// state decode touches no contended lock and performs no allocation:
+/// the `RwLock` is only write-locked to grow the slot vector when the
+/// batch widens, and each slot's `Mutex` is uncontended by construction
+/// (one task per slot).
 pub struct BatchAssembler {
     pool: Arc<ThreadPool>,
     parallel: bool,
-    scratch: Mutex<Vec<SelectScratch>>,
-    exec: Mutex<Vec<ExecBuffer>>,
+    slots: RwLock<Vec<Mutex<TaskSlot>>>,
 }
 
 impl BatchAssembler {
     pub fn new(pool: Arc<ThreadPool>, parallel: bool) -> BatchAssembler {
-        BatchAssembler {
-            pool,
-            parallel,
-            scratch: Mutex::new(Vec::new()),
-            exec: Mutex::new(Vec::new()),
-        }
+        BatchAssembler { pool, parallel, slots: RwLock::new(Vec::new()) }
     }
 
     pub fn parallel(&self) -> bool {
@@ -227,31 +244,33 @@ impl BatchAssembler {
         assert!(wi.csize.len() >= n * shape.m_cap, "WaveInputs.csize too small for batch");
         assert!(wi.emask.len() >= n * shape.m_cap, "WaveInputs.emask too small for batch");
         let ptrs = WavePtrs::of(wi);
-        let agg = Mutex::new(AccessStats::default());
+        if self.slots.read().unwrap().len() < n {
+            let mut slots = self.slots.write().unwrap();
+            while slots.len() < n {
+                slots.push(Mutex::new(TaskSlot::default()));
+            }
+        }
+        let slots = self.slots.read().unwrap();
         let run = |t: usize| {
-            let mut scratch = self.scratch.lock().unwrap().pop().unwrap_or_default();
-            let mut eb = self
-                .exec
-                .lock()
-                .unwrap()
-                .pop()
-                .filter(|e| e.d() == shape.d)
-                .unwrap_or_else(|| ExecBuffer::new(shape.d));
+            // Uncontended by construction: flat task `t` is the only
+            // user of slot `t` within this scope.
+            let mut slot = slots[t].lock().unwrap();
+            let slot = &mut *slot;
+            if slot.eb.d() != shape.d {
+                slot.eb = ExecBuffer::new(shape.d);
+            }
             // SAFETY: task `t` is unique within this scope, and `wi` is
             // mutably borrowed by `assemble_into` for the scope's whole
             // lifetime — the slices are disjoint and live long enough.
             let mut out = unsafe { ptrs.slices(t, shape) };
-            let st = assemble_head(
+            slot.stats = assemble_head(
                 tasks[t],
                 &qg_all[t * gd..(t + 1) * gd],
                 shape,
-                &mut scratch,
-                &mut eb,
+                &mut slot.scratch,
+                &mut slot.eb,
                 &mut out,
             );
-            agg.lock().unwrap().add(&st);
-            self.scratch.lock().unwrap().push(scratch);
-            self.exec.lock().unwrap().push(eb);
         };
         if self.parallel && n > 1 {
             self.pool.scope_for_each(n, &run);
@@ -260,6 +279,10 @@ impl BatchAssembler {
                 run(t);
             }
         }
-        agg.into_inner().unwrap()
+        let mut agg = AccessStats::default();
+        for slot in slots.iter().take(n) {
+            agg.add(&slot.lock().unwrap().stats);
+        }
+        agg
     }
 }

@@ -28,6 +28,24 @@ pub enum AttnMode {
     Full,
 }
 
+/// Reused decode-step buffers: the kernel input tensor plus the
+/// per-step token/position/query staging vectors. Taken out of the
+/// engine at step start and restored at the end, so steady-state decode
+/// (same batch width) allocates nothing on the engine side. An error
+/// mid-step drops the scratch (the next step reallocates) — correctness
+/// never depends on the reuse.
+#[derive(Default)]
+struct StepScratch {
+    /// Cached wave-kernel inputs, valid when the batch width matches.
+    wi: Option<WaveInputs>,
+    /// Batch width `wi` was sized for.
+    wi_rows: usize,
+    /// `[b*kvh, G, d]` flat group queries (rebuilt every layer).
+    qg_all: Vec<f32>,
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+}
+
 /// Per-request live state.
 struct SessionState {
     /// Wave indexes, `[layer * kv_heads]` (Wave mode).
@@ -82,6 +100,7 @@ pub struct LiveEngine {
     lossy_cos_floor: f32,
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
+    step: StepScratch,
 }
 
 impl LiveEngine {
@@ -117,6 +136,14 @@ impl LiveEngine {
         let pool = Arc::new(ThreadPool::new(bcfg.cpu_threads.max(1)));
         let arena = BlockArena::shared(lm.cfg.d_head, bcfg.block_bytes);
         let assembler = BatchAssembler::new(Arc::clone(&pool), bcfg.cpu_threads > 1);
+        // Pin the kernel backend now (logs once per process) and expose
+        // which one decode will run on as a gauge.
+        let backend = crate::kernels::active();
+        let metrics = Arc::new(Metrics::new());
+        metrics.set_gauge(
+            "kernel_simd",
+            u64::from(!matches!(backend, crate::kernels::Backend::Scalar)),
+        );
         Ok(LiveEngine {
             lm,
             zcfg,
@@ -133,8 +160,9 @@ impl LiveEngine {
             shared_cache_budget: None,
             spill_codec: SpillCodec::Exact,
             lossy_cos_floor: 1.0,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             scratch: SelectScratch::default(),
+            step: StepScratch::default(),
         })
     }
 
@@ -693,25 +721,37 @@ impl LiveEngine {
         // Pad rows replicate the first live session (outputs discarded).
         let row_id = |i: usize| ids[i.min(ids.len() - 1)];
 
-        let tokens: Vec<i32> =
-            (0..b).map(|i| self.states[&row_id(i)].last_token).collect();
-        let pos: Vec<i32> = (0..b).map(|i| self.states[&row_id(i)].len as i32).collect();
+        // Take the step scratch out of the engine: steady-state decode
+        // at a fixed batch width reallocates none of these. An error
+        // path below drops it — the next step simply reallocates.
+        let mut ss = std::mem::take(&mut self.step);
+        ss.tokens.clear();
+        ss.tokens.extend((0..b).map(|i| self.states[&row_id(i)].last_token));
+        ss.pos.clear();
+        ss.pos.extend((0..b).map(|i| self.states[&row_id(i)].len as i32));
 
-        let mut hidden = self.lm.embed(&tokens)?;
+        let mut hidden = self.lm.embed(&ss.tokens)?;
         let (kvh, d, group) = (self.lm.cfg.kv_heads, self.lm.cfg.d_head, self.lm.cfg.group());
         let (ne, m_cap) = (self.lm.buckets.wave_ne, self.lm.buckets.wave_m);
         let n_layers = self.lm.cfg.n_layers;
         let shape = AssembleShape { ne, m_cap, d, group };
-        // Reused across layers: every (row, head) slice is fully
-        // rewritten by each layer's assembly.
+        // Reused across layers AND steps: every (row, head) slice is
+        // fully rewritten by each layer's assembly, so the cached tensor
+        // only needs the right batch width.
         let mut wi = match self.mode {
-            AttnMode::Wave => Some(WaveInputs::zeros(b, kvh, ne, m_cap, d)),
+            AttnMode::Wave => Some(match ss.wi.take() {
+                Some(w) if ss.wi_rows == b => w,
+                _ => WaveInputs::zeros(b, kvh, ne, m_cap, d),
+            }),
             AttnMode::Full => None,
         };
         let mut assemble_s = 0.0f64;
+        let mut select_s = 0.0f64;
+        let mut gather_s = 0.0f64;
+        let mut merge_s = 0.0f64;
 
         for layer in 0..n_layers {
-            let (q, k, v) = self.lm.qkv(layer, &hidden, &pos)?;
+            let (q, k, v) = self.lm.qkv(layer, &hidden, &ss.pos)?;
             // Append the new token's KV (live rows only, once per
             // session). Sessions are disjoint `&mut`s, so the per-
             // session appends fan out across the pool (ROADMAP "fan-out
@@ -774,13 +814,15 @@ impl LiveEngine {
                     // Group queries per (row, head), flat [b*kvh, G, d]:
                     // zone selection scores each cluster by the MAX over
                     // the group's queries (GQA — each query head's heavy
-                    // hitters stay retrievable).
-                    let mut qg_all = vec![0.0f32; b * kvh * group * d];
+                    // hitters stay retrievable). The staging vector is
+                    // step-scratch and every element is overwritten.
+                    ss.qg_all.resize(b * kvh * group * d, 0.0);
                     for i in 0..b {
                         for h in 0..kvh {
                             for g in 0..group {
                                 let base = ((i * kvh + h) * group + g) * d;
-                                qg_all[base..base + d].copy_from_slice(q.row(&[i, h, g]));
+                                ss.qg_all[base..base + d]
+                                    .copy_from_slice(q.row(&[i, h, g]));
                             }
                         }
                     }
@@ -795,8 +837,10 @@ impl LiveEngine {
                         })
                         .collect();
                     let t_as = Instant::now();
-                    let stats = self.assembler.assemble_into(&tasks, &qg_all, shape, wi);
+                    let stats = self.assembler.assemble_into(&tasks, &ss.qg_all, shape, wi);
                     assemble_s += t_as.elapsed().as_secs_f64();
+                    select_s += stats.select_ns as f64 * 1e-9;
+                    gather_s += stats.gather_ns as f64 * 1e-9;
                     if self.spill_policy.is_some() {
                         // Async prefetch: stage the cold blocks of the
                         // clusters each head's estimator just selected
@@ -835,7 +879,10 @@ impl LiveEngine {
                     self.metrics.inc("cold_hit_blocks", stats.cold_blocks as u64);
                     self.metrics.inc("spill_bytes", stats.spill_bytes as u64);
                     self.metrics.inc("assembled_heads", (b * kvh) as u64);
-                    self.lm.attn_wave(&q, wi)?
+                    let t_mg = Instant::now();
+                    let ctx = self.lm.attn_wave(&q, wi)?;
+                    merge_s += t_mg.elapsed().as_secs_f64();
+                    ctx
                 }
                 AttnMode::Full => {
                     let t_cap = self.lm.buckets.attn_full_t;
@@ -885,6 +932,11 @@ impl LiveEngine {
         self.metrics.observe("decode_step_s", t0.elapsed().as_secs_f64());
         if self.mode == AttnMode::Wave {
             self.metrics.observe("assemble_s", assemble_s);
+            // Decode phase report: zone selection vs gather/pack (both
+            // inside assemble_s) vs the tripartite-merge kernel call.
+            self.metrics.observe("select_s", select_s);
+            self.metrics.observe("gather_s", gather_s);
+            self.metrics.observe("merge_s", merge_s);
             let key = if self.assembler.parallel() && b * kvh > 1 {
                 "assembly_parallel_steps"
             } else {
@@ -892,6 +944,11 @@ impl LiveEngine {
             };
             self.metrics.inc(key, 1);
         }
+        // Hand the step scratch (and the kernel input tensor) back for
+        // the next step.
+        ss.wi = wi;
+        ss.wi_rows = b;
+        self.step = ss;
         self.metrics.inc("decode_steps", 1);
         self.metrics.inc("decoded_tokens", ids.len() as u64);
         // decode-time appends grow the arena; keep the occupancy gauges

@@ -4,8 +4,10 @@
 //! does not mask the attention-relevant directions; centroids are reported
 //! in the *original* space (the Jensen bound of Eq. 3 needs true means).
 
-use crate::tensor::{axpy, dot, norm, scale};
+use crate::kernels;
+use crate::tensor::{axpy, norm, scale};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 /// Result of clustering a segment of keys.
 #[derive(Clone, Debug)]
@@ -34,6 +36,28 @@ pub fn spherical_kmeans(
     iters: usize,
     centering: bool,
     seed: u64,
+) -> Clustering {
+    spherical_kmeans_pooled(keys, d, k, iters, centering, seed, None)
+}
+
+/// [`spherical_kmeans`] with the assignment pass fanned out over key
+/// chunks on a [`ThreadPool`]. Bit-identical to the serial path for any
+/// thread count: chunking only partitions the GEMM's A rows, and the
+/// kernel layer's `gemm_nt` is partition-invariant (each score is one
+/// fixed-order row dot), so per-key argmax and the summed `changed`
+/// count cannot differ (property-tested in this module).
+///
+/// Callers already running ON pool workers (e.g. the decode append
+/// fan-out reaching `try_cluster_segment`) must pass `None`: scoping a
+/// nested fan-out from a worker thread deadlocks the pool.
+pub fn spherical_kmeans_pooled(
+    keys: &[f32],
+    d: usize,
+    k: usize,
+    iters: usize,
+    centering: bool,
+    seed: u64,
+    pool: Option<&ThreadPool>,
 ) -> Clustering {
     let n = keys.len() / d;
     assert!(n > 0 && k > 0);
@@ -67,95 +91,31 @@ pub fn spherical_kmeans(
 
     let mut assign = vec![0u32; n];
     let mut counts = vec![0u32; k];
+    let mut tile = Vec::new();
     for it in 0..iters.max(1) {
-        // Assign to nearest direction by cosine. The inner product loop is
-        // register-blocked 4 centroids at a time: the key tile stays hot
-        // while 4 independent accumulator chains expose ILP (the scalar
-        // one-centroid loop is latency-bound on the dot reduction) —
-        // ~2x on this path (EXPERIMENTS.md §Perf).
-        let mut changed = 0usize;
-        let k4 = k / 4 * 4;
-        let n2 = n / 2 * 2;
-        let mut i = 0;
-        while i < n2 {
-            // 2-key x 4-centroid register tile: 8 independent fma chains,
-            // centroid tile loaded once for both keys.
-            let x0 = &centered[i * d..(i + 1) * d];
-            let x1 = &centered[(i + 1) * d..(i + 2) * d];
-            let (mut best0, mut best1) = (0u32, 0u32);
-            let (mut bs0, mut bs1) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
-            let mut c = 0;
-            while c < k4 {
-                let base = c * d;
-                let mut acc = [0.0f32; 8];
-                for j in 0..d {
-                    let (a, b) = (x0[j], x1[j]);
-                    let (d0, d1, d2, d3) = (
-                        dirs[base + j],
-                        dirs[base + d + j],
-                        dirs[base + 2 * d + j],
-                        dirs[base + 3 * d + j],
-                    );
-                    acc[0] += a * d0;
-                    acc[1] += a * d1;
-                    acc[2] += a * d2;
-                    acc[3] += a * d3;
-                    acc[4] += b * d0;
-                    acc[5] += b * d1;
-                    acc[6] += b * d2;
-                    acc[7] += b * d3;
-                }
-                for off in 0..4 {
-                    if acc[off] > bs0 {
-                        bs0 = acc[off];
-                        best0 = (c + off) as u32;
-                    }
-                    if acc[4 + off] > bs1 {
-                        bs1 = acc[4 + off];
-                        best1 = (c + off) as u32;
-                    }
-                }
-                c += 4;
+        // Assign to nearest direction by cosine: score key tiles against
+        // ALL directions with the kernel layer's blocked GEMM (AVX2 when
+        // detected), then per-key argmax with strict `>` first-wins
+        // tie-break. The pooled variant partitions keys across workers;
+        // gemm_nt is partition-invariant so results are bit-identical.
+        let ctx = AssignCtx { centered: &centered, dirs: &dirs, d, k, force: it == 0 };
+        let changed = match pool {
+            Some(pool) if n >= 2 * ASSIGN_TILE_KEYS && pool.n_threads() > 1 => {
+                let chunk = n.div_ceil(pool.n_threads()).max(ASSIGN_TILE_KEYS);
+                let mut parts: Vec<(usize, &mut [u32], usize)> = assign
+                    .chunks_mut(chunk)
+                    .enumerate()
+                    .map(|(ci, ch)| (ci * chunk, ch, 0usize))
+                    .collect();
+                let run = |_t: usize, part: &mut (usize, &mut [u32], usize)| {
+                    let mut tile = Vec::new();
+                    part.2 = assign_chunk(&ctx, part.0, part.1, &mut tile);
+                };
+                pool.scope_for_each_mut(&mut parts, &run);
+                parts.iter().map(|p| p.2).sum()
             }
-            while c < k {
-                let dv = &dirs[c * d..(c + 1) * d];
-                let s0 = dot(x0, dv);
-                let s1 = dot(x1, dv);
-                if s0 > bs0 {
-                    bs0 = s0;
-                    best0 = c as u32;
-                }
-                if s1 > bs1 {
-                    bs1 = s1;
-                    best1 = c as u32;
-                }
-                c += 1;
-            }
-            for (ii, best) in [(i, best0), (i + 1, best1)] {
-                if assign[ii] != best || it == 0 {
-                    changed += 1;
-                    assign[ii] = best;
-                }
-            }
-            i += 2;
-        }
-        while i < n {
-            let x = &centered[i * d..(i + 1) * d];
-            let mut best = 0u32;
-            let mut best_s = f32::NEG_INFINITY;
-            for c in 0..k {
-                let s = dot(x, &dirs[c * d..(c + 1) * d]);
-                if s > best_s {
-                    best_s = s;
-                    best = c as u32;
-                }
-            }
-            if assign[i] != best || it == 0 {
-                changed += 1;
-                assign[i] = best;
-            }
-            i += 1;
-        }
+            _ => assign_chunk(&ctx, 0, &mut assign, &mut tile),
+        };
         // Update directions = normalized mean of members (centered space).
         dirs.iter_mut().for_each(|x| *x = 0.0);
         counts.iter_mut().for_each(|c| *c = 0);
@@ -198,6 +158,61 @@ pub fn spherical_kmeans(
     }
 
     Clustering { k, centroids, assign, counts }
+}
+
+/// Keys per GEMM tile in the assignment pass: 32 rows of scores against
+/// every direction (32·k f32) stays L1-resident at segment-scale k.
+const ASSIGN_TILE_KEYS: usize = 32;
+
+/// Shared read-only inputs of one assignment pass.
+struct AssignCtx<'a> {
+    centered: &'a [f32],
+    dirs: &'a [f32],
+    d: usize,
+    k: usize,
+    /// First iteration: count every key as changed (forces at least one
+    /// update pass even if the strided init already agrees).
+    force: bool,
+}
+
+/// Assign the keys `base..base + assign.len()` (rows of `ctx.centered`)
+/// to their best direction; returns how many assignments changed.
+/// `tile` is reusable `[tile_keys, k]` score scratch.
+fn assign_chunk(
+    ctx: &AssignCtx<'_>,
+    base: usize,
+    assign: &mut [u32],
+    tile: &mut Vec<f32>,
+) -> usize {
+    let (d, k) = (ctx.d, ctx.k);
+    let bk = kernels::active();
+    let mut changed = 0usize;
+    let mut i0 = 0;
+    while i0 < assign.len() {
+        let tn = (assign.len() - i0).min(ASSIGN_TILE_KEYS);
+        tile.clear();
+        tile.resize(tn * k, 0.0);
+        let a = &ctx.centered[(base + i0) * d..(base + i0 + tn) * d];
+        bk.gemm_nt(a, ctx.dirs, d, tile);
+        for ii in 0..tn {
+            let row = &tile[ii * k..(ii + 1) * k];
+            let mut best = 0u32;
+            let mut best_s = f32::NEG_INFINITY;
+            for (c, &s) in row.iter().enumerate() {
+                if s > best_s {
+                    best_s = s;
+                    best = c as u32;
+                }
+            }
+            let slot = &mut assign[i0 + ii];
+            if *slot != best || ctx.force {
+                changed += 1;
+                *slot = best;
+            }
+        }
+        i0 += tn;
+    }
+    changed
 }
 
 fn normalize(x: &mut [f32]) {
@@ -292,6 +307,27 @@ mod tests {
         let c = spherical_kmeans(&keys, d, 21, 10, true, 6);
         assert_eq!(c.counts.iter().sum::<u32>() as usize, 333);
         assert!(c.assign.iter().all(|&a| (a as usize) < c.k));
+    }
+
+    /// Pooled assignment must be bit-identical to serial for any worker
+    /// count: chunking only partitions the GEMM's A rows, which the
+    /// kernel layer guarantees is reduction-order invariant.
+    #[test]
+    fn pooled_matches_serial_bit_identical() {
+        let d = 12;
+        let mut rng = Rng::new(31);
+        for &(n, k) in &[(97usize, 7usize), (256, 16), (500, 23)] {
+            let keys = rng.normal_vec(n * d);
+            let serial = spherical_kmeans(&keys, d, k, 10, true, 17);
+            for threads in [2, 3, 5] {
+                let pool = ThreadPool::new(threads);
+                let pooled =
+                    spherical_kmeans_pooled(&keys, d, k, 10, true, 17, Some(&pool));
+                assert_eq!(serial.assign, pooled.assign, "n={n} k={k} threads={threads}");
+                assert_eq!(serial.centroids, pooled.centroids);
+                assert_eq!(serial.counts, pooled.counts);
+            }
+        }
     }
 
     /// Centering must help when keys share a large common component —

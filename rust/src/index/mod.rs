@@ -11,17 +11,17 @@
 pub mod kmeans;
 pub mod meta;
 
-pub use kmeans::{spherical_kmeans, Clustering};
+pub use kmeans::{spherical_kmeans, spherical_kmeans_pooled, Clustering};
 pub use meta::MetaIndex;
 
-use crate::attention::{tripartite_attention, TripartiteInputs};
+use crate::attention::{tripartite_attention_with, MergeScratch, TripartiteInputs};
 use crate::config::ZoneConfig;
+use crate::kernels;
 use crate::kvcache::prefix::{SealedBlockMeta, SealedCluster, SealedSlot};
 use crate::kvcache::{
     append_snapshot_page, read_snapshot_page, AllocError, BlockArena, BlockData, BlockRef,
     HeadStore, SpillCandidate, SpillPolicy, TenantId, DEFAULT_TENANT,
 };
-use crate::tensor::dot;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -42,10 +42,33 @@ impl ZoneSelection {
 }
 
 /// Reusable scratch for the selection hot path (zero alloc per step).
+/// The `select_*_into` entry points write the zone decision into the
+/// embedded [`ZoneSelection`] and hand back a borrow, so steady-state
+/// selection reuses its buffers instead of allocating per call.
 #[derive(Default)]
 pub struct SelectScratch {
     scores: Vec<f32>,
     order: Vec<u32>,
+    sel: ZoneSelection,
+}
+
+impl SelectScratch {
+    /// The zone selection produced by the most recent `select_*_into`.
+    pub fn selection(&self) -> &ZoneSelection {
+        &self.sel
+    }
+}
+
+/// Reusable buffers for [`WaveIndex::attend_with`]: gathered exact-zone
+/// KV, index lists, and the merge score scratch. One per decode task;
+/// after warmup a decode step performs zero heap allocations.
+#[derive(Default)]
+pub struct DecodeScratch {
+    merge: MergeScratch,
+    ex_keys: Vec<f32>,
+    ex_vals: Vec<f32>,
+    exact_idx: Vec<usize>,
+    est_idx: Vec<usize>,
 }
 
 /// Why a wave-index state snapshot could not be imported.
@@ -950,18 +973,34 @@ impl WaveIndex {
         e: usize,
         scratch: &mut SelectScratch,
     ) -> ZoneSelection {
+        self.select_into(q, r, e, scratch).clone()
+    }
+
+    /// `select_with` into the scratch-owned selection (alloc-free after
+    /// warmup; the borrow keeps `scratch` usable for trimming in place).
+    pub fn select_into<'s>(
+        &self,
+        q: &[f32],
+        r: usize,
+        e: usize,
+        scratch: &'s mut SelectScratch,
+    ) -> &'s mut ZoneSelection {
         let m = self.meta.m();
         if m == 0 || r + e == 0 {
-            return ZoneSelection::default();
+            scratch.sel.retrieval.clear();
+            scratch.sel.estimation.clear();
+            return &mut scratch.sel;
         }
-        // Score all centroids (the GPU's step-1 in Figure 5); partial
-        // select: top r+e, then top r within them (quickselect via
-        // select_nth_unstable — O(m), not O(m log m)).
+        // Score all centroids (the GPU's step-1 in Figure 5) in one
+        // blocked kernel pass; partial select: top r+e, then top r
+        // within them (quickselect via select_nth_unstable — O(m), not
+        // O(m log m)).
         let cents = self.meta.centroids_flat();
-        let d = self.d;
         scratch.scores.clear();
-        scratch.scores.extend((0..m).map(|c| dot(q, &cents[c * d..(c + 1) * d])));
-        self.select_from_scores(r, e, scratch)
+        scratch.scores.resize(m, 0.0);
+        kernels::active().matvec_nt(q, cents, self.d, &mut scratch.scores);
+        self.select_from_scores(r, e, scratch);
+        &mut scratch.sel
     }
 
     /// Group-aware zone selection for GQA: `qs` is `[g, d]` flat (the
@@ -977,52 +1016,70 @@ impl WaveIndex {
         e: usize,
         scratch: &mut SelectScratch,
     ) -> ZoneSelection {
+        self.select_group_into(qs, g, r, e, scratch).clone()
+    }
+
+    /// `select_group_with` into the scratch-owned selection (the decode
+    /// assembly hot path — alloc-free after warmup).
+    pub fn select_group_into<'s>(
+        &self,
+        qs: &[f32],
+        g: usize,
+        r: usize,
+        e: usize,
+        scratch: &'s mut SelectScratch,
+    ) -> &'s mut ZoneSelection {
         let m = self.meta.m();
         let d = self.d;
         debug_assert_eq!(qs.len(), g * d);
         if m == 0 {
-            return ZoneSelection::default();
+            scratch.sel.retrieval.clear();
+            scratch.sel.estimation.clear();
+            return &mut scratch.sel;
         }
         let cents = self.meta.centroids_flat();
         scratch.scores.clear();
-        scratch.scores.extend((0..m).map(|c| {
-            let cv = &cents[c * d..(c + 1) * d];
-            (0..g)
-                .map(|gi| dot(&qs[gi * d..(gi + 1) * d], cv))
-                .fold(f32::NEG_INFINITY, f32::max)
-        }));
-        self.select_from_scores(r, e, scratch)
+        scratch.scores.resize(m, 0.0);
+        kernels::active().group_max_scores(qs, g, cents, d, &mut scratch.scores);
+        self.select_from_scores(r, e, scratch);
+        &mut scratch.sel
     }
 
-    /// Shared top-(r, e) partial selection over `scratch.scores`.
-    fn select_from_scores(&self, r: usize, e: usize, scratch: &mut SelectScratch) -> ZoneSelection {
+    /// Shared top-(r, e) partial selection over `scratch.scores` into
+    /// `scratch.sel`. Ordering is `f32::total_cmp` descending with
+    /// cluster id as tie-break: total, so NaN scores (a poisoned query
+    /// or centroid) degrade to a deterministic selection instead of the
+    /// `partial_cmp().unwrap()` panic this used to hide, and unstable
+    /// sorting stays deterministic (and allocation-free, unlike stable
+    /// `sort_by`) under ties.
+    fn select_from_scores(&self, r: usize, e: usize, scratch: &mut SelectScratch) {
         let m = self.meta.m();
         let r = r.min(m);
         let e = e.min(m - r);
+        let SelectScratch { scores, order, sel } = scratch;
+        sel.retrieval.clear();
+        sel.estimation.clear();
         if r + e == 0 {
-            return ZoneSelection::default();
+            return;
         }
-        scratch.order.clear();
-        scratch.order.extend(0..m as u32);
-        let scores = &scratch.scores;
-        let order = &mut scratch.order;
+        order.clear();
+        order.extend(0..m as u32);
+        let scores = &*scores;
+        let desc = |a: &u32, b: &u32| {
+            scores[*b as usize]
+                .total_cmp(&scores[*a as usize])
+                .then_with(|| a.cmp(b))
+        };
         let cut = (r + e).min(m);
         if cut < m {
-            order.select_nth_unstable_by(cut - 1, |&a, &b| {
-                scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
-            });
+            order.select_nth_unstable_by(cut - 1, desc);
         }
         if r > 0 && r < cut {
-            order[..cut].select_nth_unstable_by(r - 1, |&a, &b| {
-                scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
-            });
+            order[..cut].select_nth_unstable_by(r - 1, desc);
         }
-        let mut retrieval: Vec<u32> = order[..r].to_vec();
-        retrieval.sort_by(|&a, &b| {
-            scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
-        });
-        let estimation: Vec<u32> = order[r..cut].to_vec();
-        ZoneSelection { retrieval, estimation }
+        sel.retrieval.extend_from_slice(&order[..r]);
+        sel.retrieval.sort_unstable_by(desc);
+        sel.estimation.extend_from_slice(&order[r..cut]);
     }
 
     /// Zone selection at the paper's default budgets (1.8% / 23.2%).
@@ -1037,10 +1094,24 @@ impl WaveIndex {
     /// directly from the CPU store (accuracy path; the serving path goes
     /// through the wave buffer instead).
     pub fn attend(&self, q: &[f32], sel: &ZoneSelection, out: &mut [f32]) {
+        let mut ds = DecodeScratch::default();
+        self.attend_with(q, sel, &mut ds, out)
+    }
+
+    /// `attend` reusing caller scratch: gather, index lists, and merge
+    /// buffers all come from `ds`, so a steady-state decode step is
+    /// allocation-free (asserted in `tests/kernels.rs`).
+    pub fn attend_with(
+        &self,
+        q: &[f32],
+        sel: &ZoneSelection,
+        ds: &mut DecodeScratch,
+        out: &mut [f32],
+    ) {
         let d = self.d;
-        let mut ex_keys =
-            Vec::with_capacity((self.sink_pos.len() + self.pend_pos.len()) * d);
-        let mut ex_vals = Vec::with_capacity(ex_keys.capacity());
+        let DecodeScratch { merge, ex_keys, ex_vals, exact_idx, est_idx } = ds;
+        ex_keys.clear();
+        ex_vals.clear();
         ex_keys.extend_from_slice(&self.sink_keys);
         ex_vals.extend_from_slice(&self.sink_vals);
         ex_keys.extend_from_slice(&self.pend_keys);
@@ -1048,23 +1119,25 @@ impl WaveIndex {
         for &c in &sel.retrieval {
             for r in &self.cluster_blocks[c as usize] {
                 // reads through the spill tier when the block is cold
-                self.store.copy_block_kv(*r, &mut ex_keys, &mut ex_vals);
+                self.store.copy_block_kv(*r, ex_keys, ex_vals);
             }
         }
         let n_exact = ex_keys.len() / d;
-        let exact: Vec<usize> = (0..n_exact).collect();
-        let estimated: Vec<usize> = sel.estimation.iter().map(|&c| c as usize).collect();
+        exact_idx.clear();
+        exact_idx.extend(0..n_exact);
+        est_idx.clear();
+        est_idx.extend(sel.estimation.iter().map(|&c| c as usize));
         let inp = TripartiteInputs {
             d,
-            keys: &ex_keys,
-            vals: &ex_vals,
-            exact: &exact,
+            keys: ex_keys,
+            vals: ex_vals,
+            exact: exact_idx,
             centroids: self.meta.centroids_flat(),
             vsum: self.meta.vsum_flat(),
             sizes: self.meta.counts(),
-            estimated: &estimated,
+            estimated: est_idx,
         };
-        tripartite_attention(q, &inp, out);
+        tripartite_attention_with(q, &inp, merge, out);
     }
 
     /// Context positions covered exactly (steady + given retrieval zone).
@@ -1107,13 +1180,26 @@ impl WaveIndex {
     /// Steady-zone KV as flat slices (sink then pending), for the
     /// execution-buffer assembly.
     pub fn steady_kv(&self) -> (Vec<f32>, Vec<f32>) {
-        let mut k = Vec::with_capacity(self.sink_keys.len() + self.pend_keys.len());
+        let (sk, sv) = self.sink_kv();
+        let (pk, pv) = self.pend_kv();
+        let mut k = Vec::with_capacity(sk.len() + pk.len());
         let mut v = Vec::with_capacity(k.capacity());
-        k.extend_from_slice(&self.sink_keys);
-        k.extend_from_slice(&self.pend_keys);
-        v.extend_from_slice(&self.sink_vals);
-        v.extend_from_slice(&self.pend_vals);
+        k.extend_from_slice(sk);
+        k.extend_from_slice(pk);
+        v.extend_from_slice(sv);
+        v.extend_from_slice(pv);
         (k, v)
+    }
+
+    /// Sink-zone KV as borrowed flat slices (zero-copy steady access for
+    /// the execution-buffer assembly hot path).
+    pub fn sink_kv(&self) -> (&[f32], &[f32]) {
+        (&self.sink_keys, &self.sink_vals)
+    }
+
+    /// Pending/local-window KV as borrowed flat slices.
+    pub fn pend_kv(&self) -> (&[f32], &[f32]) {
+        (&self.pend_keys, &self.pend_vals)
     }
 
     /// Context length seen so far.
@@ -1135,6 +1221,7 @@ impl WaveIndex {
 mod tests {
     use super::*;
     use crate::attention::full_attention;
+    use crate::tensor::dot;
     use crate::util::rng::Rng;
     use crate::util::stats::cosine;
 
@@ -1279,6 +1366,30 @@ mod tests {
         let min_r = sel.retrieval.iter().map(|&c| score(c)).fold(f32::INFINITY, f32::min);
         let max_e = sel.estimation.iter().map(|&c| score(c)).fold(f32::NEG_INFINITY, f32::max);
         assert!(min_r >= max_e - 1e-5, "zones out of order: {min_r} < {max_e}");
+    }
+
+    #[test]
+    fn nan_scores_select_without_panicking() {
+        // regression: a NaN query used to panic selection through
+        // partial_cmp().unwrap(); total_cmp must keep budgets and
+        // determinism instead.
+        let d = 8;
+        let (k, v) = mk_ctx(400, d, 6);
+        let idx = WaveIndex::build(small_cfg(), d, 512, &k, &v, 8);
+        let q = vec![f32::NAN; d];
+        let mut scratch = SelectScratch::default();
+        let sel = idx.select_with(&q, 3, 5, &mut scratch);
+        assert_eq!(sel.retrieval.len(), 3);
+        assert_eq!(sel.estimation.len(), 5);
+        let again = idx.select_with(&q, 3, 5, &mut scratch);
+        assert_eq!(sel, again, "NaN selection must be deterministic");
+        // a single poisoned lane (NaN scores only where q hits it) also
+        // survives the group path
+        let mut qs = vec![0.5; 2 * d];
+        qs[0] = f32::NAN;
+        let gsel = idx.select_group_with(&qs, 2, 3, 5, &mut scratch);
+        assert_eq!(gsel.retrieval.len(), 3);
+        assert_eq!(gsel.estimation.len(), 5);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! AVX2+FMA kernels (x86_64 only). Callers must verify `avx2` and `fma`
+//! with `is_x86_feature_detected!` before entering (the dispatch shims in
+//! `kernels::mod` do); every function is `#[target_feature]`-gated and
+//! therefore `unsafe` to call.
+//!
+//! Reduction-order contract: each kernel commits to ONE lane/accumulator
+//! layout and ONE horizontal-sum shuffle sequence, so the SIMD backend is
+//! bit-identical to itself across runs and call sites. It is NOT
+//! bit-identical to the scalar backend (FMA fuses the multiply-add
+//! rounding and lanes regroup the sum); agreement is tolerance-tested in
+//! `tests/kernels.rs`.
+
+use std::arch::x86_64::*;
+
+/// Fixed horizontal sum of 8 lanes: (lo128 + hi128), movehl fold, then a
+/// lane-1 shuffle fold. Same shuffle tree everywhere.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    unsafe {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps::<0b01>(s2, s2));
+        _mm_cvtss_f32(s1)
+    }
+}
+
+/// Dot product: two 8-lane FMA accumulators over 16-element chunks, an
+/// optional single 8-lane chunk, `hsum8(acc0 + acc1)`, then an FMA scalar
+/// tail in index order.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let n16 = n / 16 * 16;
+        let mut j = 0;
+        while j < n16 {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(j + 8)),
+                _mm256_loadu_ps(bp.add(j + 8)),
+                acc1,
+            );
+            j += 16;
+        }
+        if j + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc0);
+            j += 8;
+        }
+        let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+        while j < n {
+            s = (*ap.add(j)).mul_add(*bp.add(j), s);
+            j += 1;
+        }
+        s
+    }
+}
+
+/// y += alpha * x: 8-lane FMA body, FMA scalar tail in index order.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    unsafe {
+        let n = x.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let va = _mm256_set1_ps(alpha);
+        let n8 = n / 8 * 8;
+        let mut j = 0;
+        while j < n8 {
+            let acc = _mm256_fmadd_ps(va, _mm256_loadu_ps(xp.add(j)), _mm256_loadu_ps(yp.add(j)));
+            _mm256_storeu_ps(yp.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *yp.add(j) = (*xp.add(j)).mul_add(alpha, *yp.add(j));
+            j += 1;
+        }
+    }
+}
+
+/// Scores 4 rows against one query with 4 independent 8-lane FMA
+/// accumulators (register-blocked so `q` is loaded once per 8 columns).
+/// Returns the 4 dots; tails use scalar FMA in index order.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot4(
+    q: &[f32],
+    r0: *const f32,
+    r1: *const f32,
+    r2: *const f32,
+    r3: *const f32,
+) -> [f32; 4] {
+    unsafe {
+        let d = q.len();
+        let qp = q.as_ptr();
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let n8 = d / 8 * 8;
+        let mut j = 0;
+        while j < n8 {
+            let qv = _mm256_loadu_ps(qp.add(j));
+            a0 = _mm256_fmadd_ps(qv, _mm256_loadu_ps(r0.add(j)), a0);
+            a1 = _mm256_fmadd_ps(qv, _mm256_loadu_ps(r1.add(j)), a1);
+            a2 = _mm256_fmadd_ps(qv, _mm256_loadu_ps(r2.add(j)), a2);
+            a3 = _mm256_fmadd_ps(qv, _mm256_loadu_ps(r3.add(j)), a3);
+            j += 8;
+        }
+        let mut s = [hsum8(a0), hsum8(a1), hsum8(a2), hsum8(a3)];
+        while j < d {
+            let qj = *qp.add(j);
+            s[0] = (*r0.add(j)).mul_add(qj, s[0]);
+            s[1] = (*r1.add(j)).mul_add(qj, s[1]);
+            s[2] = (*r2.add(j)).mul_add(qj, s[2]);
+            s[3] = (*r3.add(j)).mul_add(qj, s[3]);
+            j += 1;
+        }
+        s
+    }
+}
+
+/// out[c] = q · rows[c]: rows processed in blocks of 4 via `dot4`, then a
+/// per-row `dot` remainder. Note the remainder rows use `dot`'s two-
+/// accumulator order while blocked rows use `dot4`'s single accumulator —
+/// the order depends only on (d, row position), so outputs are still
+/// deterministic for a given shape.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn matvec_nt(q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert!(rows.len() >= out.len() * d);
+    unsafe {
+        let m = out.len();
+        let rp = rows.as_ptr();
+        let m4 = m / 4 * 4;
+        let mut c = 0;
+        while c < m4 {
+            let s = dot4(
+                q,
+                rp.add(c * d),
+                rp.add((c + 1) * d),
+                rp.add((c + 2) * d),
+                rp.add((c + 3) * d),
+            );
+            out[c..c + 4].copy_from_slice(&s);
+            c += 4;
+        }
+        while c < m {
+            out[c] = dot(q, &rows[c * d..(c + 1) * d]);
+            c += 1;
+        }
+    }
+}
+
+/// out[c] = max_i qs[i] · rows[c] over the g queries in `qs` ([g, d]).
+/// Same 4-row blocking as `matvec_nt`; the max uses strict `>` (first
+/// maximal query wins), matching the scalar backend.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub unsafe fn group_max_scores(qs: &[f32], g: usize, rows: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert!(qs.len() >= g * d);
+    debug_assert!(rows.len() >= out.len() * d);
+    unsafe {
+        let m = out.len();
+        let rp = rows.as_ptr();
+        let m4 = m / 4 * 4;
+        let mut c = 0;
+        while c < m4 {
+            let mut best = [f32::NEG_INFINITY; 4];
+            for gi in 0..g {
+                let s = dot4(
+                    &qs[gi * d..(gi + 1) * d],
+                    rp.add(c * d),
+                    rp.add((c + 1) * d),
+                    rp.add((c + 2) * d),
+                    rp.add((c + 3) * d),
+                );
+                for (b, v) in best.iter_mut().zip(s) {
+                    if v > *b {
+                        *b = v;
+                    }
+                }
+            }
+            out[c..c + 4].copy_from_slice(&best);
+            c += 4;
+        }
+        while c < m {
+            let row = &rows[c * d..(c + 1) * d];
+            let mut best = f32::NEG_INFINITY;
+            for gi in 0..g {
+                let s = dot(&qs[gi * d..(gi + 1) * d], row);
+                if s > best {
+                    best = s;
+                }
+            }
+            out[c] = best;
+            c += 1;
+        }
+    }
+}

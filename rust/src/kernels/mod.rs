@@ -1,0 +1,396 @@
+//! Runtime-dispatched kernel layer for the decode hot path.
+//!
+//! Two backends (DESIGN.md "Kernel layer & dispatch"):
+//!
+//! * [`Backend::Scalar`] — the portable reference, bit-identical to the
+//!   pre-kernel-layer code (`tensor::dot`'s historical 4-accumulator
+//!   order is preserved exactly).
+//! * [`Backend::Avx2Fma`] — AVX2+FMA paths selected at runtime with
+//!   `is_x86_feature_detected!`. Bit-identical to itself (fixed lane
+//!   layout and horizontal-sum shuffle tree per kernel), but not to the
+//!   scalar backend: FMA fuses roundings and lanes regroup the sum.
+//!   Scalar-vs-SIMD agreement is property-tested to tight tolerance in
+//!   `tests/kernels.rs`.
+//!
+//! The process-wide backend is pinned on first use ([`active`]) and
+//! logged once, so a run never mixes reduction orders: every
+//! parallel==sequential bit-identity test in the repo holds under either
+//! pinned kernel. `RETRO_KERNELS=scalar|simd|auto` overrides selection
+//! (benchmarks construct [`Backend`] values directly instead, to compare
+//! both in one process).
+//!
+//! Transcendentals stay scalar: `exp` in the fused softmax merge is
+//! libm's on both backends, so the only scalar-vs-SIMD divergence is the
+//! dot/axpy reduction order. A vectorized exp approximation would change
+//! results by far more than FMA regrouping does.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+mod scalar;
+
+/// A pinned kernel implementation. `Copy` so hot loops can pass it by
+/// value; construct via [`active`] (process-pinned) or [`Backend::simd`]
+/// (explicit, for benches/tests comparing both in one process).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference kernels with the historical reduction order.
+    Scalar,
+    /// AVX2+FMA kernels; falls back to scalar per-call if constructed on
+    /// a machine without the features (so a stray value is safe, just
+    /// slow — the dispatch shims re-check detection).
+    Avx2Fma,
+}
+
+/// Inputs to the fused exp+axpy accumulation (pass 2 of the tripartite
+/// merge): `scores` softmax-shifted by `max`, rows of width `d` drawn
+/// from `rows`.
+pub struct ExpAxpy<'a> {
+    pub scores: &'a [f32],
+    pub max: f32,
+    pub rows: &'a [f32],
+    pub d: usize,
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_ok() -> bool {
+    // std caches feature detection in an atomic; this is a load+test.
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_dot(a: &[f32], b: &[f32]) -> f32 {
+    if simd_ok() {
+        // SAFETY: avx2+fma presence just checked.
+        unsafe { avx2::dot(a, b) }
+    } else {
+        scalar::dot(a, b)
+    }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn simd_dot(a: &[f32], b: &[f32]) -> f32 {
+    scalar::dot(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    if simd_ok() {
+        // SAFETY: avx2+fma presence just checked.
+        unsafe { avx2::axpy(alpha, x, y) }
+    } else {
+        scalar::axpy(alpha, x, y)
+    }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn simd_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    scalar::axpy(alpha, x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_matvec_nt(q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+    if simd_ok() {
+        // SAFETY: avx2+fma presence just checked.
+        unsafe { avx2::matvec_nt(q, rows, d, out) }
+    } else {
+        scalar::matvec_nt(q, rows, d, out)
+    }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn simd_matvec_nt(q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+    scalar::matvec_nt(q, rows, d, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn simd_group_max(qs: &[f32], g: usize, rows: &[f32], d: usize, out: &mut [f32]) {
+    if simd_ok() {
+        // SAFETY: avx2+fma presence just checked.
+        unsafe { avx2::group_max_scores(qs, g, rows, d, out) }
+    } else {
+        scalar::group_max_scores(qs, g, rows, d, out)
+    }
+}
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn simd_group_max(qs: &[f32], g: usize, rows: &[f32], d: usize, out: &mut [f32]) {
+    scalar::group_max_scores(qs, g, rows, d, out)
+}
+
+impl Backend {
+    /// The SIMD backend if this machine supports it.
+    pub fn simd() -> Option<Backend> {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if simd_ok() {
+                return Some(Backend::Avx2Fma);
+            }
+        }
+        None
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// Dot product with this backend's fixed reduction order.
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Backend::Scalar => scalar::dot(a, b),
+            Backend::Avx2Fma => simd_dot(a, b),
+        }
+    }
+
+    /// y += alpha * x.
+    #[inline]
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        match self {
+            Backend::Scalar => scalar::axpy(alpha, x, y),
+            Backend::Avx2Fma => simd_axpy(alpha, x, y),
+        }
+    }
+
+    /// out[c] = q · rows[c] for `out.len()` contiguous rows of width `d`.
+    #[inline]
+    pub fn matvec_nt(&self, q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+        match self {
+            Backend::Scalar => scalar::matvec_nt(q, rows, d, out),
+            Backend::Avx2Fma => simd_matvec_nt(q, rows, d, out),
+        }
+    }
+
+    /// out[c] = max over the g queries in `qs` ([g, d] flat) of
+    /// q_i · rows[c] (GQA group max used by cluster selection).
+    #[inline]
+    pub fn group_max_scores(&self, qs: &[f32], g: usize, rows: &[f32], d: usize, out: &mut [f32]) {
+        match self {
+            Backend::Scalar => scalar::group_max_scores(qs, g, rows, d, out),
+            Backend::Avx2Fma => simd_group_max(qs, g, rows, d, out),
+        }
+    }
+
+    /// Blocked `[n,d] x [m,d]^T` GEMM: `out[i*m + j] = a_i · b_j`.
+    /// B is tiled in blocks of rows so a tile stays cache-hot across all
+    /// A rows; each output element is one `matvec_nt` row dot, so the
+    /// result is bit-identical for ANY caller-side partition of the A
+    /// rows (this is what makes pooled k-means assignment match serial).
+    pub fn gemm_nt(&self, a: &[f32], b: &[f32], d: usize, out: &mut [f32]) {
+        let n = if d == 0 { 0 } else { a.len() / d };
+        let m = if d == 0 { 0 } else { b.len() / d };
+        debug_assert_eq!(out.len(), n * m);
+        // 64 rows of d<=128 f32 = <=32 KiB per tile: fits L1d alongside a.
+        const TILE_B_ROWS: usize = 64;
+        let mut j0 = 0;
+        while j0 < m {
+            let jt = (m - j0).min(TILE_B_ROWS);
+            let bt = &b[j0 * d..(j0 + jt) * d];
+            for i in 0..n {
+                let orow = &mut out[i * m + j0..i * m + j0 + jt];
+                self.matvec_nt(&a[i * d..(i + 1) * d], bt, d, orow);
+            }
+            j0 += jt;
+        }
+    }
+
+    /// Score `out.len() <- rows.len()/d` contiguous rows: fills `out`
+    /// with `scale * (q · row_c)` and returns the running max (NaN
+    /// scores are skipped by the max, mirroring `f32::max`).
+    pub fn score_rows(
+        &self,
+        q: &[f32],
+        rows: &[f32],
+        d: usize,
+        scale: f32,
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        let m = if d == 0 { 0 } else { rows.len() / d };
+        out.clear();
+        out.resize(m, 0.0);
+        self.matvec_nt(q, rows, d, out);
+        let mut mx = f32::NEG_INFINITY;
+        for s in out.iter_mut() {
+            *s *= scale;
+            mx = mx.max(*s);
+        }
+        mx
+    }
+
+    /// Score an indexed row subset: `out[i] = scale * (q · rows[idx[i]])`,
+    /// returning the running max.
+    pub fn score_indexed(
+        &self,
+        q: &[f32],
+        rows: &[f32],
+        d: usize,
+        scale: f32,
+        idx: &[usize],
+        out: &mut Vec<f32>,
+    ) -> f32 {
+        out.clear();
+        out.reserve(idx.len());
+        let mut mx = f32::NEG_INFINITY;
+        for &i in idx {
+            let s = self.dot(q, &rows[i * d..(i + 1) * d]) * scale;
+            out.push(s);
+            mx = mx.max(s);
+        }
+        mx
+    }
+
+    /// Fused softmax-accumulate over an indexed row subset (pass 2 of the
+    /// tripartite merge): for each score, `w = exp(s - max)` (scalar libm
+    /// on both backends), `out += w * rows[idx[i]]`, and the returned f64
+    /// denominator accumulates `w` — or `w * weights[idx[i]]` when
+    /// cluster sizes are supplied — in index order.
+    pub fn exp_axpy(
+        &self,
+        p: &ExpAxpy<'_>,
+        idx: &[usize],
+        weights: Option<&[f32]>,
+        out: &mut [f32],
+    ) -> f64 {
+        let d = p.d;
+        let mut denom = 0.0f64;
+        for (s, &i) in p.scores.iter().zip(idx) {
+            let w = (s - p.max).exp();
+            denom += match weights {
+                Some(ws) => (w * ws[i]) as f64,
+                None => w as f64,
+            };
+            self.axpy(w, &p.rows[i * d..(i + 1) * d], out);
+        }
+        denom
+    }
+
+    /// `exp_axpy` over contiguous rows 0..scores.len() (full attention).
+    pub fn exp_axpy_rows(&self, p: &ExpAxpy<'_>, out: &mut [f32]) -> f64 {
+        let d = p.d;
+        let mut denom = 0.0f64;
+        for (i, s) in p.scores.iter().enumerate() {
+            let w = (s - p.max).exp();
+            denom += w as f64;
+            self.axpy(w, &p.rows[i * d..(i + 1) * d], out);
+        }
+        denom
+    }
+}
+
+static ACTIVE: OnceLock<Backend> = OnceLock::new();
+
+/// The process-pinned backend. Selection happens exactly once:
+/// `RETRO_KERNELS=scalar` forces the reference kernels,
+/// `RETRO_KERNELS=simd` (or `avx2`) requests SIMD (falling back to
+/// scalar if undetected), anything else auto-detects. The choice is
+/// logged to stderr so a run's kernel is recorded next to its output.
+pub fn active() -> Backend {
+    *ACTIVE.get_or_init(|| {
+        let want = std::env::var("RETRO_KERNELS").unwrap_or_default();
+        let bk = match want.as_str() {
+            "scalar" => Backend::Scalar,
+            "simd" | "avx2" => Backend::simd().unwrap_or(Backend::Scalar),
+            _ => Backend::simd().unwrap_or(Backend::Scalar),
+        };
+        eprintln!(
+            "[kernels] backend pinned: {} (RETRO_KERNELS={})",
+            bk.name(),
+            if want.is_empty() { "auto" } else { want.as_str() }
+        );
+        bk
+    })
+}
+
+/// Dot product with the process-pinned backend.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    active().dot(a, b)
+}
+
+/// y += alpha * x with the process-pinned backend.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    active().axpy(alpha, x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_dot_matches_naive_tolerance() {
+        let a: Vec<f32> = (0..13).map(|x| x as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|x| (13 - x) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((Backend::Scalar.dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gemm_matches_per_row_dots() {
+        let d = 7;
+        let (n, m) = (5, 130); // m spans two B tiles
+        let a: Vec<f32> = (0..n * d).map(|x| (x as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..m * d).map(|x| (x as f32 * 0.11).cos()).collect();
+        let mut out = vec![0.0f32; n * m];
+        Backend::Scalar.gemm_nt(&a, &b, d, &mut out);
+        for i in 0..n {
+            for j in 0..m {
+                let r = Backend::Scalar.dot(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d]);
+                assert_eq!(out[i * m + j], r, "gemm tile boundary changed the reduction order");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_is_partition_invariant() {
+        // bit-identity across caller-side row partitions: the property
+        // pooled k-means assignment relies on.
+        let d = 16;
+        let (n, m) = (9, 70);
+        let a: Vec<f32> = (0..n * d).map(|x| (x as f32 * 0.19).sin()).collect();
+        let b: Vec<f32> = (0..m * d).map(|x| (x as f32 * 0.07).cos()).collect();
+        let bk = active();
+        let mut whole = vec![0.0f32; n * m];
+        bk.gemm_nt(&a, &b, d, &mut whole);
+        let mut parts = vec![0.0f32; n * m];
+        let split = 4;
+        bk.gemm_nt(&a[..split * d], &b, d, &mut parts[..split * m]);
+        bk.gemm_nt(&a[split * d..], &b, d, &mut parts[split * m..]);
+        assert_eq!(whole, parts);
+    }
+
+    #[test]
+    fn active_is_pinned() {
+        assert_eq!(active(), active());
+    }
+
+    #[test]
+    fn group_max_picks_best_query() {
+        let d = 4;
+        let qs = vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]; // g=2
+        let rows = vec![0.5, 3.0, 0.0, 0.0, 2.0, -1.0, 0.0, 0.0];
+        let mut out = vec![0.0f32; 2];
+        Backend::Scalar.group_max_scores(&qs, 2, &rows, d, &mut out);
+        assert_eq!(out, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let bk = active();
+        assert_eq!(bk.dot(&[], &[]), 0.0);
+        bk.axpy(2.0, &[], &mut []);
+        bk.matvec_nt(&[], &[], 0, &mut []);
+        let mut out = Vec::new();
+        assert_eq!(bk.score_rows(&[], &[], 0, 1.0, &mut out), f32::NEG_INFINITY);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,71 @@
+//! Scalar reference kernels: the portable fallback and the numeric
+//! ground truth the SIMD paths are property-tested against.
+//!
+//! Reduction-order contract (DESIGN.md "Kernel layer & dispatch"): every
+//! function here has ONE fixed accumulation order, so the scalar backend
+//! is bit-identical to itself across runs, threads, and call sites.
+//! `dot` keeps the exact 4-accumulator order the repo shipped with (the
+//! pre-kernel `tensor::dot`), so pinning `RETRO_KERNELS=scalar`
+//! reproduces historical outputs bit-for-bit.
+
+/// Dot product, unrolled by 4 with the `(s0+s1)+(s2+s3)`-free layout the
+/// original `tensor::dot` used: `s0 + s1 + s2 + s3` left-to-right, then
+/// the scalar remainder.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x, in index order (two roundings per element — no FMA —
+/// matching the original `tensor::axpy`).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// out[c] = q · rows[c] for `out.len()` rows of width `d`.
+#[inline]
+pub fn matvec_nt(q: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert!(rows.len() >= out.len() * d);
+    for (c, o) in out.iter_mut().enumerate() {
+        *o = dot(q, &rows[c * d..(c + 1) * d]);
+    }
+}
+
+/// out[c] = max over the g queries in `qs` ([g, d] flat) of q_i · rows[c].
+/// Strict `>` keeps the first (lowest query index) maximum, which matches
+/// a left fold with `f32::max` on NaN-free and all-NaN inputs alike.
+#[inline]
+pub fn group_max_scores(qs: &[f32], g: usize, rows: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert!(qs.len() >= g * d);
+    debug_assert!(rows.len() >= out.len() * d);
+    for (c, o) in out.iter_mut().enumerate() {
+        let row = &rows[c * d..(c + 1) * d];
+        let mut best = f32::NEG_INFINITY;
+        for gi in 0..g {
+            let s = dot(&qs[gi * d..(gi + 1) * d], row);
+            if s > best {
+                best = s;
+            }
+        }
+        *o = best;
+    }
+}

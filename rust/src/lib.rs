@@ -31,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod index;
+pub mod kernels;
 pub mod kvcache;
 pub mod memsim;
 pub mod metrics;

@@ -95,34 +95,18 @@ impl Tensor {
     }
 }
 
-/// Dot product (unrolled by 4; the index hot path uses `dot` heavily).
+/// Dot product via the process-pinned kernel backend (`kernels::active`).
+/// The scalar backend preserves the historical 4-accumulator order; pin
+/// `RETRO_KERNELS=scalar` for bit-exact reproduction of old outputs.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::kernels::dot(a, b)
 }
 
-/// y += alpha * x
+/// y += alpha * x via the process-pinned kernel backend.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
+    crate::kernels::axpy(alpha, x, y)
 }
 
 /// Euclidean norm.

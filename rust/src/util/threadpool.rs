@@ -137,6 +137,32 @@ impl ThreadPool {
         assert!(!scope.job_panicked.load(Ordering::SeqCst), "a scoped pool job panicked");
     }
 
+    /// Chunked scoped fan-out: split `0..n` into contiguous ranges of at
+    /// most `chunk` indices and run `f(range)` for each across the pool,
+    /// returning once these jobs complete. One job per chunk (not per
+    /// index), so fine-grained work like centroid-tile scoring amortizes
+    /// the queue round-trip. Same contract as
+    /// [`ThreadPool::scope_for_each`]: `f` may borrow the caller's
+    /// stack, panics are re-raised, and it must not be called from a
+    /// pool worker.
+    pub fn scope_for_each_chunks<F: Fn(std::ops::Range<usize>) + Sync>(
+        &self,
+        n: usize,
+        chunk: usize,
+        f: &F,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let jobs = n.div_ceil(chunk);
+        let run = |j: usize| {
+            let lo = j * chunk;
+            f(lo..n.min(lo + chunk));
+        };
+        self.scope_for_each(jobs, &run);
+    }
+
     /// Mutable scoped fan-out: run `f(i, &mut items[i])` for every item
     /// across the pool, returning once these jobs complete. Each job
     /// receives a *disjoint* element, so `T` only needs `Send`; the
@@ -324,6 +350,25 @@ mod tests {
         assert_eq!(*hits.lock().unwrap(), 8);
         pool.wait_idle();
         assert_eq!(slow.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scope_for_each_chunks_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        for (n, chunk) in [(64usize, 16usize), (65, 16), (7, 100), (16, 1), (1, 1)] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.scope_for_each_chunks(n, chunk, &|range| {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "n={n} chunk={chunk}"
+            );
+        }
+        // empty input is a no-op, not a hang
+        pool.scope_for_each_chunks(0, 8, &|_| panic!("must not run"));
     }
 
     #[test]

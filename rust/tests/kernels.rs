@@ -1,0 +1,343 @@
+//! Kernel-layer integration tests (DESIGN.md "Kernel layer & dispatch"):
+//! scalar-vs-SIMD agreement on adversarial inputs (empty slices, odd
+//! lengths, denormals), deterministic bit-identity under a pinned
+//! backend, non-finite score handling in the fused merge, and the
+//! zero-allocation guarantee for the steady-state decode hot path —
+//! counted with a thread-local counting allocator, so pool workers and
+//! the test harness don't pollute the measurement.
+
+use retroinfer::attention::{tripartite_attention_in, MergeScratch, TripartiteInputs};
+use retroinfer::buffer::{ExecBuffer, WaveBuffer};
+use retroinfer::config::{BufferConfig, ZoneConfig};
+use retroinfer::engine::assemble::{assemble_head, HeadSlices};
+use retroinfer::engine::{AssembleShape, HeadTask};
+use retroinfer::index::{DecodeScratch, SelectScratch, WaveIndex};
+use retroinfer::kernels::Backend;
+use retroinfer::prop_assert;
+use retroinfer::util::prop::check;
+use retroinfer::util::rng::Rng;
+use retroinfer::util::threadpool::ThreadPool;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+// --- counting allocator ------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Pass-through to the system allocator that counts alloc/realloc calls
+/// on the current thread only (thread-local, so the pool's workers and
+/// the libtest harness don't perturb hot-path measurements).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // try_with: TLS may already be torn down during thread exit
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// --- scalar vs SIMD agreement ------------------------------------------
+
+/// Relative closeness with an absolute floor; non-finite values must
+/// agree in kind (the backends share overflow behavior, not bits).
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    if a.is_finite() && b.is_finite() {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    } else {
+        a == b || (a.is_nan() && b.is_nan())
+    }
+}
+
+#[test]
+fn scalar_and_simd_agree_on_adversarial_inputs() {
+    let Some(simd) = Backend::simd() else {
+        eprintln!("no SIMD backend on this machine; scalar-only, skipping");
+        return;
+    };
+    // Lengths straddle every blocking boundary in the AVX2 kernels:
+    // empty, sub-lane, one lane, 2-lane unroll, and ragged tails.
+    let lens = [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 64, 100, 127];
+    check("kernels-scalar-vs-simd", 16, |rng| {
+        for &n in &lens {
+            let mut a = rng.normal_vec(n);
+            let mut b = rng.normal_vec(n);
+            // sprinkle denormals and exact zeros into the operands
+            for i in 0..n {
+                match rng.below(8) {
+                    0 => a[i] = 1.0e-41,
+                    1 => b[i] = -1.0e-41,
+                    2 => a[i] = 0.0,
+                    _ => {}
+                }
+            }
+            let s = Backend::Scalar.dot(&a, &b);
+            let v = simd.dot(&a, &b);
+            prop_assert!(close(s, v, 1e-4), "dot len {n}: scalar {s} vs simd {v}");
+
+            let mut ys = rng.normal_vec(n);
+            let mut yv = ys.clone();
+            Backend::Scalar.axpy(0.37, &a, &mut ys);
+            simd.axpy(0.37, &a, &mut yv);
+            for i in 0..n {
+                prop_assert!(
+                    close(ys[i], yv[i], 1e-4),
+                    "axpy len {n} lane {i}: scalar {} vs simd {}",
+                    ys[i],
+                    yv[i]
+                );
+            }
+        }
+        // Row widths cover the 4-row-block + remainder paths of
+        // matvec_nt/group_max_scores, with a row count that leaves a
+        // non-multiple-of-4 remainder.
+        for &d in &[3usize, 8, 16, 33, 64] {
+            let m = 17;
+            let rows = rng.normal_vec(m * d);
+            let q = rng.normal_vec(d);
+            let mut os = vec![0.0f32; m];
+            let mut ov = vec![0.0f32; m];
+            Backend::Scalar.matvec_nt(&q, &rows, d, &mut os);
+            simd.matvec_nt(&q, &rows, d, &mut ov);
+            for c in 0..m {
+                prop_assert!(
+                    close(os[c], ov[c], 1e-4),
+                    "matvec d={d} row {c}: scalar {} vs simd {}",
+                    os[c],
+                    ov[c]
+                );
+            }
+            let g = 3;
+            let qs = rng.normal_vec(g * d);
+            Backend::Scalar.group_max_scores(&qs, g, &rows, d, &mut os);
+            simd.group_max_scores(&qs, g, &rows, d, &mut ov);
+            for c in 0..m {
+                prop_assert!(
+                    close(os[c], ov[c], 1e-4),
+                    "group_max d={d} row {c}: scalar {} vs simd {}",
+                    os[c],
+                    ov[c]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tripartite_merge_agrees_and_is_deterministic_per_backend() {
+    let d = 16;
+    let mut rng = Rng::new(33);
+    let n = 96;
+    let m = 12;
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let cents = rng.normal_vec(m * d);
+    let vsum = rng.normal_vec(m * d);
+    let sizes: Vec<f32> = (0..m).map(|i| 4.0 + i as f32).collect();
+    let exact: Vec<usize> = (0..n).step_by(2).collect();
+    let estimated: Vec<usize> = (0..m).collect();
+    let q = rng.normal_vec(d);
+    let inp = TripartiteInputs {
+        d,
+        keys: &keys,
+        vals: &vals,
+        exact: &exact,
+        centroids: &cents,
+        vsum: &vsum,
+        sizes: &sizes,
+        estimated: &estimated,
+    };
+    let mut backends = vec![Backend::Scalar];
+    backends.extend(Backend::simd());
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for bk in &backends {
+        let mut scratch = MergeScratch::default();
+        let mut o1 = vec![0.0f32; d];
+        let mut o2 = vec![0.0f32; d];
+        tripartite_attention_in(*bk, &q, &inp, &mut scratch, &mut o1);
+        tripartite_attention_in(*bk, &q, &inp, &mut scratch, &mut o2);
+        // each backend is bit-identical to itself (fixed reduction order)
+        assert_eq!(o1, o2, "backend {} not deterministic", bk.name());
+        outs.push(o1);
+    }
+    if outs.len() == 2 {
+        for i in 0..d {
+            assert!(
+                close(outs[0][i], outs[1][i], 1e-3),
+                "merge lane {i}: scalar {} vs simd {}",
+                outs[0][i],
+                outs[1][i]
+            );
+        }
+    }
+}
+
+#[test]
+fn overflowed_scores_merge_to_zeros_on_every_backend() {
+    // A +inf score (q·k overflow) poisons the softmax; the merge emits
+    // zeros deterministically instead of NaN — on both backends.
+    let d = 8;
+    let q = vec![1.0e30f32; d];
+    let keys = vec![1.0e30f32; 2 * d]; // dot = d * 1e60 -> +inf
+    let vals = vec![1.0f32; 2 * d];
+    let exact = [0usize, 1];
+    let inp = TripartiteInputs {
+        d,
+        keys: &keys,
+        vals: &vals,
+        exact: &exact,
+        centroids: &[],
+        vsum: &[],
+        sizes: &[],
+        estimated: &[],
+    };
+    let mut backends = vec![Backend::Scalar];
+    backends.extend(Backend::simd());
+    for bk in backends {
+        let mut scratch = MergeScratch::default();
+        let mut out = vec![7.0f32; d];
+        tripartite_attention_in(bk, &q, &inp, &mut scratch, &mut out);
+        assert_eq!(out, vec![0.0f32; d], "backend {}", bk.name());
+        // degenerate empty selection also merges to zeros, no panic
+        let empty = TripartiteInputs {
+            d,
+            keys: &[],
+            vals: &[],
+            exact: &[],
+            centroids: &[],
+            vsum: &[],
+            sizes: &[],
+            estimated: &[],
+        };
+        let mut out = vec![7.0f32; d];
+        tripartite_attention_in(bk, &q, &empty, &mut scratch, &mut out);
+        assert_eq!(out, vec![0.0f32; d], "backend {} (empty)", bk.name());
+    }
+}
+
+// --- zero-allocation decode hot path -----------------------------------
+
+fn small_zone() -> ZoneConfig {
+    ZoneConfig {
+        steady_sink: 4,
+        steady_local: 16,
+        tokens_per_cluster: 8,
+        build_segment: 256,
+        update_segment: 32,
+        kmeans_iters: 4,
+        ..ZoneConfig::default()
+    }
+}
+
+#[test]
+fn select_and_attend_are_alloc_free_after_warmup() {
+    let d = 16;
+    let n = 1024;
+    let mut rng = Rng::new(7);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let idx = WaveIndex::build(small_zone(), d, 2048, &keys, &vals, 1);
+    let m = idx.meta().m();
+    let (r, e) = ((m / 8).max(2), (m / 4).max(2));
+    let q = rng.normal_vec(d);
+    let mut sc = SelectScratch::default();
+    let mut ds = DecodeScratch::default();
+    let mut out = vec![0.0f32; d];
+    retroinfer::kernels::active(); // pin the backend (one-time log)
+    for _ in 0..3 {
+        let sel = idx.select_into(&q, r, e, &mut sc);
+        idx.attend_with(&q, sel, &mut ds, &mut out);
+    }
+    let before = allocs_on_this_thread();
+    for _ in 0..20 {
+        let sel = idx.select_into(&q, r, e, &mut sc);
+        idx.attend_with(&q, sel, &mut ds, &mut out);
+    }
+    let grew = allocs_on_this_thread() - before;
+    assert_eq!(grew, 0, "select+attend allocated {grew} times after warmup");
+    assert!(out.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn assemble_head_is_alloc_free_after_warmup() {
+    let d = 16;
+    let n = 2048;
+    let mut rng = Rng::new(8);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let idx = WaveIndex::build(small_zone(), d, 2048, &keys, &vals, 2);
+    // Synchronous cache updates (the async path hands the update scratch
+    // to a pool worker — reuse is then best-effort) and a cache big
+    // enough that the steady working set is all hits.
+    let bcfg = BufferConfig {
+        cache_frac: 1.0,
+        cpu_threads: 1,
+        async_update: false,
+        ..BufferConfig::default()
+    };
+    let tpb = idx.store().tokens_per_block();
+    let cap = WaveBuffer::capacity_for(&bcfg, n, tpb).max(64);
+    let pool = Arc::new(ThreadPool::new(1));
+    let wb = WaveBuffer::new(bcfg, d, tpb, cap, pool);
+    wb.register_index(&idx);
+
+    let shape = AssembleShape { ne: 512, m_cap: 64, d, group: 2 };
+    let qg = rng.normal_vec(2 * d);
+    let mut sc = SelectScratch::default();
+    let mut eb = ExecBuffer::new(d);
+    let mut kx = vec![0.0f32; shape.ne * d];
+    let mut vx = vec![0.0f32; shape.ne * d];
+    let mut kmask = vec![0.0f32; shape.ne];
+    let mut cent = vec![0.0f32; shape.m_cap * d];
+    let mut vsum = vec![0.0f32; shape.m_cap * d];
+    let mut csize = vec![0.0f32; shape.m_cap];
+    let mut emask = vec![0.0f32; shape.m_cap];
+    let task = HeadTask { index: &idx, buffer: &wb };
+    retroinfer::kernels::active();
+
+    let mut run = |counted: bool| {
+        let mut out = HeadSlices {
+            kx: &mut kx,
+            vx: &mut vx,
+            kmask: &mut kmask,
+            cent: &mut cent,
+            vsum: &mut vsum,
+            csize: &mut csize,
+            emask: &mut emask,
+        };
+        let st = assemble_head(task, &qg, shape, &mut sc, &mut eb, &mut out);
+        if counted {
+            assert_eq!(st.miss_blocks, 0, "cache not warm: misses re-stage blocks");
+        }
+        st
+    };
+    for _ in 0..3 {
+        run(false);
+    }
+    let before = allocs_on_this_thread();
+    for _ in 0..20 {
+        run(true);
+    }
+    let grew = allocs_on_this_thread() - before;
+    assert_eq!(grew, 0, "assemble_head allocated {grew} times after warmup");
+}

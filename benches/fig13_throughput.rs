@@ -11,8 +11,8 @@ use retroinfer::memsim::{self, profiles};
 use retroinfer::util::bench::{quick_mode, Table};
 use retroinfer::workload::tasks::{generate, TaskKind};
 use retroinfer::workload::{
-    multi_tenant_poisson, poisson_arrivals, run_memory_pressure, stamp_shared_prefix,
-    PressureConfig,
+    diurnal_poisson, multi_tenant_poisson, poisson_arrivals, run_memory_pressure,
+    run_online_serving, stamp_shared_prefix, OnlineConfig, PressureConfig, RequestSpec,
 };
 
 /// Measure the block-cache hit ratio by replaying a real query trace
@@ -207,6 +207,80 @@ fn shared_prefix_report() {
     assert_eq!(rep.final_live_blocks, 0, "shared refcounts must drain");
 }
 
+/// SLO-aware online serving (ROADMAP: chunked prefill + continuous
+/// batching): a diurnal interactive trace with long best-effort prompts
+/// mixed in, served through the real scheduler's planning loop in
+/// virtual time — monolithic prefill-eager baseline vs chunked prefill
+/// at three chunk sizes. Feeds the EXPERIMENTS.md "Online serving"
+/// table; percentiles come from the fixed-memory streaming histograms.
+fn online_serving_report() {
+    let horizon = if quick_mode() { 3.0 } else { 6.0 };
+    // 20 req/s base per tenant at 16 output tokens ≈ 1280 tok/s mean
+    // demand against ~1600 tok/s modelled decode capacity: bursts
+    // oversubscribe transiently, troughs drain the backlog
+    let mut trace = diurnal_poisson(&[20.0, 20.0], 3.0, 4.0, horizon, 64, 16, 29);
+    trace.push(RequestSpec {
+        arrive_s: horizon / 4.0,
+        input_tokens: 262_144,
+        output_tokens: 4,
+        tenant: 2,
+        prefix_hash: None,
+    });
+    trace.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+    let n = trace.len();
+    let run = |chunked: bool, chunk_tokens: usize| {
+        let cfg = OnlineConfig {
+            trace: trace.clone(),
+            chunked,
+            chunk_tokens,
+            prefill_token_s: 1e-5,
+            decode_step_s: 5e-3,
+            max_chunks_per_step: 2,
+            slo_ttft_s: 0.5,
+            slo_tpot_s: 0.05,
+            slo_max_input: 1024,
+            ..OnlineConfig::default()
+        };
+        (cfg.step_budget_s(), run_online_serving(&cfg))
+    };
+    println!("# online serving: {n} reqs (diurnal 2-tenant + one 256k prompt), TPOT SLO 50ms");
+    let (_, mono) = run(false, 512);
+    println!(
+        "#   monolithic : max_gap={:.3}s tpot_p99={:.4}s attain_ttft={:.3} attain_tpot={:.3} \
+         tput={:.0} tok/s",
+        mono.max_gap_s,
+        mono.tpot_p99_s,
+        mono.ttft_attainment,
+        mono.tpot_attainment,
+        mono.throughput_tok_s,
+    );
+    assert!(mono.max_gap_s > 2.0, "the 256k prefill must stall the monolithic baseline");
+    for cs in [256usize, 512, 1024] {
+        let (budget, r) = run(true, cs);
+        println!(
+            "#   chunk={cs:<4}: max_gap={:.4}s (budget {budget:.4}s) tpot_p99={:.4}s \
+             attain_ttft={:.3} attain_tpot={:.3} tput={:.0} tok/s",
+            r.max_gap_s,
+            r.tpot_p99_s,
+            r.ttft_attainment,
+            r.tpot_attainment,
+            r.throughput_tok_s,
+        );
+        assert_eq!(r.completed + r.rejected, n, "requests lost in online serving");
+        assert!(
+            r.max_gap_s <= budget + 1e-9,
+            "chunk {cs}: SLO-class gap {} over the per-step budget {budget}",
+            r.max_gap_s
+        );
+        assert!(
+            r.tpot_attainment > mono.tpot_attainment,
+            "chunking must improve TPOT attainment (chunk {cs}: {} vs mono {})",
+            r.tpot_attainment,
+            mono.tpot_attainment
+        );
+    }
+}
+
 fn main() {
     let model = ModelSpec::llama3_8b();
     let hw = HardwareSpec::a100();
@@ -217,6 +291,7 @@ fn main() {
     let codec_ratio = spill_pressure_report();
     println!("# measured int8 spill-codec ratio (physical/logical): {codec_ratio:.2}");
     shared_prefix_report();
+    online_serving_report();
     println!();
 
     let contexts: &[(usize, &str)] =

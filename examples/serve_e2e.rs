@@ -21,17 +21,26 @@
 //! capped re-run where the admission discount admits a session mix the
 //! unshared gate defers.
 //!
+//! A sixth, online pass (DESIGN.md §2 "Online serving & preemption")
+//! drives CHUNKED prefill interleaved with live decode steps, then
+//! preempts a mid-decode session to the cold tier and resumes it —
+//! both bit-identical to the uninterleaved, unpreempted run, with the
+//! hot arena under a cap the unpreempted set exceeded while parked.
+//!
 //!     make artifacts && cargo run --release --example serve_e2e
 //!
 //! Flags: --requests N (default 4)  --prompt-len L (2048)  --max-new M (24)
 //!        --tenants T (2)  --capacity-blocks C (0 = auto: 60% of peak)
+//!        --online-modelled (artifact-free: the modelled 256k-midstream
+//!        SLO scenario through the real scheduler's planning loop)
 
 use retroinfer::config::{BufferConfig, CapacityConfig, SpillCodec, ZoneConfig};
 use retroinfer::coordinator::{Action, Batcher, Request, Scheduler};
 use retroinfer::engine::{live::structured_prompt, AttnMode, LiveEngine};
-use retroinfer::kvcache::ColdestFirst;
+use retroinfer::kvcache::{ColdestFirst, DEFAULT_TENANT};
 use retroinfer::runtime::default_artifacts_dir;
 use retroinfer::util::cli::Args;
+use retroinfer::workload::{run_online_serving, OnlineConfig, RequestSpec};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
@@ -282,8 +291,97 @@ fn serve_prefix(
     })
 }
 
+/// Artifact-free modelled online pass (`--online-modelled`): the
+/// acceptance scenario for chunked prefill + continuous batching — a
+/// 256k-token prompt arriving at t = 50 ms while two interactive
+/// sessions decode under a 50 ms TPOT target, in deterministic virtual
+/// time through the real scheduler's `next_plan` loop. Chunked prefill
+/// keeps every inter-token gap inside the per-step budget; the
+/// monolithic prefill-eager baseline stalls the batch for the full
+/// ~2.6 s prompt cost. Token streams are bit-identical across both
+/// modes and across reruns.
+fn run_online_modelled() -> anyhow::Result<()> {
+    let spec = |arrive_s: f64, input: usize, output: usize, tenant: u32| RequestSpec {
+        arrive_s,
+        input_tokens: input,
+        output_tokens: output,
+        tenant,
+        prefix_hash: None,
+    };
+    let mk = |chunked: bool| OnlineConfig {
+        trace: vec![
+            spec(0.0, 64, 200, 0),
+            spec(0.0, 64, 200, 0),
+            spec(0.05, 262_144, 4, 1),
+        ],
+        chunked,
+        chunk_tokens: 512,
+        prefill_token_s: 1e-5,
+        decode_step_s: 5e-3,
+        max_chunks_per_step: 2,
+        max_batch: 4,
+        slo_ttft_s: 0.05,
+        slo_tpot_s: 0.05,
+        slo_max_input: 1024,
+        ..OnlineConfig::default()
+    };
+    let budget = mk(true).step_budget_s();
+    let chunked = run_online_serving(&mk(true));
+    let mono = run_online_serving(&mk(false));
+    println!("# modelled online serving: 2 decode streams (TPOT 50ms) + 256k prompt at t=50ms");
+    println!(
+        "chunked    : max_gap={:.4}s (step budget {budget:.4}s) tpot_attain={:.3} \
+         ttft_p50={:.4}s tput={:.0} tok/s",
+        chunked.max_gap_s, chunked.tpot_attainment, chunked.ttft_p50_s, chunked.throughput_tok_s
+    );
+    println!(
+        "monolithic : max_gap={:.4}s tpot_attain={:.3}",
+        mono.max_gap_s, mono.tpot_attainment
+    );
+    assert!(
+        chunked.max_gap_s <= budget + 1e-9,
+        "chunked max gap {} exceeds the per-step budget {budget}",
+        chunked.max_gap_s
+    );
+    assert_eq!(chunked.tpot_attainment, 1.0, "chunked must meet every TPOT gap");
+    assert!(
+        mono.max_gap_s > 2.0,
+        "monolithic must stall for the 256k prefill (~2.6 s), saw {}",
+        mono.max_gap_s
+    );
+    assert!(mono.tpot_attainment < 1.0, "monolithic must miss TPOT gaps");
+    assert_eq!(chunked.tokens, mono.tokens, "scheduling mode must not change tokens");
+    let rerun = run_online_serving(&mk(true));
+    assert_eq!(rerun, chunked, "online runs must be bit-identical");
+    println!("OK (modelled online)");
+    Ok(())
+}
+
+/// One decode step over the subset of `ids` that still owes tokens,
+/// recording each output; returns false once every id is complete.
+fn decode_record(
+    eng: &mut LiveEngine,
+    toks: &mut HashMap<u64, Vec<i32>>,
+    ids: &[u64],
+    max_new: usize,
+) -> anyhow::Result<bool> {
+    let active: Vec<u64> = ids.iter().copied().filter(|i| toks[i].len() < max_new).collect();
+    if active.is_empty() {
+        return Ok(false);
+    }
+    let bucket = active.len().next_power_of_two();
+    let out = eng.decode_step(&active, bucket)?;
+    for (id, t) in active.iter().zip(out) {
+        toks.get_mut(id).unwrap().push(t);
+    }
+    Ok(true)
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
+    if args.has("online-modelled") {
+        return run_online_modelled();
+    }
     let n_requests = args.usize_or("requests", 4);
     let prompt_len = args.usize_or("prompt-len", 2048);
     let max_new = args.usize_or("max-new", 24);
@@ -452,6 +550,100 @@ fn main() -> anyhow::Result<()> {
     );
     for (id, toks) in &unshared.out {
         assert_eq!(toks, &shared_capped.out[id], "capped sharing changed request {id}");
+    }
+
+    // Online pass (a): CHUNKED prefill interleaved with live decode.
+    // Two sessions decode a head start, then session 2's prompt
+    // prefills in 256-token chunks with a decode step riding between
+    // chunks — the bounded unit of work the SLO scheduler interleaves.
+    // Every token stream must match the uninterleaved run (`wave.out`):
+    // chunking changes latency structure, never content.
+    if n_requests >= 3 {
+        let dir3 = default_artifacts_dir();
+        let mut eng = LiveEngine::new(&dir3, AttnMode::Wave)?;
+        let mut toks: HashMap<u64, Vec<i32>> = HashMap::new();
+        for id in 0..2u64 {
+            let t = eng.prefill_for(id, DEFAULT_TENANT, &prompts[id as usize])?;
+            toks.insert(id, vec![t]);
+        }
+        for _ in 0..4 {
+            decode_record(&mut eng, &mut toks, &[0, 1], max_new)?;
+        }
+        let mut job = eng.prefill_start(2, DEFAULT_TENANT, &prompts[2])?;
+        let mut chunks = 0u32;
+        loop {
+            let done = eng.prefill_advance(&mut job, 256)?;
+            chunks += 1;
+            decode_record(&mut eng, &mut toks, &[0, 1], max_new)?;
+            if done {
+                break;
+            }
+        }
+        let first2 = eng.prefill_finish(job)?;
+        toks.insert(2, vec![first2]);
+        while decode_record(&mut eng, &mut toks, &[0, 1, 2], max_new)? {}
+        for id in 0..3u64 {
+            assert_eq!(
+                toks[&id], wave.out[&id],
+                "chunked-interleaved serve changed request {id}'s tokens"
+            );
+        }
+        println!(
+            "wave (online)  : prefill of request 2 rode along in {chunks} chunks — \
+             all token streams bit-identical; {}",
+            eng.metrics.summary("prefill_chunk_s")
+        );
+        for id in 0..3u64 {
+            eng.finish_session(id);
+        }
+        assert_eq!(eng.arena().live_blocks(), 0, "online pass must reclaim all blocks");
+
+        // Online pass (b): preempt a mid-decode session to the cold
+        // tier, serve the survivors under a hot cap the 3-session set
+        // exceeded, resume, and finish — bit-identical throughout.
+        let mut eng2 = LiveEngine::new(&dir3, AttnMode::Wave)?;
+        let mut ptoks: HashMap<u64, Vec<i32>> = HashMap::new();
+        for id in 0..3u64 {
+            let t = eng2.prefill_for(id, DEFAULT_TENANT, &prompts[id as usize])?;
+            ptoks.insert(id, vec![t]);
+        }
+        let k = (max_new / 2).max(1);
+        while ptoks[&2].len() < k {
+            decode_record(&mut eng2, &mut ptoks, &[0, 1, 2], max_new)?;
+        }
+        let live3 = eng2.arena().live_blocks();
+        let freed = eng2.preempt_session(2)?;
+        assert!(freed > 0, "preemption must free hot blocks");
+        assert!(eng2.is_parked(2) && eng2.parked_bytes() > 0);
+        // while parked, the survivors fit under a cap the unpreempted
+        // set violated — the capacity preemption exists to reclaim
+        let cap = live3.saturating_sub(1).max(1);
+        eng2.set_arena_capacity_blocks(Some(cap));
+        for _ in 0..4 {
+            decode_record(&mut eng2, &mut ptoks, &[0, 1], max_new)?;
+            assert!(
+                eng2.arena().live_blocks() <= cap,
+                "parked serve exceeded the hot cap"
+            );
+        }
+        eng2.set_arena_capacity_blocks(None);
+        eng2.resume_session(2, DEFAULT_TENANT)?;
+        assert!(!eng2.is_parked(2), "resume must unpark");
+        while decode_record(&mut eng2, &mut ptoks, &[0, 1, 2], max_new)? {}
+        for id in 0..3u64 {
+            assert_eq!(
+                ptoks[&id], wave.out[&id],
+                "preempt/resume changed request {id}'s tokens"
+            );
+        }
+        println!(
+            "wave (preempt) : freed={freed} blocks at step {k}, survivors under cap={cap} \
+             (3-session peak {live3}), resumed bit-identical"
+        );
+        for id in 0..3u64 {
+            eng2.finish_session(id);
+        }
+        assert_eq!(eng2.arena().live_blocks(), 0, "preempt pass must reclaim all blocks");
     }
 
     // Cross-mode agreement, TEACHER-FORCED: replay full attention's token

@@ -78,6 +78,36 @@ impl Batcher {
         let bucket = self.buckets.iter().copied().find(|&b| b >= n)?;
         Some((take, bucket))
     }
+
+    /// Deadline-slack selection: when more sessions are decodable than
+    /// fit one batch, keep the ones closest to violating their TPOT
+    /// target instead of a first-come prefix (`slack_of` returns
+    /// seconds of slack; `INFINITY` = best-effort, ties broken by queue
+    /// order so best-effort traffic still round-robins). The chosen ids
+    /// keep their original relative order, so the engine assembles the
+    /// batch in admission order exactly as with [`Batcher::select`].
+    pub fn select_by_slack(
+        &self,
+        decodable: &[u64],
+        slack_of: impl Fn(u64) -> f64,
+    ) -> Option<(Vec<u64>, usize)> {
+        if decodable.is_empty() {
+            return None;
+        }
+        let n = decodable.len().min(self.max_batch).min(*self.buckets.last().unwrap());
+        if n == decodable.len() {
+            return self.select(decodable);
+        }
+        let mut order: Vec<usize> = (0..decodable.len()).collect();
+        order.sort_by(|&a, &b| {
+            slack_of(decodable[a]).total_cmp(&slack_of(decodable[b])).then(a.cmp(&b))
+        });
+        let mut keep = order[..n].to_vec();
+        keep.sort_unstable(); // restore admission order
+        let take: Vec<u64> = keep.into_iter().map(|i| decodable[i]).collect();
+        let bucket = self.buckets.iter().copied().find(|&b| b >= n)?;
+        Some((take, bucket))
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +163,40 @@ mod tests {
         // slots dealt alternately: tenant 1 gets half the batch despite
         // tenant 0's longer (older) backlog
         assert_eq!(take, vec![0, 10, 1, 11]);
+    }
+
+    #[test]
+    fn slack_select_prefers_tight_deadlines_in_admission_order() {
+        let b = Batcher::new(&[1, 2, 4, 8], 4);
+        let ids = [10u64, 11, 12, 13, 14, 15];
+        // 13 and 15 are closest to violating; 10 and 12 next
+        let slack = |id: u64| match id {
+            13 => 0.01,
+            15 => 0.02,
+            10 => 0.5,
+            12 => 0.7,
+            _ => f64::INFINITY,
+        };
+        let (take, bucket) = b.select_by_slack(&ids, slack).unwrap();
+        assert_eq!(bucket, 4);
+        // least-slack four, in original (admission) order
+        assert_eq!(take, vec![10, 12, 13, 15]);
+    }
+
+    #[test]
+    fn slack_select_without_pressure_matches_plain() {
+        let b = Batcher::new(&[1, 2, 4, 8], 8);
+        let ids = [10u64, 11, 12];
+        assert_eq!(b.select_by_slack(&ids, |_| f64::INFINITY), b.select(&ids));
+    }
+
+    #[test]
+    fn slack_select_ties_keep_queue_order() {
+        let b = Batcher::new(&[1, 2], 2);
+        let ids = [5u64, 6, 7];
+        // all best-effort: the oldest two ride, exactly like select()
+        let (take, _) = b.select_by_slack(&ids, |_| f64::INFINITY).unwrap();
+        assert_eq!(take, vec![5, 6]);
     }
 
     #[test]

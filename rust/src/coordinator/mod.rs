@@ -12,4 +12,4 @@ pub mod scheduler;
 pub use batcher::Batcher;
 pub use request::{Phase, Request, Session};
 pub use router::Router;
-pub use scheduler::{Action, AdmissionConfig, Scheduler};
+pub use scheduler::{Action, AdmissionConfig, Scheduler, SloPolicy, StepPlan};

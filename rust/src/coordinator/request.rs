@@ -18,11 +18,31 @@ pub struct Request {
     /// live `PrefixRegistry` — the registry, when armed on the
     /// scheduler, supersedes this).
     pub prefix_tokens: usize,
+    /// Time-to-first-token SLO: the first token must land within this
+    /// many seconds of arrival. `INFINITY` = best-effort (no target).
+    pub ttft_target_s: f64,
+    /// Time-per-output-token SLO: the max acceptable gap between
+    /// consecutive decoded tokens. `INFINITY` = best-effort.
+    pub tpot_target_s: f64,
+    /// Preemption priority: under hot-tier pressure the scheduler
+    /// demotes lower-priority decoding sessions first. Higher is more
+    /// important; best-effort traffic defaults to 0.
+    pub priority: i32,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Request { id, tenant: DEFAULT_TENANT, prompt, max_new, arrive_s: 0.0, prefix_tokens: 0 }
+        Request {
+            id,
+            tenant: DEFAULT_TENANT,
+            prompt,
+            max_new,
+            arrive_s: 0.0,
+            prefix_tokens: 0,
+            ttft_target_s: f64::INFINITY,
+            tpot_target_s: f64::INFINITY,
+            priority: 0,
+        }
     }
 
     /// Attribute the request to a tenant (builder form).
@@ -37,6 +57,32 @@ impl Request {
         self.prefix_tokens = tokens;
         self
     }
+
+    /// Attach TTFT/TPOT targets (builder form). `INFINITY` leaves a
+    /// dimension best-effort.
+    pub fn with_slo(mut self, ttft_s: f64, tpot_s: f64) -> Self {
+        self.ttft_target_s = ttft_s;
+        self.tpot_target_s = tpot_s;
+        self
+    }
+
+    /// Set the preemption priority (builder form; higher survives
+    /// longer under pressure).
+    pub fn with_priority(mut self, priority: i32) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Whether any latency target is attached.
+    pub fn has_slo(&self) -> bool {
+        self.ttft_target_s.is_finite() || self.tpot_target_s.is_finite()
+    }
+
+    /// Absolute TTFT deadline (arrival + target; `INFINITY` when
+    /// best-effort).
+    pub fn ttft_deadline_s(&self) -> f64 {
+        self.arrive_s + self.ttft_target_s
+    }
 }
 
 /// Lifecycle phase of a request.
@@ -45,6 +91,9 @@ pub enum Phase {
     Queued,
     Prefill,
     Decode,
+    /// Demoted to the cold tier mid-generation (snapshot parked, hot
+    /// blocks reclaimed); resumes bit-identically into `Decode`.
+    Preempted,
     Done,
 }
 
@@ -66,6 +115,13 @@ pub struct Session {
     pub admit_s: f64,
     pub first_token_s: f64,
     pub done_s: f64,
+    /// Time the most recent token was emitted (TPOT slack accounting;
+    /// `NaN` until the first token).
+    pub last_token_s: f64,
+    /// Prompt tokens already fed through chunked prefill.
+    pub prefill_fed: usize,
+    /// How many times this session was preempted to the cold tier.
+    pub preemptions: u32,
 }
 
 impl Session {
@@ -79,6 +135,9 @@ impl Session {
             admit_s: f64::NAN,
             first_token_s: f64::NAN,
             done_s: f64::NAN,
+            last_token_s: f64::NAN,
+            prefill_fed: 0,
+            preemptions: 0,
         }
     }
 
@@ -95,6 +154,26 @@ impl Session {
     /// Request latency (arrival -> completion).
     pub fn latency_s(&self) -> f64 {
         self.done_s - self.req.arrive_s
+    }
+
+    /// Seconds of TTFT slack left at `now` (negative = deadline blown;
+    /// `INFINITY` = best-effort). Meaningful until the first token.
+    pub fn ttft_slack_s(&self, now_s: f64) -> f64 {
+        self.req.ttft_deadline_s() - now_s
+    }
+
+    /// Seconds until this decoding session's next token violates its
+    /// TPOT target (measured from the last emitted token, or from
+    /// `first_token_s` before any decode). `INFINITY` = best-effort.
+    pub fn tpot_slack_s(&self, now_s: f64) -> f64 {
+        if !self.req.tpot_target_s.is_finite() {
+            return f64::INFINITY;
+        }
+        let last = if self.last_token_s.is_nan() { self.first_token_s } else { self.last_token_s };
+        if last.is_nan() {
+            return f64::INFINITY;
+        }
+        last + self.req.tpot_target_s - now_s
     }
 }
 
@@ -122,5 +201,34 @@ mod tests {
         let r = Request::new(2, vec![1], 1).with_tenant(5);
         assert_eq!(r.tenant, 5);
         assert_eq!(r.id, 2);
+    }
+
+    #[test]
+    fn slo_defaults_are_best_effort() {
+        let r = Request::new(3, vec![1], 1);
+        assert!(!r.has_slo());
+        assert_eq!(r.ttft_deadline_s(), f64::INFINITY);
+        let s = Session::new(r);
+        assert_eq!(s.ttft_slack_s(1e9), f64::INFINITY);
+        assert_eq!(s.tpot_slack_s(1e9), f64::INFINITY);
+    }
+
+    #[test]
+    fn slo_slack_accounting() {
+        let mut r = Request::new(4, vec![1], 4).with_slo(2.0, 0.5).with_priority(3);
+        r.arrive_s = 10.0;
+        assert!(r.has_slo());
+        assert_eq!(r.priority, 3);
+        let mut s = Session::new(r);
+        // TTFT slack counts down from arrival
+        assert!((s.ttft_slack_s(11.0) - 1.0).abs() < 1e-12);
+        assert!(s.ttft_slack_s(12.5) < 0.0, "blown deadline goes negative");
+        // no token yet: TPOT unconstrained
+        assert_eq!(s.tpot_slack_s(11.0), f64::INFINITY);
+        s.first_token_s = 11.0;
+        assert!((s.tpot_slack_s(11.2) - 0.3).abs() < 1e-12);
+        // later tokens measure from the most recent one
+        s.last_token_s = 12.0;
+        assert!((s.tpot_slack_s(12.1) - 0.4).abs() < 1e-12);
     }
 }

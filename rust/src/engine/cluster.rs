@@ -21,7 +21,7 @@ use super::live::LiveEngine;
 use crate::config::CapacityConfig;
 use crate::coordinator::{Action, Batcher, Phase, Request, Router, Scheduler};
 use crate::kvcache::DEFAULT_TENANT;
-use crate::util::stats::Sample;
+use crate::util::stats::{LogHistogram, Sample};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
@@ -103,6 +103,17 @@ pub struct ClusterRunReport {
     /// Mean time-to-first-token over completed requests (infinite when
     /// nothing completed — never NaN).
     pub mean_ttft_s: f64,
+    /// TTFT tail percentiles from a streaming [`LogHistogram`] (fixed
+    /// memory regardless of run length; infinite when empty, never NaN).
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    pub ttft_p99_s: f64,
+    /// Per-request mean TPOT percentiles — `(done_s - first_token_s) /
+    /// (tokens - 1)` per completed multi-token request, observed into a
+    /// streaming histogram. Same empty convention as TTFT.
+    pub tpot_p50_s: f64,
+    pub tpot_p95_s: f64,
+    pub tpot_p99_s: f64,
     pub steals: u64,
     pub migrations: u64,
     pub migrated_bytes: u64,
@@ -388,7 +399,7 @@ impl ClusterEngine {
                 self.replicas[from].as_mut().unwrap().engine.finish_session(id);
                 bytes
             }
-            Phase::Prefill | Phase::Done => {
+            Phase::Prefill | Phase::Preempted | Phase::Done => {
                 return Err(anyhow!("session {id} cannot migrate in phase {phase:?}"))
             }
         };
@@ -494,6 +505,8 @@ impl ClusterEngine {
     pub fn report(&self) -> ClusterRunReport {
         let mut lat = Sample::new();
         let mut ttft = Sample::new();
+        let mut ttft_hist = LogHistogram::latency_s();
+        let mut tpot_hist = LogHistogram::latency_s();
         let mut completed = 0usize;
         let mut rejected = 0usize;
         for rec in self.done.values() {
@@ -505,8 +518,22 @@ impl ClusterEngine {
             lat.add(rec.done_s - rec.arrive_s);
             if rec.first_token_s.is_finite() {
                 ttft.add(rec.first_token_s - rec.arrive_s);
+                ttft_hist.observe(rec.first_token_s - rec.arrive_s);
+                if rec.tokens.len() > 1 {
+                    tpot_hist
+                        .observe((rec.done_s - rec.first_token_s) / (rec.tokens.len() - 1) as f64);
+                }
             }
         }
+        // histogram percentile, with the same empty convention as
+        // `mean_ttft_s`: no observations → infinite, never NaN
+        let pct = |h: &LogHistogram, p: f64| {
+            if h.is_empty() {
+                f64::INFINITY
+            } else {
+                h.percentile(p)
+            }
+        };
         // the simulate_cluster convention (and its NaN regression): no
         // completions → infinite latencies, never `inf × 0`
         let (mean, p99) = if completed > 0 {
@@ -525,6 +552,12 @@ impl ClusterEngine {
             mean_latency_s: mean,
             p99_latency_s: p99,
             mean_ttft_s: mean_ttft,
+            ttft_p50_s: pct(&ttft_hist, 50.0),
+            ttft_p95_s: pct(&ttft_hist, 95.0),
+            ttft_p99_s: pct(&ttft_hist, 99.0),
+            tpot_p50_s: pct(&tpot_hist, 50.0),
+            tpot_p95_s: pct(&tpot_hist, 95.0),
+            tpot_p99_s: pct(&tpot_hist, 99.0),
             steals: self.stats.steals,
             migrations: self.stats.migrations,
             migrated_bytes: self.stats.migrated_bytes,
@@ -549,6 +582,12 @@ impl ClusterRunReport {
         };
         lat_ok
             && !self.mean_ttft_s.is_nan()
+            && !self.ttft_p50_s.is_nan()
+            && !self.ttft_p95_s.is_nan()
+            && !self.ttft_p99_s.is_nan()
+            && !self.tpot_p50_s.is_nan()
+            && !self.tpot_p95_s.is_nan()
+            && !self.tpot_p99_s.is_nan()
             && !self.req_per_s.is_nan()
             && !self.makespan_s.is_nan()
     }

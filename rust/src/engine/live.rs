@@ -7,7 +7,7 @@ use super::assemble::{assemble_head, AssembleShape, BatchAssembler, HeadSlices, 
 use crate::buffer::{ExecBuffer, SharedBlockCache, WaveBuffer};
 use crate::config::{BufferConfig, CapacityConfig, SpillCodec, ZoneConfig};
 use crate::coordinator::AdmissionConfig;
-use crate::index::{SelectScratch, SnapshotError, WaveIndex};
+use crate::index::{BuildScratch, SelectScratch, SnapshotError, WaveIndex};
 use crate::kvcache::prefix::{ChainGeometry, PrefixMatch, PrefixRegistry};
 use crate::kvcache::{AllocError, BlockArena, CodecTag, SpillPolicy, TenantId, DEFAULT_TENANT};
 use crate::metrics::Metrics;
@@ -44,6 +44,10 @@ struct StepScratch {
     qg_all: Vec<f32>,
     tokens: Vec<i32>,
     pos: Vec<i32>,
+    /// Segment-clustering gather buffers shared across prefill chunks
+    /// (and across every head of every chunk): a warm chunk that stays
+    /// inside a build segment allocates nothing engine-side.
+    build: BuildScratch,
 }
 
 /// Per-request live state.
@@ -101,6 +105,70 @@ pub struct LiveEngine {
     pub metrics: Arc<Metrics>,
     scratch: SelectScratch,
     step: StepScratch,
+    /// Sessions preempted to the cold tier mid-generation
+    /// ([`LiveEngine::preempt_session`]): the full bit-exact snapshot
+    /// parked off the arena, resumable any time via
+    /// [`LiveEngine::resume_session`].
+    parked: HashMap<u64, SessionSnapshot>,
+}
+
+/// A resumable chunked prefill (DESIGN.md §2 "Online serving &
+/// preemption"). [`LiveEngine::prefill_start`] runs the LM forward once
+/// — TinyLM's prefill is a whole-prompt AOT executable, so chunking
+/// applies to the index build, not the forward — and opens every
+/// per-(layer, kv-head) wave index as a chunked build over the cached
+/// KV. Each [`LiveEngine::prefill_advance`] feeds `chunk_tokens` more
+/// rows through the same segmented re-cluster path a monolithic build
+/// takes, so the scheduler can interleave prefill chunks with decode
+/// steps; [`LiveEngine::prefill_finish`] registers the session. The
+/// finished session is bit-identical to [`LiveEngine::prefill_for`]'s,
+/// which now runs through this job as one maximal chunk. Dropping a job
+/// aborts the build and returns every checked-out block to the arena.
+pub struct PrefillJob {
+    id: u64,
+    tenant: TenantId,
+    prompt: Vec<i32>,
+    /// Cached prefill KV, `[L, 1, KVH, T, d]`.
+    kc: Tensor,
+    vc: Tensor,
+    /// First generated token (from the prefill logits).
+    first: i32,
+    /// Open chunked builds, `[layer * kv_heads]`.
+    indexes: Vec<WaveIndex>,
+    k_full: Vec<Vec<f32>>,
+    v_full: Vec<Vec<f32>>,
+    /// Tokens covered by the grafted prefix match, if any.
+    matched_covered: Option<usize>,
+    /// Prompt rows fed to every slot so far.
+    fed: usize,
+    /// Total prompt tokens.
+    t: usize,
+    /// Wall time spent in start/advance so far (folded into the
+    /// `prefill_s` observation at finish, so chunked and monolithic
+    /// prefills report comparably).
+    spent_s: f64,
+}
+
+impl PrefillJob {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+    /// Total prompt tokens this job must feed.
+    pub fn total_tokens(&self) -> usize {
+        self.t
+    }
+    /// Prompt tokens fed so far.
+    pub fn fed_tokens(&self) -> usize {
+        self.fed
+    }
+    /// Whether every prompt token has been fed (ready for
+    /// [`LiveEngine::prefill_finish`]).
+    pub fn done(&self) -> bool {
+        self.fed == self.t
+    }
 }
 
 impl LiveEngine {
@@ -163,6 +231,7 @@ impl LiveEngine {
             metrics,
             scratch: SelectScratch::default(),
             step: StepScratch::default(),
+            parked: HashMap::new(),
         })
     }
 
@@ -408,6 +477,25 @@ impl LiveEngine {
     /// sessions is resident once), and an unmatched prompt seals and
     /// registers its own prefix for later sessions.
     pub fn prefill_for(&mut self, id: u64, tenant: TenantId, prompt: &[i32]) -> Result<i32> {
+        // One maximal chunk: the chunked path IS the monolithic path,
+        // so the two can never drift apart bit-wise.
+        let mut job = self.prefill_start(id, tenant, prompt)?;
+        while !self.prefill_advance(&mut job, usize::MAX)? {}
+        self.prefill_finish(job)
+    }
+
+    /// Begin a resumable chunked prefill: runs the LM forward, matches
+    /// the prefix registry, and opens every (layer, kv-head) wave index
+    /// as a chunked build. No KV rows are fed yet — drive the returned
+    /// job with [`LiveEngine::prefill_advance`], then register it with
+    /// [`LiveEngine::prefill_finish`]. Dropping the job instead aborts
+    /// it and returns every checked-out block to the arena.
+    pub fn prefill_start(
+        &mut self,
+        id: u64,
+        tenant: TenantId,
+        prompt: &[i32],
+    ) -> Result<PrefillJob> {
         let t0 = Instant::now();
         let (kc, vc, logits) = self.lm.prefill(prompt)?;
         // kc/vc: [L, 1, KVH, T, d]
@@ -436,11 +524,7 @@ impl LiveEngine {
         };
         let base_seed =
             if self.content_seeds { self.chain_geometry().content_seed(prompt) } else { id };
-        // Blocks this build must newly materialize per head (the grafted
-        // prefix is already resident).
-        let t_build = t - matched.as_ref().map(|m| m.covered).unwrap_or(0);
         let mut indexes = Vec::with_capacity(l_n * kvh);
-        let mut buffers = Vec::with_capacity(l_n * kvh);
         let mut k_full = Vec::new();
         let mut v_full = Vec::new();
         let t_cap = self.lm.buckets.attn_full_t;
@@ -458,98 +542,201 @@ impl LiveEngine {
                 v_full.push(vf);
             }
             for h in 0..kvh {
-                let keys = kc.row(&[layer, 0, h]);
-                let vals = vc.row(&[layer, 0, h]);
                 let seed = base_seed ^ ((layer * kvh + h) as u64).wrapping_mul(0x9e3779b1);
-                // Tiered arena: make hot room for this head's build up
-                // front — full hot tier means "demote, then retry", not
-                // "refuse and defer".
-                if self.spill_enabled() {
-                    if let Some(cap) = self.arena.capacity_blocks() {
-                        let tpb = self.arena.tokens_per_block();
-                        let need = t_build.div_ceil(tpb)
-                            + t_build.div_ceil(self.zcfg.tokens_per_cluster)
-                            + 2;
-                        let headroom = cap.saturating_sub(self.arena.live_blocks());
-                        if headroom < need {
-                            self.make_room(need - headroom);
-                        }
-                    }
-                }
-                let idx = loop {
-                    let built = match &matched {
-                        Some(m) => WaveIndex::try_build_grafted_in_for(
-                            &self.arena,
-                            tenant,
-                            self.zcfg.clone(),
-                            &m.slots[layer * kvh + h],
-                            m.covered,
-                            keys,
-                            vals,
-                            seed,
-                        ),
-                        None => WaveIndex::try_build_in_for(
-                            &self.arena,
-                            tenant,
-                            self.zcfg.clone(),
-                            keys,
-                            vals,
-                            seed,
-                        ),
-                    };
-                    match built {
-                        Ok(mut idx) => {
-                            if let Some(p) = &self.spill_policy {
-                                idx.set_spill_policy(Some(Arc::clone(p)));
-                            }
-                            idx.set_lossy_cos_floor(self.lossy_cos_floor);
-                            break idx;
-                        }
-                        Err(e) => {
-                            let retry = matches!(e, AllocError::ArenaFull { .. })
-                                && self.spill_enabled()
-                                && self.make_room(64) > 0;
-                            if !retry {
-                                // `indexes`/`buffers` drop here: the partial
-                                // session's blocks all return to the arena
-                                // (and its shared references release).
-                                self.metrics.inc("prefill_alloc_failures", 1);
-                                self.publish_arena_gauges();
-                                return Err(anyhow!("prefill {id} (tenant {tenant}): {e}"));
-                            }
-                        }
-                    }
+                // The grafted prefix attaches as shared, refcounted
+                // block views right here (no fresh checkouts); new rows
+                // arrive chunk by chunk through `prefill_advance`.
+                let mut idx = match &matched {
+                    Some(m) => WaveIndex::begin_build_grafted_in_for(
+                        &self.arena,
+                        tenant,
+                        self.zcfg.clone(),
+                        &m.slots[layer * kvh + h],
+                        m.covered,
+                        t,
+                        seed,
+                    ),
+                    None => WaveIndex::begin_build_in_for(
+                        &self.arena,
+                        tenant,
+                        self.zcfg.clone(),
+                        t,
+                        seed,
+                    ),
                 };
-                let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
-                let mut buf = WaveBuffer::new(
-                    self.bcfg.clone(),
-                    d,
-                    idx.store().tokens_per_block(),
-                    cap,
-                    Arc::clone(&self.pool),
-                );
-                if self.prefix.is_some() {
-                    // one cross-session cache per head slot: a prefix
-                    // shared by N sessions occupies one GPU slot set.
-                    // Sized from the engine-level byte budget (or the
-                    // max context bucket without one), never from this
-                    // prompt — the cache outlives every session, so the
-                    // first arrival's length must not pin it.
-                    let slot_i = layer * kvh + h;
-                    if self.shared_caches.len() <= slot_i {
-                        let tpb = self.arena.tokens_per_block();
-                        self.shared_caches.push(Arc::new(SharedBlockCache::new(
-                            self.bcfg.policy,
-                            self.shared_slot_capacity(),
-                            2 * tpb * d,
-                        )));
-                    }
-                    buf.set_shared_cache(Arc::clone(&self.shared_caches[slot_i]));
+                if let Some(p) = &self.spill_policy {
+                    idx.set_spill_policy(Some(Arc::clone(p)));
                 }
-                buf.register_index(&idx);
+                idx.set_lossy_cos_floor(self.lossy_cos_floor);
                 indexes.push(idx);
-                buffers.push(buf);
             }
+        }
+        let first = TinyLm::greedy(&logits)[0];
+        Ok(PrefillJob {
+            id,
+            tenant,
+            prompt: prompt.to_vec(),
+            kc,
+            vc,
+            first,
+            indexes,
+            k_full,
+            v_full,
+            matched_covered: matched.map(|m| m.covered),
+            fed: 0,
+            t,
+            spent_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Advance an open prefill by up to `chunk_tokens` prompt rows on
+    /// every (layer, kv-head) slot, clustering whatever build segments
+    /// become complete — the bounded unit of work the scheduler
+    /// interleaves with decode steps. Returns `true` once every prompt
+    /// token has been fed (finish the job next).
+    ///
+    /// On an arena refusal (capacity cap or tenant quota with nothing
+    /// left to demote) the typed error propagates and the job stays
+    /// resumable: rows already buffered are kept, and a later call
+    /// retries exactly the missing work. Dropping the job instead
+    /// returns every checked-out block to the arena.
+    pub fn prefill_advance(&mut self, job: &mut PrefillJob, chunk_tokens: usize) -> Result<bool> {
+        if job.fed == job.t {
+            return Ok(true);
+        }
+        let t0 = Instant::now();
+        let c = chunk_tokens.max(1).min(job.t - job.fed);
+        let target = job.fed + c;
+        let d = job.kc.shape()[4];
+        let kvh = job.kc.shape()[2];
+        // Taken out of the engine for the chunk and restored at the
+        // end: a warm chunk allocates nothing engine-side.
+        let mut build = std::mem::take(&mut self.step.build);
+        for s in 0..job.indexes.len() {
+            let (layer, h) = (s / kvh, s % kvh);
+            if !job.indexes[s].build_in_progress() {
+                // closed by the final chunk of an earlier, partially
+                // failed advance — nothing left to feed this slot
+                continue;
+            }
+            // Tiered arena: make hot room for this slot's chunk up
+            // front — full hot tier means "demote, then retry", not
+            // "refuse and defer".
+            if self.spill_enabled() {
+                if let Some(cap) = self.arena.capacity_blocks() {
+                    let tpb = self.arena.tokens_per_block();
+                    let need =
+                        c.div_ceil(tpb) + c.div_ceil(self.zcfg.tokens_per_cluster) + 2;
+                    let headroom = cap.saturating_sub(self.arena.live_blocks());
+                    if headroom < need {
+                        self.make_room(need - headroom);
+                    }
+                }
+            }
+            loop {
+                // The index tracks what it has already buffered, so a
+                // retry after a mid-segment refusal feeds only the
+                // missing rows (an empty feed retries the pending
+                // segment).
+                let already = job.t - job.indexes[s].build_remaining();
+                let (lo, hi) =
+                    if already < target { (already * d, target * d) } else { (0, 0) };
+                let res = {
+                    let keys = &job.kc.row(&[layer, 0, h])[lo..hi];
+                    let vals = &job.vc.row(&[layer, 0, h])[lo..hi];
+                    job.indexes[s].try_feed_build_with(keys, vals, &mut build)
+                };
+                match res {
+                    Ok(()) => break,
+                    Err(e) => {
+                        let retry = matches!(e, AllocError::ArenaFull { .. })
+                            && self.spill_enabled()
+                            && self.make_room(64) > 0;
+                        if !retry {
+                            self.step.build = build;
+                            self.metrics.inc("prefill_alloc_failures", 1);
+                            self.publish_arena_gauges();
+                            return Err(anyhow!(
+                                "prefill {} (tenant {}): {e}",
+                                job.id,
+                                job.tenant
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        self.step.build = build;
+        job.fed = target;
+        let dt = t0.elapsed().as_secs_f64();
+        job.spent_s += dt;
+        self.metrics.observe("prefill_chunk_s", dt);
+        self.metrics.inc("prefill_chunks", 1);
+        Ok(job.fed == job.t)
+    }
+
+    /// Register a completed chunked prefill as a live session: creates
+    /// the wave buffers (and shared GPU cache slots), seals & registers
+    /// an unmatched prefix, and installs the session state. Returns the
+    /// first generated token, exactly as [`LiveEngine::prefill_for`]
+    /// does. Errors (without consuming state the arena cares about — the
+    /// job is dropped) if called before every chunk was fed.
+    pub fn prefill_finish(&mut self, job: PrefillJob) -> Result<i32> {
+        if job.fed < job.t {
+            return Err(anyhow!(
+                "prefill {}: finish with {}/{} tokens fed",
+                job.id,
+                job.fed,
+                job.t
+            ));
+        }
+        let t0 = Instant::now();
+        let PrefillJob {
+            id,
+            prompt,
+            first,
+            mut indexes,
+            k_full,
+            v_full,
+            matched_covered,
+            t,
+            spent_s,
+            ..
+        } = job;
+        debug_assert!(
+            indexes.iter().all(|ix| !ix.build_in_progress()),
+            "all chunks fed but a build is still open"
+        );
+        let d = self.arena.d();
+        let mut buffers = Vec::with_capacity(indexes.len());
+        for (slot_i, idx) in indexes.iter().enumerate() {
+            let cap = WaveBuffer::capacity_for(&self.bcfg, t, idx.store().tokens_per_block());
+            let mut buf = WaveBuffer::new(
+                self.bcfg.clone(),
+                d,
+                idx.store().tokens_per_block(),
+                cap,
+                Arc::clone(&self.pool),
+            );
+            if self.prefix.is_some() {
+                // one cross-session cache per head slot: a prefix
+                // shared by N sessions occupies one GPU slot set.
+                // Sized from the engine-level byte budget (or the
+                // max context bucket without one), never from this
+                // prompt — the cache outlives every session, so the
+                // first arrival's length must not pin it.
+                if self.shared_caches.len() <= slot_i {
+                    let tpb = self.arena.tokens_per_block();
+                    self.shared_caches.push(Arc::new(SharedBlockCache::new(
+                        self.bcfg.policy,
+                        self.shared_slot_capacity(),
+                        2 * tpb * d,
+                    )));
+                }
+                buf.set_shared_cache(Arc::clone(&self.shared_caches[slot_i]));
+            }
+            buf.register_index(idx);
+            buffers.push(buf);
         }
         // Seal & register: an unmatched (or longer-than-matched) prefix
         // becomes available to every later session. Sealing converts
@@ -559,12 +746,12 @@ impl LiveEngine {
             let clustered =
                 indexes.first().map(|ix| ix.clustered_prefix_tokens()).unwrap_or(0);
             let best = reg
-                .links(prompt)
+                .links(&prompt)
                 .into_iter()
                 .filter(|&(covered, _)| covered <= clustered)
                 .next_back();
             if let Some((covered, key)) = best {
-                let longer = matched.as_ref().map(|m| covered > m.covered).unwrap_or(true);
+                let longer = matched_covered.map(|mc| covered > mc).unwrap_or(true);
                 if longer && !reg.contains(key) {
                     let slots: Vec<crate::kvcache::SealedSlot> =
                         indexes.iter_mut().map(|ix| ix.seal_prefix(covered)).collect();
@@ -574,12 +761,11 @@ impl LiveEngine {
                 }
             }
         }
-        let first = TinyLm::greedy(&logits)[0];
         self.states.insert(
             id,
             SessionState { indexes, buffers, k_full, v_full, len: t, last_token: first },
         );
-        self.metrics.observe("prefill_s", t0.elapsed().as_secs_f64());
+        self.metrics.observe("prefill_s", spent_s + t0.elapsed().as_secs_f64());
         self.metrics.inc("prefills", 1);
         self.publish_arena_gauges();
         Ok(first)
@@ -1173,6 +1359,65 @@ impl LiveEngine {
         self.publish_arena_gauges();
         Ok(())
     }
+
+    /// Preempt a live session to the cold tier mid-generation
+    /// (DESIGN.md §2 "Online serving & preemption"): snapshot it
+    /// through the bit-exact migration stream, park the snapshot off
+    /// the arena, and free every hot block it held — the scheduler's
+    /// lever for reclaiming capacity for SLO-critical tenants under
+    /// pressure. Returns the number of blocks freed. A later
+    /// [`LiveEngine::resume_session`] rebuilds it bit-identically: the
+    /// snapshot captures everything token-bit-relevant (including the
+    /// pending next token), so the resumed session's remaining tokens
+    /// match an unpreempted run exactly.
+    pub fn preempt_session(&mut self, id: u64) -> Result<usize> {
+        let snap = self
+            .export_session(id)
+            .ok_or_else(|| anyhow!("preempt {id}: unknown session"))?;
+        let freed = self.finish_session(id);
+        self.metrics.inc("sessions_preempted", 1);
+        self.metrics.inc("preempt_parked_bytes", snap.payload_bytes() as u64);
+        self.parked.insert(id, snap);
+        self.metrics.set_gauge("sessions_parked", self.parked.len() as u64);
+        Ok(freed)
+    }
+
+    /// Bring a preempted session back onto the hot tier. On an import
+    /// failure (e.g. the arena is still full and nothing is demotable)
+    /// the snapshot goes back to the parked set, so the session stays
+    /// resumable — nothing is lost.
+    pub fn resume_session(&mut self, id: u64, tenant: TenantId) -> Result<()> {
+        let snap = self
+            .parked
+            .remove(&id)
+            .ok_or_else(|| anyhow!("resume {id}: session is not parked"))?;
+        match self.import_session(id, tenant, &snap) {
+            Ok(()) => {
+                self.metrics.inc("sessions_resumed", 1);
+                self.metrics.set_gauge("sessions_parked", self.parked.len() as u64);
+                Ok(())
+            }
+            Err(e) => {
+                self.parked.insert(id, snap);
+                Err(e)
+            }
+        }
+    }
+
+    /// Whether `id` is currently parked (preempted, awaiting resume).
+    pub fn is_parked(&self, id: u64) -> bool {
+        self.parked.contains_key(&id)
+    }
+
+    /// Parked session ids (unordered).
+    pub fn parked_ids(&self) -> Vec<u64> {
+        self.parked.keys().copied().collect()
+    }
+
+    /// Total cold-parked snapshot bytes across preempted sessions.
+    pub fn parked_bytes(&self) -> usize {
+        self.parked.values().map(|s| s.payload_bytes()).sum()
+    }
 }
 
 /// A session's serialized live state ([`LiveEngine::export_session`]):
@@ -1458,6 +1703,121 @@ mod tests {
         assert!(eng.arena().tenant_live_blocks(3) > 0);
         eng.finish_session(1);
         assert_eq!(eng.arena().tenant_live_blocks(3), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bit_identically() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        // smaller build segments so the chunk boundaries cross several
+        // re-cluster boundaries inside a 2048-token prompt
+        let zcfg = ZoneConfig {
+            retrieval_frac: 0.5,
+            estimation_frac: 1.0,
+            build_segment: 512,
+            update_segment: 256,
+            ..ZoneConfig::default()
+        };
+        let bcfg = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+        let p = prompt(2048, 31);
+        let mut mono =
+            LiveEngine::with_config(&dir, AttnMode::Wave, zcfg.clone(), bcfg.clone()).unwrap();
+        let t_mono = mono.prefill(1, &p).unwrap();
+        let snap_mono = mono.export_session(1).unwrap();
+        // chunk sizes straddling the segment size (512): mid-segment,
+        // exactly one segment, off-by-one around it, and sub-cluster
+        for &cs in &[113usize, 511, 512, 513, 2048] {
+            let mut eng =
+                LiveEngine::with_config(&dir, AttnMode::Wave, zcfg.clone(), bcfg.clone())
+                    .unwrap();
+            let mut job = eng.prefill_start(1, DEFAULT_TENANT, &p).unwrap();
+            let mut chunks = 0;
+            while !eng.prefill_advance(&mut job, cs).unwrap() {
+                chunks += 1;
+                assert!(job.fed_tokens() < job.total_tokens());
+            }
+            assert!(job.done());
+            assert_eq!(chunks + 1, p.len().div_ceil(cs), "chunk count for size {cs}");
+            let t_chunked = eng.prefill_finish(job).unwrap();
+            assert_eq!(t_chunked, t_mono, "chunk size {cs}: first token diverged");
+            // full index state (clusters through the spill page format,
+            // centroids, vsums, positions, seed) must match byte-for-byte
+            let snap = eng.export_session(1).unwrap();
+            assert_eq!(
+                snap.indexes, snap_mono.indexes,
+                "chunk size {cs}: index snapshot diverged from monolithic"
+            );
+            // and decode stays bit-identical
+            for step in 0..3 {
+                let tm = mono.decode_step(&[1], 1).unwrap()[0];
+                let tc = eng.decode_step(&[1], 1).unwrap()[0];
+                assert_eq!(tm, tc, "chunk size {cs}: decode diverged at step {step}");
+            }
+            // re-sync the monolithic reference for the next chunk size
+            mono.finish_session(1);
+            mono.import_session(1, DEFAULT_TENANT, &snap_mono).unwrap();
+        }
+    }
+
+    #[test]
+    fn unfinished_prefill_job_refuses_finish_and_drop_leaks_nothing() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        let p = prompt(2048, 32);
+        let mut eng = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let mut job = eng.prefill_start(1, DEFAULT_TENANT, &p).unwrap();
+        assert!(!eng.prefill_advance(&mut job, 256).unwrap());
+        assert_eq!(job.fed_tokens(), 256);
+        assert!(eng.prefill_finish(job).is_err(), "finish before all chunks must refuse");
+        // the job dropped inside prefill_finish's error path: every
+        // checked-out block is back
+        assert_eq!(eng.arena().live_blocks(), 0, "aborted job must return every block");
+        assert_eq!(eng.n_sessions(), 0);
+    }
+
+    #[test]
+    fn preempted_session_resumes_bit_identically() {
+        crate::require_live_path!();
+        let dir = default_artifacts_dir();
+        let p1 = prompt(2048, 41);
+        let p2 = prompt(2048, 42);
+        // a: uninterrupted reference run of session 1
+        let mut a = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let mut b = LiveEngine::new(&dir, AttnMode::Wave).unwrap();
+        let t0a = a.prefill(1, &p1).unwrap();
+        let t0b = b.prefill(1, &p1).unwrap();
+        assert_eq!(t0a, t0b);
+        b.prefill(2, &p2).unwrap();
+        for _ in 0..3 {
+            let ta = a.decode_step(&[1], 1).unwrap()[0];
+            let tb = b.decode_step(&[1], 1).unwrap()[0];
+            assert_eq!(ta, tb, "pre-preemption decode diverged");
+        }
+        // preempt session 1 mid-generation: its hot blocks free, the
+        // snapshot parks cold
+        let live_before = b.arena().live_blocks();
+        let freed = b.preempt_session(1).unwrap();
+        assert!(freed > 0, "preemption must free hot blocks");
+        assert_eq!(b.arena().live_blocks(), live_before - freed);
+        assert!(b.is_parked(1));
+        assert!(b.parked_bytes() > 0);
+        assert_eq!(b.session_len(1), None, "preempted session is not live");
+        assert!(b.preempt_session(1).is_err(), "parked session cannot preempt again");
+        // the survivor keeps decoding while 1 is parked (the churn the
+        // scheduler creates when it reclaims capacity under pressure)
+        for _ in 0..4 {
+            b.decode_step(&[2], 1).unwrap();
+        }
+        // resume and verify the remaining tokens match the unpreempted run
+        b.resume_session(1, DEFAULT_TENANT).unwrap();
+        assert!(!b.is_parked(1));
+        assert_eq!(b.parked_bytes(), 0);
+        for step in 0..5 {
+            let ta = a.decode_step(&[1], 1).unwrap()[0];
+            let tb = b.decode_step(&[1], 1).unwrap()[0];
+            assert_eq!(ta, tb, "resumed session diverged at step {step}");
+        }
+        assert!(b.resume_session(7, DEFAULT_TENANT).is_err(), "unknown id cannot resume");
     }
 }
 

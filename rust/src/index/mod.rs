@@ -165,6 +165,41 @@ struct SegmentDrop {
     pos: Vec<u32>,
 }
 
+/// Reusable gather buffers for segment clustering: k-means membership
+/// lists plus the per-cluster key/value/position staging the store
+/// allocates from. One instance threads through many
+/// [`WaveIndex::try_feed_build_with`] calls (and through every index of
+/// a chunked prefill), so a chunk that crosses a re-cluster boundary
+/// reuses warmed capacity and a chunk that doesn't allocates nothing.
+#[derive(Default)]
+pub struct BuildScratch {
+    members: Vec<Vec<u32>>,
+    ck: Vec<f32>,
+    cv: Vec<f32>,
+    cp: Vec<u32>,
+    vsum: Vec<f32>,
+}
+
+/// In-flight chunked-build cursor ([`WaveIndex::begin_build_in_for`]).
+/// All zone boundaries are fixed up front from the declared total
+/// length, so feeding the same tokens in any chunking clusters the same
+/// segments with the same per-segment seeds — the finished index is
+/// bit-identical to a monolithic [`WaveIndex::try_build_in_for`].
+struct BuildProgress {
+    /// Declared context length (the monolithic build's `n`).
+    n_total: usize,
+    /// End of the segmented-clustering region (`n_total - local`).
+    mid_end: usize,
+    /// First position of the sealed-prefix graft's tail (== sink when
+    /// ungrafted); fed rows in `[sink, covered)` are already indexed by
+    /// the attached shared clusters and are skipped.
+    covered: usize,
+    /// Next segment start position (advances as segments commit).
+    next_start: usize,
+    /// Rows fed so far (absolute position of the next expected row).
+    fed: usize,
+}
+
 /// Per-head wave index.
 pub struct WaveIndex {
     cfg: ZoneConfig,
@@ -210,6 +245,9 @@ pub struct WaveIndex {
     /// clusters ⇒ the estimation head's error bound absorbs the
     /// quantization noise). 1.0 disables lossy placement entirely.
     lossy_cos_floor: f32,
+    /// `Some` while a chunked build is in flight
+    /// ([`WaveIndex::begin_build_in_for`]); `None` once complete.
+    build: Option<BuildProgress>,
 }
 
 impl WaveIndex {
@@ -291,6 +329,56 @@ impl WaveIndex {
         let d = arena.d();
         let n = keys.len() / d;
         assert_eq!(keys.len(), vals.len());
+        // The monolithic build is one maximal chunk through the
+        // incremental builder — chunked prefill is bit-identical to this
+        // path by construction, not by parallel maintenance.
+        let mut idx = Self::begin_build_with_graft(arena, tenant, cfg, graft, n, seed);
+        // On failure `idx` drops here and its HeadStore returns every
+        // block already checked out — a failed build leaves no residue.
+        idx.try_feed_build_with(keys, vals, &mut BuildScratch::default())?;
+        debug_assert!(idx.build.is_none(), "single-chunk build left a cursor behind");
+        Ok(idx)
+    }
+
+    /// Open a chunked build that will be fed `n_total` tokens through
+    /// [`WaveIndex::try_feed_build_with`]. Zone boundaries (sink, local
+    /// window, segment starts — and therefore every per-segment k-means
+    /// seed) are fixed here from `n_total`, so any chunking of the same
+    /// token stream produces a bit-identical finished index.
+    pub fn begin_build_in_for(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        n_total: usize,
+        seed: u64,
+    ) -> Self {
+        Self::begin_build_with_graft(arena, tenant, cfg, None, n_total, seed)
+    }
+
+    /// Chunked-build variant of [`WaveIndex::try_build_grafted_in_for`]:
+    /// the sealed prefix attaches up front; fed rows inside the covered
+    /// range are skipped (their clusters are already resident).
+    pub fn begin_build_grafted_in_for(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        sealed: &SealedSlot,
+        covered: usize,
+        n_total: usize,
+        seed: u64,
+    ) -> Self {
+        Self::begin_build_with_graft(arena, tenant, cfg, Some((sealed, covered)), n_total, seed)
+    }
+
+    fn begin_build_with_graft(
+        arena: &Arc<BlockArena>,
+        tenant: TenantId,
+        cfg: ZoneConfig,
+        graft: Option<(&SealedSlot, usize)>,
+        n_total: usize,
+        seed: u64,
+    ) -> Self {
+        let d = arena.d();
         let mut idx = WaveIndex {
             cfg,
             d,
@@ -311,16 +399,13 @@ impl WaveIndex {
             recent: Mutex::new(Vec::new()),
             spill_policy: None,
             lossy_cos_floor: 0.5,
+            build: None,
         };
-        // Sink tokens stay out of the index (position-based steady zone).
-        let sink = idx.cfg.steady_sink.min(n);
-        idx.sink_keys.extend_from_slice(&keys[..sink * d]);
-        idx.sink_vals.extend_from_slice(&vals[..sink * d]);
-        idx.sink_pos.extend(0..sink as u32);
-
-        // Local window (and any residue shorter than a segment) pends.
-        let local = idx.cfg.steady_local.min(n - sink);
-        let mid_end = n - local;
+        // Sink tokens stay out of the index (position-based steady zone);
+        // the local window (and any residue shorter than a segment) pends.
+        let sink = idx.cfg.steady_sink.min(n_total);
+        let local = idx.cfg.steady_local.min(n_total - sink);
+        let mid_end = n_total - local;
 
         // Sealed prefix: attach shared clusters instead of re-clustering.
         let mut start = sink;
@@ -348,32 +433,136 @@ impl WaveIndex {
             }
             start = covered;
         }
+        // Pre-size the pending buffer for its in-build high-water mark
+        // (one nearly-complete segment plus the local window) so warm
+        // feed chunks append without growing.
+        let reserve = (idx.cfg.build_segment + idx.cfg.steady_local).min(n_total);
+        idx.pend_keys.reserve(reserve * d);
+        idx.pend_vals.reserve(reserve * d);
+        idx.pend_pos.reserve(reserve);
+        idx.build =
+            Some(BuildProgress { n_total, mid_end, covered: start, next_start: start, fed: 0 });
+        idx
+    }
 
-        // Middle: segmented clustering.
-        while start < mid_end {
-            let seg = (mid_end - start).min(idx.cfg.build_segment);
-            // Avoid a tiny trailing segment: fold < half-segment remainders
-            // into the pending buffer rather than clustering noise.
-            if seg < idx.cfg.tokens_per_cluster {
-                break;
-            }
-            let pos: Vec<u32> = (start as u32..(start + seg) as u32).collect();
-            // On failure `idx` drops here and its HeadStore returns every
-            // block already checked out — a failed build leaves no residue.
-            idx.try_cluster_segment(
-                &keys[start * d..(start + seg) * d],
-                &vals[start * d..(start + seg) * d],
-                &pos,
-            )
-            .map_err(|sd| sd.err)?;
-            start += seg;
+    /// Whether a chunked build is still in flight (more rows expected,
+    /// or a refused segment awaiting retry).
+    pub fn build_in_progress(&self) -> bool {
+        self.build.is_some()
+    }
+
+    /// Rows a chunked build still expects (0 once every declared token
+    /// has been fed, even if a refused segment is still pending retry).
+    pub fn build_remaining(&self) -> usize {
+        self.build.as_ref().map_or(0, |b| b.n_total - b.fed)
+    }
+
+    /// Feed the next chunk of context rows (`[n, d]`, positions
+    /// following on from the previous chunk) into an open chunked
+    /// build, clustering every segment that becomes complete. See
+    /// [`WaveIndex::try_feed_build_with`].
+    pub fn try_feed_build(&mut self, keys: &[f32], vals: &[f32]) -> Result<(), AllocError> {
+        self.try_feed_build_with(keys, vals, &mut BuildScratch::default())
+    }
+
+    /// Feed the next chunk of an open chunked build, reusing `scratch`
+    /// for any segment clustering it triggers. Rows land in the sink /
+    /// grafted / pending region their absolute position dictates, then
+    /// every fully-fed segment clusters exactly as the monolithic build
+    /// would (same boundaries, same seeds). An empty chunk is legal and
+    /// just retries pending work.
+    ///
+    /// On an arena refusal mid-segment the unplaced tokens return to
+    /// the pending buffer and the cursor stays put: the build remains
+    /// resumable, and the next call (empty or not) retries the segment
+    /// once the caller has reclaimed space. The final chunk (cursor
+    /// complete, every segment committed) closes the build; the index
+    /// is then bit-identical to [`WaveIndex::try_build_in_for`] over
+    /// the concatenated chunks.
+    pub fn try_feed_build_with(
+        &mut self,
+        keys: &[f32],
+        vals: &[f32],
+        scratch: &mut BuildScratch,
+    ) -> Result<(), AllocError> {
+        let d = self.d;
+        assert_eq!(keys.len(), vals.len());
+        let n = keys.len() / d;
+        debug_assert_eq!(keys.len(), n * d);
+        let bp = self.build.as_ref().expect("no chunked build in progress");
+        let (n_total, covered, fed) = (bp.n_total, bp.covered, bp.fed);
+        assert!(fed + n <= n_total, "chunked build fed past its declared length");
+        let sink = self.cfg.steady_sink.min(n_total);
+        let (start_pos, end_pos) = (fed, fed + n);
+        if start_pos < sink {
+            let take = sink.min(end_pos) - start_pos;
+            self.sink_keys.extend_from_slice(&keys[..take * d]);
+            self.sink_vals.extend_from_slice(&vals[..take * d]);
+            self.sink_pos.extend(start_pos as u32..(start_pos + take) as u32);
         }
-        // Remainder + local window pend as the steady-local zone.
-        idx.pend_keys.extend_from_slice(&keys[start * d..]);
-        idx.pend_vals.extend_from_slice(&vals[start * d..]);
-        idx.pend_pos.extend(start as u32..n as u32);
-        idx.n_seen = n;
-        Ok(idx)
+        // Rows in [sink, covered) are already served by the grafted
+        // prefix; everything after pends until its segment completes.
+        let p0 = covered.max(start_pos.min(end_pos));
+        if end_pos > p0 {
+            let off = (p0 - start_pos) * d;
+            self.pend_keys.extend_from_slice(&keys[off..]);
+            self.pend_vals.extend_from_slice(&vals[off..]);
+            self.pend_pos.extend(p0 as u32..end_pos as u32);
+        }
+        self.build.as_mut().unwrap().fed = end_pos;
+        self.n_seen = end_pos;
+        self.drain_build_segments(scratch)
+    }
+
+    /// Cluster every fully-fed segment of an open chunked build, then
+    /// close the build if the whole declared context has been fed.
+    fn drain_build_segments(&mut self, scratch: &mut BuildScratch) -> Result<(), AllocError> {
+        loop {
+            let bp = self.build.as_ref().expect("no chunked build in progress");
+            let (next_start, mid_end, fed, n_total) =
+                (bp.next_start, bp.mid_end, bp.fed, bp.n_total);
+            if next_start < mid_end {
+                let seg = (mid_end - next_start).min(self.cfg.build_segment);
+                // Avoid a tiny trailing segment: fold < cluster-size
+                // remainders into the pending buffer rather than
+                // clustering noise (the monolithic build's break).
+                if seg >= self.cfg.tokens_per_cluster {
+                    if fed < next_start + seg {
+                        // segment not fully fed yet: wait for more rows
+                        return Ok(());
+                    }
+                    // Tiered arena: make hot room for the segment up
+                    // front — full hot tier means "demote, then retry",
+                    // not "fail".
+                    self.make_hot_room(seg);
+                    let d = self.d;
+                    let keys: Vec<f32> = self.pend_keys.drain(..seg * d).collect();
+                    let vals: Vec<f32> = self.pend_vals.drain(..seg * d).collect();
+                    let pos: Vec<u32> = self.pend_pos.drain(..seg).collect();
+                    debug_assert_eq!(pos[0] as usize, next_start);
+                    match self.try_cluster_segment_with(&keys, &vals, &pos, scratch) {
+                        Ok(()) => {
+                            self.build.as_mut().unwrap().next_start += seg;
+                            continue;
+                        }
+                        Err(sd) => {
+                            // un-drain the unplaced tokens (oldest first):
+                            // the cursor stays put, a later feed retries
+                            self.pend_keys.splice(0..0, sd.keys);
+                            self.pend_vals.splice(0..0, sd.vals);
+                            self.pend_pos.splice(0..0, sd.pos);
+                            return Err(sd.err);
+                        }
+                    }
+                }
+            }
+            // No further segment can ever cluster; the remainder + local
+            // window stay pending. Close once everything has been fed.
+            if fed == n_total {
+                self.build = None;
+            }
+            return Ok(());
+        }
     }
 
     /// Seal every cluster lying entirely inside the first `covered`
@@ -423,6 +612,7 @@ impl WaveIndex {
     /// not carried — replicas of one deployment share it, and the seed
     /// is what keeps future segment re-clusterings bit-identical.
     pub fn export_state(&self) -> Vec<u8> {
+        assert!(self.build.is_none(), "cannot snapshot a mid-build index");
         let d = self.d;
         let tpb = self.store.tokens_per_block();
         let m = self.cluster_blocks.len();
@@ -542,6 +732,7 @@ impl WaveIndex {
             recent: Mutex::new(Vec::new()),
             spill_policy: None,
             lossy_cos_floor,
+            build: None,
         };
         let mut page = BlockData::zeroed(src_tpb, d);
         let (mut ck, mut cv) = (Vec::new(), Vec::new());
@@ -618,6 +809,16 @@ impl WaveIndex {
         vals: &[f32],
         pos: &[u32],
     ) -> Result<(), SegmentDrop> {
+        self.try_cluster_segment_with(keys, vals, pos, &mut BuildScratch::default())
+    }
+
+    fn try_cluster_segment_with(
+        &mut self,
+        keys: &[f32],
+        vals: &[f32],
+        pos: &[u32],
+        scratch: &mut BuildScratch,
+    ) -> Result<(), SegmentDrop> {
         let d = self.d;
         let n = pos.len();
         debug_assert_eq!(keys.len(), n * d);
@@ -631,22 +832,26 @@ impl WaveIndex {
             self.seed ^ (pos[0] as u64).wrapping_mul(0x9e3779b1),
         );
         // Gather members per cluster, preserving context order.
-        let mut members: Vec<Vec<u32>> = vec![Vec::new(); cl.k];
+        let BuildScratch { members, ck, cv, cp, vsum } = scratch;
+        for m in members.iter_mut() {
+            m.clear();
+        }
+        if members.len() < cl.k {
+            members.resize_with(cl.k, Vec::new);
+        }
         for (i, &a) in cl.assign.iter().enumerate() {
             members[a as usize].push(i as u32);
         }
-        let mut ck = Vec::new();
-        let mut cv = Vec::new();
-        let mut cp = Vec::new();
-        for (ci, m) in members.iter().enumerate() {
-            if m.is_empty() {
+        for ci in 0..cl.k {
+            if members[ci].is_empty() {
                 continue;
             }
             ck.clear();
             cv.clear();
             cp.clear();
-            let mut vsum = vec![0.0f32; d];
-            for &i in m {
+            vsum.clear();
+            vsum.resize(d, 0.0);
+            for &i in &members[ci] {
                 let i = i as usize;
                 ck.extend_from_slice(&keys[i * d..(i + 1) * d]);
                 cv.extend_from_slice(&vals[i * d..(i + 1) * d]);
@@ -655,10 +860,10 @@ impl WaveIndex {
                     vsum[j] += vals[i * d + j];
                 }
             }
-            match self.store.try_alloc_cluster(&ck, &cv, &cp) {
+            match self.store.try_alloc_cluster(ck, cv, cp) {
                 Ok(refs) => {
                     let id =
-                        self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], &vsum, cp.clone());
+                        self.meta.push(&cl.centroids[ci * d..(ci + 1) * d], vsum, cp.clone());
                     debug_assert_eq!(id, self.cluster_blocks.len());
                     self.cluster_blocks.push(refs);
                     self.access_epoch.push(AtomicU64::new(0));
@@ -1266,6 +1471,177 @@ mod tests {
             seen[p as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn chunked_build_is_bit_identical_across_chunk_sizes() {
+        let d = 16;
+        let n = 512;
+        let (k, v) = mk_ctx(n, d, 11);
+        let arena = BlockArena::shared(d, 1024);
+        let mono =
+            WaveIndex::try_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), &k, &v, 7).unwrap();
+        let want = mono.export_state();
+        // chunk sizes straddling every interesting boundary: one token,
+        // sub-cluster, cluster size, segment-1 / segment / segment+1
+        // (the re-cluster boundary), and the whole prompt at once
+        for &cs in &[1usize, 7, 8, 127, 128, 129, 512] {
+            let arena = BlockArena::shared(d, 1024);
+            let mut idx =
+                WaveIndex::begin_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), n, 7);
+            let mut scratch = BuildScratch::default();
+            let mut fed = 0;
+            while fed < n {
+                assert!(idx.build_in_progress());
+                assert_eq!(idx.build_remaining(), n - fed);
+                let c = cs.min(n - fed);
+                idx.try_feed_build_with(
+                    &k[fed * d..(fed + c) * d],
+                    &v[fed * d..(fed + c) * d],
+                    &mut scratch,
+                )
+                .unwrap();
+                fed += c;
+                if fed < n {
+                    // an empty feed mid-build is legal and changes nothing
+                    idx.try_feed_build(&[], &[]).unwrap();
+                }
+            }
+            assert!(!idx.build_in_progress(), "chunk size {cs}: build did not close");
+            assert_eq!(idx.build_remaining(), 0);
+            assert_eq!(idx.export_state(), want, "chunk size {cs}: state diverged");
+        }
+    }
+
+    #[test]
+    fn chunked_build_random_partitions_property() {
+        // property sweep: random chunk partitions over varying context
+        // lengths all converge to the monolithic build's exact bytes
+        let d = 8;
+        for trial in 0..20u64 {
+            let n = 64 + (trial as usize * 37) % 448;
+            let (k, v) = mk_ctx(n, d, 100 + trial);
+            let arena = BlockArena::shared(d, 512);
+            let mono =
+                WaveIndex::try_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), &k, &v, trial)
+                    .unwrap();
+            let want = mono.export_state();
+            let mut rng = Rng::new(1000 + trial);
+            let arena = BlockArena::shared(d, 512);
+            let mut idx =
+                WaveIndex::begin_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), n, trial);
+            let mut fed = 0;
+            while fed < n {
+                let c = (1 + rng.below(95)).min(n - fed);
+                idx.try_feed_build(&k[fed * d..(fed + c) * d], &v[fed * d..(fed + c) * d])
+                    .unwrap();
+                fed += c;
+            }
+            assert!(!idx.build_in_progress(), "trial {trial}");
+            assert_eq!(idx.export_state(), want, "trial {trial} (n={n}) diverged");
+        }
+    }
+
+    #[test]
+    fn chunked_build_then_append_matches_monolithic_then_append() {
+        // the decode-time append/re-cluster path must behave identically
+        // on top of a chunked build and a monolithic one
+        let d = 16;
+        let n = 512;
+        let extra = 64;
+        let (k, v) = mk_ctx(n + extra, d, 13);
+        let arena = BlockArena::shared(d, 1024);
+        let mut mono = WaveIndex::try_build_in_for(
+            &arena,
+            DEFAULT_TENANT,
+            small_cfg(),
+            &k[..n * d],
+            &v[..n * d],
+            5,
+        )
+        .unwrap();
+        let arena2 = BlockArena::shared(d, 1024);
+        let mut chunked =
+            WaveIndex::begin_build_in_for(&arena2, DEFAULT_TENANT, small_cfg(), n, 5);
+        let mut fed = 0;
+        while fed < n {
+            let c = 100.min(n - fed);
+            chunked
+                .try_feed_build(&k[fed * d..(fed + c) * d], &v[fed * d..(fed + c) * d])
+                .unwrap();
+            fed += c;
+        }
+        for i in n..n + extra {
+            mono.append(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+            chunked.append(&k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d]);
+        }
+        assert!(mono.n_updates() > 0, "appends must trigger re-clustering");
+        assert_eq!(mono.export_state(), chunked.export_state());
+    }
+
+    #[test]
+    fn chunked_grafted_build_matches_monolithic_graft() {
+        let d = 16;
+        let n = 512;
+        let (k, v) = mk_ctx(n, d, 17);
+        // donor seals a prefix; both grafted builds attach the same slot
+        let arena = BlockArena::shared(d, 1024);
+        let mut donor =
+            WaveIndex::try_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), &k, &v, 9).unwrap();
+        let sealed = donor.seal_prefix(300);
+        assert!(!sealed.clusters.is_empty());
+        // graft coverage = exactly the tokens the sealed clusters hold
+        // (the registry guarantees this alignment in the engine path)
+        let covered = sealed
+            .clusters
+            .iter()
+            .flat_map(|c| c.pos.iter())
+            .map(|&p| p as usize + 1)
+            .max()
+            .unwrap();
+        let mono = WaveIndex::try_build_grafted_in_for(
+            &arena,
+            DEFAULT_TENANT,
+            small_cfg(),
+            &sealed,
+            covered,
+            &k,
+            &v,
+            9,
+        )
+        .unwrap();
+        let want = mono.export_state();
+        for &cs in &[33usize, 128, 256, 512] {
+            let mut idx = WaveIndex::begin_build_grafted_in_for(
+                &arena,
+                DEFAULT_TENANT,
+                small_cfg(),
+                &sealed,
+                covered,
+                n,
+                9,
+            );
+            let mut fed = 0;
+            while fed < n {
+                let c = cs.min(n - fed);
+                idx.try_feed_build(&k[fed * d..(fed + c) * d], &v[fed * d..(fed + c) * d])
+                    .unwrap();
+                fed += c;
+            }
+            assert!(!idx.build_in_progress());
+            assert_eq!(idx.export_state(), want, "graft chunk size {cs} diverged");
+        }
+    }
+
+    #[test]
+    fn mid_build_snapshot_is_refused() {
+        let d = 8;
+        let (k, v) = mk_ctx(64, d, 3);
+        let arena = BlockArena::shared(d, 512);
+        let mut idx = WaveIndex::begin_build_in_for(&arena, DEFAULT_TENANT, small_cfg(), 128, 1);
+        idx.try_feed_build(&k, &v).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| idx.export_state()));
+        assert!(r.is_err(), "mid-build export must be refused");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! histograms with percentile summaries, shared across coordinator /
 //! engine / benches.
 
-use crate::util::stats::Sample;
+use crate::util::stats::{LogHistogram, Sample};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -12,6 +12,10 @@ pub struct Metrics {
     counters: Mutex<HashMap<String, u64>>,
     gauges: Mutex<HashMap<String, u64>>,
     samples: Mutex<HashMap<String, Sample>>,
+    /// Streaming histograms for unbounded online series (TTFT/TPOT):
+    /// fixed memory per series, percentile queries without stored
+    /// samples — `samples` above is for bounded bench-scale data.
+    hists: Mutex<HashMap<String, LogHistogram>>,
 }
 
 impl Metrics {
@@ -106,6 +110,48 @@ impl Metrics {
         }
     }
 
+    /// Record into a streaming log-bucket histogram (serving-latency
+    /// geometry, 1µs..1000s). Unlike [`Metrics::observe`] this stores
+    /// no samples: memory stays fixed no matter how long the serving
+    /// run is, at ~6% relative percentile error.
+    pub fn observe_hist(&self, name: &str, v: f64) {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(LogHistogram::latency_s)
+            .observe(v);
+    }
+
+    /// Percentile from a streaming histogram (`NaN` when absent/empty).
+    pub fn hist_percentile(&self, name: &str, p: f64) -> f64 {
+        self.hists.lock().unwrap().get(name).map(|h| h.percentile(p)).unwrap_or(f64::NAN)
+    }
+
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hists.lock().unwrap().get(name).map(|h| h.count()).unwrap_or(0)
+    }
+
+    /// Clone of a streaming histogram for cross-replica merging.
+    pub fn hist_snapshot(&self, name: &str) -> Option<LogHistogram> {
+        self.hists.lock().unwrap().get(name).cloned()
+    }
+
+    /// One-line p50/p95/p99 summary of a streaming histogram.
+    pub fn hist_summary(&self, name: &str) -> String {
+        let g = self.hists.lock().unwrap();
+        match g.get(name) {
+            Some(h) if !h.is_empty() => format!(
+                "{name}: n={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                h.count(),
+                h.percentile(50.0) * 1e3,
+                h.percentile(95.0) * 1e3,
+                h.percentile(99.0) * 1e3,
+            ),
+            _ => format!("{name}: (no samples)"),
+        }
+    }
+
     /// Snapshot of all counters, sorted by name.
     pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
         let mut v: Vec<(String, u64)> =
@@ -175,6 +221,29 @@ mod tests {
         assert_eq!(m.gauge("overlap"), 0, "empty ratio reports no activity");
         m.set_ratio_gauge("overlap", 1, 3);
         assert_eq!(m.gauge("overlap"), 33);
+    }
+
+    #[test]
+    fn streaming_hist_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_hist("ttft_s", i as f64 * 1e-3);
+        }
+        assert_eq!(m.hist_count("ttft_s"), 100);
+        let p50 = m.hist_percentile("ttft_s", 50.0);
+        assert!(p50 > 0.045 && p50 < 0.056, "p50 within a bucket of 50ms: {p50}");
+        assert!(m.hist_percentile("absent", 50.0).is_nan());
+        assert_eq!(m.hist_count("absent"), 0);
+        let s = m.hist_summary("ttft_s");
+        assert!(s.contains("n=100") && s.contains("p99"), "{s}");
+        assert!(m.hist_summary("absent").contains("no samples"));
+        // snapshots merge across registries (cluster aggregation path)
+        let m2 = Metrics::new();
+        m2.observe_hist("ttft_s", 0.2);
+        let mut merged = m.hist_snapshot("ttft_s").unwrap();
+        merged.merge(&m2.hist_snapshot("ttft_s").unwrap());
+        assert_eq!(merged.count(), 101);
+        assert_eq!(merged.max(), 0.2);
     }
 
     #[test]

@@ -175,6 +175,137 @@ impl Histogram {
     }
 }
 
+/// Streaming percentile histogram with log-spaced buckets: O(buckets)
+/// memory regardless of how many observations arrive, so unbounded
+/// online series (per-token latencies over hours of serving) never grow
+/// the way [`Sample`]'s stored vector does. Buckets are geometric —
+/// `per_decade` buckets per power of ten — which bounds the *relative*
+/// error of a reported percentile by one bucket width
+/// (`10^(1/per_decade) - 1`), the natural error model for latencies.
+/// Exact min/max are tracked on the side so the tails clamp truthfully.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// Lower edge of bucket 0.
+    lo: f64,
+    per_decade: usize,
+    buckets: Vec<u64>,
+    below: u64,
+    above: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Buckets spanning `[lo, lo * 10^decades)`.
+    pub fn new(lo: f64, decades: usize, per_decade: usize) -> Self {
+        assert!(lo > 0.0 && decades > 0 && per_decade > 0);
+        LogHistogram {
+            lo,
+            per_decade,
+            buckets: vec![0; decades * per_decade],
+            below: 0,
+            above: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Geometry for serving latencies in seconds: 1µs .. 1000s at ~6%
+    /// relative resolution (9 decades × 40 buckets = 360 slots).
+    pub fn latency_s() -> Self {
+        LogHistogram::new(1e-6, 9, 40)
+    }
+
+    /// Record one observation. Non-finite values are dropped (a NaN
+    /// latency is a bug upstream, not a data point).
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x < self.lo {
+            self.below += 1;
+            return;
+        }
+        let i = ((x / self.lo).log10() * self.per_decade as f64).floor() as usize;
+        match self.buckets.get_mut(i) {
+            Some(b) => *b += 1,
+            None => self.above += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.max }
+    }
+
+    fn edge(&self, i: usize) -> f64 {
+        self.lo * 10f64.powf(i as f64 / self.per_decade as f64)
+    }
+
+    /// Percentile estimate, `p` in [0, 100]: cumulative walk to the
+    /// target rank, geometric interpolation inside the landing bucket,
+    /// clamped to the exact observed [min, max].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let p = p.clamp(0.0, 100.0);
+        if p == 0.0 {
+            return self.min;
+        }
+        let target = (((p / 100.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = self.below;
+        if target <= cum {
+            return self.min;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let prev = cum;
+            cum += c;
+            if target <= cum {
+                let frac = (target - prev) as f64 / c as f64;
+                let v = self.edge(i) * (self.edge(i + 1) / self.edge(i)).powf(frac);
+                return v.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram of identical geometry into this one —
+    /// cross-replica aggregation for cluster-level percentiles.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.lo, other.lo, "merge requires identical geometry");
+        assert_eq!(self.per_decade, other.per_decade);
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.below += other.below;
+        self.above += other.above;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Cosine similarity between two equal-length vectors.
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -245,6 +376,71 @@ mod tests {
         assert_eq!(h.count(), 12);
         assert!(h.bucket_counts().iter().all(|&c| c == 1));
         assert!((h.cdf_at(9) - 11.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_percentiles_within_bucket_error() {
+        let mut h = LogHistogram::latency_s();
+        // 1..=1000 ms, uniformly
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        let tol = 10f64.powf(1.0 / 40.0); // one bucket of relative error
+        for (p, exact) in [(50.0, 0.5), (95.0, 0.95), (99.0, 0.99)] {
+            let est = h.percentile(p);
+            assert!(
+                est / exact < tol && exact / est < tol,
+                "p{p}: {est} vs {exact} (tol {tol})"
+            );
+        }
+        // exact tails
+        assert_eq!(h.percentile(0.0), 1e-3);
+        assert_eq!(h.percentile(100.0), 1.0);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+    }
+
+    #[test]
+    fn log_histogram_memory_does_not_grow() {
+        let mut h = LogHistogram::new(1e-6, 3, 8);
+        let before = h.buckets.len();
+        for i in 0..100_000 {
+            h.observe(1e-6 * (1.0 + (i % 997) as f64));
+        }
+        assert_eq!(h.buckets.len(), before, "observation never allocates");
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn log_histogram_out_of_range_and_nonfinite() {
+        let mut h = LogHistogram::new(1e-3, 3, 4); // [1ms, 1s)
+        h.observe(1e-6); // below
+        h.observe(50.0); // above
+        h.observe(0.1);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 3, "non-finite observations are dropped");
+        assert_eq!(h.percentile(0.0), 1e-6, "below-range clamps to exact min");
+        assert_eq!(h.percentile(100.0), 50.0, "above-range clamps to exact max");
+        assert!(h.percentile(50.0) > 0.05 && h.percentile(50.0) < 0.2);
+        assert!(LogHistogram::latency_s().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_combined_stream() {
+        let (mut a, mut b, mut all) =
+            (LogHistogram::latency_s(), LogHistogram::latency_s(), LogHistogram::latency_s());
+        for i in 1..=200 {
+            let x = i as f64 * 2.5e-3;
+            if i % 2 == 0 { a.observe(x) } else { b.observe(x) }
+            all.observe(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "merge is exact at p{p}");
+        }
     }
 
     #[test]

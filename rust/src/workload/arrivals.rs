@@ -94,6 +94,60 @@ pub fn multi_tenant_poisson(
     all
 }
 
+/// Diurnal rate modulation: tenant `t`'s instantaneous rate swings
+/// sinusoidally between `base` and `base × burst_mult` with period
+/// `period_s`, each tenant's burst phase offset by `t / n_tenants` of a
+/// period — tenants peak at different times, which is exactly the load
+/// shape the SLO-aware scheduler's chunk budget and preemption are
+/// exercised against (one tenant bursting while another decodes under a
+/// TPOT target).
+///
+/// Arrivals are drawn by thinning: candidate events at the peak rate
+/// `base × burst_mult`, each accepted with probability
+/// `rate(t) / peak`. The trace is deterministic in `seed`, covers
+/// `[0, horizon_s)`, and is sorted by arrival time.
+pub fn diurnal_poisson(
+    base_rates: &[f64],
+    burst_mult: f64,
+    period_s: f64,
+    horizon_s: f64,
+    input_tokens: usize,
+    output_tokens: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    assert!(burst_mult >= 1.0 && period_s > 0.0);
+    let nt = base_rates.len().max(1);
+    let mut all = Vec::new();
+    for (t, &base) in base_rates.iter().enumerate() {
+        if base <= 0.0 {
+            continue;
+        }
+        let mut rng = Rng::new(seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let peak = base * burst_mult;
+        let phase = t as f64 / nt as f64;
+        let mut now = 0.0;
+        loop {
+            now += rng.exponential(peak);
+            if now >= horizon_s {
+                break;
+            }
+            let s = (std::f64::consts::TAU * (now / period_s + phase)).sin();
+            let rate = base * (1.0 + (burst_mult - 1.0) * 0.5 * (1.0 + s));
+            if rng.f64() < rate / peak {
+                all.push(RequestSpec {
+                    arrive_s: now,
+                    input_tokens,
+                    output_tokens,
+                    tenant: t as TenantId,
+                    prefix_hash: None,
+                });
+            }
+        }
+    }
+    all.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+    all
+}
+
 /// Stamp every request in `reqs` with the same shared-prefix hash
 /// (one system prompt / template across the trace).
 pub fn stamp_shared_prefix(reqs: &mut [RequestSpec], prefix_hash: u64) {
@@ -159,6 +213,39 @@ mod tests {
         let reqs = closed_loop(4, 10, 100, 10);
         assert_eq!(reqs.iter().filter(|r| r.arrive_s == 0.0).count(), 4);
         assert_eq!(reqs.iter().filter(|r| r.arrive_s.is_infinite()).count(), 6);
+    }
+
+    #[test]
+    fn diurnal_arrivals_burst_at_staggered_phases() {
+        // two tenants, phases 0 and 0.5: peaks at t=20 and t=60 of an
+        // 80 s period (4× burst over a base of 5 req/s)
+        let reqs = diurnal_poisson(&[5.0, 5.0], 4.0, 80.0, 80.0, 64, 8, 11);
+        assert!(!reqs.is_empty());
+        for w in reqs.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s, "trace not sorted");
+        }
+        assert!(reqs.iter().all(|r| r.arrive_s < 80.0), "horizon bound");
+        let count = |t: u32, lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| r.tenant == t && r.arrive_s >= lo && r.arrive_s < hi)
+                .count() as f64
+        };
+        // each tenant's peak window is much denser than its trough
+        assert!(count(0, 10.0, 30.0) > 2.0 * count(0, 50.0, 70.0), "tenant 0 bursts at 20");
+        assert!(count(1, 50.0, 70.0) > 2.0 * count(1, 10.0, 30.0), "tenant 1 bursts at 60");
+        // in tenant 0's burst window, tenant 1 idles (staggered phases)
+        assert!(count(0, 10.0, 30.0) > 2.0 * count(1, 10.0, 30.0));
+        // deterministic across calls
+        assert_eq!(reqs, diurnal_poisson(&[5.0, 5.0], 4.0, 80.0, 80.0, 64, 8, 11));
+    }
+
+    #[test]
+    fn diurnal_with_unit_burst_is_plain_poisson_rate() {
+        // burst_mult = 1: constant rate; mean arrivals ≈ rate × horizon
+        let reqs = diurnal_poisson(&[10.0], 1.0, 50.0, 200.0, 64, 8, 3);
+        let n = reqs.len() as f64;
+        assert!((n - 2000.0).abs() < 200.0, "expected ~2000 arrivals, got {n}");
+        assert!(reqs.iter().all(|r| r.tenant == 0));
     }
 
     #[test]

@@ -10,13 +10,15 @@
 //! and output fidelity can be measured directly.
 
 pub mod arrivals;
+pub mod online;
 pub mod pressure;
 pub mod tasks;
 
 pub use arrivals::{
-    closed_loop, multi_tenant_poisson, poisson_arrivals, shared_prefix_poisson,
-    stamp_shared_prefix, RequestSpec,
+    closed_loop, diurnal_poisson, multi_tenant_poisson, poisson_arrivals,
+    shared_prefix_poisson, stamp_shared_prefix, RequestSpec,
 };
+pub use online::{run_online_serving, OnlineConfig, OnlineReport};
 pub use pressure::{
     run_cluster_pressure, run_memory_pressure, ClusterPressureConfig, ClusterPressureReport,
     PressureConfig, PressureReport,

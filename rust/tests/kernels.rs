@@ -11,8 +11,9 @@ use retroinfer::buffer::{ExecBuffer, WaveBuffer};
 use retroinfer::config::{BufferConfig, ZoneConfig};
 use retroinfer::engine::assemble::{assemble_head, HeadSlices};
 use retroinfer::engine::{AssembleShape, HeadTask};
-use retroinfer::index::{DecodeScratch, SelectScratch, WaveIndex};
+use retroinfer::index::{BuildScratch, DecodeScratch, SelectScratch, WaveIndex};
 use retroinfer::kernels::Backend;
+use retroinfer::kvcache::{BlockArena, DEFAULT_TENANT};
 use retroinfer::prop_assert;
 use retroinfer::util::prop::check;
 use retroinfer::util::rng::Rng;
@@ -276,6 +277,65 @@ fn select_and_attend_are_alloc_free_after_warmup() {
     let grew = allocs_on_this_thread() - before;
     assert_eq!(grew, 0, "select+attend allocated {grew} times after warmup");
     assert!(out.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn warm_prefill_chunks_append_alloc_free() {
+    // Chunked prefill's hot path: a feed chunk that stays inside the
+    // current build segment is a pure append into buffers pre-sized at
+    // `begin_build_in_for`. After the first segment-drain cycle (which
+    // sets the pending buffer's high-water capacity), such chunks must
+    // not allocate — only segment-completing chunks may (they cluster
+    // and check out arena blocks).
+    let d = 16;
+    let n = 1024;
+    let cs = 32;
+    let mut rng = Rng::new(9);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let arena = BlockArena::shared(d, 4096);
+    let cfg = small_zone();
+    // Segment-completion points for this geometry, mirroring the build
+    // cursor: segments start after the sink and cover [sink, n - local)
+    // in `build_segment` steps (a < tokens_per_cluster remainder stays
+    // pending).
+    let (sink, seg) = (cfg.steady_sink, cfg.build_segment);
+    let mid_end = n - cfg.steady_local;
+    let mut boundaries = Vec::new();
+    let mut s = sink;
+    while s < mid_end {
+        let take = (mid_end - s).min(seg);
+        if take < cfg.tokens_per_cluster {
+            break;
+        }
+        boundaries.push(s + take);
+        s += take;
+    }
+    assert!(boundaries.len() >= 3, "geometry must span several segments");
+
+    let mut idx = WaveIndex::begin_build_in_for(&arena, DEFAULT_TENANT, cfg, n, 3);
+    let mut scratch = BuildScratch::default();
+    retroinfer::kernels::active(); // pin the backend (one-time log)
+    let mut fed = 0usize;
+    let mut warm_chunks = 0u32;
+    while fed < n {
+        let end = (fed + cs).min(n);
+        let crosses = end == n || boundaries.iter().any(|&b| fed < b && end >= b);
+        // warm once the first drain cycle is behind us: the pending
+        // buffer has hit its steady high-water mark by then
+        let warmed = fed >= sink + seg + cs;
+        let before = allocs_on_this_thread();
+        idx.try_feed_build_with(&keys[fed * d..end * d], &vals[fed * d..end * d], &mut scratch)
+            .unwrap();
+        let grew = allocs_on_this_thread() - before;
+        if warmed && !crosses {
+            assert_eq!(grew, 0, "warm chunk [{fed}, {end}) allocated {grew} times");
+            warm_chunks += 1;
+        }
+        fed = end;
+    }
+    assert!(warm_chunks >= 10, "only {warm_chunks} warm chunks measured");
+    assert!(!idx.build_in_progress(), "build did not close");
 }
 
 #[test]

@@ -1,0 +1,220 @@
+//! SLO-aware online-serving integration tests (DESIGN.md §2 "Online
+//! serving & preemption"). The acceptance scenario: a 256k-token prompt
+//! arrives while interactive sessions are mid-decode. Under chunked
+//! prefill every inter-token gap stays inside the per-step budget
+//! `decode_step_s + max_chunks_per_step × chunk_tokens ×
+//! prefill_token_s`; the monolithic prefill-eager baseline stalls the
+//! whole batch for the full prompt cost. Runs in deterministic virtual
+//! time through [`run_online_serving`] (no model artifacts), so it is
+//! tier-1. The `#[ignore]`d sweep at the bottom is the CI `slo-serving`
+//! job's payload: attainment/throughput across chunk sizes.
+
+use retroinfer::workload::{diurnal_poisson, run_online_serving, OnlineConfig, RequestSpec};
+
+fn spec(arrive_s: f64, input: usize, output: usize, tenant: u32) -> RequestSpec {
+    RequestSpec {
+        arrive_s,
+        input_tokens: input,
+        output_tokens: output,
+        tenant,
+        prefix_hash: None,
+    }
+}
+
+/// Two interactive decode streams under a 50 ms TPOT target, plus a
+/// 256k-token best-effort prompt landing at t = 50 ms.
+fn midstream_256k(chunked: bool, chunk_tokens: usize) -> OnlineConfig {
+    OnlineConfig {
+        trace: vec![
+            spec(0.0, 64, 400, 0),
+            spec(0.0, 64, 400, 0),
+            spec(0.05, 262_144, 4, 1),
+        ],
+        chunked,
+        chunk_tokens,
+        prefill_token_s: 1e-5,
+        decode_step_s: 5e-3,
+        max_chunks_per_step: 2,
+        max_batch: 4,
+        slo_ttft_s: 0.05,
+        slo_tpot_s: 0.05,
+        slo_max_input: 1024,
+        ..OnlineConfig::default()
+    }
+}
+
+#[test]
+fn chunked_prefill_bounds_gaps_on_256k_midstream_arrival() {
+    let cfg = midstream_256k(true, 512);
+    let budget = cfg.step_budget_s();
+    let chunked = run_online_serving(&cfg);
+    let mono = run_online_serving(&midstream_256k(false, 512));
+
+    assert_eq!(chunked.completed, 3);
+    assert_eq!(mono.completed, 3);
+    assert_eq!(chunked.rejected + mono.rejected, 0);
+
+    // chunked: the decode sessions' max inter-token gap respects the
+    // per-step budget even while the 256k prefill streams through
+    assert!(
+        chunked.max_gap_s <= budget + 1e-9,
+        "chunked max gap {} exceeds step budget {}",
+        chunked.max_gap_s,
+        budget
+    );
+    assert_eq!(chunked.tpot_attainment, 1.0, "every chunked gap inside the TPOT target");
+    assert_eq!(chunked.ttft_attainment, 1.0);
+
+    // monolithic: the whole 262144-token prefill (~2.6 s at 10 µs/token)
+    // lands in one step and blows the decode sessions' gap
+    assert!(
+        mono.max_gap_s > 2.0,
+        "monolithic gap {} should stall for the full 256k prefill",
+        mono.max_gap_s
+    );
+    assert!(mono.tpot_attainment < 1.0);
+
+    // identical token streams — scheduling mode changes latency, never
+    // content — completing each session's full output budget
+    assert_eq!(chunked.tokens, mono.tokens);
+    for (id, want) in [(0u64, 400usize), (1, 400), (2, 4)] {
+        assert_eq!(chunked.tokens[&id].len(), want, "session {id} token count");
+    }
+}
+
+#[test]
+fn online_token_streams_invariant_across_chunk_sizes_and_runs() {
+    let base = run_online_serving(&midstream_256k(true, 512));
+    for &cs in &[256usize, 1024] {
+        let r = run_online_serving(&midstream_256k(true, cs));
+        assert_eq!(r.tokens, base.tokens, "chunk size {cs} changed a token stream");
+        assert_eq!(r.completed, base.completed);
+        let budget = midstream_256k(true, cs).step_budget_s();
+        assert!(
+            r.max_gap_s <= budget + 1e-9,
+            "chunk size {cs}: gap {} over budget {budget}",
+            r.max_gap_s
+        );
+    }
+    // exact rerun determinism, full-report equality
+    let again = run_online_serving(&midstream_256k(true, 512));
+    assert_eq!(again, base);
+}
+
+#[test]
+fn admission_rejects_provably_unmeetable_interactive_ttft() {
+    // The scheduler estimates prefill at full chunks (51.2 ms each
+    // here): the 1024-token prompt needs 2 — past its 80 ms TTFT
+    // deadline before it starts, so the EDF admission pass rejects it
+    // instead of wasting prefill work. The 64-token prompt (1 chunk,
+    // 51.2 ms ≤ 80 ms) admits and completes.
+    let cfg = OnlineConfig {
+        trace: vec![spec(0.0, 64, 8, 0), spec(0.0, 1024, 8, 0)],
+        chunked: true,
+        chunk_tokens: 512,
+        prefill_token_s: 1e-4,
+        slo_ttft_s: 0.08,
+        slo_tpot_s: f64::INFINITY,
+        slo_max_input: 1024,
+        ..OnlineConfig::default()
+    };
+    let r = run_online_serving(&cfg);
+    assert_eq!(r.rejected, 1, "unmeetable TTFT must reject");
+    assert_eq!(r.completed, 1);
+    assert!(r.ttft_attainment < 1.0, "a rejected SLO session counts as a TTFT miss");
+}
+
+#[test]
+fn diurnal_load_serves_every_request_under_slo_accounting() {
+    let trace = diurnal_poisson(&[25.0, 25.0], 3.0, 4.0, 4.0, 64, 8, 17);
+    let n = trace.len();
+    assert!(n > 40, "trace too small to exercise bursts: {n}");
+    let cfg = OnlineConfig {
+        trace,
+        slo_ttft_s: 0.5,
+        slo_tpot_s: 0.1,
+        ..OnlineConfig::default()
+    };
+    let r = run_online_serving(&cfg);
+    assert_eq!(r.completed + r.rejected, n, "no request lost");
+    assert!(r.ttft_attainment >= 0.0 && r.ttft_attainment <= 1.0);
+    assert!(r.tpot_attainment >= 0.0 && r.tpot_attainment <= 1.0);
+    assert!(r.max_gap_all_s >= r.max_gap_s, "SLO-class gaps are a subset of all gaps");
+    assert!(r.throughput_tok_s > 0.0);
+}
+
+/// CI `slo-serving` payload: SLO attainment vs throughput across chunk
+/// sizes plus the monolithic baseline, on a diurnal trace with long
+/// best-effort prompts mixed in. `#`-prefixed lines land in the job's
+/// timing artifacts (EXPERIMENTS.md "Online serving").
+#[test]
+#[ignore]
+fn slo_sweep_chunk_sizes() {
+    let mut trace = diurnal_poisson(&[40.0, 40.0], 3.0, 6.0, 6.0, 64, 32, 23);
+    // a 256k and two 64k best-effort prompts land mid-trace
+    trace.push(spec(1.0, 262_144, 4, 2));
+    trace.push(spec(2.5, 65_536, 4, 2));
+    trace.push(spec(4.0, 65_536, 4, 2));
+    trace.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+    let n = trace.len();
+    println!("# slo-sweep requests={n} slo_ttft=0.5s slo_tpot=0.05s");
+
+    let run = |chunked: bool, chunk_tokens: usize| {
+        let cfg = OnlineConfig {
+            trace: trace.clone(),
+            chunked,
+            chunk_tokens,
+            prefill_token_s: 1e-5,
+            decode_step_s: 5e-3,
+            max_chunks_per_step: 2,
+            max_batch: 8,
+            slo_ttft_s: 0.5,
+            slo_tpot_s: 0.05,
+            slo_max_input: 1024,
+            ..OnlineConfig::default()
+        };
+        (cfg.step_budget_s(), run_online_serving(&cfg))
+    };
+
+    let (_, mono) = run(false, 512);
+    println!(
+        "# mono       ttft_p50={:.4}s tpot_p99={:.4}s max_gap={:.4}s attain_ttft={:.3} \
+         attain_tpot={:.3} tput={:.0}tok/s",
+        mono.ttft_p50_s,
+        mono.tpot_p99_s,
+        mono.max_gap_s,
+        mono.ttft_attainment,
+        mono.tpot_attainment,
+        mono.throughput_tok_s
+    );
+    let mut chunk512_gap = f64::INFINITY;
+    for &cs in &[256usize, 512, 1024] {
+        let (budget, r) = run(true, cs);
+        println!(
+            "# chunk={cs:<5} ttft_p50={:.4}s tpot_p99={:.4}s max_gap={:.4}s attain_ttft={:.3} \
+             attain_tpot={:.3} tput={:.0}tok/s budget={budget:.4}s",
+            r.ttft_p50_s,
+            r.tpot_p99_s,
+            r.max_gap_s,
+            r.ttft_attainment,
+            r.tpot_attainment,
+            r.throughput_tok_s
+        );
+        assert_eq!(r.completed + r.rejected, n);
+        assert!(
+            r.max_gap_s <= budget + 1e-9,
+            "chunk {cs}: SLO-class gap {} over per-step budget {budget}",
+            r.max_gap_s
+        );
+        if cs == 512 {
+            chunk512_gap = r.max_gap_s;
+        }
+    }
+    assert_eq!(mono.completed + mono.rejected, n);
+    assert!(
+        mono.max_gap_s > chunk512_gap,
+        "monolithic baseline must show the head-of-line stall: mono {} vs chunked {}",
+        mono.max_gap_s,
+        chunk512_gap
+    );
+}

@@ -107,12 +107,16 @@ fn capped_admission_report() {
 /// total live footprint exceeds it — the spill-forcing config the
 /// EXPERIMENTS.md tiered-arena table is fed by. Runs twice, with the
 /// Exact and the int8 spill codec, reports logical vs physical cold
-/// bytes, and returns the MEASURED physical/logical ratio of the int8
-/// run (the fig13 `retroinfer-spill-comp` row is fed by it).
-fn spill_pressure_report() -> f64 {
+/// bytes plus the measured intra-step spill overlap (the fraction of
+/// cold-tier reads the pipelined I/O lane had already staged when the
+/// gather asked for them), and returns the MEASURED (physical/logical
+/// codec ratio, overlap fraction) of the int8 run — the fig13
+/// `retroinfer-spill-*` rows are fed by both.
+fn spill_pressure_report() -> (f64, f64) {
     let n_per_tenant = if quick_mode() { 3 } else { 6 };
     let trace = multi_tenant_poisson(&[4.0, 2.0], n_per_tenant, 120, 8, 13);
     let mut codec_ratio = 1.0f64;
+    let mut overlap_frac = 1.0f64;
     for codec in [SpillCodec::Exact, SpillCodec::Int8] {
         let cfg = PressureConfig {
             capacity_blocks: 256,
@@ -143,6 +147,14 @@ fn spill_pressure_report() -> f64 {
             ratio,
             rep.peak_compressed_blocks,
         );
+        println!(
+            "#   pipelined cold reads [{} codec]: {} total, {} staged \
+             (intra-step spill_overlap_pct {:.1}%)",
+            codec.name(),
+            rep.cold_reads,
+            rep.cold_reads_staged,
+            rep.spill_overlap_pct(),
+        );
         assert!(rep.drained, "spill run deadlocked: {rep:?}");
         assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap");
         assert_eq!(rep.deferrals, 0, "tiered admission must never defer");
@@ -153,6 +165,11 @@ fn spill_pressure_report() -> f64 {
             "total live must exceed the hot tier for the report to mean anything"
         );
         assert_eq!(rep.final_cold_blocks, 0, "cold blocks must die with their sessions");
+        assert!(rep.cold_reads > 0, "spill run never read through the cold tier");
+        assert!(
+            rep.cold_reads_staged > 0,
+            "pipelined staging never beat a gather to a cold page: {rep:?}"
+        );
         if codec.is_lossy() {
             assert!(rep.peak_compressed_blocks > 0, "lossy codec never applied: {rep:?}");
             assert!(
@@ -160,11 +177,12 @@ fn spill_pressure_report() -> f64 {
                 "int8 must at least halve cold bytes: {rep:?}"
             );
             codec_ratio = ratio;
+            overlap_frac = rep.spill_overlap_pct() / 100.0;
         } else {
             assert_eq!(rep.peak_compressed_blocks, 0, "exact run stored lossy pages");
         }
     }
-    codec_ratio
+    (codec_ratio, overlap_frac)
 }
 
 /// Serve a shared-prefix trace through the real refcounted arena
@@ -288,8 +306,13 @@ fn main() {
     println!("# measured wave-buffer hit ratio (real trace replay): {hit:.3}");
     println!("# paper reports 0.79-0.94 across tasks at 5% cache");
     capped_admission_report();
-    let codec_ratio = spill_pressure_report();
+    let (codec_ratio, spill_overlap) = spill_pressure_report();
     println!("# measured int8 spill-codec ratio (physical/logical): {codec_ratio:.2}");
+    println!(
+        "# measured intra-step spill overlap fed to the simulator: {:.1}% of cold \
+         reads staged ahead of the gather",
+        100.0 * spill_overlap
+    );
     shared_prefix_report();
     online_serving_report();
     println!();
@@ -311,12 +334,15 @@ fn main() {
             profiles::pqcache(),
             profiles::retroinfer(hit),
             // tiered arena: 30% of uncached fetches climb from the cold
-            // spill tier first (hot RAM tier capped below the working set)
-            profiles::retroinfer_spilled(hit, 0.3),
+            // spill tier first (hot RAM tier capped below the working
+            // set); cold reads overlap compute at the MEASURED
+            // intra-step staging ratio from the pressure replay above
+            profiles::retroinfer_spilled(hit, 0.3).with_spill_overlap(spill_overlap),
             // same tiered arena with the int8 spill codec: cold pages
             // cross the spill channel at the MEASURED physical/logical
             // ratio from the pressure replay above
-            profiles::retroinfer_spilled_compressed(hit, 0.3, codec_ratio),
+            profiles::retroinfer_spilled_compressed(hit, 0.3, codec_ratio)
+                .with_spill_overlap(spill_overlap),
             // cross-session prefix sharing: half of each sequence's KV
             // is a template prefix resident once per batch (refcounted
             // blocks + shared GPU prefix cache)

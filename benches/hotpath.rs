@@ -15,7 +15,7 @@ use retroinfer::index::{
     spherical_kmeans, spherical_kmeans_pooled, DecodeScratch, SelectScratch, WaveIndex,
 };
 use retroinfer::kernels::{self, Backend};
-use retroinfer::kvcache::BlockArena;
+use retroinfer::kvcache::{BlockArena, ColdestFirst};
 use retroinfer::metrics::Metrics;
 use retroinfer::runtime::tinylm::WaveInputs;
 use retroinfer::util::bench::{bench, print_result, quick_mode};
@@ -163,6 +163,159 @@ fn main() {
             if bsz >= 4 && r < 1.0 {
                 println!("  WARNING: batch {bsz} fan-out slower than sequential ({r:.2}x)");
             }
+        }
+    }
+
+    // --- pipelined decode under spill pressure -----------------------------
+    // The fan-out above is all-hot; here each head's clusters are
+    // demoted until only a 20% / 40% / 60% hot cap survives, and the
+    // spill store charges a 20 µs fault per cold page read. The
+    // stage-decoupled executor issues those reads on the pool's I/O
+    // lane while hot heads compute; the serial loop eats every stall
+    // inline. Two epoch bumps per timed round drop all staged pages,
+    // so each round pays the full cold working set. The `#`-prefixed
+    // rows feed the EXPERIMENTS.md serial-vs-pipelined table;
+    // RI_ASSERT_PIPELINE=1 turns "pipelined slower than serial" (and
+    // "batched GQA scoring slower than per-head") into a nonzero
+    // exit, same contract as RI_ASSERT_SIMD above.
+    {
+        let mut fails = 0usize;
+        let assert_on = std::env::var("RI_ASSERT_PIPELINE").ok().as_deref() == Some("1");
+        let kvh = 8;
+        let group = 4;
+        let n_ctx = 4096;
+        let zcfg = ZoneConfig {
+            retrieval_frac: 0.2,
+            build_segment: 1024,
+            update_segment: 128,
+            kmeans_iters: 5,
+            ..ZoneConfig::default()
+        };
+        let pipe_pool = Arc::new(ThreadPool::with_io_threads(8, 2));
+        for &hot_pct in &[20usize, 40, 60] {
+            let arena = BlockArena::shared(d, BufferConfig::default().block_bytes);
+            arena.spill().set_read_fault(20, 0); // deterministic cold-read stall
+            let mut rng3 = Rng::new(43);
+            let mut heads: Vec<(WaveIndex, WaveBuffer)> = Vec::new();
+            for h in 0..kvh {
+                let hk = rng3.normal_vec(n_ctx * d);
+                let hv = rng3.normal_vec(n_ctx * d);
+                let mut hidx =
+                    WaveIndex::build_in(&arena, zcfg.clone(), &hk, &hv, 200 + h as u64);
+                let bcfg2 = BufferConfig { cache_frac: 0.25, ..BufferConfig::default() };
+                let cap2 =
+                    WaveBuffer::capacity_for(&bcfg2, n_ctx, hidx.store().tokens_per_block());
+                let hbuf = WaveBuffer::new(
+                    bcfg2,
+                    d,
+                    hidx.store().tokens_per_block(),
+                    cap2,
+                    Arc::clone(&pipe_pool),
+                );
+                hbuf.register_index(&hidx);
+                let total_hot: usize =
+                    (0..hidx.meta().m()).map(|c| hidx.cluster_hot_blocks(c as u32)).sum();
+                // demote until only ~hot_pct% of the blocks stay hot
+                let (_, demoted) =
+                    hidx.demote_until(&ColdestFirst, total_hot * (100 - hot_pct) / 100);
+                for c in &demoted {
+                    hbuf.note_demoted(hidx.cluster_blocks(*c));
+                }
+                heads.push((hidx, hbuf));
+            }
+            let shape = AssembleShape { ne: 1024, m_cap: 256, d, group };
+            let bsz = 4;
+            let tasks: Vec<HeadTask> = (0..bsz * kvh)
+                .map(|t| {
+                    let (hidx, hbuf) = &heads[t % kvh];
+                    HeadTask { index: hidx, buffer: hbuf }
+                })
+                .collect();
+            let qg_all = rng3.normal_vec(bsz * kvh * group * d);
+            let mut wi = WaveInputs::zeros(bsz, kvh, shape.ne, shape.m_cap, d);
+            let cold_seq = BatchAssembler::new(Arc::clone(&pipe_pool), false);
+            let mut cold_pipe = BatchAssembler::new(Arc::clone(&pipe_pool), true);
+            cold_pipe.set_pipelined(true);
+            cold_seq.assemble_into(&tasks, &qg_all, shape, &mut wi);
+            cold_pipe.assemble_into(&tasks, &qg_all, shape, &mut wi);
+            let rs =
+                bench(&format!("decode-step hot={hot_pct}% b=4 kvh=8 serial"), 5, budget, || {
+                    arena.begin_staging_epoch();
+                    arena.begin_staging_epoch(); // drop every staged page
+                    std::hint::black_box(cold_seq.assemble_into(&tasks, &qg_all, shape, &mut wi));
+                });
+            print_result(&rs);
+            let rp = bench(
+                &format!("decode-step hot={hot_pct}% b=4 kvh=8 pipelined"),
+                5,
+                budget,
+                || {
+                    arena.begin_staging_epoch();
+                    arena.begin_staging_epoch();
+                    std::hint::black_box(cold_pipe.assemble_into(&tasks, &qg_all, shape, &mut wi));
+                },
+            );
+            print_result(&rp);
+            let ratio = rs.mean_ns / rp.mean_ns;
+            println!(
+                "# pipeline-speedup decode-step hot={hot_pct}% b={bsz} kvh={kvh}: {ratio:.2}x \
+                 (serial {:.0} ns, pipelined {:.0} ns)",
+                rs.mean_ns, rp.mean_ns
+            );
+            if assert_on && ratio < 1.0 {
+                println!(
+                    "# FAIL: pipelined decode slower than serial at hot={hot_pct}% ({ratio:.2}x)"
+                );
+                fails += 1;
+            }
+            arena.spill().set_read_fault(0, 0);
+        }
+
+        // GQA-batched centroid scoring: one G×m GEMM + group-max reduce
+        // (what `select_group_into` issues per kv-head) vs G per-head
+        // matvecs with an elementwise max merge.
+        {
+            let bk = kernels::active();
+            let (mm, dd, g) = (2048usize, 64usize, 4usize);
+            let mut rngg = Rng::new(44);
+            let cents = rngg.normal_vec(mm * dd);
+            let qs = rngg.normal_vec(g * dd);
+            let mut gm = vec![0.0f32; g * mm];
+            let mut scores = vec![0.0f32; mm];
+            let mut tmp = vec![0.0f32; mm];
+            let rh = bench("gqa-score per-head G=4 m=2048 d=64", 50, budget, || {
+                scores.fill(f32::NEG_INFINITY);
+                for gi in 0..g {
+                    bk.matvec_nt(&qs[gi * dd..(gi + 1) * dd], &cents, dd, &mut tmp);
+                    for (s, t) in scores.iter_mut().zip(&tmp) {
+                        if *t > *s {
+                            *s = *t;
+                        }
+                    }
+                }
+                std::hint::black_box(scores[0]);
+            });
+            print_result(&rh);
+            let rb = bench("gqa-score batched G=4 m=2048 d=64", 50, budget, || {
+                bk.gemm_nt(&qs, &cents, dd, &mut gm);
+                bk.group_max_reduce(&gm, g, mm, &mut scores);
+                std::hint::black_box(scores[0]);
+            });
+            print_result(&rb);
+            let gr = rh.mean_ns / rb.mean_ns;
+            println!(
+                "# gqa-batched-speedup G={g} m={mm} d={dd}: {gr:.2}x \
+                 (per-head {:.0} ns, batched {:.0} ns)",
+                rh.mean_ns, rb.mean_ns
+            );
+            if assert_on && gr < 1.0 {
+                println!("# FAIL: batched GQA scoring slower than per-head ({gr:.2}x)");
+                fails += 1;
+            }
+        }
+        if fails > 0 {
+            println!("# bench-pipeline: {fails} pipeline regression(s)");
+            std::process::exit(1);
         }
     }
 

@@ -55,6 +55,8 @@ struct ServeStats {
     demoted: u64,
     promoted: u64,
     cold_hits: u64,
+    cold_staged: u64,
+    overlap_pct: u64,
     spill_logical_peak: usize,
     spill_physical_peak: usize,
     compressed_peak: usize,
@@ -68,6 +70,7 @@ fn serve(
     capacity_blocks: Option<usize>,
     spill: bool,
     codec: SpillCodec,
+    pipelined: bool,
 ) -> anyhow::Result<ServeStats> {
     let dir = default_artifacts_dir();
     let mut eng = LiveEngine::new(&dir, mode)?;
@@ -76,6 +79,9 @@ fn serve(
         // permissive accuracy floor: only the steady-zone rules gate
         // lossy placement (the codec choice carries the experiment)
         eng.set_spill_codec(codec, 0.0);
+        // stage-decoupled decode pipeline is on by default under spill;
+        // the serial control runs disarm it to prove tokens don't move
+        eng.set_pipelined_decode(pipelined);
     }
     let mut sched = match capacity_blocks {
         Some(cap) if !spill => {
@@ -175,6 +181,8 @@ fn serve(
         demoted: eng.arena().demoted_total(),
         promoted: eng.arena().promoted_total(),
         cold_hits: eng.metrics.counter("cold_hit_blocks"),
+        cold_staged: eng.metrics.counter("cold_staged_blocks"),
+        overlap_pct: eng.metrics.gauge("spill_overlap_pct"),
         spill_logical_peak: spill_log_peak,
         spill_physical_peak: spill_phys_peak,
         compressed_peak: comp_peak,
@@ -392,10 +400,12 @@ fn main() -> anyhow::Result<()> {
     let prompts: Vec<Vec<i32>> =
         (0..n_requests).map(|i| structured_prompt(prompt_len, 100 + i as u64)).collect();
 
-    let full = serve(AttnMode::Full, &prompts, max_new, tenants, None, false, SpillCodec::Exact)?;
+    let full =
+        serve(AttnMode::Full, &prompts, max_new, tenants, None, false, SpillCodec::Exact, true)?;
     println!("full attention : wall={:.2}s decode={:.1} tok/s", full.wall_s, full.decode_tps);
 
-    let wave = serve(AttnMode::Wave, &prompts, max_new, tenants, None, false, SpillCodec::Exact)?;
+    let wave =
+        serve(AttnMode::Wave, &prompts, max_new, tenants, None, false, SpillCodec::Exact, true)?;
     println!(
         "wave attention : wall={:.2}s decode={:.1} tok/s hit_ratio={:.3} peak_arena={} blocks",
         wave.wall_s, wave.decode_tps, wave.hit_ratio, wave.peak_live_blocks
@@ -411,8 +421,16 @@ fn main() -> anyhow::Result<()> {
     } else {
         (peak * 3 / 5).max(2 * peak / n_requests.max(1)).max(1)
     };
-    let capped =
-        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(cap), false, SpillCodec::Exact)?;
+    let capped = serve(
+        AttnMode::Wave,
+        &prompts,
+        max_new,
+        tenants,
+        Some(cap),
+        false,
+        SpillCodec::Exact,
+        true,
+    )?;
     println!(
         "wave (capped)  : wall={:.2}s cap={cap} blocks peak={} blocks deferral_events={}",
         capped.wall_s, capped.peak_live_blocks, capped.deferrals
@@ -437,12 +455,26 @@ fn main() -> anyhow::Result<()> {
     // No admission gate: a full hot tier demotes-then-retries, so
     // nothing can defer forever.
     let hot_cap = (peak * 2 / 5).max(peak / n_requests.max(1) + 8).max(1);
-    let tiered =
-        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true, SpillCodec::Exact)?;
+    let tiered = serve(
+        AttnMode::Wave,
+        &prompts,
+        max_new,
+        tenants,
+        Some(hot_cap),
+        true,
+        SpillCodec::Exact,
+        true,
+    )?;
     println!(
         "wave (tiered)  : wall={:.2}s hot_cap={hot_cap} blocks demoted={} promoted={} \
-         cold_hit_blocks={} deferral_events={}",
-        tiered.wall_s, tiered.demoted, tiered.promoted, tiered.cold_hits, tiered.deferrals
+         cold_hit_blocks={} (staged {} / overlap {}%) deferral_events={}",
+        tiered.wall_s,
+        tiered.demoted,
+        tiered.promoted,
+        tiered.cold_hits,
+        tiered.cold_staged,
+        tiered.overlap_pct,
+        tiered.deferrals
     );
     assert_eq!(tiered.deferrals, 0, "tiered serving must never defer");
     assert_eq!(tiered.out.len(), n_requests, "tiered serve dropped requests");
@@ -455,13 +487,57 @@ fn main() -> anyhow::Result<()> {
     for (id, toks) in &wave.out {
         assert_eq!(toks, &tiered.out[id], "tiered serve changed request {id}'s tokens");
     }
+    // every cold-tier gather in the pipelined run must have been served
+    // from the I/O lane's staging area — the stage-decoupled executor
+    // waits for a task's pages before gathering, so a stall here means
+    // the pipeline silently fell back to synchronous reads
+    if tiered.cold_hits > 0 {
+        assert_eq!(
+            tiered.cold_staged, tiered.cold_hits,
+            "pipelined tiered serve read cold pages without staging them"
+        );
+    }
+
+    // Serial-decode control: the SAME tiered run with the stage-
+    // decoupled pipeline disarmed. Pipelining changes when cold-page
+    // I/O happens, never what the gather returns: token streams must
+    // be bit-identical, and the serial run's gathers never touch the
+    // staging area.
+    let tiered_serial = serve(
+        AttnMode::Wave,
+        &prompts,
+        max_new,
+        tenants,
+        Some(hot_cap),
+        true,
+        SpillCodec::Exact,
+        false,
+    )?;
+    println!(
+        "wave (tiered, serial decode): wall={:.2}s cold_hit_blocks={} (staged {})",
+        tiered_serial.wall_s, tiered_serial.cold_hits, tiered_serial.cold_staged
+    );
+    for (id, toks) in &tiered.out {
+        assert_eq!(
+            toks, &tiered_serial.out[id],
+            "pipelined tiered serve changed request {id}'s tokens vs serial decode"
+        );
+    }
 
     // Tiered re-run with the int8 spill codec (DESIGN.md §2 "Spill
     // codecs"): the estimation head clears interior clusters for lossy
     // cold storage, so the cold tier's physical footprint drops to at
     // most half its logical size while every request still completes.
-    let comp =
-        serve(AttnMode::Wave, &prompts, max_new, tenants, Some(hot_cap), true, SpillCodec::Int8)?;
+    let comp = serve(
+        AttnMode::Wave,
+        &prompts,
+        max_new,
+        tenants,
+        Some(hot_cap),
+        true,
+        SpillCodec::Int8,
+        true,
+    )?;
     let comp_ratio =
         comp.spill_physical_peak as f64 / comp.spill_logical_peak.max(1) as f64;
     println!(
@@ -482,6 +558,25 @@ fn main() -> anyhow::Result<()> {
             "int8 must at least halve cold bytes: physical {} vs logical {}",
             comp.spill_physical_peak,
             comp.spill_logical_peak
+        );
+    }
+    // Serial-decode control for the lossy codec too: a staged page is
+    // decoded from the same cold bytes the synchronous read decodes, so
+    // pipelining and int8 compose without moving a single token.
+    let comp_serial = serve(
+        AttnMode::Wave,
+        &prompts,
+        max_new,
+        tenants,
+        Some(hot_cap),
+        true,
+        SpillCodec::Int8,
+        false,
+    )?;
+    for (id, toks) in &comp.out {
+        assert_eq!(
+            toks, &comp_serial.out[id],
+            "pipelined int8 tiered serve changed request {id}'s tokens vs serial decode"
         );
     }
 

@@ -54,9 +54,15 @@ pub struct AccessStats {
     pub shared_hit_blocks: usize,
     /// Blocks fetched from CPU memory (PCIe transfer).
     pub miss_blocks: usize,
-    /// Blocks served from the cold spill tier (a cold-hit stall: the
-    /// block was neither GPU-cached nor hot in CPU RAM when selected).
+    /// Blocks served from the cold spill tier (the block was neither
+    /// GPU-cached nor hot in CPU RAM when selected).
     pub cold_blocks: usize,
+    /// Of `cold_blocks`, reads served from the pipelined-decode staging
+    /// area — their page I/O ran on the thread pool's I/O lane and
+    /// completed under attention compute instead of stalling the
+    /// gather. `cold_staged_blocks / cold_blocks` is the measured
+    /// intra-step spill-overlap ratio.
+    pub cold_staged_blocks: usize,
     /// Bytes copied GPU→GPU (steady + cache hits).
     pub g2g_bytes: usize,
     /// Bytes moved over PCIe (cache misses).
@@ -87,6 +93,7 @@ impl AccessStats {
         self.shared_hit_blocks += o.shared_hit_blocks;
         self.miss_blocks += o.miss_blocks;
         self.cold_blocks += o.cold_blocks;
+        self.cold_staged_blocks += o.cold_staged_blocks;
         self.g2g_bytes += o.g2g_bytes;
         self.pcie_bytes += o.pcie_bytes;
         self.spill_bytes += o.spill_bytes;
@@ -125,6 +132,7 @@ mod tests {
             shared_hit_blocks: 1,
             miss_blocks: 3,
             cold_blocks: 4,
+            cold_staged_blocks: 2,
             g2g_bytes: 5,
             pcie_bytes: 6,
             spill_bytes: 7,
@@ -135,6 +143,7 @@ mod tests {
         a.add(&b);
         assert_eq!(a.miss_blocks, 6);
         assert_eq!(a.cold_blocks, 8);
+        assert_eq!(a.cold_staged_blocks, 4);
         assert_eq!(a.pcie_bytes, 12);
         assert_eq!(a.spill_bytes, 14);
         assert_eq!(a.select_ns, 16);

@@ -31,8 +31,11 @@ pub struct BufferStats {
     /// counted in `hit_blocks` — a GPU hit is a GPU hit; this splits
     /// out the dedup share).
     pub shared_hit_blocks: AtomicU64,
-    /// Cold-hit stalls: selected blocks served through the spill tier.
+    /// Cold hits: selected blocks served through the spill tier.
     pub cold_blocks: AtomicU64,
+    /// Of `cold_blocks`, reads served from the staging area (I/O-lane
+    /// page read completed under compute — no stall).
+    pub cold_staged_blocks: AtomicU64,
     pub g2g_bytes: AtomicU64,
     pub pcie_bytes: AtomicU64,
     /// Bytes read from the cold spill tier.
@@ -374,14 +377,21 @@ impl WaveBuffer {
                             scr.missed.push((b.block, data));
                         }
                     } else {
-                        // Cold-hit stall: the block is neither GPU-cached
-                        // nor hot in CPU RAM. The data path reads through
-                        // the spill tier (byte-identical to the hot path);
-                        // promote-then-fill is the engine's async job, and
-                        // cold reads are never admitted to the GPU cache —
-                        // admission copies come from hot blocks only.
-                        index.store().copy_block_kv(*b, &mut eb.keys, &mut eb.vals);
+                        // Cold hit: the block is neither GPU-cached nor
+                        // hot in CPU RAM. The data path reads through the
+                        // spill tier (byte-identical to the hot path) —
+                        // served from the pipelined staging area when an
+                        // I/O-lane read already landed the page (overlap),
+                        // a synchronous stall otherwise. Promote-then-fill
+                        // is the engine's async job, and cold reads are
+                        // never admitted to the GPU cache — admission
+                        // copies come from hot blocks only.
+                        let tier =
+                            index.store().copy_block_kv_tiered(*b, &mut eb.keys, &mut eb.vals);
                         st.cold_blocks += 1;
+                        if tier == crate::kvcache::KvReadTier::ColdStaged {
+                            st.cold_staged_blocks += 1;
+                        }
                         st.spill_bytes += nbytes;
                     }
                 }
@@ -395,6 +405,9 @@ impl WaveBuffer {
             .fetch_add(st.shared_hit_blocks as u64, Ordering::Relaxed);
         self.stats.miss_blocks.fetch_add(st.miss_blocks as u64, Ordering::Relaxed);
         self.stats.cold_blocks.fetch_add(st.cold_blocks as u64, Ordering::Relaxed);
+        self.stats
+            .cold_staged_blocks
+            .fetch_add(st.cold_staged_blocks as u64, Ordering::Relaxed);
         self.stats.g2g_bytes.fetch_add(st.g2g_bytes as u64, Ordering::Relaxed);
         self.stats.pcie_bytes.fetch_add(st.pcie_bytes as u64, Ordering::Relaxed);
         self.stats.spill_bytes.fetch_add(st.spill_bytes as u64, Ordering::Relaxed);

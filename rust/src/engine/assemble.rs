@@ -15,7 +15,9 @@ use crate::buffer::{AccessStats, ExecBuffer, WaveBuffer};
 use crate::index::{SelectScratch, WaveIndex};
 use crate::runtime::tinylm::WaveInputs;
 use crate::util::threadpool::ThreadPool;
-use std::sync::{Arc, Mutex, RwLock};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 /// Geometry of one assembly: execution-buffer capacity, estimation-slot
@@ -46,30 +48,18 @@ pub struct HeadSlices<'a> {
     pub emask: &'a mut [f32],
 }
 
-/// Assemble one (sequence, head) slice of the wave-attention inputs:
-/// zone selection, execution-buffer gather through the wave buffer, and
-/// estimation-zone meta arrays. `qg` is the `[group, d]` flat query
-/// group sharing this KV head. Slices are fully overwritten (zeroed
-/// first), so callers may reuse a dirty [`WaveInputs`] across layers
-/// and steps.
-pub fn assemble_head(
+/// Stage 1 of one (row, head) assembly: zone selection (GQA-batched
+/// centroid scoring), Ne-budget trim, and the selection note for the
+/// spill machinery. The selection is left in `scratch` for
+/// [`gather_head`]. Returns the select-phase nanoseconds.
+pub fn select_head(
     task: HeadTask<'_>,
     qg: &[f32],
     shape: AssembleShape,
     scratch: &mut SelectScratch,
-    eb: &mut ExecBuffer,
-    out: &mut HeadSlices<'_>,
-) -> AccessStats {
+) -> u64 {
     let AssembleShape { ne, m_cap, d, group } = shape;
     debug_assert_eq!(qg.len(), group * d);
-    out.kx.fill(0.0);
-    out.vx.fill(0.0);
-    out.kmask.fill(0.0);
-    out.cent.fill(0.0);
-    out.vsum.fill(0.0);
-    out.csize.fill(0.0);
-    out.emask.fill(0.0);
-
     let index = task.index;
     let m = index.meta().m();
     // Budgets from the zone config, floored at 2 clusters per group
@@ -100,10 +90,52 @@ pub fn assemble_head(
     // step — the estimation zone is the estimator's shortlist of what
     // retrieval will want as the query drifts.
     index.note_selection(sel);
-    let select_ns = t_select.elapsed().as_nanos() as u64;
+    t_select.elapsed().as_nanos() as u64
+}
 
+/// The engine-global ids of every spilled (non-hot) block the gather of
+/// the selection in `scratch` will read, appended to `cold` (cleared
+/// first, sorted, deduped). These are the pages the pipelined executor
+/// issues as async I/O the moment selection completes.
+pub fn cold_blocks_of(task: HeadTask<'_>, scratch: &SelectScratch, cold: &mut Vec<u64>) {
+    cold.clear();
+    let index = task.index;
+    for &c in &scratch.selection().retrieval {
+        for r in index.cluster_blocks(c) {
+            if !index.store().is_hot(*r) {
+                cold.push(r.block);
+            }
+        }
+    }
+    cold.sort_unstable();
+    cold.dedup();
+}
+
+/// Stage 2: execution-buffer gather through the wave buffer plus
+/// estimation-zone meta packing, for the selection [`select_head`] left
+/// in `scratch`. Slices are fully overwritten (zeroed first), so
+/// callers may reuse a dirty [`WaveInputs`] across layers and steps.
+/// Sets `gather_ns`; the caller stamps `select_ns`.
+pub fn gather_head(
+    task: HeadTask<'_>,
+    shape: AssembleShape,
+    scratch: &SelectScratch,
+    eb: &mut ExecBuffer,
+    out: &mut HeadSlices<'_>,
+) -> AccessStats {
+    let AssembleShape { ne, d, .. } = shape;
+    out.kx.fill(0.0);
+    out.vx.fill(0.0);
+    out.kmask.fill(0.0);
+    out.cent.fill(0.0);
+    out.vsum.fill(0.0);
+    out.csize.fill(0.0);
+    out.emask.fill(0.0);
+
+    let index = task.index;
+    let sel = scratch.selection();
     // Execution buffer via the wave buffer (steady + hits + misses +
-    // cold-hit stalls).
+    // cold-hit stalls or staged-page reads).
     let t_gather = Instant::now();
     let mut stats = task.buffer.assemble(index, sel, eb);
 
@@ -121,8 +153,28 @@ pub fn assemble_head(
         out.csize[s] = index.meta().counts()[c];
         out.emask[s] = 1.0;
     }
-    stats.select_ns = select_ns;
     stats.gather_ns = t_gather.elapsed().as_nanos() as u64;
+    stats
+}
+
+/// Assemble one (sequence, head) slice of the wave-attention inputs:
+/// zone selection, execution-buffer gather through the wave buffer, and
+/// estimation-zone meta arrays. `qg` is the `[group, d]` flat query
+/// group sharing this KV head. The sequential composition of
+/// [`select_head`] + [`gather_head`] — the pipelined executor runs the
+/// same two stages with async I/O between them, so the two paths are
+/// bit-identical by construction.
+pub fn assemble_head(
+    task: HeadTask<'_>,
+    qg: &[f32],
+    shape: AssembleShape,
+    scratch: &mut SelectScratch,
+    eb: &mut ExecBuffer,
+    out: &mut HeadSlices<'_>,
+) -> AccessStats {
+    let select_ns = select_head(task, qg, shape, scratch);
+    let mut stats = gather_head(task, shape, scratch, eb, out);
+    stats.select_ns = select_ns;
     stats
 }
 
@@ -191,6 +243,32 @@ struct TaskSlot {
     scratch: SelectScratch,
     eb: ExecBuffer,
     stats: AccessStats,
+    /// Select-phase nanoseconds of the pipelined split (stamped onto
+    /// `stats` after the gather stage runs).
+    select_ns: u64,
+    /// Cold-page worklist of the pipelined split (reused across steps).
+    cold: Vec<u64>,
+}
+
+/// Cross-thread rendezvous of the pipelined executor. I/O-lane jobs
+/// decrement a task's outstanding-page count and push the task onto the
+/// ready queue when its last page lands; compute-lane drain jobs pop
+/// tasks in completion order. Persistent (`Arc`, capacity retained
+/// across steps) because `ThreadPool::submit_io` closures must be
+/// `'static` — and so the steady-state pipelined step allocates nothing
+/// here.
+#[derive(Default)]
+struct PipeState {
+    inner: Mutex<PipeInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct PipeInner {
+    /// Outstanding I/O jobs per flat task index (0 = not pending).
+    remaining: Vec<usize>,
+    /// Tasks whose last cold page landed, in completion order.
+    ready: VecDeque<usize>,
 }
 
 /// Batch assembler: fans the per-(row, head) assemblies of one decode
@@ -203,12 +281,20 @@ struct TaskSlot {
 pub struct BatchAssembler {
     pool: Arc<ThreadPool>,
     parallel: bool,
+    pipelined: bool,
+    pipe: Arc<PipeState>,
     slots: RwLock<Vec<Mutex<TaskSlot>>>,
 }
 
 impl BatchAssembler {
     pub fn new(pool: Arc<ThreadPool>, parallel: bool) -> BatchAssembler {
-        BatchAssembler { pool, parallel, slots: RwLock::new(Vec::new()) }
+        BatchAssembler {
+            pool,
+            parallel,
+            pipelined: false,
+            pipe: Arc::new(PipeState::default()),
+            slots: RwLock::new(Vec::new()),
+        }
     }
 
     pub fn parallel(&self) -> bool {
@@ -217,6 +303,20 @@ impl BatchAssembler {
 
     pub fn set_parallel(&mut self, parallel: bool) {
         self.parallel = parallel;
+    }
+
+    /// Whether the stage-decoupled (select → async I/O → gather)
+    /// executor is armed.
+    pub fn pipelined(&self) -> bool {
+        self.pipelined
+    }
+
+    /// Arm/disarm the pipelined executor. Works with or without
+    /// `parallel`: in serial mode Phase A/B run as plain loops on the
+    /// caller's thread (no scope boxing), which keeps the warm all-hot
+    /// pipelined path allocation-free.
+    pub fn set_pipelined(&mut self, pipelined: bool) {
+        self.pipelined = pipelined;
     }
 
     /// Assemble every task's `(row, head)` slice of `wi`. `qg_all` is
@@ -251,32 +351,151 @@ impl BatchAssembler {
             }
         }
         let slots = self.slots.read().unwrap();
-        let run = |t: usize| {
-            // Uncontended by construction: flat task `t` is the only
-            // user of slot `t` within this scope.
-            let mut slot = slots[t].lock().unwrap();
-            let slot = &mut *slot;
-            if slot.eb.d() != shape.d {
-                slot.eb = ExecBuffer::new(shape.d);
+        if self.pipelined && self.pool.n_io_threads() > 0 {
+            // ── Stage-decoupled pipeline ─────────────────────────────
+            // Phase A (select): every task runs zone selection; the
+            // moment a task's selection completes, its spilled pages
+            // are issued as async reads on the pool's dedicated I/O
+            // lane. Tasks with no cold pages gather inline — the warm
+            // all-hot path submits nothing, queues nothing, and (after
+            // warmup) allocates nothing. Phase B (gather): cold tasks
+            // drain in I/O *completion* order, so whichever head's
+            // pages land first gathers first while slower reads still
+            // stream in. The merge order is fixed by the disjoint
+            // WaveInputs slice layout, never by drain order — outputs
+            // are bit-identical to the sequential path by construction.
+            {
+                let mut inner = self.pipe.inner.lock().unwrap();
+                inner.remaining.clear();
+                inner.remaining.resize(n, 0);
+                inner.ready.clear();
             }
-            // SAFETY: task `t` is unique within this scope, and `wi` is
-            // mutably borrowed by `assemble_into` for the scope's whole
-            // lifetime — the slices are disjoint and live long enough.
-            let mut out = unsafe { ptrs.slices(t, shape) };
-            slot.stats = assemble_head(
-                tasks[t],
-                &qg_all[t * gd..(t + 1) * gd],
-                shape,
-                &mut slot.scratch,
-                &mut slot.eb,
-                &mut out,
-            );
-        };
-        if self.parallel && n > 1 {
-            self.pool.scope_for_each(n, &run);
+            let n_cold = AtomicUsize::new(0);
+            let pipe = &self.pipe;
+            let pool = &self.pool;
+            let select_run = |t: usize| {
+                // Uncontended by construction: flat task `t` is the
+                // only user of slot `t` within this scope.
+                let mut slot = slots[t].lock().unwrap();
+                let slot = &mut *slot;
+                if slot.eb.d() != shape.d {
+                    slot.eb = ExecBuffer::new(shape.d);
+                }
+                slot.select_ns = select_head(
+                    tasks[t],
+                    &qg_all[t * gd..(t + 1) * gd],
+                    shape,
+                    &mut slot.scratch,
+                );
+                cold_blocks_of(tasks[t], &slot.scratch, &mut slot.cold);
+                if slot.cold.is_empty() {
+                    // SAFETY: task `t` is unique within this scope, and
+                    // `wi` is mutably borrowed by `assemble_into` for
+                    // the scope's whole lifetime — the slices are
+                    // disjoint and live long enough.
+                    let mut out = unsafe { ptrs.slices(t, shape) };
+                    slot.stats =
+                        gather_head(tasks[t], shape, &slot.scratch, &mut slot.eb, &mut out);
+                    slot.stats.select_ns = slot.select_ns;
+                } else {
+                    n_cold.fetch_add(1, Ordering::Relaxed);
+                    // Full count installed before any job can decrement
+                    // it, so the countdown cannot hit zero early.
+                    pipe.inner.lock().unwrap().remaining[t] = slot.cold.len();
+                    let arena = tasks[t].index.arena();
+                    for &bid in &slot.cold {
+                        let arena = Arc::clone(arena);
+                        let pipe = Arc::clone(pipe);
+                        pool.submit_io(move || {
+                            // Countdown in a drop guard: a panicking
+                            // read still releases the task, so Phase B
+                            // can never hang on a lost decrement.
+                            struct Done {
+                                pipe: Arc<PipeState>,
+                                t: usize,
+                            }
+                            impl Drop for Done {
+                                fn drop(&mut self) {
+                                    let mut inner = self.pipe.inner.lock().unwrap();
+                                    inner.remaining[self.t] -= 1;
+                                    if inner.remaining[self.t] == 0 {
+                                        inner.ready.push_back(self.t);
+                                        self.pipe.cv.notify_one();
+                                    }
+                                }
+                            }
+                            let _done = Done { pipe, t };
+                            arena.prefetch(bid);
+                        });
+                    }
+                }
+            };
+            if self.parallel && n > 1 {
+                self.pool.scope_for_each(n, &select_run);
+            } else {
+                for t in 0..n {
+                    select_run(t);
+                }
+            }
+            let nc = n_cold.load(Ordering::Relaxed);
+            if nc > 0 {
+                let drain = |_j: usize| {
+                    let t = {
+                        let mut inner = pipe.inner.lock().unwrap();
+                        loop {
+                            if let Some(t) = inner.ready.pop_front() {
+                                break t;
+                            }
+                            inner = pipe.cv.wait(inner).unwrap();
+                        }
+                    };
+                    let mut slot = slots[t].lock().unwrap();
+                    let slot = &mut *slot;
+                    // SAFETY: each ready task index is popped exactly
+                    // once across the drain jobs, so `t` stays unique;
+                    // `wi` outlives the scope as above.
+                    let mut out = unsafe { ptrs.slices(t, shape) };
+                    slot.stats =
+                        gather_head(tasks[t], shape, &slot.scratch, &mut slot.eb, &mut out);
+                    slot.stats.select_ns = slot.select_ns;
+                };
+                if self.parallel && nc > 1 {
+                    self.pool.scope_for_each(nc, &drain);
+                } else {
+                    for j in 0..nc {
+                        drain(j);
+                    }
+                }
+            }
         } else {
-            for t in 0..n {
-                run(t);
+            let run = |t: usize| {
+                // Uncontended by construction: flat task `t` is the only
+                // user of slot `t` within this scope.
+                let mut slot = slots[t].lock().unwrap();
+                let slot = &mut *slot;
+                if slot.eb.d() != shape.d {
+                    slot.eb = ExecBuffer::new(shape.d);
+                }
+                // SAFETY: task `t` is unique within this scope, and `wi`
+                // is mutably borrowed by `assemble_into` for the whole
+                // scope lifetime — the slices are disjoint and live long
+                // enough.
+                let mut out = unsafe { ptrs.slices(t, shape) };
+                slot.stats = assemble_head(
+                    tasks[t],
+                    &qg_all[t * gd..(t + 1) * gd],
+                    shape,
+                    &mut slot.scratch,
+                    &mut slot.eb,
+                    &mut out,
+                );
+            };
+            if self.parallel && n > 1 {
+                self.pool.scope_for_each(n, &run);
+            } else {
+                for t in 0..n {
+                    run(t);
+                }
             }
         }
         let mut agg = AccessStats::default();

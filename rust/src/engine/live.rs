@@ -253,6 +253,32 @@ impl LiveEngine {
             }
         }
         self.spill_policy = Some(policy);
+        // Stage-decoupled decode pipeline on by default under spill:
+        // cold-page reads are issued on the pool's I/O lane the moment
+        // selection completes and gathers drain in completion order, so
+        // spill latency hides under attention compute within the step.
+        self.assembler.set_pipelined(true);
+    }
+
+    /// Arm/disarm the stage-decoupled (select → async I/O → gather)
+    /// decode pipeline explicitly. Enabled by default by
+    /// [`LiveEngine::enable_spill`]; bit-identical to the sequential
+    /// path either way (property-tested in `tests/spill.rs`).
+    pub fn set_pipelined_decode(&mut self, on: bool) {
+        self.assembler.set_pipelined(on);
+    }
+
+    /// Whether the pipelined decode executor is armed.
+    pub fn pipelined_decode(&self) -> bool {
+        self.assembler.pipelined()
+    }
+
+    /// Bound the spill staging area to `depth` pages — the pipeline's
+    /// prefetch-depth knob (`None` = unbounded). Oldest staged pages
+    /// are evicted first; eviction only costs a wasted prefetch, never
+    /// correctness (evicted pages fall back to the synchronous read).
+    pub fn set_pipeline_depth(&self, depth: Option<usize>) {
+        self.arena.set_staging_cap(depth);
     }
 
     /// Whether cold-tier spill is armed.
@@ -785,11 +811,25 @@ impl LiveEngine {
         self.metrics.set_gauge("arena_cold_bytes", self.arena.cold_bytes() as u64);
         self.metrics.set_gauge("arena_demoted_total", self.arena.demoted_total());
         self.metrics.set_gauge("arena_promoted_total", self.arena.promoted_total());
+        // Cross-step prefetch effectiveness: promotions whose page was
+        // already staged when the promoting step consumed it.
         self.metrics.set_ratio_gauge(
-            "spill_overlap_pct",
+            "spill_promote_staged_pct",
             self.arena.promoted_staged_total(),
             self.arena.promoted_total(),
         );
+        // Measured intra-step spill overlap: of every cold-tier page
+        // read on the decode path, the fraction served from the I/O
+        // lane's staging area — reads whose file I/O completed under
+        // attention/select compute instead of stalling the gather.
+        self.metrics.set_ratio_gauge(
+            "spill_overlap_pct",
+            self.arena.cold_reads_staged(),
+            self.arena.cold_reads_total(),
+        );
+        self.metrics.set_gauge("spill_staged_blocks", self.arena.staged_blocks() as u64);
+        self.metrics
+            .set_gauge("spill_staged_stale_dropped", self.arena.staged_stale_dropped());
         // Spill-codec gauges (with the Exact codec: compressed = 0 and
         // physical = logical + page headers).
         let spill = self.arena.spill();
@@ -903,6 +943,12 @@ impl LiveEngine {
             // the promotion happened off the critical path; this is
             // just the cheap install.
             self.promote_prefetched(ids);
+            // New staging epoch: pages staged this step or last step
+            // stay servable (double-buffered — in-flight reads from the
+            // previous selection still land usefully); anything older
+            // was never consumed and is dropped, so the staging
+            // footprint stays O(depth) over a long run, not O(steps).
+            self.arena.begin_staging_epoch();
         }
         // Pad rows replicate the first live session (outputs discarded).
         let row_id = |i: usize| ids[i.min(ids.len() - 1)];
@@ -1051,7 +1097,11 @@ impl LiveEngine {
                             self.metrics
                                 .inc("spill_prefetch_blocks", want_cold.len() as u64);
                             let arena = Arc::clone(&self.arena);
-                            self.pool.submit(move || {
+                            // Dedicated I/O lane: a backlog of slow
+                            // cold-tier reads can never occupy compute
+                            // workers, and the next layer's fan-out can
+                            // never queue behind these reads.
+                            self.pool.submit_io(move || {
                                 for bid in want_cold {
                                     arena.prefetch(bid);
                                 }
@@ -1063,6 +1113,7 @@ impl LiveEngine {
                     self.metrics.inc("hit_blocks", stats.hit_blocks as u64);
                     self.metrics.inc("miss_blocks", stats.miss_blocks as u64);
                     self.metrics.inc("cold_hit_blocks", stats.cold_blocks as u64);
+                    self.metrics.inc("cold_staged_blocks", stats.cold_staged_blocks as u64);
                     self.metrics.inc("spill_bytes", stats.spill_bytes as u64);
                     self.metrics.inc("assembled_heads", (b * kvh) as u64);
                     let t_mg = Instant::now();

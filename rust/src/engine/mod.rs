@@ -8,7 +8,10 @@ pub mod cluster;
 pub mod live;
 pub mod sim;
 
-pub use assemble::{AssembleShape, BatchAssembler, HeadTask};
+pub use assemble::{
+    assemble_head, cold_blocks_of, gather_head, select_head, AssembleShape, BatchAssembler,
+    HeadSlices, HeadTask,
+};
 pub use cluster::{ClusterConfig, ClusterEngine, ClusterRunReport};
 pub use live::{AttnMode, LiveEngine, SessionSnapshot};
 pub use sim::{simulate_cluster, simulate_cluster_detailed, simulate_load, ClusterReport, LoadReport};

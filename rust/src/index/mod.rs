@@ -48,6 +48,10 @@ impl ZoneSelection {
 #[derive(Default)]
 pub struct SelectScratch {
     scores: Vec<f32>,
+    /// `[g, m]` per-query centroid scores from the GQA-batched gemm path
+    /// (select_group_into with g > 1); reduced into `scores` by
+    /// `group_max_reduce`.
+    gm: Vec<f32>,
     order: Vec<u32>,
     sel: ZoneSelection,
 }
@@ -1245,7 +1249,22 @@ impl WaveIndex {
         let cents = self.meta.centroids_flat();
         scratch.scores.clear();
         scratch.scores.resize(m, 0.0);
-        kernels::active().group_max_scores(qs, g, cents, d, &mut scratch.scores);
+        if g > 1 {
+            // GQA-batched path: one gemm_nt over the whole query group
+            // (all g query heads sharing this KV head score every
+            // centroid in one blocked pass), then a comparison-only
+            // column reduce. Bit-identical to the fused kernel — gemm's
+            // row tiling preserves the per-(query, centroid) reduction
+            // order, and the reduce replays the same strict-`>` query-
+            // order max (property-tested in kernels/mod.rs).
+            scratch.gm.clear();
+            scratch.gm.resize(g * m, 0.0);
+            let bk = kernels::active();
+            bk.gemm_nt(qs, cents, d, &mut scratch.gm);
+            bk.group_max_reduce(&scratch.gm, g, m, &mut scratch.scores);
+        } else {
+            kernels::active().group_max_scores(qs, g, cents, d, &mut scratch.scores);
+        }
         self.select_from_scores(r, e, scratch);
         &mut scratch.sel
     }
@@ -1261,7 +1280,7 @@ impl WaveIndex {
         let m = self.meta.m();
         let r = r.min(m);
         let e = e.min(m - r);
-        let SelectScratch { scores, order, sel } = scratch;
+        let SelectScratch { scores, order, sel, .. } = scratch;
         sel.retrieval.clear();
         sel.estimation.clear();
         if r + e == 0 {

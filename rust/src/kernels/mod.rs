@@ -180,6 +180,28 @@ impl Backend {
         }
     }
 
+    /// Reduce a `[g, m]` GEMM score block to the per-column GQA group
+    /// max: `out[c] = max_i gm[i*m + c]`. Comparison-only (no arithmetic),
+    /// so it is backend-invariant; paired with [`Backend::gemm_nt`] it
+    /// produces bit-identical results to [`Backend::group_max_scores`] —
+    /// same per-(query, row) dots (gemm's 64-row tiles preserve both the
+    /// 4-row block positions and the remainder-row set of the direct
+    /// path), same strict-`>` first-max in query order (NaN scores never
+    /// replace the running max, mirroring the direct path).
+    #[inline]
+    pub fn group_max_reduce(&self, gm: &[f32], g: usize, m: usize, out: &mut [f32]) {
+        debug_assert_eq!(gm.len(), g * m);
+        debug_assert_eq!(out.len(), m);
+        out.fill(f32::NEG_INFINITY);
+        for gi in 0..g {
+            for (o, &s) in out.iter_mut().zip(&gm[gi * m..(gi + 1) * m]) {
+                if s > *o {
+                    *o = s;
+                }
+            }
+        }
+    }
+
     /// Blocked `[n,d] x [m,d]^T` GEMM: `out[i*m + j] = a_i · b_j`.
     /// B is tiled in blocks of rows so a tile stays cache-hot across all
     /// A rows; each output element is one `matvec_nt` row dot, so the
@@ -381,6 +403,30 @@ mod tests {
         let mut out = vec![0.0f32; 2];
         Backend::Scalar.group_max_scores(&qs, 2, &rows, d, &mut out);
         assert_eq!(out, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn gemm_plus_reduce_matches_group_max_bitwise() {
+        // The GQA-batched selection path (one gemm_nt over the group's
+        // queries + a comparison-only column reduce) must equal the
+        // fused group_max_scores kernel bit-for-bit on the active
+        // backend — this is what keeps batched centroid scoring
+        // bit-identical to the per-head path.
+        let bk = active();
+        let d = 24;
+        for &(g, m) in &[(1usize, 5usize), (2, 67), (4, 130), (3, 64)] {
+            let qs: Vec<f32> = (0..g * d).map(|x| (x as f32 * 0.23).sin()).collect();
+            let rows: Vec<f32> = (0..m * d).map(|x| (x as f32 * 0.13).cos()).collect();
+            let mut direct = vec![0.0f32; m];
+            bk.group_max_scores(&qs, g, &rows, d, &mut direct);
+            let mut gm = vec![0.0f32; g * m];
+            bk.gemm_nt(&qs, &rows, d, &mut gm);
+            let mut reduced = vec![0.0f32; m];
+            bk.group_max_reduce(&gm, g, m, &mut reduced);
+            let db: Vec<u32> = direct.iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = reduced.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(db, rb, "g={g} m={m}: batched scoring diverged from fused kernel");
+        }
     }
 
     #[test]

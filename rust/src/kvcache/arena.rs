@@ -592,6 +592,47 @@ impl BlockArena {
         self.spill.stage(id)
     }
 
+    /// Open a new intra-step staging epoch (pipelined decode calls this
+    /// once per decode step). Staged pages survive exactly one epoch
+    /// turnover (double buffering); anything older was selected by a
+    /// prior step and never consumed — it is dropped and counted.
+    pub fn begin_staging_epoch(&self) {
+        self.spill.begin_staging_epoch();
+    }
+
+    /// Bound the staging area to `cap` pages (oldest evicted first).
+    pub fn set_staging_cap(&self, cap: Option<usize>) {
+        self.spill.set_staging_cap(cap);
+    }
+
+    /// Fault-injection shim: delay every cold-page read by `us`
+    /// microseconds (+ a deterministic per-id jitter in `0..jitter_us`).
+    pub fn set_read_fault(&self, us: u64, jitter_us: u64) {
+        self.spill.set_read_fault(us, jitter_us);
+    }
+
+    /// Staged pages dropped as stale (never consumed) or evicted by the
+    /// staging cap.
+    pub fn staged_stale_dropped(&self) -> u64 {
+        self.spill.staged_stale_dropped()
+    }
+
+    /// Cold-page KV reads ever served (staged + synchronous file).
+    pub fn cold_reads_total(&self) -> u64 {
+        self.spill.cold_reads_total()
+    }
+
+    /// Cold-page KV reads served from the staging area — i.e. reads
+    /// whose file I/O completed under compute instead of stalling it.
+    pub fn cold_reads_staged(&self) -> u64 {
+        self.spill.cold_reads_staged()
+    }
+
+    /// Pages currently staged for promotion or pipelined gather.
+    pub fn staged_blocks(&self) -> usize {
+        self.spill.staged_blocks()
+    }
+
     /// Blocks currently resident in the cold tier.
     pub fn cold_blocks(&self) -> usize {
         self.spill.cold_blocks()

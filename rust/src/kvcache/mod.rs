@@ -42,7 +42,7 @@ pub use spill::{
     Int4AngleCodec, Int8AngleCodec, LargestColdFirst, LowRankKCodec, PageCodec,
     SpillCandidate, SpillPolicy, SpillStore,
 };
-pub use store::{BlockRef, HeadStore, KvStore};
+pub use store::{BlockRef, HeadStore, KvReadTier, KvStore};
 
 /// Tokens that fit in one physical block of `block_bytes`, given the head
 /// dimension and element width (a block holds both K and V halves).

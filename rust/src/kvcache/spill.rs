@@ -549,6 +549,20 @@ struct SpillFile {
     free: Vec<u32>,
 }
 
+/// The async-prefetch staging area: decoded pages awaiting consumption,
+/// tagged with the staging epoch they were read in. The engine bumps
+/// the epoch once per decode step ([`SpillStore::begin_staging_epoch`]),
+/// which drops pages staged two or more epochs ago — a selection that
+/// was never consumed must not accumulate (double-buffered: the current
+/// and the immediately previous epoch survive, so pages staged late in
+/// step N still serve step N+1's promotions). An optional cap bounds
+/// the footprint within an epoch as well.
+struct StagingArea {
+    map: HashMap<u64, (u64, BlockData)>,
+    epoch: u64,
+    cap: Option<usize>,
+}
+
 /// Cold-tier block store keyed by engine-global block ids.
 pub struct SpillStore {
     d: usize,
@@ -563,14 +577,28 @@ pub struct SpillStore {
     codec: AtomicU8,
     file: Mutex<SpillFile>,
     /// Async-prefetch staging area: pages read ahead of promotion by
-    /// pool jobs, consumed (without a second file read) when the block
-    /// is promoted.
-    staged: Mutex<HashMap<u64, BlockData>>,
+    /// I/O-lane jobs, consumed (without a second file read) when the
+    /// block is promoted or assembled.
+    staged: Mutex<StagingArea>,
     writes_total: AtomicU64,
     reads_total: AtomicU64,
     dropped_total: AtomicU64,
     staged_total: AtomicU64,
     staged_hits: AtomicU64,
+    /// Staged pages dropped unconsumed (epoch expiry or cap eviction).
+    staged_stale_dropped: AtomicU64,
+    /// Cold reads through the assembly data path (`peek_kv_into`).
+    cold_reads_total: AtomicU64,
+    /// Of those, reads served from the staging area — no file stall.
+    /// `cold_reads_staged / cold_reads_total` is the measured intra-step
+    /// spill-overlap ratio.
+    cold_reads_staged: AtomicU64,
+    /// Fault-injection shim: artificial delay (µs) before every file
+    /// page read, plus an id-keyed jitter bound that scrambles the
+    /// completion order of concurrent staging reads. Test-only knobs;
+    /// zero (the default) is a no-op.
+    read_delay_us: AtomicU64,
+    read_jitter_us: AtomicU64,
     /// Physical bytes (header + encoded payload) of resident cold pages.
     physical_bytes: AtomicU64,
     /// Resident cold pages written with a lossy codec.
@@ -591,12 +619,17 @@ impl SpillStore {
                 index: HashMap::new(),
                 free: Vec::new(),
             }),
-            staged: Mutex::new(HashMap::new()),
+            staged: Mutex::new(StagingArea { map: HashMap::new(), epoch: 0, cap: None }),
             writes_total: AtomicU64::new(0),
             reads_total: AtomicU64::new(0),
             dropped_total: AtomicU64::new(0),
             staged_total: AtomicU64::new(0),
             staged_hits: AtomicU64::new(0),
+            staged_stale_dropped: AtomicU64::new(0),
+            cold_reads_total: AtomicU64::new(0),
+            cold_reads_staged: AtomicU64::new(0),
+            read_delay_us: AtomicU64::new(0),
+            read_jitter_us: AtomicU64::new(0),
             physical_bytes: AtomicU64::new(0),
             compressed_blocks: AtomicU64::new(0),
         }
@@ -619,6 +652,54 @@ impl SpillStore {
     /// The codec applied when a write is lossy-eligible.
     pub fn codec_tag(&self) -> CodecTag {
         CodecTag::from_u8(self.codec.load(Ordering::Relaxed)).unwrap_or(CodecTag::Exact)
+    }
+
+    /// Begin a new staging epoch — the engine calls this once per
+    /// decode step. Pages staged two or more epochs ago were selected
+    /// but never consumed; they are dropped here (counted in
+    /// [`SpillStore::staged_stale_dropped`]), so a long run's staging
+    /// footprint stays O(per-step depth), not O(steps). Double-buffered
+    /// on purpose: the current and the immediately previous epoch both
+    /// survive, so pages staged late in step N still serve step N+1.
+    pub fn begin_staging_epoch(&self) {
+        let mut s = self.staged.lock().unwrap();
+        s.epoch += 1;
+        let cutoff = s.epoch.saturating_sub(1);
+        let before = s.map.len();
+        s.map.retain(|_, (e, _)| *e >= cutoff);
+        let dropped = (before - s.map.len()) as u64;
+        if dropped > 0 {
+            self.staged_stale_dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
+    }
+
+    /// Cap the staging area's resident pages (`None` = epoch-bounded
+    /// only). When the cap binds, the oldest-epoch entries are evicted
+    /// first (counted as stale drops) — staging is purely an overlap
+    /// optimization, so eviction costs a re-read, never correctness.
+    pub fn set_staging_cap(&self, cap: Option<usize>) {
+        self.staged.lock().unwrap().cap = cap;
+    }
+
+    /// Fault-injection shim: delay every staging/stall page read by
+    /// `us` microseconds plus an id-keyed pseudo-random jitter in
+    /// `[0, jitter_us)` — the jitter scrambles the completion order of
+    /// concurrently staged pages, which the pipelined-decode property
+    /// tests use to prove merge order is completion-order independent.
+    /// Zero/zero (the default) is a no-op.
+    pub fn set_read_fault(&self, us: u64, jitter_us: u64) {
+        self.read_delay_us.store(us, Ordering::Relaxed);
+        self.read_jitter_us.store(jitter_us, Ordering::Relaxed);
+    }
+
+    fn fault_delay(&self, id: u64) {
+        let base = self.read_delay_us.load(Ordering::Relaxed);
+        let jitter = self.read_jitter_us.load(Ordering::Relaxed);
+        if base == 0 && jitter == 0 {
+            return;
+        }
+        let j = if jitter == 0 { 0 } else { id.wrapping_mul(0x9E37_79B9_7F4A_7C15) % jitter };
+        std::thread::sleep(std::time::Duration::from_micros(base + j));
     }
 
     fn read_header(page: &[u8]) -> (CodecTag, usize) {
@@ -724,20 +805,36 @@ impl SpillStore {
     /// directly to `k_out` / `v_out` (the cold-read data path of
     /// execution-buffer assembly). Exact pages stream straight from the
     /// page bytes; compressed pages decode through their codec first.
-    /// Residency is unchanged. Returns false if `id` is not cold.
+    /// Residency is unchanged. Returns `None` if `id` is not cold,
+    /// `Some(staged)` otherwise — `staged` reports whether the read was
+    /// served from the staging area (no file stall: the intra-step
+    /// overlap win) or had to decode the page synchronously.
     pub fn peek_kv_into(
         &self,
         id: u64,
         n_elems: usize,
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
-    ) -> bool {
+    ) -> Option<bool> {
         let f = self.file.lock().unwrap();
-        let Some(&page) = f.index.get(&id) else {
-            return false;
-        };
+        let &page = f.index.get(&id)?;
         let half = self.tpb * self.d;
         debug_assert!(n_elems <= half);
+        self.cold_reads_total.fetch_add(1, Ordering::Relaxed);
+        // Staged-first: an I/O-lane prefetch that already decoded this
+        // page serves the read with no file stall — the intra-step
+        // overlap win. Staged bytes are decoded from the same page, so
+        // the result is bit-identical either way. Lock order: file →
+        // staged.
+        if let Some((_, data)) = self.staged.lock().unwrap().map.get(&id) {
+            k_out.extend_from_slice(&data.keys[..n_elems]);
+            v_out.extend_from_slice(&data.vals[..n_elems]);
+            self.cold_reads_staged.fetch_add(1, Ordering::Relaxed);
+            return Some(true);
+        }
+        // A genuine cold-hit stall: the fault shim charges it while the
+        // file lock is held, like a real blocking page read would.
+        self.fault_delay(id);
         let start = page as usize * self.page_bytes;
         let (tag, _plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
         if tag == CodecTag::Exact {
@@ -760,7 +857,7 @@ impl SpillStore {
             v_out.extend_from_slice(&tmp.vals[..n_elems]);
         }
         self.reads_total.fetch_add(1, Ordering::Relaxed);
-        true
+        Some(false)
     }
 
     /// Async-prefetch one page into the staging area (no residency
@@ -768,6 +865,9 @@ impl SpillStore {
     /// Returns false if `id` is not cold — a block promoted or dropped
     /// while the prefetch job was queued is simply skipped.
     pub fn stage(&self, id: u64) -> bool {
+        // Fault shim sleeps BEFORE the file lock: a slow staging read
+        // occupies only its I/O-lane worker, never the store.
+        self.fault_delay(id);
         let f = self.file.lock().unwrap();
         let Some(&page) = f.index.get(&id) else {
             return false;
@@ -779,7 +879,26 @@ impl SpillStore {
         self.staged_total.fetch_add(1, Ordering::Relaxed);
         // lock order: file → staged (held file lock keeps the page from
         // being promoted/dropped between the read and the insert)
-        self.staged.lock().unwrap().insert(id, data);
+        let mut s = self.staged.lock().unwrap();
+        let epoch = s.epoch;
+        s.map.insert(id, (epoch, data));
+        if let Some(cap) = s.cap {
+            let mut evicted = 0u64;
+            while s.map.len() > cap.max(1) {
+                // evict the oldest-epoch (then lowest-id) entry first
+                let victim = s.map.iter().map(|(k, (e, _))| (*e, *k)).min().map(|(_, k)| k);
+                match victim {
+                    Some(k) => {
+                        s.map.remove(&k);
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+            if evicted > 0 {
+                self.staged_stale_dropped.fetch_add(evicted, Ordering::Relaxed);
+            }
+        }
         true
     }
 
@@ -795,9 +914,9 @@ impl SpillStore {
         let start = page as usize * self.page_bytes;
         let (tag, plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
         self.retire_page(tag, plen);
-        let staged = self.staged.lock().unwrap().remove(&id);
+        let staged = self.staged.lock().unwrap().map.remove(&id);
         match staged {
-            Some(data) => {
+            Some((_, data)) => {
                 out.keys.copy_from_slice(&data.keys);
                 out.vals.copy_from_slice(&data.vals);
                 out.pos.copy_from_slice(&data.pos);
@@ -824,7 +943,7 @@ impl SpillStore {
         let start = page as usize * self.page_bytes;
         let (tag, plen) = Self::read_header(&f.data[start..start + PAGE_HEADER_BYTES]);
         self.retire_page(tag, plen);
-        self.staged.lock().unwrap().remove(&id);
+        self.staged.lock().unwrap().map.remove(&id);
         self.dropped_total.fetch_add(1, Ordering::Relaxed);
         true
     }
@@ -866,7 +985,7 @@ impl SpillStore {
 
     /// Pages currently staged by async prefetch.
     pub fn staged_blocks(&self) -> usize {
-        self.staged.lock().unwrap().len()
+        self.staged.lock().unwrap().map.len()
     }
 
     pub fn writes_total(&self) -> u64 {
@@ -883,6 +1002,23 @@ impl SpillStore {
 
     pub fn staged_hits(&self) -> u64 {
         self.staged_hits.load(Ordering::Relaxed)
+    }
+
+    /// Staged pages dropped unconsumed (epoch expiry or cap eviction).
+    pub fn staged_stale_dropped(&self) -> u64 {
+        self.staged_stale_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Cold reads through the assembly data path (`peek_kv_into`).
+    pub fn cold_reads_total(&self) -> u64 {
+        self.cold_reads_total.load(Ordering::Relaxed)
+    }
+
+    /// Of [`SpillStore::cold_reads_total`], reads served from the
+    /// staging area without a file stall — the numerator of the
+    /// measured intra-step spill-overlap ratio.
+    pub fn cold_reads_staged(&self) -> u64 {
+        self.cold_reads_staged.load(Ordering::Relaxed)
     }
 }
 
@@ -1176,6 +1312,76 @@ mod tests {
     }
 
     #[test]
+    fn staged_pages_serve_kv_prefix_reads_without_a_file_stall() {
+        let s = SpillStore::new(4, 4);
+        let b = filled(4, 4, 9);
+        s.write(1, &b);
+        s.write(2, &filled(4, 4, 10));
+        assert!(s.stage(1));
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        assert_eq!(s.peek_kv_into(1, 8, &mut k, &mut v), Some(true));
+        assert_eq!(
+            k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.keys[..8].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "staged serve must be bit-identical to the file read"
+        );
+        assert_eq!(s.cold_reads_total(), 1);
+        assert_eq!(s.cold_reads_staged(), 1);
+        // a staged read does not consume the page — promotion still hits
+        assert_eq!(s.staged_blocks(), 1);
+        // an unstaged block stalls on the file instead
+        k.clear();
+        v.clear();
+        assert_eq!(s.peek_kv_into(2, 8, &mut k, &mut v), Some(false));
+        assert_eq!(s.cold_reads_total(), 2);
+        assert_eq!(s.cold_reads_staged(), 1);
+    }
+
+    #[test]
+    fn staging_epochs_drop_stale_pages_double_buffered() {
+        let s = SpillStore::new(4, 4);
+        for id in 0..6u64 {
+            s.write(id, &filled(4, 4, id as u32));
+        }
+        s.begin_staging_epoch(); // epoch 1
+        assert!(s.stage(0));
+        assert!(s.stage(1));
+        s.begin_staging_epoch(); // epoch 2: epoch-1 pages survive (double buffer)
+        assert_eq!(s.staged_blocks(), 2);
+        assert_eq!(s.staged_stale_dropped(), 0);
+        assert!(s.stage(2));
+        s.begin_staging_epoch(); // epoch 3: epoch-1 pages are now stale
+        assert_eq!(s.staged_blocks(), 1, "only the epoch-2 page survives");
+        assert_eq!(s.staged_stale_dropped(), 2);
+        s.begin_staging_epoch(); // epoch 4: epoch-2 page expires too
+        assert_eq!(s.staged_blocks(), 0);
+        assert_eq!(s.staged_stale_dropped(), 3);
+        // a stale-dropped page falls back to a correct (file) promotion
+        let mut out = BlockData::zeroed(4, 4);
+        assert_eq!(s.take_into(0, &mut out), Some(false));
+        assert_eq!(bits(&out), bits(&filled(4, 4, 0)));
+    }
+
+    #[test]
+    fn staging_cap_bounds_footprint_evicting_oldest_first() {
+        let s = SpillStore::new(4, 4);
+        s.set_staging_cap(Some(2));
+        for id in 0..5u64 {
+            s.write(id, &filled(4, 4, id as u32));
+        }
+        s.begin_staging_epoch();
+        assert!(s.stage(0));
+        s.begin_staging_epoch();
+        for id in 1..5u64 {
+            assert!(s.stage(id));
+            assert!(s.staged_blocks() <= 2, "cap must bind at every insert");
+        }
+        // oldest (epoch-1 id 0, then lowest current-epoch ids) evicted
+        assert_eq!(s.staged_blocks(), 2);
+        assert_eq!(s.staged_stale_dropped(), 3);
+    }
+
+    #[test]
     fn pages_recycle_and_peek_does_not_change_residency() {
         let s = SpillStore::new(4, 4);
         s.write(1, &filled(4, 4, 1));
@@ -1187,7 +1393,7 @@ mod tests {
         // direct kv-prefix read matches the full-page deserialization
         let b2 = filled(4, 4, 2);
         let (mut k, mut v) = (Vec::new(), Vec::new());
-        assert!(s.peek_kv_into(2, 10, &mut k, &mut v));
+        assert_eq!(s.peek_kv_into(2, 10, &mut k, &mut v), Some(false));
         assert_eq!(
             k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             b2.keys[..10].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
@@ -1196,7 +1402,7 @@ mod tests {
             v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             b2.vals[..10].iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
-        assert!(!s.peek_kv_into(99, 1, &mut k, &mut v));
+        assert!(s.peek_kv_into(99, 1, &mut k, &mut v).is_none());
         assert!(s.drop_block(1));
         assert!(!s.drop_block(1));
         // a new write reuses the freed page: the file does not grow
@@ -1216,7 +1422,7 @@ mod tests {
         let mut full = BlockData::zeroed(tpb, d);
         assert!(s.peek_into(1, &mut full));
         let (mut k, mut v) = (Vec::new(), Vec::new());
-        assert!(s.peek_kv_into(1, 2 * d, &mut k, &mut v));
+        assert_eq!(s.peek_kv_into(1, 2 * d, &mut k, &mut v), Some(false));
         assert_eq!(
             k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             full.keys[..2 * d].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),

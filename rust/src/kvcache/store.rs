@@ -31,6 +31,18 @@
 use super::arena::{AllocError, BlockArena, BlockData, TenantId, DEFAULT_TENANT};
 use std::sync::Arc;
 
+/// Where [`HeadStore::copy_block_kv_tiered`] found a block's bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvReadTier {
+    /// Hot-tier storage (private or shared) — no spill involved.
+    Hot,
+    /// Cold block served from the staging area: its page read ran on
+    /// the I/O lane and completed under compute (overlapped).
+    ColdStaged,
+    /// Cold block decoded synchronously from the page file (a stall).
+    ColdFile,
+}
+
 /// A reference to a span of tokens inside one physical arena block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockRef {
@@ -250,18 +262,36 @@ impl HeadStore {
     /// unchanged — this is the cold-read data path the wave buffer's
     /// assembly falls back to). Returns whether the block was hot.
     pub fn copy_block_kv(&self, r: BlockRef, k_out: &mut Vec<f32>, v_out: &mut Vec<f32>) -> bool {
+        self.copy_block_kv_tiered(r, k_out, v_out) == KvReadTier::Hot
+    }
+
+    /// [`HeadStore::copy_block_kv`] with tier attribution: reports
+    /// whether the bytes came from hot storage, the cold staging area
+    /// (an I/O-lane read that completed under compute — no stall), or a
+    /// synchronous cold-page decode (a genuine spill stall). The bytes
+    /// are bit-identical in all three cases for an exact page, and
+    /// identical between the two cold paths for every codec (staged
+    /// pages are decoded from the same page bytes).
+    pub fn copy_block_kv_tiered(
+        &self,
+        r: BlockRef,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) -> KvReadTier {
         let n = r.len as usize * self.arena.d();
         match &self.owned(r).data {
             Some(p) => {
                 let d = p.data();
                 k_out.extend_from_slice(&d.keys[..n]);
                 v_out.extend_from_slice(&d.vals[..n]);
-                true
+                KvReadTier::Hot
             }
             None => {
-                let found = self.arena.spill().peek_kv_into(r.block, n, k_out, v_out);
-                assert!(found, "cold block {} missing from the spill store", r.block);
-                false
+                match self.arena.spill().peek_kv_into(r.block, n, k_out, v_out) {
+                    Some(true) => KvReadTier::ColdStaged,
+                    Some(false) => KvReadTier::ColdFile,
+                    None => panic!("cold block {} missing from the spill store", r.block),
+                }
             }
         }
     }
@@ -457,6 +487,18 @@ impl HeadStore {
         self.blocks.iter().filter(|b| b.data.is_none()).count()
     }
 
+    /// Refs of this handle's cold blocks, in checkout order. The
+    /// pressure harness enumerates these to model the pipelined
+    /// stage-then-gather read path ([`HeadStore::copy_block_kv_tiered`]).
+    pub fn cold_block_refs(&self) -> Vec<BlockRef> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.data.is_none())
+            .map(|(i, b)| BlockRef { block: b.id, idx: i as u32, len: b.len })
+            .collect()
+    }
+
     /// Blocks of this handle that are shared (refcounted) views.
     pub fn n_shared_blocks(&self) -> usize {
         self.blocks
@@ -581,6 +623,27 @@ impl KvStore {
     /// Cold blocks held across all heads.
     pub fn n_cold_blocks(&self) -> usize {
         self.stores.iter().map(|s| s.n_cold_blocks()).sum()
+    }
+
+    /// Up to `max` cold refs across heads, paired with the flat head
+    /// index (`layer * kv_heads + kv_head`) owning each — deterministic
+    /// head order, checkout order within a head.
+    pub fn cold_refs(&self, max: usize) -> Vec<(usize, BlockRef)> {
+        let mut out = Vec::new();
+        'heads: for (hi, s) in self.stores.iter().enumerate() {
+            for r in s.cold_block_refs() {
+                if out.len() >= max {
+                    break 'heads;
+                }
+                out.push((hi, r));
+            }
+        }
+        out
+    }
+
+    /// Head store by flat index (`layer * kv_heads + kv_head`).
+    pub fn head_flat(&self, i: usize) -> &HeadStore {
+        &self.stores[i]
     }
 }
 

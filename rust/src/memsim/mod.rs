@@ -199,10 +199,17 @@ pub fn decode_step(
     br.total_s = if profile.overlap_transfers {
         // PCIe + spill prefetch + async CPU work overlap GPU compute
         // (wave buffer one level up, prefetch worker one level down).
+        // Only the *measured* overlapped fraction of spill time hides
+        // under the max (the pipelined executor's intra-step
+        // spill_overlap_pct); the un-overlapped remainder is a gather
+        // stall and serializes after it.
+        let spill_hidden = br.spill_s * profile.spill_overlap_frac;
+        let spill_stall = br.spill_s - spill_hidden;
         gpu_s
             .max(br.pcie_s)
-            .max(br.spill_s)
+            .max(spill_hidden)
             .max(br.cpu_s + if profile.async_update { 0.0 } else { mgmt_s })
+            + spill_stall
             + if profile.async_update { 0.0 } else { mgmt_s }
             + br.overhead_s
     } else {
@@ -388,6 +395,35 @@ mod tests {
             decode_throughput(&m, &hw, &retroinfer_spilled_compressed(0.85, 0.9, 1.0), ctx, b)
                 .unwrap();
         assert_eq!(t_unit, t_exact);
+    }
+
+    #[test]
+    fn partial_spill_overlap_serializes_the_remainder() {
+        let (m, hw) = setup();
+        let ctx = 1 << 20;
+        let b = 4;
+        let p = retroinfer_spilled(0.85, 0.9);
+        let t_full = decode_throughput(&m, &hw, &p, ctx, b).unwrap();
+        let t_half = decode_throughput(&m, &hw, &p.clone().with_spill_overlap(0.5), ctx, b).unwrap();
+        let t_none = decode_throughput(&m, &hw, &p.clone().with_spill_overlap(0.0), ctx, b).unwrap();
+        assert!(t_half <= t_full, "less overlap cannot be faster: {t_half} vs {t_full}");
+        assert!(t_none <= t_half, "monotone in the overlap fraction: {t_none} vs {t_half}");
+        // the un-overlapped stall must visibly serialize: zero overlap
+        // adds min(spill_s, rest-of-max) on top of the composed step
+        let st_full = decode_step(&m, &hw, &p, ctx, b);
+        let st_none = decode_step(&m, &hw, &p.clone().with_spill_overlap(0.0), ctx, b);
+        assert!(st_full.spill_s > 0.0);
+        assert!(
+            st_none.total_s > st_full.total_s,
+            "a fully-serialized spill term must lengthen the step: {} vs {}",
+            st_none.total_s,
+            st_full.total_s
+        );
+        // overlap_frac 1.0 composes exactly as before (default unchanged)
+        assert_eq!(
+            decode_throughput(&m, &hw, &p.clone().with_spill_overlap(1.0), ctx, b).unwrap(),
+            t_full
+        );
     }
 
     #[test]

@@ -34,6 +34,12 @@ pub struct SystemProfile {
     /// proportionally fewer bytes over the spill channel, scaling its
     /// effective bandwidth by 1/ratio. 1.0 = exact (incompressible).
     pub spill_codec_ratio: f64,
+    /// Fraction of spill-channel time hidden under compute within the
+    /// step (the pipelined decode executor's *measured* intra-step
+    /// `spill_overlap_pct`, from the pressure harness): the overlapped
+    /// share joins the overlap max, the remainder serializes after it.
+    /// 1.0 = fully hidden (the pre-pipeline optimistic assumption).
+    pub spill_overlap_frac: f64,
     /// Fraction of per-sequence KV bytes deduplicated across the batch
     /// by cross-session prefix sharing (refcounted blocks + the shared
     /// GPU prefix cache): those bytes are resident once per batch, and
@@ -76,6 +82,14 @@ impl SystemProfile {
         self.est_frac = f;
         self
     }
+
+    /// Feed a *measured* intra-step spill-overlap ratio (e.g. the
+    /// pressure harness's `spill_overlap_pct / 100`) into the overlap
+    /// composition. Clamped to [0, 1].
+    pub fn with_spill_overlap(mut self, f: f64) -> Self {
+        self.spill_overlap_frac = f.clamp(0.0, 1.0);
+        self
+    }
 }
 
 fn base(name: &'static str) -> SystemProfile {
@@ -91,6 +105,7 @@ fn base(name: &'static str) -> SystemProfile {
         pcie_fetch_frac: 0.0,
         spill_frac: 0.0,
         spill_codec_ratio: 1.0,
+        spill_overlap_frac: 1.0,
         shared_prefix_frac: 0.0,
         hit_ratio: 0.0,
         est_frac: 0.0,

@@ -7,6 +7,13 @@
 //! attention computation"), by the engine's per-head execution-buffer
 //! fan-out ([`ThreadPool::scope_for_each`]) and by experiment harnesses
 //! for parallel trials.
+//!
+//! The pool has two lanes: the compute lane (`submit`, the scoped
+//! fan-outs) and a dedicated I/O lane (`submit_io`) with its own queue
+//! and worker(s). Spill-page reads ride the I/O lane so a backlog of
+//! slow cold-tier reads can never occupy compute workers, and a
+//! compute fan-out can never delay the staging reads it is waiting to
+//! overlap with. `wait_idle` remains a barrier over BOTH lanes.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -18,8 +25,14 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
     available: Condvar,
-    /// jobs submitted but not yet finished
+    /// dedicated I/O lane: its own queue + condvar, drained only by
+    /// the I/O worker(s) — compute workers never pull from it
+    io_queue: Mutex<VecDeque<Job>>,
+    io_available: Condvar,
+    /// jobs submitted but not yet finished, across BOTH lanes
     in_flight: AtomicUsize,
+    /// I/O-lane jobs submitted but not yet finished (diagnostics)
+    io_in_flight: AtomicUsize,
     done: Condvar,
     shutdown: Mutex<bool>,
     /// jobs that panicked (workers survive; scopes turn this into a
@@ -27,18 +40,30 @@ struct Shared {
     panicked: AtomicUsize,
 }
 
-/// Fixed-size worker pool with a `wait_idle` barrier.
+/// Fixed-size worker pool with a `wait_idle` barrier and a dedicated
+/// I/O lane ([`ThreadPool::submit_io`]).
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    io_workers: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// `n_threads` compute workers plus one dedicated I/O worker.
     pub fn new(n_threads: usize) -> Self {
+        Self::with_io_threads(n_threads, 1)
+    }
+
+    /// `n_threads` compute workers plus `io_threads` dedicated I/O
+    /// workers (min 1 each — `submit_io` must always make progress).
+    pub fn with_io_threads(n_threads: usize, io_threads: usize) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
+            io_queue: Mutex::new(VecDeque::new()),
+            io_available: Condvar::new(),
             in_flight: AtomicUsize::new(0),
+            io_in_flight: AtomicUsize::new(0),
             done: Condvar::new(),
             shutdown: Mutex::new(false),
             panicked: AtomicUsize::new(0),
@@ -46,13 +71,19 @@ impl ThreadPool {
         let workers = (0..n_threads.max(1))
             .map(|_| {
                 let s = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(s))
+                std::thread::spawn(move || worker_loop(s, Lane::Compute))
             })
             .collect();
-        ThreadPool { shared, workers }
+        let io_workers = (0..io_threads.max(1))
+            .map(|_| {
+                let s = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(s, Lane::Io))
+            })
+            .collect();
+        ThreadPool { shared, workers, io_workers }
     }
 
-    /// Enqueue a job for asynchronous execution.
+    /// Enqueue a job for asynchronous execution on the compute lane.
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
         {
@@ -62,7 +93,22 @@ impl ThreadPool {
         self.shared.available.notify_one();
     }
 
-    /// Block until every submitted job has completed.
+    /// Enqueue a job on the dedicated I/O lane. I/O jobs are drained
+    /// only by the I/O worker(s): a backlog here can never starve the
+    /// compute lane, and compute fan-outs can never delay it. Covered
+    /// by the same `wait_idle` barrier as compute jobs.
+    pub fn submit_io<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.shared.io_in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.io_queue.lock().unwrap();
+            q.push_back(Box::new(f));
+        }
+        self.shared.io_available.notify_one();
+    }
+
+    /// Block until every submitted job — compute AND I/O lane — has
+    /// completed.
     pub fn wait_idle(&self) {
         let mut guard = self.shared.queue.lock().unwrap();
         while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
@@ -74,8 +120,17 @@ impl ThreadPool {
         self.shared.in_flight.load(Ordering::SeqCst)
     }
 
+    /// I/O-lane jobs submitted but not yet finished.
+    pub fn io_pending(&self) -> usize {
+        self.shared.io_in_flight.load(Ordering::SeqCst)
+    }
+
     pub fn n_threads(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn n_io_threads(&self) -> usize {
+        self.io_workers.len()
     }
 
     /// Run a closure over every index in `0..n` across the pool, blocking
@@ -235,10 +290,20 @@ impl Drop for ScopeTicket {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+#[derive(Clone, Copy)]
+enum Lane {
+    Compute,
+    Io,
+}
+
+fn worker_loop(shared: Arc<Shared>, lane: Lane) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let (queue, available) = match lane {
+                Lane::Compute => (&shared.queue, &shared.available),
+                Lane::Io => (&shared.io_queue, &shared.io_available),
+            };
+            let mut q = queue.lock().unwrap();
             loop {
                 if let Some(j) = q.pop_front() {
                     break Some(j);
@@ -246,7 +311,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if *shared.shutdown.lock().unwrap() {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = available.wait(q).unwrap();
             }
         };
         match job {
@@ -258,8 +323,12 @@ fn worker_loop(shared: Arc<Shared>) {
                 if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
                     shared.panicked.fetch_add(1, Ordering::SeqCst);
                 }
+                if let Lane::Io = lane {
+                    shared.io_in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
                 if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
-                    // last job: wake any wait_idle callers
+                    // last job: wake any wait_idle callers (the barrier
+                    // waits on the compute queue's mutex for both lanes)
                     let _guard = shared.queue.lock().unwrap();
                     shared.done.notify_all();
                 }
@@ -274,7 +343,8 @@ impl Drop for ThreadPool {
         self.wait_idle();
         *self.shared.shutdown.lock().unwrap() = true;
         self.shared.available.notify_all();
-        for w in self.workers.drain(..) {
+        self.shared.io_available.notify_all();
+        for w in self.workers.drain(..).chain(self.io_workers.drain(..)) {
             let _ = w.join();
         }
     }
@@ -423,6 +493,70 @@ mod tests {
         });
         pool.wait_idle();
         assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn io_lane_runs_jobs_and_wait_idle_covers_both_lanes() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c2 = Arc::clone(&c);
+            pool.submit_io(move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+            });
+            let c2 = Arc::clone(&c);
+            pool.submit(move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(c.load(Ordering::SeqCst), 200);
+        assert_eq!(pool.io_pending(), 0);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn slow_io_jobs_cannot_starve_compute_scopes() {
+        // Saturate the single I/O worker with slow jobs, then run a
+        // compute fan-out: it must complete while the I/O backlog is
+        // still in flight — the lanes share no workers.
+        let pool = ThreadPool::with_io_threads(2, 1);
+        let io_done = Arc::new(AtomicU64::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&io_done);
+            pool.submit_io(move || {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let hits = Mutex::new(0usize);
+        pool.scope_for_each(16, &|_| {
+            *hits.lock().unwrap() += 1;
+        });
+        assert_eq!(*hits.lock().unwrap(), 16);
+        assert!(
+            io_done.load(Ordering::SeqCst) < 4,
+            "compute scope should finish before the slow I/O backlog drains"
+        );
+        pool.wait_idle();
+        assert_eq!(io_done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn compute_backlog_cannot_starve_io_lane() {
+        // The reverse direction: a pile of slow compute jobs must not
+        // delay an I/O job behind them.
+        let pool = ThreadPool::with_io_threads(1, 1);
+        for _ in 0..4 {
+            pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(50)));
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit_io(move || {
+            tx.send(()).unwrap();
+        });
+        rx.recv_timeout(std::time::Duration::from_millis(100))
+            .expect("I/O job stuck behind the compute backlog");
+        pool.wait_idle();
     }
 
     #[test]

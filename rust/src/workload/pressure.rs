@@ -40,7 +40,10 @@
 
 use crate::config::SpillCodec;
 use crate::coordinator::{Action, AdmissionConfig, Batcher, Phase, Request, Router, Scheduler};
-use crate::kvcache::{AllocError, BlockArena, BlockRef, CodecTag, HeadStore, KvStore, TenantId};
+use crate::kvcache::{
+    AllocError, BlockArena, BlockRef, CodecTag, HeadStore, KvReadTier, KvStore, TenantId,
+};
+use crate::util::threadpool::ThreadPool;
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Arc;
 
@@ -165,6 +168,33 @@ pub struct PressureReport {
     /// Live blocks left after the trace drained and the modelled
     /// registry unpinned its runs (must be 0: refcounts drained).
     pub final_live_blocks: usize,
+    /// Cold-tier page reads the modelled pipelined gather performed
+    /// (spill runs; `HeadStore::copy_block_kv_tiered`).
+    pub cold_reads: u64,
+    /// Of those, reads served from the staging area because the page
+    /// was prefetched on the pool's I/O lane before the gather needed
+    /// it — the intra-step overlap win.
+    pub cold_reads_staged: u64,
+    /// Decode steps that performed at least one cold read.
+    pub cold_read_steps: usize,
+    /// Decode steps where at least one cold read was served staged
+    /// (equals `cold_read_steps` when every reading step overlapped).
+    pub staged_read_steps: usize,
+}
+
+impl PressureReport {
+    /// Measured intra-step spill overlap: the percentage of cold-tier
+    /// gather reads served from the staging area instead of stalling
+    /// on the page file — the share of spill traffic hidden under
+    /// compute (feeds `SystemProfile::with_spill_overlap`, exported as
+    /// the `spill_overlap_pct` gauge by the live engine).
+    pub fn spill_overlap_pct(&self) -> f64 {
+        if self.cold_reads == 0 {
+            0.0
+        } else {
+            100.0 * self.cold_reads_staged as f64 / self.cold_reads as f64
+        }
+    }
 }
 
 /// Check `tokens` of context starting at position `start` into one
@@ -360,6 +390,10 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
     let mut stores: HashMap<u64, KvStore> = HashMap::new();
     let mut decoded: HashMap<u64, usize> = HashMap::new();
     let mut registry = ModelRegistry::default();
+    // Pipelined-read model (spill runs): a small pool whose I/O lane
+    // stages the pages each decode step is about to gather, exactly as
+    // `BatchAssembler`'s pipelined executor does in the live engine.
+    let pool = if cfg.spill { Some(ThreadPool::with_io_threads(1, 1)) } else { None };
     let mut guard = 0usize;
     while !sched.all_done() {
         guard += 1;
@@ -448,6 +482,44 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                 sched.prefill_done(id, 0, now);
             }
             Action::DecodeBatch(ids, _bucket) => {
+                // Pipelined-read model: open this step's staging epoch,
+                // then issue every growing session's upcoming cold-page
+                // reads on the I/O lane the moment "selection" is known
+                // (here: the deterministic first cold refs). The gather
+                // below reads the same refs through the tiered path;
+                // reads served from the staging area are the measured
+                // intra-step overlap.
+                let mut step_reads: HashMap<u64, Vec<(usize, BlockRef)>> = HashMap::new();
+                if let Some(pool) = pool.as_ref() {
+                    arena.begin_staging_epoch();
+                    for &id in &ids {
+                        let grows = (decoded.get(&id).copied().unwrap_or(0) + 1) % tpb == 0;
+                        if !grows {
+                            continue;
+                        }
+                        let Some(st) = stores.get(&id) else { continue };
+                        // each growing session gathers up to 6 cold
+                        // pages this step; the first 4 are issued async
+                        // (the prefetch depth), the tail models
+                        // selection past the staging window
+                        let reads = st.cold_refs(6);
+                        if reads.is_empty() {
+                            continue;
+                        }
+                        let stage_ids: Vec<u64> =
+                            reads.iter().take(4).map(|(_, r)| r.block).collect();
+                        let a = Arc::clone(&arena);
+                        pool.submit_io(move || {
+                            for b in stage_ids {
+                                a.prefetch(b);
+                            }
+                        });
+                        step_reads.insert(id, reads);
+                    }
+                    // the step's modelled compute runs after I/O lands
+                    // — in the live engine this is the overlap window
+                    pool.wait_idle();
+                }
                 for id in ids {
                     sched.token_decoded(id, 1, now);
                     let n = decoded.entry(id).or_insert(0);
@@ -457,6 +529,40 @@ pub fn run_memory_pressure(cfg: &PressureConfig, trace: &[RequestSpec]) -> Press
                         continue;
                     }
                     if cfg.spill {
+                        // the modelled gather: read this step's selected
+                        // cold pages through the tiered path (residency
+                        // unchanged); staged hits are overlapped I/O,
+                        // file hits are cold stalls
+                        if let Some(reads) = step_reads.remove(&id) {
+                            let st = stores.get(&id).unwrap();
+                            let mut kbuf = Vec::new();
+                            let mut vbuf = Vec::new();
+                            let mut total_here = 0u64;
+                            let mut staged_here = 0u64;
+                            for (hi, r) in reads {
+                                kbuf.clear();
+                                vbuf.clear();
+                                match st
+                                    .head_flat(hi)
+                                    .copy_block_kv_tiered(r, &mut kbuf, &mut vbuf)
+                                {
+                                    KvReadTier::ColdStaged => {
+                                        total_here += 1;
+                                        staged_here += 1;
+                                    }
+                                    KvReadTier::ColdFile => total_here += 1,
+                                    KvReadTier::Hot => {}
+                                }
+                            }
+                            rep.cold_reads += total_here;
+                            rep.cold_reads_staged += staged_here;
+                            if total_here > 0 {
+                                rep.cold_read_steps += 1;
+                            }
+                            if staged_here > 0 {
+                                rep.staged_read_steps += 1;
+                            }
+                        }
                         // model the decode read path: each growth step
                         // promotes a couple of this session's spilled
                         // blocks back into the hot tier, demoting other

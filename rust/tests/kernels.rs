@@ -10,11 +10,12 @@ use retroinfer::attention::{tripartite_attention_in, MergeScratch, TripartiteInp
 use retroinfer::buffer::{ExecBuffer, WaveBuffer};
 use retroinfer::config::{BufferConfig, ZoneConfig};
 use retroinfer::engine::assemble::{assemble_head, HeadSlices};
-use retroinfer::engine::{AssembleShape, HeadTask};
+use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
 use retroinfer::index::{BuildScratch, DecodeScratch, SelectScratch, WaveIndex};
 use retroinfer::kernels::Backend;
 use retroinfer::kvcache::{BlockArena, DEFAULT_TENANT};
 use retroinfer::prop_assert;
+use retroinfer::runtime::tinylm::WaveInputs;
 use retroinfer::util::prop::check;
 use retroinfer::util::rng::Rng;
 use retroinfer::util::threadpool::ThreadPool;
@@ -400,4 +401,88 @@ fn assemble_head_is_alloc_free_after_warmup() {
     }
     let grew = allocs_on_this_thread() - before;
     assert_eq!(grew, 0, "assemble_head allocated {grew} times after warmup");
+}
+
+/// GQA-batched centroid scoring: with identical queries in the group,
+/// the batched `gemm_nt` + `group_max_reduce` path (g > 1) must
+/// reproduce the per-head `group_max_scores` path (g = 1) selection
+/// exactly — a group-max over duplicate score rows is the row itself,
+/// bitwise, so any divergence is a scoring-path bug. Distinct queries
+/// additionally check call-to-call determinism of the batched path.
+#[test]
+fn gqa_batched_group_selection_matches_per_head_selection() {
+    let d = 16;
+    let n = 1024;
+    let mut rng = Rng::new(11);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let idx = WaveIndex::build(small_zone(), d, 2048, &keys, &vals, 5);
+    let m = idx.meta().m();
+    assert!(m > 4, "fixture must produce several clusters");
+    let (r, e) = ((m / 3).max(2), (m / 4).max(1));
+    retroinfer::kernels::active(); // pin the backend (one-time log)
+    let q = rng.normal_vec(d);
+    let mut qg = q.clone();
+    qg.extend_from_slice(&q);
+    let mut sc_g = SelectScratch::default();
+    let mut sc_1 = SelectScratch::default();
+    let (g_ret, g_est) = {
+        let sel = idx.select_group_into(&qg, 2, r, e, &mut sc_g);
+        (sel.retrieval.clone(), sel.estimation.clone())
+    };
+    let sel_1 = idx.select_group_into(&q, 1, r, e, &mut sc_1);
+    assert_eq!(g_ret, sel_1.retrieval, "batched retrieval diverged from per-head");
+    assert_eq!(g_est, sel_1.estimation, "batched estimation diverged from per-head");
+    // distinct group queries: deterministic across calls and scratches
+    let qs = rng.normal_vec(2 * d);
+    let first = {
+        let sel = idx.select_group_into(&qs, 2, r, e, &mut sc_g);
+        (sel.retrieval.clone(), sel.estimation.clone())
+    };
+    let again = idx.select_group_into(&qs, 2, r, e, &mut sc_1);
+    assert_eq!(first.0, again.retrieval, "batched selection not deterministic");
+    assert_eq!(first.1, again.estimation, "batched estimation not deterministic");
+}
+
+/// The warm all-hot pipelined decode path allocates nothing: in serial
+/// pipelined mode (`set_pipelined(true)`, `parallel = false`) a step
+/// whose selections find no cold pages gathers inline — no I/O jobs
+/// boxed, no scope jobs queued, and zero allocations after warmup.
+#[test]
+fn warm_pipelined_assemble_into_is_alloc_free_after_warmup() {
+    let d = 16;
+    let n = 2048;
+    let mut rng = Rng::new(12);
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let idx = WaveIndex::build(small_zone(), d, 2048, &keys, &vals, 4);
+    let bcfg = BufferConfig {
+        cache_frac: 1.0,
+        cpu_threads: 1,
+        async_update: false,
+        ..BufferConfig::default()
+    };
+    let tpb = idx.store().tokens_per_block();
+    let cap = WaveBuffer::capacity_for(&bcfg, n, tpb).max(64);
+    let pool = Arc::new(ThreadPool::with_io_threads(1, 1));
+    let wb = WaveBuffer::new(bcfg, d, tpb, cap, Arc::clone(&pool));
+    wb.register_index(&idx);
+    let shape = AssembleShape { ne: 512, m_cap: 64, d, group: 2 };
+    let qg_all = rng.normal_vec(2 * d);
+    let tasks = [HeadTask { index: &idx, buffer: &wb }];
+    let mut asm = BatchAssembler::new(Arc::clone(&pool), false);
+    asm.set_pipelined(true);
+    let mut wi = WaveInputs::zeros(1, 1, shape.ne, shape.m_cap, d);
+    retroinfer::kernels::active(); // pin the backend (one-time log)
+    for _ in 0..3 {
+        asm.assemble_into(&tasks, &qg_all, shape, &mut wi);
+    }
+    let before = allocs_on_this_thread();
+    for _ in 0..20 {
+        let st = asm.assemble_into(&tasks, &qg_all, shape, &mut wi);
+        assert_eq!(st.miss_blocks, 0, "cache not warm: misses re-stage blocks");
+        assert_eq!(st.cold_blocks, 0, "all-hot fixture unexpectedly read cold");
+    }
+    let grew = allocs_on_this_thread() - before;
+    assert_eq!(grew, 0, "warm pipelined assemble_into allocated {grew} times");
 }

@@ -17,6 +17,7 @@
 use retroinfer::attention::full_attention;
 use retroinfer::buffer::{BlockHome, ExecBuffer, MappingTable, WaveBuffer};
 use retroinfer::config::{BufferConfig, ZoneConfig};
+use retroinfer::engine::{AssembleShape, BatchAssembler, HeadTask};
 use retroinfer::index::{SelectScratch, WaveIndex};
 use retroinfer::kvcache::arena::BlockData;
 use retroinfer::kvcache::{
@@ -24,10 +25,12 @@ use retroinfer::kvcache::{
 };
 use retroinfer::prop_assert;
 use retroinfer::prop_assert_eq;
+use retroinfer::runtime::tinylm::WaveInputs;
 use retroinfer::util::prop::check;
 use retroinfer::util::rng::Rng;
 use retroinfer::util::threadpool::ThreadPool;
 use retroinfer::workload::{multi_tenant_poisson, run_memory_pressure, PressureConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 fn small_zone() -> ZoneConfig {
@@ -587,6 +590,269 @@ fn spilled_pressure_run_compresses_cold_bytes_with_int8() {
         "int8 must at least halve cold bytes: physical {} vs logical {}",
         rep.peak_cold_physical_bytes,
         rep.peak_cold_logical_bytes
+    );
+    assert_eq!(rep.final_cold_blocks, 0, "finished sessions must drop cold blocks: {rep:?}");
+}
+
+/// Pipelined-decode tentpole, part 1: the stage-decoupled executor
+/// (select → async I/O-lane page reads → completion-order gather)
+/// writes `WaveInputs` bit-identical to the sequential path — under
+/// forced full demotion (every cluster cold), mixed hot/cold heads,
+/// scrambled I/O completion order (per-page jittered fault shim), and
+/// every spill codec tag. Both the parallel and the serial pipelined
+/// executors are compared against the sequential loop.
+#[test]
+fn prop_pipelined_assembly_bit_identical_to_sequential() {
+    check("pipelined-assembly-identical", 2, |rng| {
+        for tag in
+            [CodecTag::Exact, CodecTag::Int8Angle, CodecTag::Int4Angle, CodecTag::LowRankK]
+        {
+            let d = 16;
+            let (kvh, group) = (3usize, 2usize);
+            let b = 1 + rng.below(3);
+            let n = 256 + rng.below(128);
+            let arena = BlockArena::shared(d, 512);
+            arena.spill().set_codec(tag);
+            // jitter keyed on the page id scrambles which task's reads
+            // land first — drain order must never leak into the output
+            arena.spill().set_read_fault(10, 200);
+            let pool = Arc::new(ThreadPool::with_io_threads(4, 2));
+            let bcfg = BufferConfig { cpu_threads: 4, ..BufferConfig::default() };
+            let full = rng.below(2) == 0; // every cluster cold vs mixed
+            let mut heads = Vec::new();
+            for h in 0..kvh {
+                let keys = rng.normal_vec(n * d);
+                let vals = rng.normal_vec(n * d);
+                let mut idx =
+                    WaveIndex::build_in(&arena, small_zone(), &keys, &vals, h as u64);
+                idx.set_lossy_cos_floor(0.0); // codec gated by zone rules only
+                let cap = WaveBuffer::capacity_for(&bcfg, n, idx.store().tokens_per_block());
+                let buf = WaveBuffer::new(
+                    bcfg.clone(),
+                    d,
+                    idx.store().tokens_per_block(),
+                    cap,
+                    Arc::clone(&pool),
+                );
+                buf.register_index(&idx);
+                let total_hot: usize =
+                    (0..idx.meta().m()).map(|c| idx.cluster_hot_blocks(c as u32)).sum();
+                let goal = if full { total_hot } else { total_hot / 2 };
+                let (_, demoted) = idx.demote_until(&ColdestFirst, goal);
+                for c in &demoted {
+                    buf.note_demoted(idx.cluster_blocks(*c));
+                }
+                heads.push((idx, buf));
+            }
+            let tasks: Vec<HeadTask> = (0..b * kvh)
+                .map(|t| {
+                    let (idx, buf) = &heads[t % kvh];
+                    HeadTask { index: idx, buffer: buf }
+                })
+                .collect();
+            let shape = AssembleShape { ne: 192, m_cap: 32, d, group };
+            let qg_all = rng.normal_vec(b * kvh * group * d);
+
+            let seq = BatchAssembler::new(Arc::clone(&pool), false);
+            let mut pipe = BatchAssembler::new(Arc::clone(&pool), true);
+            pipe.set_pipelined(true);
+            let mut spipe = BatchAssembler::new(Arc::clone(&pool), false);
+            spipe.set_pipelined(true);
+            prop_assert!(pipe.pipelined() && spipe.pipelined());
+            let mut wi_seq = WaveInputs::zeros(b, kvh, shape.ne, shape.m_cap, d);
+            let mut wi_pipe = WaveInputs::zeros(b, kvh, shape.ne, shape.m_cap, d);
+            let mut wi_sp = WaveInputs::zeros(b, kvh, shape.ne, shape.m_cap, d);
+            // dirty the outputs: assembly must fully overwrite its slice
+            wi_seq.kx.fill(3.0);
+            wi_pipe.kmask.fill(-1.0);
+            wi_sp.cent.fill(9.0);
+            for round in 0..2 {
+                let ps = pipe.assemble_into(&tasks, &qg_all, shape, &mut wi_pipe);
+                spipe.assemble_into(&tasks, &qg_all, shape, &mut wi_sp);
+                seq.assemble_into(&tasks, &qg_all, shape, &mut wi_seq);
+                if full && round == 0 {
+                    prop_assert!(ps.cold_blocks > 0, "{:?}: no cold traffic", tag);
+                    prop_assert!(
+                        ps.cold_staged_blocks > 0,
+                        "{:?}: pipelined gather never hit the staging area",
+                        tag
+                    );
+                }
+                prop_assert!(wi_seq.kx == wi_pipe.kx, "{:?} kx diverged (round {})", tag, round);
+                prop_assert!(wi_seq.vx == wi_pipe.vx, "{:?} vx diverged (round {})", tag, round);
+                prop_assert!(
+                    wi_seq.kmask == wi_pipe.kmask,
+                    "{:?} kmask diverged (round {})",
+                    tag,
+                    round
+                );
+                prop_assert!(
+                    wi_seq.cent == wi_pipe.cent,
+                    "{:?} cent diverged (round {})",
+                    tag,
+                    round
+                );
+                prop_assert!(
+                    wi_seq.vsum == wi_pipe.vsum,
+                    "{:?} vsum diverged (round {})",
+                    tag,
+                    round
+                );
+                prop_assert!(
+                    wi_seq.csize == wi_pipe.csize,
+                    "{:?} csize diverged (round {})",
+                    tag,
+                    round
+                );
+                prop_assert!(
+                    wi_seq.emask == wi_pipe.emask,
+                    "{:?} emask diverged (round {})",
+                    tag,
+                    round
+                );
+                prop_assert!(
+                    wi_seq.kx == wi_sp.kx
+                        && wi_seq.vx == wi_sp.vx
+                        && wi_seq.kmask == wi_sp.kmask
+                        && wi_seq.cent == wi_sp.cent
+                        && wi_seq.vsum == wi_sp.vsum
+                        && wi_seq.csize == wi_sp.csize
+                        && wi_seq.emask == wi_sp.emask,
+                    "{:?} serial pipelined diverged (round {})",
+                    tag,
+                    round
+                );
+            }
+            arena.spill().set_read_fault(0, 0);
+            for (_, buf) in &heads {
+                buf.flush();
+                prop_assert!(buf.check_consistency(), "buffer inconsistent after pipeline");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Pipelined-decode tentpole, part 2 (staging-footprint regression):
+/// a long run of steps, each staging a fresh window of pages, keeps the
+/// staging area O(depth) — double-buffered epoch retention drops stale
+/// pages (counted), and the explicit depth knob tightens the bound to
+/// exactly `depth`. The footprint must never scale with step count.
+#[test]
+fn staging_footprint_is_bounded_by_depth_not_steps() {
+    let d = 8;
+    let arena = BlockArena::shared(d, 256); // tpb = 4
+    let mut rng = Rng::new(5);
+    let mut hs = HeadStore::new_in(Arc::clone(&arena));
+    let n = 64 * 4; // 64 full blocks
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let pos: Vec<u32> = (0..n as u32).collect();
+    let refs = hs.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+    for r in &refs {
+        assert!(hs.demote_block(*r));
+    }
+    let ids: Vec<u64> = refs.iter().map(|r| r.block).collect();
+    let depth = 4usize;
+    let mut peak = 0usize;
+    for step in 0..ids.len() {
+        arena.begin_staging_epoch();
+        for j in 0..depth {
+            assert!(arena.prefetch(ids[(step + j) % ids.len()]));
+        }
+        peak = peak.max(arena.staged_blocks());
+    }
+    assert!(peak <= 2 * depth, "staging footprint {peak} grew past 2x depth {depth}");
+    assert!(peak < ids.len(), "staging footprint scaled with steps, not depth");
+    assert!(arena.staged_stale_dropped() > 0, "stale staged pages were never dropped");
+    // the depth knob (LiveEngine::set_pipeline_depth) tightens the
+    // bound from 2x (double-buffer) to exactly `depth`
+    arena.set_staging_cap(Some(depth));
+    for step in 0..ids.len() {
+        arena.begin_staging_epoch();
+        for j in 0..depth {
+            arena.prefetch(ids[(step * 3 + j) % ids.len()]);
+        }
+        assert!(
+            arena.staged_blocks() <= depth,
+            "depth cap ignored: {} staged",
+            arena.staged_blocks()
+        );
+    }
+}
+
+/// Pipelined-decode tentpole, part 3 (lane-starvation regression): with
+/// the fault-injection shim stalling every staged page read 30ms, a
+/// compute fan-out issued behind ~360ms of queued spill I/O still
+/// completes immediately on the compute workers — the dedicated I/O
+/// lane must still be grinding when compute finishes.
+#[test]
+fn slow_spill_io_never_starves_the_compute_lane() {
+    let d = 8;
+    let arena = BlockArena::shared(d, 256); // tpb = 4
+    let mut rng = Rng::new(6);
+    let mut hs = HeadStore::new_in(Arc::clone(&arena));
+    let n = 12 * 4;
+    let keys = rng.normal_vec(n * d);
+    let vals = rng.normal_vec(n * d);
+    let pos: Vec<u32> = (0..n as u32).collect();
+    let refs = hs.try_alloc_cluster(&keys, &vals, &pos).unwrap();
+    for r in &refs {
+        assert!(hs.demote_block(*r));
+    }
+    arena.spill().set_read_fault(30_000, 0); // 30ms per staged read
+    let pool = ThreadPool::with_io_threads(2, 1);
+    for r in &refs {
+        let a = Arc::clone(&arena);
+        let id = r.block;
+        pool.submit_io(move || {
+            a.prefetch(id);
+        });
+    }
+    let hits = AtomicUsize::new(0);
+    pool.scope_for_each(64, &|_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 64);
+    assert!(
+        pool.io_pending() > 0,
+        "compute fan-out outlasted ~360ms of injected I/O stall — lanes are not isolated"
+    );
+    arena.spill().set_read_fault(0, 0);
+    pool.wait_idle();
+    assert_eq!(pool.io_pending(), 0);
+    assert_eq!(arena.staged_blocks(), refs.len());
+}
+
+/// Pipelined-decode tentpole, part 4 (measured overlap): the spilled
+/// pressure harness stages each decode step's upcoming cold reads on
+/// the I/O lane and reports how many gathers were served from the
+/// staging area — `spill_overlap_pct` must clear a floor while the
+/// hot-resident cap still holds at every step (the CI `spill-overlap`
+/// job asserts exactly this).
+#[test]
+fn spilled_pressure_run_overlaps_cold_reads() {
+    let cfg = PressureConfig {
+        capacity_blocks: 256,
+        tenant_quota_blocks: None,
+        spill: true,
+        ..PressureConfig::default()
+    };
+    let trace = multi_tenant_poisson(&[4.0, 2.0, 1.0], 4, 112, 8, 11);
+    let rep = run_memory_pressure(&cfg, &trace);
+    assert!(rep.drained, "tiered run deadlocked: {rep:?}");
+    assert_eq!(rep.capacity_violations, 0, "hot tier exceeded its cap: {rep:?}");
+    assert_eq!(rep.completed, trace.len(), "requests lost under spill: {rep:?}");
+    assert!(rep.cold_reads > 0, "no cold gather traffic to overlap: {rep:?}");
+    assert!(rep.cold_reads_staged > 0, "no gather was served staged: {rep:?}");
+    assert!(
+        rep.spill_overlap_pct() > 50.0,
+        "intra-step overlap {:.1}% below floor: {rep:?}",
+        rep.spill_overlap_pct()
+    );
+    assert_eq!(
+        rep.staged_read_steps, rep.cold_read_steps,
+        "some decode step read cold pages with zero staged hits: {rep:?}"
     );
     assert_eq!(rep.final_cold_blocks, 0, "finished sessions must drop cold blocks: {rep:?}");
 }
